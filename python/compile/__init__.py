@@ -1,0 +1,6 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels → HLO text.
+
+Nothing in this package is imported at runtime; ``aot.py`` lowers every
+(model, step) pair once and the rust coordinator consumes the HLO-text
+artifacts through PJRT. See DESIGN.md for the three-layer architecture.
+"""

@@ -1,0 +1,163 @@
+"""AOT lowering: every (model, step) pair → HLO **text** + manifest.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids which
+the rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Python runs ONCE (``make artifacts``); the rust binary is self-contained
+afterwards. The manifest is a simple line-oriented format (the rust side
+has no JSON dependency available offline):
+
+    # rigl artifact manifest v1
+    backend jnp
+    model <name>
+    opt sgdm|adam
+    task classify|lm
+    batch <B>
+    input f32|i32 <dims...>
+    target i32 <dims...>
+    hyper <key> <value>
+    artifact train|densegrad|eval <file>
+    param <name> <kind> <sparsifiable:0|1> <first_layer:0|1> <dims...>
+    end
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--models a,b,...]
+[--backend jnp|pallas]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+
+from . import kernels, steps
+from .models import cnn, gru, mlp, mobilenet
+from .models.common import Model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Registry: manifest name → (builder, backend override)
+# Small-dense widths are chosen so parameter counts match the sparse
+# networks they baseline (paper Fig. 2 "Small-Dense"); the flops engine on
+# the rust side reports the exact counts.
+# ---------------------------------------------------------------------------
+
+REGISTRY = {
+    # Appendix B / Table 2 track + rust kernel-path integration tests.
+    "mlp": lambda: mlp.build("mlp"),
+    "mlp_pallas": lambda: mlp.build("mlp_pallas"),  # built with --backend pallas
+    "mlp_sd80": lambda: mlp.build("mlp_sd80", hidden=(64, 22)),
+    "mlp_sd90": lambda: mlp.build("mlp_sd90", hidden=(31, 11)),
+    "mlp_riglplus": lambda: mlp.build("mlp_riglplus", input_dim=784, hidden=(100, 69)),
+    # ResNet-50 stand-in for the Fig. 2 sweeps (WRN-10-1, fast on CPU).
+    "cnn": lambda: cnn.build("cnn", depth=10, width=1.0, batch_size=16),
+    "cnn_sd80": lambda: cnn.build("cnn_sd80", depth=10, width=0.45, batch_size=16),
+    "cnn_sd90": lambda: cnn.build("cnn_sd90", depth=10, width=0.32, batch_size=16),
+    # WRN-16-2: the CIFAR-10 WRN-22-2 track + the e2e example model.
+    "wrn": lambda: cnn.build("wrn", depth=16, width=2.0, batch_size=16),
+    # MobileNet track (Fig. 3) incl. the Big-Sparse width experiment.
+    "mobilenet": lambda: mobilenet.build("mobilenet", width=1.0),
+    "mobilenet_big": lambda: mobilenet.build("mobilenet_big", width=2.0),
+    "mobilenet_sd75": lambda: mobilenet.build("mobilenet_sd75", width=0.5),
+    # Char-LM track (Fig. 4-left).
+    "gru": lambda: gru.build("gru"),
+}
+
+PALLAS_MODELS = {"mlp_pallas"}
+
+DEFAULT_MODELS = list(REGISTRY.keys())
+
+
+def _sds_line(tag: str, sds) -> str:
+    ty = {"float32": "f32", "int32": "i32"}[str(sds.dtype)]
+    dims = " ".join(str(d) for d in sds.shape)
+    return f"{tag} {ty} {dims}".rstrip()
+
+
+def lower_model(model: Model, out_dir: str, backend: str) -> list[str]:
+    """Lower train/densegrad/eval for one model; return manifest lines."""
+    kernels.set_backend(backend)
+    lines = [
+        f"model {model.name}",
+        f"backend {backend}",
+        f"opt {model.optimizer}",
+        f"task {model.task}",
+        _sds_line("input", model.input_sds),
+        _sds_line("target", model.target_sds),
+    ]
+    for k, v in sorted(model.hyper.items()):
+        lines.append(f"hyper {k} {v}")
+    jobs = [
+        ("train", steps.make_train_step(model), steps.train_input_sds(model)),
+        ("densegrad", steps.make_dense_grad(model), steps.densegrad_input_sds(model)),
+        ("eval", steps.make_eval_step(model), steps.eval_input_sds(model)),
+    ]
+    for tag, fn, sds in jobs:
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*sds)
+        text = to_hlo_text(lowered)
+        fname = f"{model.name}_{tag}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        print(
+            f"  {model.name}/{tag}: {len(sds)} inputs, "
+            f"{len(text) / 1e6:.2f} MB HLO, {time.time() - t0:.1f}s",
+            flush=True,
+        )
+        lines.append(f"artifact {tag} {fname}")
+    for s, fl in zip(model.specs, model.layer_flops):
+        dims = " ".join(str(d) for d in s.shape)
+        lines.append(
+            f"param {s.name} {s.kind} {int(s.sparsifiable)} "
+            f"{int(s.first_layer)} {fl:.1f} {dims}"
+        )
+    lines.append("end")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS))
+    ap.add_argument(
+        "--backend",
+        default="",
+        help="force one backend for ALL models (default: jnp, pallas for *_pallas)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [n for n in args.models.split(",") if n]
+    manifest = ["# rigl artifact manifest v1"]
+    for name in names:
+        if name not in REGISTRY:
+            print(f"unknown model {name!r}; known: {sorted(REGISTRY)}", file=sys.stderr)
+            sys.exit(2)
+        backend = args.backend or ("pallas" if name in PALLAS_MODELS else "jnp")
+        model = REGISTRY[name]()
+        print(f"lowering {name} ({model.num_params} params, backend={backend})")
+        manifest.extend(lower_model(model, args.out_dir, backend))
+    path = os.path.join(args.out_dir, "manifest.txt")
+    with open(path, "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

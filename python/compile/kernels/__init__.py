@@ -1,0 +1,41 @@
+"""L1 Pallas kernels for RigL's compute hot-spots, plus pure-jnp oracles.
+
+The active backend is selected at AOT time (``aot.py --backend``):
+
+* ``jnp``    — the reference path; XLA-CPU fuses it to fast native GEMMs.
+               This is the default for the runtime artifacts on this
+               CPU-PJRT testbed.
+* ``pallas`` — the TPU-shaped tiled kernels under ``interpret=True``; this
+               is the path a real TPU deployment would compile, and it is
+               what pytest verifies against the oracles and what the rust
+               integration tests execute end-to-end for the MLP artifacts.
+"""
+
+from . import matmul, ref, scores  # noqa: F401
+
+_BACKEND = "jnp"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in ("jnp", "pallas"):
+        raise ValueError(f"unknown kernel backend {name!r}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def masked_matmul(x, w, mask):
+    """Backend-dispatching ``x @ (w * mask)`` — the universal hot path."""
+    if _BACKEND == "pallas":
+        return matmul.masked_matmul(x, w, mask)
+    return ref.masked_matmul_ref(x, w, mask)
+
+
+def rigl_scores(w, g, mask):
+    """Backend-dispatching drop/grow score computation."""
+    if _BACKEND == "pallas":
+        return scores.rigl_scores(w, g, mask)
+    return ref.rigl_scores_ref(w, g, mask)

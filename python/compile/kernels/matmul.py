@@ -1,0 +1,162 @@
+"""L1 Pallas kernels: tiled (masked) matmul — the compute hot-spot of RigL.
+
+RigL trains with *simulated* sparsity (a 0/1 mask over a dense tensor),
+exactly like the reference implementation (github.com/google-research/rigl).
+Every dense layer, every im2col'd convolution, and every GRU gate therefore
+bottoms out in one primitive: ``y = x @ (w * mask)``.
+
+The kernel tiles for a TPU-like memory hierarchy:
+
+* ``BlockSpec`` expresses the HBM→VMEM schedule: (bm, K) tiles of ``x`` and
+  (K, bn) tiles of the masked weight are staged into VMEM and fed to the
+  MXU-shaped ``jnp.dot`` with ``preferred_element_type=float32``.
+* Block sizes default to 128×128 — the MXU systolic-array shape — and are
+  clamped to the problem size. Non-multiple dimensions are zero-padded in
+  the wrapper and sliced off afterwards (zero rows/cols contribute nothing
+  to the product).
+* The mask multiply is fused into the weight tile load, so a production TPU
+  build could short-circuit all-zero tiles (block-sparse skip). Under
+  ``interpret=True`` (mandatory on CPU PJRT — real TPU lowering emits a
+  Mosaic custom-call the CPU plugin cannot execute) the kernel is executed
+  as plain HLO, so its *structure* is what we optimize; real-TPU perf is
+  estimated analytically in DESIGN.md §Perf / EXPERIMENTS.md §Perf.
+
+``masked_matmul`` carries a ``jax.custom_vjp`` so the backward pass also
+flows through the Pallas kernel: dx = g @ (w·m)ᵀ and dw = xᵀ @ g, with the
+weight cotangent re-masked (gradients never resurrect pruned weights inside
+a training step; RigL's *grow* signal is the separate dense-gradient
+artifact).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The MXU systolic array is 128x128; VPU lanes are 8x128. 128 is the
+# natural tile edge on TPU and a decent cache tile on CPU.
+DEFAULT_BLOCK = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: full-K contraction staged through VMEM."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _masked_matmul_kernel(x_ref, w_ref, m_ref, o_ref):
+    """Output tile with the mask multiply fused into the weight-tile load."""
+    w = w_ref[...] * m_ref[...]
+    o_ref[...] = jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def _ceil_to(v: int, b: int) -> int:
+    return ((v + b - 1) // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def mm(x: jax.Array, w: jax.Array, *, bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK) -> jax.Array:
+    """Tiled ``x @ w`` through the Pallas kernel (f32, 2-D operands)."""
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0], (
+        f"mm shape mismatch: {x.shape} @ {w.shape}"
+    )
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = _pad_to(x.astype(jnp.float32), mp, k)
+    wp = _pad_to(w.astype(jnp.float32), k, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _mm_masked(x: jax.Array, w: jax.Array, mask: jax.Array, bm: int, bn: int) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    xp = _pad_to(x.astype(jnp.float32), mp, k)
+    wp = _pad_to(w.astype(jnp.float32), k, np_)
+    mp_ = _pad_to(mask.astype(jnp.float32), k, np_)
+    out = pl.pallas_call(
+        _masked_matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, mp_)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def masked_matmul(x, w, mask, bm: int = DEFAULT_BLOCK, bn: int = DEFAULT_BLOCK):
+    """``x @ (w * mask)`` with both passes routed through the Pallas kernel.
+
+    mask is a 0/1 float tensor with ``w``'s shape; its cotangent is zero
+    (topology is coordinator state, not a trained quantity).
+    """
+    return _mm_masked(x, w, mask, bm, bn)
+
+
+def _masked_matmul_fwd(x, w, mask, bm, bn):
+    y = _mm_masked(x, w, mask, bm, bn)
+    return y, (x, w, mask)
+
+
+def _masked_matmul_bwd(bm, bn, res, g):
+    x, w, mask = res
+    wm = w * mask
+    dx = mm(g, wm.T, bm=bm, bn=bn)
+    # Re-mask the weight cotangent: within a step pruned weights stay frozen.
+    dw = mm(x.T, g, bm=bm, bn=bn) * mask
+    return dx, dw, jnp.zeros_like(mask)
+
+
+masked_matmul.defvjp(_masked_matmul_fwd, _masked_matmul_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, k: int, itemsize: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (x-tile + w-tile + m-tile + o-tile).
+
+    Used by the §Perf analysis: VMEM on TPUv4 is 16 MiB/core, so valid block
+    shapes must keep this under budget with double-buffering (×2).
+    """
+    return itemsize * (bm * k + 2 * k * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int, bn: int) -> float:
+    """Fraction of MXU-issued MACs that are useful (not padding).
+
+    The padded problem is ceil(m/bm)·bm × ceil(n/bn)·bn; utilization is the
+    ratio of true MACs to padded MACs. 1.0 means perfectly tiled.
+    """
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    return (m * n * k) / float(mp * np_ * k)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: pytest (and hypothesis sweeps)
+assert the Pallas kernels match these references to float32 tolerance over
+randomized shapes/values. The production jnp backend of the models also
+routes through these so the ``--backend jnp`` and ``--backend pallas``
+artifacts are semantically identical programs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e30
+
+
+def mm_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain f32 matmul."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def masked_matmul_ref(x: jax.Array, w: jax.Array, mask: jax.Array) -> jax.Array:
+    """``x @ (w * mask)``; differentiable in x and w (mask is constant-like)."""
+    return mm_ref(x, w * mask)
+
+
+def rigl_scores_ref(w: jax.Array, g: jax.Array, mask: jax.Array):
+    """Drop/grow scores; see kernels/scores.py for the conventions."""
+    m = mask.astype(jnp.float32)
+    inv = 1.0 - m
+    drop = jnp.abs(w) * m + inv * BIG
+    grow = jnp.abs(g) * inv - m * BIG
+    return drop, grow

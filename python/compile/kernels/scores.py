@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: RigL drop/grow score computation.
+
+Every ΔT steps RigL updates the topology of each layer:
+
+* drop the k smallest-|θ| *active* connections:
+  ``ArgTopK(-|θ|, k)`` over the active set;
+* grow the k largest-|∇_Θ L| *inactive* connections:
+  ``ArgTopK(|∇_Θ L|, k)`` over the complement of the post-drop active set.
+
+Selection (ArgTopK) is coordinator logic and lives in Rust
+(`rust/src/topology/`); this kernel computes the *scores* the coordinator
+sorts, fused elementwise over the flattened tensors so the dense gradient
+can be consumed tile-by-tile and discarded — the paper's point that RigL
+never needs to *store* dense state, only stream it (§3(4)).
+
+Conventions (BIG sentinel = 1e30):
+
+* ``drop_score  = |θ|·m + (1-m)·BIG``  → the k *smallest* are dropped;
+  inactive entries are pushed to +BIG so they are never selected.
+* ``grow_score  = |g|·(1-m) - m·BIG``  → the k *largest* are grown;
+  active entries are pushed to -BIG so they are never re-grown.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+_BLOCK = 4096
+
+
+def _scores_kernel(w_ref, g_ref, m_ref, drop_ref, grow_ref):
+    w = w_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    inv = 1.0 - m
+    drop_ref[...] = jnp.abs(w) * m + inv * BIG
+    grow_ref[...] = jnp.abs(g) * inv - m * BIG
+
+
+def _pad1(x: jax.Array, n: int) -> jax.Array:
+    return jnp.pad(x, (0, n - x.shape[0])) if n != x.shape[0] else x
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def rigl_scores(w: jax.Array, g: jax.Array, mask: jax.Array, *, block: int = _BLOCK):
+    """Return ``(drop_score, grow_score)`` flattened to ``w``'s shape.
+
+    ``w``: current weights; ``g``: dense gradient ∇_Θ L (same shape);
+    ``mask``: 0/1 float activity mask.
+    """
+    shape = w.shape
+    wf = w.reshape(-1).astype(jnp.float32)
+    gf = g.reshape(-1).astype(jnp.float32)
+    mf = mask.reshape(-1).astype(jnp.float32)
+    n = wf.shape[0]
+    block = min(block, n)
+    npad = ((n + block - 1) // block) * block
+    wf, gf, mf = _pad1(wf, npad), _pad1(gf, npad), _pad1(mf, npad)
+    # Padding has m=0 ⇒ drop_score=BIG (never dropped); grow_score=0 which
+    # could collide with real zeros, so the wrapper slices padding off
+    # before the coordinator ever sees it.
+    drop, grow = pl.pallas_call(
+        _scores_kernel,
+        grid=(npad // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 3,
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((npad,), jnp.float32)] * 2,
+        interpret=True,
+    )(wf, gf, mf)
+    return drop[:n].reshape(shape), grow[:n].reshape(shape)

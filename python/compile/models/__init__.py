@@ -1,0 +1,5 @@
+"""L2 model zoo. Each builder returns a ``common.Model``; the registry in
+aot.py maps manifest names to concrete configurations."""
+
+from . import cnn, common, gru, mlp, mobilenet  # noqa: F401
+from .common import Model, ParamSpec  # noqa: F401

@@ -1,0 +1,119 @@
+"""Wide-ResNet-style CNN — the paper's CIFAR-10 (WRN-22-2) and the
+scaled-down stand-in for ResNet-50 in the ImageNet-shaped experiments.
+
+Pre-activation residual blocks, GroupNorm in place of BatchNorm (DESIGN.md
+§2 substitution; norm affines stay dense exactly as the paper keeps BN
+dense), every convolution lowered through im2col onto the L1 masked-matmul
+kernel. ``depth`` follows the WRN convention: depth = 6n + 4 with n blocks
+per group.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import Model, ParamSpec
+
+
+def build(
+    name: str = "cnn",
+    depth: int = 10,
+    width: float = 1.0,
+    image_size: int = 32,
+    channels: int = 3,
+    num_classes: int = 10,
+    batch_size: int = 32,
+) -> Model:
+    assert (depth - 4) % 6 == 0, "WRN depth must be 6n+4"
+    n_blocks = (depth - 4) // 6
+    widths = [16, int(16 * width), int(32 * width), int(64 * width)]
+    specs: list[ParamSpec] = []
+    flops: list[float] = []
+    plan: list[tuple] = []  # layer program interpreted by apply()
+
+    def add(spec: ParamSpec, fl: float = 0.0):
+        specs.append(spec)
+        flops.append(fl)
+        return len(specs) - 1
+
+    def conv_fl(kh, kw, ci, co, oh, ow):
+        return 2.0 * kh * kw * ci * co * oh * ow
+
+    # Stem (the "first layer": dense under Uniform, per paper §3(1)).
+    hw = image_size
+    i_stem = add(
+        ParamSpec("stem/w", (3, 3, channels, widths[0]), "conv", True, first_layer=True),
+        conv_fl(3, 3, channels, widths[0], hw, hw),
+    )
+    plan.append(("conv", i_stem, 1))
+
+    cin = widths[0]
+    for g, cout in enumerate(widths[1:], start=1):
+        for b in range(n_blocks):
+            stride = 2 if (g > 1 and b == 0) else 1
+            ohw = hw // stride
+            pre = f"g{g}b{b}"
+            i_n1s = add(ParamSpec(f"{pre}/n1/scale", (cin,), "norm"))
+            i_n1b = add(ParamSpec(f"{pre}/n1/bias", (cin,), "bias"))
+            i_c1 = add(
+                ParamSpec(f"{pre}/conv1/w", (3, 3, cin, cout), "conv", True),
+                conv_fl(3, 3, cin, cout, ohw, ohw),
+            )
+            i_n2s = add(ParamSpec(f"{pre}/n2/scale", (cout,), "norm"))
+            i_n2b = add(ParamSpec(f"{pre}/n2/bias", (cout,), "bias"))
+            i_c2 = add(
+                ParamSpec(f"{pre}/conv2/w", (3, 3, cout, cout), "conv", True),
+                conv_fl(3, 3, cout, cout, ohw, ohw),
+            )
+            i_sc = None
+            if stride != 1 or cin != cout:
+                i_sc = add(
+                    ParamSpec(f"{pre}/short/w", (1, 1, cin, cout), "conv", True),
+                    conv_fl(1, 1, cin, cout, ohw, ohw),
+                )
+            plan.append(("block", i_n1s, i_n1b, i_c1, i_n2s, i_n2b, i_c2, i_sc, stride))
+            cin = cout
+            hw = ohw
+
+    i_fns = add(ParamSpec("final/scale", (cin,), "norm"))
+    i_fnb = add(ParamSpec("final/bias", (cin,), "bias"))
+    i_fc = add(ParamSpec("head/w", (cin, num_classes), "fc", True), 2.0 * cin * num_classes)
+    i_fb = add(ParamSpec("head/b", (num_classes,), "bias"))
+    plan.append(("head", i_fns, i_fnb, i_fc, i_fb))
+
+    def apply(p, x):
+        h = x
+        for op in plan:
+            if op[0] == "conv":
+                _, iw, stride = op
+                h = common.conv2d(h, p[iw], stride=stride)
+            elif op[0] == "block":
+                _, in1s, in1b, ic1, in2s, in2b, ic2, isc, stride = op
+                pre = jax.nn.relu(common.group_norm(h, p[in1s], p[in1b]))
+                out = common.conv2d(pre, p[ic1], stride=stride)
+                out = jax.nn.relu(common.group_norm(out, p[in2s], p[in2b]))
+                out = common.conv2d(out, p[ic2], stride=1)
+                short = h if isc is None else common.conv2d(pre, p[isc], stride=stride)
+                h = out + short
+            else:  # head
+                _, ins, inb, iw, ib = op
+                h = jax.nn.relu(common.group_norm(h, p[ins], p[inb]))
+                h = h.mean(axis=(1, 2))
+                h = common.dense(h, p[iw]) + p[ib]
+        return h
+
+    return Model(
+        name=name,
+        specs=specs,
+        apply=apply,
+        layer_flops=flops,
+        input_sds=jax.ShapeDtypeStruct(
+            (batch_size, image_size, image_size, channels), jnp.float32
+        ),
+        target_sds=jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        task="classify",
+        optimizer="sgdm",
+        hyper={"weight_decay": 5e-4, "momentum": 0.9, "label_smoothing": 0.1},
+    )

@@ -1,0 +1,247 @@
+"""Shared L2 model machinery: parameter specs, masked layers, normalization.
+
+Every model is a plain-function module over a *flat list* of f32 tensors so
+the AOT boundary is trivially flattenable: the rust coordinator sees
+``params: [Array; P]`` in the exact order of ``Model.specs`` (recorded in
+``artifacts/manifest.txt``) and supplies a same-shaped 0/1 ``mask`` for
+each. Non-sparsifiable tensors (biases, norm affines, first layers,
+depthwise convs — the paper keeps all of these dense) simply receive
+all-ones masks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .. import kernels
+
+# Parameter kinds. 'fc' = (in, out); 'conv' = (kh, kw, cin, cout);
+# 'emb' = (vocab, dim); 'bias'/'norm' = 1-D affines.
+KINDS = ("fc", "conv", "emb", "bias", "norm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Metadata the coordinator needs for one parameter tensor."""
+
+    name: str
+    shape: tuple
+    kind: str
+    sparsifiable: bool = False
+    # Kept dense under the Uniform distribution (paper §3(1): "we keep the
+    # first layer dense"); ER/ERK treat it like any other layer.
+    first_layer: bool = False
+
+    def __post_init__(self):
+        assert self.kind in KINDS, self.kind
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclasses.dataclass
+class Model:
+    """A lowered-once model: specs + pure apply/loss functions.
+
+    ``apply`` consumes *effective* parameters (already multiplied by the
+    mask); the step factories in steps.py own the masking so that
+    ``jax.grad`` w.r.t. the raw parameter yields the mask-chained gradient
+    and ``jax.grad`` w.r.t. the effective parameter yields the DENSE
+    gradient RigL grows from.
+    """
+
+    name: str
+    specs: List[ParamSpec]
+    apply: Callable  # (params_eff, x) -> logits
+    input_sds: jax.ShapeDtypeStruct
+    target_sds: jax.ShapeDtypeStruct
+    task: str = "classify"  # or "lm"
+    optimizer: str = "sgdm"  # or "adam"
+    hyper: dict = dataclasses.field(default_factory=dict)
+    # Dense forward FLOPs attributable to each parameter tensor, per sample
+    # (per token for LMs) — the input to the Appendix-H accounting engine
+    # on the rust side. Parallel to ``specs``; 0.0 for negligible tensors
+    # (biases, norms — the paper omits BN/xent FLOPs too).
+    layer_flops: List[float] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.layer_flops:
+            self.layer_flops = [0.0] * len(self.specs)
+        assert len(self.layer_flops) == len(self.specs)
+
+    @property
+    def num_params(self) -> int:
+        return sum(s.size for s in self.specs)
+
+    def init(self, key: jax.Array) -> List[jax.Array]:
+        """He-normal fan-in init for weights, zeros/ones for affines."""
+        out = []
+        for spec in self.specs:
+            key, sub = jax.random.split(key)
+            if spec.kind == "fc":
+                fan_in = spec.shape[0]
+                out.append(
+                    jax.random.normal(sub, spec.shape, jnp.float32)
+                    * math.sqrt(2.0 / fan_in)
+                )
+            elif spec.kind == "conv":
+                kh, kw, cin, _ = spec.shape
+                fan_in = kh * kw * cin
+                out.append(
+                    jax.random.normal(sub, spec.shape, jnp.float32)
+                    * math.sqrt(2.0 / fan_in)
+                )
+            elif spec.kind == "emb":
+                out.append(
+                    jax.random.normal(sub, spec.shape, jnp.float32) * 0.1
+                )
+            elif spec.kind == "norm":
+                out.append(jnp.ones(spec.shape, jnp.float32))
+            else:  # bias
+                out.append(jnp.zeros(spec.shape, jnp.float32))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Masked layers — all matmul-shaped compute routes through the L1 kernel.
+# ---------------------------------------------------------------------------
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Fully-connected layer over effective (pre-masked) weights.
+
+    The kernel-level mask has already been folded into ``w`` by the step
+    factory, so the backend sees an all-ones mask; under the pallas backend
+    this still exercises the fused masked-matmul tile schedule.
+    """
+    return kernels.masked_matmul(x, w, jnp.ones_like(w))
+
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME") -> jax.Array:
+    """Convolution over effective (pre-masked) weights.
+
+    1×1 (pointwise) convolutions ARE matmuls and route through the L1
+    masked-matmul kernel — on MobileNet-style nets that is the dominant
+    sparsifiable FLOP sink. k>1 convolutions use ``lax.conv`` over the
+    masked weight: the im2col route (patches + L1 matmul) is numerically
+    identical (tests/test_models.py pins both against lax.conv) but the
+    `conv_general_dilated_patches` lowering becomes a gather that this
+    testbed's XLA (xla_extension 0.5.1, CPU) executes ~15× slower than the
+    native conv, so the AOT artifacts use the conv lowering; on a real TPU
+    the same model definition would tile im2col through the MXU kernel
+    (see `conv2d_im2col` and DESIGN.md §Hardware-Adaptation).
+    """
+    kh, kw, cin, cout = w.shape
+    if kh == 1 and kw == 1:
+        if stride != 1:
+            x = x[:, ::stride, ::stride, :]
+        b, oh, ow, _ = x.shape
+        y = dense(x.reshape(b * oh * ow, cin), w.reshape(cin, cout))
+        return y.reshape(b, oh, ow, cout)
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_im2col(x: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME") -> jax.Array:
+    """The TPU-shaped path: every conv as a masked matmul on the L1 kernel.
+
+    ``conv_general_dilated_patches`` emits features ordered (cin, kh, kw)
+    — verified empirically in tests/test_models.py — so the kernel matrix
+    is ``w.transpose(2, 0, 1, 3)``.
+    """
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    b, oh, ow, feat = patches.shape
+    wm = jnp.transpose(w, (2, 0, 1, 3)).reshape(feat, cout)
+    y = dense(patches.reshape(b * oh * ow, feat), wm)
+    return y.reshape(b, oh, ow, cout)
+
+
+def depthwise_conv2d(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Depthwise 3x3 conv (kept dense per the paper's MobileNet protocol).
+
+    w: (kh, kw, C, 1) in the classic depthwise-multiplier layout; HWIO with
+    ``feature_group_count=C`` wants (kh, kw, 1, C). Not matmul-shaped, so it
+    stays on lax.conv.
+    """
+    c = x.shape[-1]
+    w = jnp.transpose(w, (0, 1, 3, 2))
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        feature_group_count=c,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def group_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, groups: int = 8) -> jax.Array:
+    """GroupNorm over NHWC; the BatchNorm substitution (see DESIGN.md §2).
+
+    Normalization affines stay dense, exactly as the paper keeps BN dense.
+    """
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(b, h, w, c) * scale + bias
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def smoothed_xent(logits: jax.Array, y: jax.Array, smoothing: float) -> jax.Array:
+    """Label-smoothed softmax cross-entropy, mean over the batch (nats).
+
+    Paper §4.1 uses label smoothing 0.1 for the ImageNet runs.
+    """
+    k = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    if smoothing > 0.0:
+        uniform = -logp.mean(axis=-1)
+        nll = (1.0 - smoothing) * nll + smoothing * uniform
+    return nll.mean()
+
+
+def token_xent(logits: jax.Array, y: jax.Array) -> jax.Array:
+    """Per-token cross-entropy, mean over batch×time (nats/char)."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def classify_metrics(logits: jax.Array, y: jax.Array):
+    """(summed plain cross-entropy, correct-prediction count) for eval."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+    return nll.sum(), correct.sum()
+
+
+def lm_metrics(logits: jax.Array, y: jax.Array):
+    """(summed nats, token count); bits/char = nats·log2(e)/count in rust."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return nll.sum(), jnp.float32(nll.size)

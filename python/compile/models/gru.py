@@ -1,0 +1,96 @@
+"""GRU character-level language model — the paper's WikiText-103 track
+(§4.2), scaled to the synthetic Markov corpus (DESIGN.md §2).
+
+Architecture mirrors the paper's: shared embedding → GRU → two linear
+readouts → tied-width softmax head. Trained with Adam (paper Appendix I).
+All recurrent and readout matmuls route through the L1 masked-matmul
+kernel inside a ``lax.scan`` over time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import Model, ParamSpec
+
+
+def build(
+    name: str = "gru",
+    vocab: int = 64,
+    emb: int = 64,
+    state: int = 256,
+    readouts=(128, 64),
+    seq_len: int = 48,
+    batch_size: int = 16,
+) -> Model:
+    r1, r2 = readouts
+    specs = [
+        # Embedding is the "first layer" (dense under Uniform).
+        ParamSpec("emb/w", (vocab, emb), "emb", True, first_layer=True),
+        ParamSpec("gru/wx", (emb, 3 * state), "fc", True),
+        ParamSpec("gru/wh", (state, 3 * state), "fc", True),
+        ParamSpec("gru/bx", (3 * state,), "bias"),
+        ParamSpec("gru/bh", (3 * state,), "bias"),
+        ParamSpec("ro1/w", (state, r1), "fc", True),
+        ParamSpec("ro1/b", (r1,), "bias"),
+        ParamSpec("ro2/w", (r1, r2), "fc", True),
+        ParamSpec("ro2/b", (r2,), "bias"),
+        ParamSpec("head/w", (r2, vocab), "fc", True),
+        ParamSpec("head/b", (vocab,), "bias"),
+    ]
+    # Per-token forward FLOPs (embedding lookup ~0, matching the paper's
+    # convention of omitting negligible ops).
+    flops = [
+        0.0,
+        2.0 * emb * 3 * state,
+        2.0 * state * 3 * state,
+        0.0,
+        0.0,
+        2.0 * state * r1,
+        0.0,
+        2.0 * r1 * r2,
+        0.0,
+        2.0 * r2 * vocab,
+        0.0,
+    ]
+
+    def apply(p, x):
+        (w_emb, wx, wh, bx, bh, w1, b1, w2, b2, wo, bo) = p
+        b, t = x.shape
+        e = jnp.take(w_emb, x, axis=0)  # (B, T, E)
+        # Hoist the input projection out of the scan: one big matmul on the
+        # L1 kernel instead of T small ones.
+        gx = common.dense(e.reshape(b * t, -1), wx).reshape(b, t, -1) + bx
+
+        def cell(h, gx_t):
+            gh = common.dense(h, wh) + bh
+            xz, xr, xn = jnp.split(gx_t, 3, axis=-1)
+            hz, hr, hn = jnp.split(gh, 3, axis=-1)
+            z = jax.nn.sigmoid(xz + hz)
+            r = jax.nn.sigmoid(xr + hr)
+            n = jnp.tanh(xn + r * hn)
+            h = (1.0 - z) * h + z * n
+            return h, h
+
+        h0 = jnp.zeros((b, state), jnp.float32)
+        _, hs = jax.lax.scan(cell, h0, jnp.swapaxes(gx, 0, 1))
+        hs = jnp.swapaxes(hs, 0, 1).reshape(b * t, state)  # (B*T, H)
+        y = jax.nn.relu(common.dense(hs, w1) + b1)
+        y = jax.nn.relu(common.dense(y, w2) + b2)
+        logits = common.dense(y, wo) + bo
+        return logits.reshape(b, t, vocab)
+
+    return Model(
+        name=name,
+        specs=specs,
+        apply=apply,
+        layer_flops=flops,
+        input_sds=jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32),
+        target_sds=jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32),
+        task="lm",
+        optimizer="adam",
+        hyper={"weight_decay": 5e-4, "b1": 0.9, "b2": 0.999, "eps": 1e-8,
+               "grad_clip": 10.0},
+    )

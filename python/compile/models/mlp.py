@@ -1,0 +1,76 @@
+"""LeNet-300-100-style MLP — the paper's Appendix B compression track.
+
+Configurable hidden widths so the same factory also produces the
+Small-Dense baselines (a dense network with the sparse network's parameter
+count, paper Fig. 2) and the RigL+ restart architectures (Table 2).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import Model, ParamSpec
+
+
+def build(
+    name: str = "mlp",
+    input_dim: int = 784,
+    hidden: Sequence[int] = (300, 100),
+    num_classes: int = 10,
+    batch_size: int = 128,
+    label_smoothing: float = 0.0,
+    sparsify_output: bool = False,
+) -> Model:
+    """Three-layer ReLU MLP. Hidden weights are sparsifiable; the output
+    layer follows the paper's Appendix B protocol (kept dense by default).
+    """
+    dims = [input_dim, *hidden, num_classes]
+    specs = []
+    flops = []
+    nlayers = len(dims) - 1
+    for i in range(nlayers):
+        is_out = i == nlayers - 1
+        specs.append(
+            ParamSpec(
+                name=f"fc{i + 1}/w",
+                shape=(dims[i], dims[i + 1]),
+                kind="fc",
+                sparsifiable=(not is_out) or sparsify_output,
+                # Unlike the conv nets, the LeNet MLP's first layer holds
+                # ~88% of the parameters and the paper's Appendix-B track
+                # sparsifies it at 99% — no Uniform first-layer exemption.
+                first_layer=False,
+            )
+        )
+        flops.append(2.0 * dims[i] * dims[i + 1])
+        specs.append(ParamSpec(name=f"fc{i + 1}/b", shape=(dims[i + 1],), kind="bias"))
+        flops.append(0.0)
+
+    def apply(params_eff, x):
+        h = x
+        for i in range(nlayers):
+            w, b = params_eff[2 * i], params_eff[2 * i + 1]
+            h = common.dense(h, w) + b
+            if i != nlayers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return Model(
+        name=name,
+        specs=specs,
+        apply=apply,
+        layer_flops=flops,
+        input_sds=jax.ShapeDtypeStruct((batch_size, input_dim), jnp.float32),
+        target_sds=jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        task="classify",
+        optimizer="sgdm",
+        hyper={
+            "weight_decay": 1e-4,
+            "momentum": 0.9,
+            "label_smoothing": label_smoothing,
+        },
+    )

@@ -1,0 +1,107 @@
+"""MicroMobileNet — depthwise-separable stand-in for MobileNet-v1 (Fig. 3).
+
+Follows the paper's MobileNet sparsification protocol exactly: the first
+(stem) convolution and every depthwise convolution are KEPT DENSE (§4.1.2
+"Due to its low parameter count we keep the first layer and depth-wise
+convolutions dense"); only the pointwise 1×1 convolutions and the
+classifier head are sparsifiable. Pointwise convs are pure matmuls and run
+on the L1 kernel. ``width`` reproduces the Big-Sparse experiment (width
+multiplier 1.98 at 75% sparsity ≈ dense FLOPs/params).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import Model, ParamSpec
+
+# (channels_out, stride) per separable block, MobileNet-v1-shaped but
+# shallow enough for the CPU testbed.
+_BLOCKS = [(32, 1), (64, 2), (64, 1), (128, 2), (128, 1)]
+
+
+def build(
+    name: str = "mobilenet",
+    width: float = 1.0,
+    image_size: int = 32,
+    channels: int = 3,
+    num_classes: int = 10,
+    batch_size: int = 32,
+) -> Model:
+    specs: list[ParamSpec] = []
+    flops: list[float] = []
+    plan: list[tuple] = []
+
+    def add(spec, fl: float = 0.0):
+        specs.append(spec)
+        flops.append(fl)
+        return len(specs) - 1
+
+    hw = image_size
+    c0 = max(8, int(16 * width))
+    i_stem = add(
+        ParamSpec("stem/w", (3, 3, channels, c0), "conv", False, first_layer=True),
+        2.0 * 9 * channels * c0 * hw * hw,
+    )
+    i_sns = add(ParamSpec("stem/n/scale", (c0,), "norm"))
+    i_snb = add(ParamSpec("stem/n/bias", (c0,), "bias"))
+    plan.append(("stem", i_stem, i_sns, i_snb))
+
+    cin = c0
+    for bi, (craw, stride) in enumerate(_BLOCKS):
+        cout = max(8, int(craw * width))
+        hw = hw // stride
+        pre = f"b{bi}"
+        i_dw = add(
+            ParamSpec(f"{pre}/dw/w", (3, 3, cin, 1), "conv", False),
+            2.0 * 9 * cin * hw * hw,
+        )
+        i_dns = add(ParamSpec(f"{pre}/dwn/scale", (cin,), "norm"))
+        i_dnb = add(ParamSpec(f"{pre}/dwn/bias", (cin,), "bias"))
+        i_pw = add(
+            ParamSpec(f"{pre}/pw/w", (1, 1, cin, cout), "conv", True),
+            2.0 * cin * cout * hw * hw,
+        )
+        i_pns = add(ParamSpec(f"{pre}/pwn/scale", (cout,), "norm"))
+        i_pnb = add(ParamSpec(f"{pre}/pwn/bias", (cout,), "bias"))
+        plan.append(("sep", i_dw, i_dns, i_dnb, i_pw, i_pns, i_pnb, stride))
+        cin = cout
+
+    i_fc = add(ParamSpec("head/w", (cin, num_classes), "fc", True), 2.0 * cin * num_classes)
+    i_fb = add(ParamSpec("head/b", (num_classes,), "bias"))
+    plan.append(("head", i_fc, i_fb))
+
+    def apply(p, x):
+        h = x
+        for op in plan:
+            if op[0] == "stem":
+                _, iw, ins, inb = op
+                h = common.conv2d(h, p[iw], stride=1)
+                h = jax.nn.relu(common.group_norm(h, p[ins], p[inb]))
+            elif op[0] == "sep":
+                _, i_dw, i_dns, i_dnb, i_pw, i_pns, i_pnb, stride = op
+                h = common.depthwise_conv2d(h, p[i_dw], stride=stride)
+                h = jax.nn.relu(common.group_norm(h, p[i_dns], p[i_dnb]))
+                h = common.conv2d(h, p[i_pw], stride=1)
+                h = jax.nn.relu(common.group_norm(h, p[i_pns], p[i_pnb]))
+            else:
+                _, iw, ib = op
+                h = h.mean(axis=(1, 2))
+                h = common.dense(h, p[iw]) + p[ib]
+        return h
+
+    return Model(
+        name=name,
+        specs=specs,
+        apply=apply,
+        layer_flops=flops,
+        input_sds=jax.ShapeDtypeStruct(
+            (batch_size, image_size, image_size, channels), jnp.float32
+        ),
+        target_sds=jax.ShapeDtypeStruct((batch_size,), jnp.int32),
+        task="classify",
+        optimizer="sgdm",
+        hyper={"weight_decay": 1e-4, "momentum": 0.9, "label_smoothing": 0.1},
+    )

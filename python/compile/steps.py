@@ -1,0 +1,173 @@
+"""Step factories: the three AOT artifacts lowered per model.
+
+Flat positional I/O (the rust coordinator indexes by position; order is
+recorded in the manifest):
+
+* ``train``      — one optimizer step on the masked network.
+    sgdm: inputs  [P params][P momentum][P masks] x y lr
+          outputs (P params', P momentum', loss)
+    adam: inputs  [P params][P m][P v] t [P masks] x y lr
+          outputs (P params', P m', P v', t', loss)
+* ``densegrad``  — RigL's grow signal: gradients w.r.t. the FULL dense
+    parameter tensors (∇_Θ L, nonzero on inactive connections), evaluated
+    only every ΔT steps so the amortized cost stays ∝ (1−S) (paper §3(4)).
+    inputs  [P params][P masks] x y
+    outputs (S dense-grads..., S grow-scores..., loss)   [S = sparsifiable]
+* ``eval``       — inputs [P params][P masks] x y → (metric_sum, count).
+    classify: (Σ cross-entropy, Σ correct); lm: (Σ nats, token count).
+
+Within a training step gradients are mask-chained (pruned weights stay
+frozen); only ``densegrad`` sees the dense space. The optimizer step
+re-masks its outputs so the ``params == params·mask`` invariant survives
+float noise.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .models.common import (
+    Model,
+    classify_metrics,
+    lm_metrics,
+    smoothed_xent,
+    token_xent,
+)
+
+
+def _loss(model: Model, logits, y):
+    if model.task == "lm":
+        return token_xent(logits, y)
+    return smoothed_xent(logits, y, model.hyper.get("label_smoothing", 0.0))
+
+
+def _clip_by_global_norm(grads: List[jax.Array], max_norm: float):
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return [g * scale for g in grads]
+
+
+def make_train_step(model: Model):
+    p = len(model.specs)
+    wd = model.hyper.get("weight_decay", 0.0)
+
+    if model.optimizer == "sgdm":
+        mu = model.hyper["momentum"]
+
+        def train(*flat):
+            params = list(flat[0:p])
+            mom = list(flat[p : 2 * p])
+            masks = list(flat[2 * p : 3 * p])
+            x, y, lr = flat[3 * p], flat[3 * p + 1], flat[3 * p + 2]
+
+            def loss_fn(ps):
+                eff = [q * m for q, m in zip(ps, masks)]
+                return _loss(model, model.apply(eff, x), y)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new_p, new_m = [], []
+            for q, g, v, m in zip(params, grads, mom, masks):
+                g = g + wd * q  # q is already masked ⇒ decay stays masked
+                v2 = mu * v + g
+                new_m.append(v2 * m)
+                new_p.append((q - lr * v2) * m)
+            return (*new_p, *new_m, loss)
+
+        return train
+
+    assert model.optimizer == "adam"
+    b1, b2, eps = model.hyper["b1"], model.hyper["b2"], model.hyper["eps"]
+    clip = model.hyper.get("grad_clip", 0.0)
+
+    def train(*flat):
+        params = list(flat[0:p])
+        m1 = list(flat[p : 2 * p])
+        m2 = list(flat[2 * p : 3 * p])
+        t = flat[3 * p]
+        masks = list(flat[3 * p + 1 : 4 * p + 1])
+        x, y, lr = flat[4 * p + 1], flat[4 * p + 2], flat[4 * p + 3]
+
+        def loss_fn(ps):
+            eff = [q * m for q, m in zip(ps, masks)]
+            return _loss(model, model.apply(eff, x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if clip > 0.0:
+            grads = _clip_by_global_norm(grads, clip)
+        t2 = t + 1.0
+        c1 = 1.0 - jnp.power(b1, t2)
+        c2 = 1.0 - jnp.power(b2, t2)
+        new_p, new_m1, new_m2 = [], [], []
+        for q, g, a, v, m in zip(params, grads, m1, m2, masks):
+            g = g + wd * q
+            a2 = b1 * a + (1.0 - b1) * g
+            v2 = b2 * v + (1.0 - b2) * g * g
+            step = (a2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+            new_m1.append(a2 * m)
+            new_m2.append(v2 * m)
+            new_p.append((q - lr * step) * m)
+        return (*new_p, *new_m1, *new_m2, t2, loss)
+
+    return train
+
+
+def make_dense_grad(model: Model):
+    p = len(model.specs)
+    sparse_idx = [i for i, s in enumerate(model.specs) if s.sparsifiable]
+
+    def densegrad(*flat):
+        params = list(flat[0:p])
+        masks = list(flat[p : 2 * p])
+        x, y = flat[2 * p], flat[2 * p + 1]
+        eff = [q * m for q, m in zip(params, masks)]
+
+        def loss_fn(e):
+            return _loss(model, model.apply(e, x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(eff)
+        dense = [grads[i] for i in sparse_idx]
+        scores = [
+            kernels.rigl_scores(params[i], grads[i], masks[i])[1]
+            for i in sparse_idx
+        ]
+        return (*dense, *scores, loss)
+
+    return densegrad
+
+
+def make_eval_step(model: Model):
+    p = len(model.specs)
+    metrics = lm_metrics if model.task == "lm" else classify_metrics
+
+    def evaluate(*flat):
+        params = list(flat[0:p])
+        masks = list(flat[p : 2 * p])
+        x, y = flat[2 * p], flat[2 * p + 1]
+        eff = [q * m for q, m in zip(params, masks)]
+        logits = model.apply(eff, x)
+        s, c = metrics(logits, y)
+        return (s, c)
+
+    return evaluate
+
+
+def train_input_sds(model: Model):
+    """ShapeDtypeStructs for the train artifact, in manifest order."""
+    ps = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in model.specs]
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    if model.optimizer == "sgdm":
+        return [*ps, *ps, *ps, model.input_sds, model.target_sds, scalar]
+    return [*ps, *ps, *ps, scalar, *ps, model.input_sds, model.target_sds, scalar]
+
+
+def densegrad_input_sds(model: Model):
+    ps = [jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in model.specs]
+    return [*ps, *ps, model.input_sds, model.target_sds]
+
+
+def eval_input_sds(model: Model):
+    return densegrad_input_sds(model)

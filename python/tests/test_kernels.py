@@ -1,0 +1,184 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+This is the core correctness signal for the compute layer — hypothesis
+sweeps shapes and values, asserting allclose against ref.py for forward
+AND backward passes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref, scores
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# mm: plain tiled matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (2, 3, 4),
+        (8, 8, 8),
+        (128, 128, 128),
+        (129, 64, 130),  # non-multiple of block in both tile dims
+        (300, 784, 100),  # the LeNet-300-100 shapes
+        (7, 257, 13),
+    ],
+)
+def test_mm_matches_ref(m, k, n):
+    x, w = _rand(m * 1000 + n, m, k), _rand(k * 1000 + n, k, n)
+    np.testing.assert_allclose(
+        matmul.mm(x, w), ref.mm_ref(x, w), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    n=st.integers(1, 80),
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mm_hypothesis(m, k, n, bm, bn, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (m, k), jnp.float32)
+    w = jax.random.normal(k2, (k, n), jnp.float32)
+    got = matmul.mm(x, w, bm=bm, bn=bn)
+    np.testing.assert_allclose(got, ref.mm_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# masked_matmul: forward + custom VJP
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n,density", [(16, 32, 24, 0.1), (64, 128, 32, 0.5), (5, 7, 3, 0.9)])
+def test_masked_matmul_forward(m, k, n, density):
+    x, w = _rand(1, m, k), _rand(2, k, n)
+    mask = (jax.random.uniform(jax.random.PRNGKey(3), (k, n)) < density).astype(jnp.float32)
+    np.testing.assert_allclose(
+        matmul.masked_matmul(x, w, mask),
+        ref.masked_matmul_ref(x, w, mask),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 60),
+    n=st.integers(1, 40),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_matmul_vjp_hypothesis(m, k, n, density, seed):
+    """The pallas custom VJP must match jnp autodiff of the oracle."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(keys[0], (m, k), jnp.float32)
+    w = jax.random.normal(keys[1], (k, n), jnp.float32)
+    mask = (jax.random.uniform(keys[2], (k, n)) < density).astype(jnp.float32)
+    g = jax.random.normal(keys[3], (m, n), jnp.float32)
+
+    def f_pallas(x, w):
+        return jnp.sum(matmul.masked_matmul(x, w, mask) * g)
+
+    def f_ref(x, w):
+        return jnp.sum(ref.masked_matmul_ref(x, w, mask) * g)
+
+    dx_p, dw_p = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    dx_r, dw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(dx_p, dx_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dw_p, dw_r, rtol=1e-4, atol=1e-4)
+
+
+def test_masked_matmul_weight_cotangent_is_masked():
+    """Gradients must never resurrect pruned weights within a step."""
+    x, w = _rand(4, 8, 16), _rand(5, 16, 8)
+    mask = (jax.random.uniform(jax.random.PRNGKey(6), (16, 8)) < 0.3).astype(jnp.float32)
+    dw = jax.grad(lambda w: jnp.sum(matmul.masked_matmul(x, w, mask)))(w)
+    assert np.all(np.asarray(dw)[np.asarray(mask) == 0.0] == 0.0)
+
+
+def test_masked_matmul_zero_mask_zero_output():
+    x, w = _rand(7, 4, 4), _rand(8, 4, 4)
+    out = matmul.masked_matmul(x, w, jnp.zeros((4, 4), jnp.float32))
+    np.testing.assert_array_equal(out, np.zeros((4, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# rigl_scores
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_scores_hypothesis(n, density, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w = jax.random.normal(keys[0], (n,), jnp.float32)
+    g = jax.random.normal(keys[1], (n,), jnp.float32)
+    m = (jax.random.uniform(keys[2], (n,)) < density).astype(jnp.float32)
+    drop_p, grow_p = scores.rigl_scores(w, g, m)
+    drop_r, grow_r = ref.rigl_scores_ref(w, g, m)
+    np.testing.assert_allclose(drop_p, drop_r, rtol=1e-6)
+    np.testing.assert_allclose(grow_p, grow_r, rtol=1e-6)
+
+
+def test_scores_semantics():
+    """Active entries are never grown; inactive entries are never dropped."""
+    w = jnp.array([1.0, -2.0, 0.0, 3.0])
+    g = jnp.array([10.0, -20.0, 30.0, 40.0])
+    m = jnp.array([1.0, 1.0, 0.0, 0.0])
+    drop, grow = scores.rigl_scores(w, g, m)
+    # Active: drop score = |w|; inactive: pushed to +BIG.
+    np.testing.assert_allclose(np.asarray(drop)[:2], [1.0, 2.0])
+    assert np.all(np.asarray(drop)[2:] >= scores.BIG * 0.99)
+    # Inactive: grow score = |g|; active: pushed to -BIG.
+    np.testing.assert_allclose(np.asarray(grow)[2:], [30.0, 40.0])
+    assert np.all(np.asarray(grow)[:2] <= -scores.BIG * 0.99)
+
+
+def test_scores_2d_shape_preserved():
+    w = _rand(11, 13, 7)
+    g = _rand(12, 13, 7)
+    m = jnp.ones((13, 7), jnp.float32)
+    drop, grow = scores.rigl_scores(w, g, m)
+    assert drop.shape == (13, 7) and grow.shape == (13, 7)
+
+
+# ---------------------------------------------------------------------------
+# Analytic TPU-perf helpers (§Perf)
+# ---------------------------------------------------------------------------
+
+
+def test_vmem_bytes_fits_tpu_budget():
+    # Default 128x128 blocks with the largest K in the model zoo (im2col'd
+    # WRN conv: K = 3*3*128 = 1152) must fit VMEM with double buffering.
+    b = matmul.vmem_bytes(128, 128, 1152)
+    assert 2 * b < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_bounds():
+    assert matmul.mxu_utilization(128, 128, 64, 128, 128) == 1.0
+    u = matmul.mxu_utilization(129, 1, 64, 128, 128)
+    assert 0.0 < u < 0.01 or u <= 1.0
+    assert matmul.mxu_utilization(300, 100, 784, 128, 128) == pytest.approx(
+        (300 * 100) / (384 * 128), rel=1e-9
+    )

@@ -1,0 +1,204 @@
+"""L2 model correctness: layers vs lax oracles, spec/shape integrity,
+backend (jnp vs pallas) equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels
+from compile.models import cnn, common, gru, mlp, mobilenet
+
+
+@pytest.fixture(autouse=True)
+def _jnp_backend():
+    kernels.set_backend("jnp")
+    yield
+    kernels.set_backend("jnp")
+
+
+def _ones_masks(model):
+    return [jnp.ones(s.shape, jnp.float32) for s in model.specs]
+
+
+# ---------------------------------------------------------------------------
+# Layer oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride,cin,cout,kh", [(1, 3, 8, 3), (2, 4, 6, 3), (1, 5, 7, 1), (2, 8, 8, 1)])
+@pytest.mark.parametrize("impl", [common.conv2d, common.conv2d_im2col])
+def test_conv2d_matches_lax(impl, stride, cin, cout, kh):
+    # The production conv2d and the TPU-shaped im2col path must both pin
+    # to the lax.conv oracle (1x1 strided convs exercise the pointwise
+    # masked-matmul branch of conv2d).
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, cin), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (kh, kh, cin, cout), jnp.float32)
+    got = impl(x, w, stride=stride)
+    want = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_im2col_matches_lax_pallas_backend():
+    kernels.set_backend("pallas")
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 8, 3), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 3, 8), jnp.float32)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(common.conv2d_im2col(x, w), want, rtol=1e-4, atol=1e-4)
+
+
+def test_depthwise_conv_matches_grouped_lax():
+    c = 6
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, c), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(3), (3, 3, c, 1), jnp.float32)
+    got = common.depthwise_conv2d(x, w, stride=2)
+    want = jax.lax.conv_general_dilated(
+        x,
+        jnp.transpose(w, (0, 1, 3, 2)),
+        (2, 2),
+        "SAME",
+        feature_group_count=c,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_group_norm_normalizes():
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, 5, 5, 16), jnp.float32) * 7 + 3
+    y = common.group_norm(x, jnp.ones((16,)), jnp.zeros((16,)), groups=8)
+    # Per-sample, per-group statistics should be ~N(0,1).
+    yg = np.asarray(y).reshape(3, 5, 5, 8, 2)
+    np.testing.assert_allclose(yg.mean(axis=(1, 2, 4)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(yg.var(axis=(1, 2, 4)), 1.0, atol=1e-2)
+
+
+def test_group_norm_handles_non_divisible_channels():
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 4, 4, 10), jnp.float32)
+    y = common.group_norm(x, jnp.ones((10,)), jnp.zeros((10,)), groups=8)
+    assert y.shape == x.shape and np.isfinite(np.asarray(y)).all()
+
+
+def test_smoothed_xent_reduces_to_plain():
+    logits = jax.random.normal(jax.random.PRNGKey(6), (4, 10), jnp.float32)
+    y = jnp.array([0, 3, 9, 2], jnp.int32)
+    plain = common.smoothed_xent(logits, y, 0.0)
+    logp = jax.nn.log_softmax(logits)
+    want = -np.mean([logp[i, y[i]] for i in range(4)])
+    np.testing.assert_allclose(plain, want, rtol=1e-6)
+    # Smoothing strictly increases loss for a confident correct model.
+    conf = jnp.eye(10)[y] * 20.0
+    assert common.smoothed_xent(conf, y, 0.1) > common.smoothed_xent(conf, y, 0.0)
+
+
+def test_classify_metrics_counts():
+    logits = jnp.array([[2.0, 0.0], [0.0, 2.0], [2.0, 0.0]])
+    y = jnp.array([0, 1, 1], jnp.int32)
+    s, c = common.classify_metrics(logits, y)
+    assert float(c) == 2.0
+    assert float(s) > 0.0
+
+
+def test_lm_metrics_token_count():
+    logits = jax.random.normal(jax.random.PRNGKey(7), (2, 5, 11), jnp.float32)
+    y = jnp.zeros((2, 5), jnp.int32)
+    s, c = common.lm_metrics(logits, y)
+    assert float(c) == 10.0
+
+
+# ---------------------------------------------------------------------------
+# Model integrity
+# ---------------------------------------------------------------------------
+
+BUILDERS = {
+    "mlp": lambda: mlp.build(batch_size=4),
+    "cnn": lambda: cnn.build(depth=10, width=1.0, batch_size=2, image_size=16),
+    "wrn": lambda: cnn.build(depth=16, width=2.0, batch_size=2, image_size=16),
+    "mobilenet": lambda: mobilenet.build(batch_size=2, image_size=16),
+    "gru": lambda: gru.build(batch_size=2, seq_len=8, state=32, emb=16, readouts=(16, 8)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(BUILDERS))
+def test_init_matches_specs(name):
+    model = BUILDERS[name]()
+    params = model.init(jax.random.PRNGKey(0))
+    assert len(params) == len(model.specs)
+    for p, s in zip(params, model.specs):
+        assert p.shape == s.shape, s.name
+    assert model.num_params == sum(int(np.prod(s.shape)) for s in model.specs)
+
+
+@pytest.mark.parametrize("name", sorted(BUILDERS))
+def test_apply_shape_and_finite(name):
+    model = BUILDERS[name]()
+    params = model.init(jax.random.PRNGKey(0))
+    if model.task == "lm":
+        x = jnp.zeros(model.input_sds.shape, jnp.int32)
+        logits = model.apply(params, x)
+        assert logits.shape == (*model.input_sds.shape, model.specs[0].shape[0])
+    else:
+        x = jnp.ones(model.input_sds.shape, jnp.float32)
+        logits = model.apply(params, x)
+        assert logits.shape[0] == model.input_sds.shape[0]
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("name", sorted(BUILDERS))
+def test_every_model_has_sparsifiable_and_first_layer(name):
+    model = BUILDERS[name]()
+    assert any(s.sparsifiable for s in model.specs)
+    # The MLP opts out of the Uniform first-layer exemption (Appendix B
+    # sparsifies its first layer at 99%); all other models mark exactly one.
+    expected = 0 if name == "mlp" else 1
+    assert sum(s.first_layer for s in model.specs) == expected
+
+
+def test_mobilenet_depthwise_kept_dense():
+    model = BUILDERS["mobilenet"]()
+    for s in model.specs:
+        if "/dw/" in s.name or s.name.startswith("stem"):
+            assert not s.sparsifiable, s.name
+
+
+def test_masking_zeroes_contributions():
+    """With all sparsifiable weights masked out, the MLP must output bias-only."""
+    model = BUILDERS["mlp"]()
+    params = model.init(jax.random.PRNGKey(0))
+    masks = []
+    for s in model.specs:
+        masks.append(jnp.zeros(s.shape) if s.sparsifiable else jnp.ones(s.shape))
+    eff = [p * m for p, m in zip(params, masks)]
+    x = jax.random.normal(jax.random.PRNGKey(1), model.input_sds.shape)
+    out = model.apply(eff, x)
+    # Output layer weights are dense (not sparsifiable) but their input is
+    # bias-fed only, so all rows must be identical.
+    o = np.asarray(out)
+    np.testing.assert_allclose(o, np.broadcast_to(o[0], o.shape), rtol=1e-5, atol=1e-6)
+
+
+def test_mlp_backend_equivalence():
+    """jnp and pallas artifacts must be the same program numerically."""
+    model = BUILDERS["mlp"]()
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), model.input_sds.shape)
+    kernels.set_backend("jnp")
+    out_jnp = model.apply(params, x)
+    kernels.set_backend("pallas")
+    out_pallas = model.apply(params, x)
+    np.testing.assert_allclose(out_jnp, out_pallas, rtol=1e-4, atol=1e-4)
+
+
+def test_gru_causality():
+    """Changing a late token must not affect earlier logits."""
+    model = BUILDERS["gru"]()
+    params = model.init(jax.random.PRNGKey(0))
+    x1 = jnp.zeros((2, 8), jnp.int32)
+    x2 = x1.at[:, 7].set(3)
+    l1 = model.apply(params, x1)
+    l2 = model.apply(params, x2)
+    np.testing.assert_allclose(l1[:, :7], l2[:, :7], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(l1[:, 7], l2[:, 7])

@@ -1,0 +1,283 @@
+"""Step-factory semantics: optimizer math vs numpy references, masking
+invariants, dense-gradient (grow-signal) behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import steps
+from compile.models import gru, mlp
+
+
+@pytest.fixture(scope="module")
+def tiny_mlp():
+    return mlp.build("tiny", input_dim=12, hidden=(8, 6), num_classes=4, batch_size=5)
+
+
+@pytest.fixture(scope="module")
+def tiny_gru():
+    return gru.build("tgru", vocab=11, emb=6, state=8, readouts=(8, 6), seq_len=7, batch_size=3)
+
+
+def _masks(model, density=0.5, seed=9):
+    ms = []
+    for i, s in enumerate(model.specs):
+        if s.sparsifiable:
+            m = (jax.random.uniform(jax.random.PRNGKey(seed + i), s.shape) < density)
+            ms.append(m.astype(jnp.float32))
+        else:
+            ms.append(jnp.ones(s.shape, jnp.float32))
+    return ms
+
+
+def _batch(model, seed=0):
+    if model.task == "lm":
+        x = jax.random.randint(jax.random.PRNGKey(seed), model.input_sds.shape, 0, model.specs[0].shape[0])
+        y = jax.random.randint(jax.random.PRNGKey(seed + 1), model.target_sds.shape, 0, model.specs[0].shape[0])
+        return x.astype(jnp.int32), y.astype(jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), model.input_sds.shape, jnp.float32)
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), model.target_sds.shape, 0, 4)
+    return x, y.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+
+def test_sgdm_matches_numpy_reference(tiny_mlp):
+    """One train step == hand-rolled heavy-ball SGD on masked gradients."""
+    model = tiny_mlp
+    P = len(model.specs)
+    params = [p * m for p, m in zip(model.init(jax.random.PRNGKey(0)), _masks(model))]
+    masks = _masks(model)
+    params = [p * m for p, m in zip(params, masks)]
+    mom = [jnp.zeros_like(p) for p in params]
+    x, y = _batch(model)
+    lr = jnp.float32(0.2)
+
+    # Reference masked gradient via jax autodiff of the same loss.
+    def loss_fn(ps):
+        eff = [q * m for q, m in zip(ps, masks)]
+        logits = model.apply(eff, x)
+        return steps._loss(model, logits, y)
+
+    ref_loss, ref_grads = jax.value_and_grad(loss_fn)(params)
+
+    train = steps.make_train_step(model)
+    out = train(*params, *mom, *masks, x, y, lr)
+    new_p, new_m, loss = out[:P], out[P : 2 * P], out[-1]
+    np.testing.assert_allclose(loss, ref_loss, rtol=1e-5)
+
+    wd, mu = model.hyper["weight_decay"], model.hyper["momentum"]
+    for q, g, v, m, np_, nm in zip(params, ref_grads, mom, masks, new_p, new_m):
+        gg = np.asarray(g) + wd * np.asarray(q)
+        v2 = mu * np.asarray(v) + gg
+        want_m = v2 * np.asarray(m)
+        want_p = (np.asarray(q) - 0.2 * v2) * np.asarray(m)
+        np.testing.assert_allclose(np.asarray(nm), want_m, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(np_), want_p, rtol=1e-5, atol=1e-6)
+
+
+def test_sgdm_masking_invariant(tiny_mlp):
+    """Pruned coordinates stay exactly zero through many steps."""
+    model = tiny_mlp
+    P = len(model.specs)
+    masks = _masks(model, density=0.3)
+    params = [p * m for p, m in zip(model.init(jax.random.PRNGKey(1)), masks)]
+    mom = [jnp.zeros_like(p) for p in params]
+    train = steps.make_train_step(model)
+    for step in range(5):
+        x, y = _batch(model, seed=step)
+        out = train(*params, *mom, *masks, x, y, jnp.float32(0.1))
+        params, mom = list(out[:P]), list(out[P : 2 * P])
+    for q, v, m in zip(params, mom, masks):
+        mm = np.asarray(m)
+        assert np.all(np.asarray(q)[mm == 0] == 0.0)
+        assert np.all(np.asarray(v)[mm == 0] == 0.0)
+
+
+def test_sgdm_loss_decreases(tiny_mlp):
+    """A few steps on a fixed batch must reduce the loss (optimization sanity)."""
+    model = tiny_mlp
+    P = len(model.specs)
+    masks = _masks(model, density=0.5)
+    params = [p * m for p, m in zip(model.init(jax.random.PRNGKey(2)), masks)]
+    mom = [jnp.zeros_like(p) for p in params]
+    train = jax.jit(steps.make_train_step(model))
+    x, y = _batch(model)
+    losses = []
+    for _ in range(30):
+        out = train(*params, *mom, *masks, x, y, jnp.float32(0.3))
+        params, mom = list(out[:P]), list(out[P : 2 * P])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+# ---------------------------------------------------------------------------
+# Adam (GRU)
+# ---------------------------------------------------------------------------
+
+
+def test_adam_matches_numpy_reference(tiny_gru):
+    model = tiny_gru
+    P = len(model.specs)
+    masks = _masks(model, density=0.6)
+    params = [p * m for p, m in zip(model.init(jax.random.PRNGKey(3)), masks)]
+    m1 = [jnp.zeros_like(p) for p in params]
+    m2 = [jnp.zeros_like(p) for p in params]
+    t = jnp.float32(0.0)
+    x, y = _batch(model)
+    lr = jnp.float32(1e-3)
+
+    def loss_fn(ps):
+        eff = [q * m for q, m in zip(ps, masks)]
+        return steps._loss(model, model.apply(eff, x), y)
+
+    ref_loss, ref_grads = jax.value_and_grad(loss_fn)(params)
+    ref_grads = steps._clip_by_global_norm(ref_grads, model.hyper["grad_clip"])
+
+    train = steps.make_train_step(model)
+    out = train(*params, *m1, *m2, t, *masks, x, y, lr)
+    new_p, new_t, loss = out[:P], out[3 * P], out[-1]
+    np.testing.assert_allclose(loss, ref_loss, rtol=1e-5)
+    assert float(new_t) == 1.0
+
+    b1, b2, eps = model.hyper["b1"], model.hyper["b2"], model.hyper["eps"]
+    wd = model.hyper["weight_decay"]
+    for q, g, m, np_ in zip(params, ref_grads, masks, new_p):
+        gg = np.asarray(g) + wd * np.asarray(q)
+        a2 = (1 - b1) * gg
+        v2 = (1 - b2) * gg * gg
+        ahat = a2 / (1 - b1**1)
+        vhat = v2 / (1 - b2**1)
+        want = (np.asarray(q) - 1e-3 * ahat / (np.sqrt(vhat) + eps)) * np.asarray(m)
+        np.testing.assert_allclose(np.asarray(np_), want, rtol=1e-4, atol=1e-6)
+
+
+def test_adam_time_counter_advances(tiny_gru):
+    model = tiny_gru
+    P = len(model.specs)
+    masks = _masks(model)
+    params = [p * m for p, m in zip(model.init(jax.random.PRNGKey(4)), masks)]
+    m1 = [jnp.zeros_like(p) for p in params]
+    m2 = [jnp.zeros_like(p) for p in params]
+    train = jax.jit(steps.make_train_step(model))
+    x, y = _batch(model)
+    t = jnp.float32(0.0)
+    for i in range(3):
+        out = train(*params, *m1, *m2, t, *masks, x, y, jnp.float32(1e-3))
+        params = list(out[:P])
+        m1, m2, t = list(out[P : 2 * P]), list(out[2 * P : 3 * P]), out[3 * P]
+        assert float(t) == i + 1
+
+
+# ---------------------------------------------------------------------------
+# Dense gradient (grow signal)
+# ---------------------------------------------------------------------------
+
+
+def test_densegrad_nonzero_on_inactive(tiny_mlp):
+    """RigL's whole point: ∇_Θ L is informative on INACTIVE connections."""
+    model = tiny_mlp
+    P = len(model.specs)
+    masks = _masks(model, density=0.3)
+    params = [p * m for p, m in zip(model.init(jax.random.PRNGKey(5)), masks)]
+    x, y = _batch(model)
+    dg = steps.make_dense_grad(model)
+    out = dg(*params, *masks, x, y)
+    sparse_specs = [s for s in model.specs if s.sparsifiable]
+    S = len(sparse_specs)
+    dense_grads, scores_, loss = out[:S], out[S : 2 * S], out[-1]
+    assert float(loss) > 0
+    inactive_mag = 0.0
+    for g, m in zip(dense_grads, (m for m, s in zip(masks, model.specs) if s.sparsifiable)):
+        gm = np.asarray(g)[np.asarray(m) == 0]
+        inactive_mag += float(np.abs(gm).sum())
+    assert inactive_mag > 0.0, "dense grads must reach pruned coordinates"
+
+
+def test_densegrad_scores_match_convention(tiny_mlp):
+    model = tiny_mlp
+    masks = _masks(model, density=0.4)
+    params = [p * m for p, m in zip(model.init(jax.random.PRNGKey(6)), masks)]
+    x, y = _batch(model)
+    out = steps.make_dense_grad(model)(*params, *masks, x, y)
+    sparse = [(i, s) for i, s in enumerate(model.specs) if s.sparsifiable]
+    S = len(sparse)
+    for k, (i, s) in enumerate(sparse):
+        grow = np.asarray(out[S + k])
+        m = np.asarray(masks[i])
+        assert np.all(grow[m == 1.0] <= -1e29), "active entries must never grow"
+        g = np.asarray(out[k])
+        np.testing.assert_allclose(grow[m == 0.0], np.abs(g)[m == 0.0], rtol=1e-5)
+
+
+def test_densegrad_consistent_with_train_grad(tiny_mlp):
+    """dense_grad · mask == the masked gradient the train step applies."""
+    model = tiny_mlp
+    masks = _masks(model, density=0.5)
+    params = [p * m for p, m in zip(model.init(jax.random.PRNGKey(7)), masks)]
+    x, y = _batch(model)
+    out = steps.make_dense_grad(model)(*params, *masks, x, y)
+
+    def loss_fn(ps):
+        eff = [q * m for q, m in zip(ps, masks)]
+        return steps._loss(model, model.apply(eff, x), y)
+
+    masked_grads = jax.grad(loss_fn)(params)
+    k = 0
+    for i, s in enumerate(model.specs):
+        if not s.sparsifiable:
+            continue
+        np.testing.assert_allclose(
+            np.asarray(out[k]) * np.asarray(masks[i]),
+            np.asarray(masked_grads[i]),
+            rtol=1e-4,
+            atol=1e-6,
+        )
+        k += 1
+
+
+# ---------------------------------------------------------------------------
+# Eval
+# ---------------------------------------------------------------------------
+
+
+def test_eval_step_classify(tiny_mlp):
+    model = tiny_mlp
+    masks = _masks(model)
+    params = [p * m for p, m in zip(model.init(jax.random.PRNGKey(8)), masks)]
+    x, y = _batch(model)
+    s, c = steps.make_eval_step(model)(*params, *masks, x, y)
+    assert 0.0 <= float(c) <= x.shape[0]
+    assert float(s) > 0.0
+
+
+def test_eval_step_lm_counts_tokens(tiny_gru):
+    model = tiny_gru
+    masks = _masks(model)
+    params = [p * m for p, m in zip(model.init(jax.random.PRNGKey(9)), masks)]
+    x, y = _batch(model)
+    s, c = steps.make_eval_step(model)(*params, *masks, x, y)
+    assert float(c) == float(np.prod(model.input_sds.shape))
+
+
+def test_grad_clip_bounds_global_norm():
+    gs = [jnp.full((10,), 100.0), jnp.full((5,), -100.0)]
+    clipped = steps._clip_by_global_norm(gs, 1.0)
+    total = np.sqrt(sum(float(jnp.sum(g * g)) for g in clipped))
+    assert total <= 1.0 + 1e-5
+    # Small gradients pass through untouched.
+    gs2 = [jnp.full((4,), 1e-3)]
+    np.testing.assert_allclose(steps._clip_by_global_norm(gs2, 1.0)[0], gs2[0], rtol=1e-6)
+
+
+def test_io_arity_contract(tiny_mlp, tiny_gru):
+    """The manifest I/O contract the rust side depends on."""
+    P = len(tiny_mlp.specs)
+    assert len(steps.train_input_sds(tiny_mlp)) == 3 * P + 3
+    assert len(steps.densegrad_input_sds(tiny_mlp)) == 2 * P + 2
+    Pg = len(tiny_gru.specs)
+    assert len(steps.train_input_sds(tiny_gru)) == 4 * Pg + 4

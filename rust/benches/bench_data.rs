@@ -1,0 +1,34 @@
+//! Synthetic data pipeline throughput: generation, batching, augmentation.
+
+use rigl::data::{augment_batch, BatchIter, CharDataset, DigitDataset, ImageDataset};
+use rigl::util::{bench, Rng};
+
+fn main() {
+    println!("== bench_data: generation + batch + augment ==");
+    bench("gen/images 1024x32x32x3", 3, || {
+        let _ = ImageDataset::synth(1024, 32, 10, 0.35, 7);
+    });
+    bench("gen/digits 2048x784", 3, || {
+        let _ = DigitDataset::synth(2048, 10, 0.6, 7);
+    });
+    bench("gen/chars 100k", 3, || {
+        let _ = CharDataset::synth(100_000, 64, 2.0, 7);
+    });
+
+    let img = ImageDataset::synth(1024, 32, 10, 0.35, 7);
+    let mut it = BatchIter::new(1024, 32, 0);
+    bench("gather/images b32", 200, || {
+        let idx = it.next_indices().to_vec();
+        let _ = img.gather(&idx);
+    });
+    let (mut x, _) = img.gather(&(0..32).collect::<Vec<_>>());
+    let mut rng = Rng::new(1);
+    bench("augment/images b32", 200, || {
+        augment_batch(&mut x, 32, 32, 32, 3, &mut rng);
+    });
+    let chars = CharDataset::synth(100_000, 64, 2.0, 7);
+    let mut rng2 = Rng::new(2);
+    bench("batch/chars b16xT48", 500, || {
+        let _ = chars.batch(16, 48, &mut rng2);
+    });
+}

@@ -1,0 +1,27 @@
+//! Appendix-H accounting engine latency (it runs inside every table cell).
+
+use rigl::flops::{train_flops_per_sample, train_flops_ratio};
+use rigl::model::load_manifest;
+use rigl::prune::PruneSchedule;
+use rigl::sparsity::{layer_sparsities, Distribution};
+use rigl::topology::Method;
+use rigl::util::bench;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = load_manifest(&rigl::artifacts_dir())?;
+    println!("== bench_flops: per-method accounting ==");
+    for model in ["cnn", "wrn"] {
+        let def = manifest.get(model)?;
+        let s = layer_sparsities(def, 0.9, &Distribution::Erk);
+        let sched = PruneSchedule::paper_default(32_000, s.clone());
+        for m in [Method::Rigl, Method::Snfs, Method::Pruning] {
+            bench(&format!("flops/{model}/{}", m.label()), 100, || {
+                let _ = train_flops_per_sample(def, m, &s, 100, Some(&sched), 32_000);
+            });
+        }
+        bench(&format!("flops_ratio/{model}"), 100, || {
+            let _ = train_flops_ratio(def, Method::Rigl, &s, 100, None, 32_000, 5.0);
+        });
+    }
+    Ok(())
+}

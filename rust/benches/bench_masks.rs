@@ -1,0 +1,27 @@
+//! Sparsity-distribution solve + random mask init latency.
+
+use rigl::model::load_manifest;
+use rigl::sparsity::{layer_sparsities, random_masks, Distribution};
+use rigl::util::{bench, Rng};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = load_manifest(&rigl::artifacts_dir())?;
+    println!("== bench_masks: distribution solve + random init ==");
+    for model in ["mlp", "cnn", "wrn", "gru"] {
+        let def = manifest.get(model)?;
+        for (label, dist) in [
+            ("uniform", Distribution::Uniform),
+            ("erk", Distribution::Erk),
+        ] {
+            bench(&format!("solve/{model}/{label}"), 50, || {
+                let _ = layer_sparsities(def, 0.9, &dist);
+            });
+        }
+        let s = layer_sparsities(def, 0.9, &Distribution::Erk);
+        let mut rng = Rng::new(3);
+        bench(&format!("random_masks/{model}"), 20, || {
+            let _ = random_masks(def, &s, &mut rng);
+        });
+    }
+    Ok(())
+}

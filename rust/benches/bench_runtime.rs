@@ -1,0 +1,56 @@
+//! PJRT marshalling + execution overhead: where the request-path time goes.
+//!
+//! Separates literal construction, execution, and result read-back so the
+//! §Perf pass can attribute the per-step cost (EXPERIMENTS.md §Perf).
+
+use rigl::model::{load_manifest, ParamSet};
+use rigl::runtime::{lit_f32, lit_i32};
+use rigl::util::{bench, Rng};
+use rigl::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let manifest = load_manifest(&rigl::artifacts_dir())?;
+    println!("== bench_runtime: PJRT marshalling vs execution ==");
+
+    for model in ["mlp", "cnn"] {
+        let def = manifest.get(model)?;
+        let exe = rt.load(&manifest.artifact_path(model, "eval")?)?;
+        let mut rng = Rng::new(0);
+        let params = ParamSet::init(def, &mut rng);
+        let masks = ParamSet::ones(def);
+        let b = def.batch_size();
+        let x = vec![0.5f32; def.input_shape.iter().product()];
+        let y = vec![0i32; b];
+        let xdims: Vec<i64> = def.input_shape.iter().map(|&d| d as i64).collect();
+
+        // 1. Literal construction alone (host→device copies).
+        bench(&format!("marshal_inputs/{model}"), 50, || {
+            let mut inputs = Vec::new();
+            for (t, s) in params.tensors.iter().zip(&def.specs) {
+                inputs.push(lit_f32(t, &s.dims_i64()).unwrap());
+            }
+            for (t, s) in masks.tensors.iter().zip(&def.specs) {
+                inputs.push(lit_f32(t, &s.dims_i64()).unwrap());
+            }
+            inputs.push(lit_f32(&x, &xdims).unwrap());
+            inputs.push(lit_i32(&y, &[b as i64]).unwrap());
+            std::hint::black_box(inputs);
+        });
+
+        // 2. Full execute (marshal + run + read back).
+        let mut inputs = Vec::new();
+        for (t, s) in params.tensors.iter().zip(&def.specs) {
+            inputs.push(lit_f32(t, &s.dims_i64()).unwrap());
+        }
+        for (t, s) in masks.tensors.iter().zip(&def.specs) {
+            inputs.push(lit_f32(t, &s.dims_i64()).unwrap());
+        }
+        inputs.push(lit_f32(&x, &xdims).unwrap());
+        inputs.push(lit_i32(&y, &[b as i64]).unwrap());
+        bench(&format!("execute_eval/{model}"), 30, || {
+            let _ = exe.run_f32(&inputs).unwrap();
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! End-to-end train-step latency per model — the L3 hot path.
+//!
+//! One bench per paper track: these are the numbers behind every Fig-2/4
+//! table cell, so the §Perf pass optimizes exactly what is measured here.
+
+use rigl::model::load_manifest;
+use rigl::topology::Method;
+use rigl::train::{TrainConfig, Trainer};
+use rigl::util::{bench, Rng};
+use rigl::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let manifest = load_manifest(&rigl::artifacts_dir())?;
+    println!("== bench_step: one optimizer step (exec + marshalling) ==");
+    for (model, iters) in [
+        ("mlp", 30),
+        ("mlp_pallas", 30),
+        ("cnn", 10),
+        ("wrn", 5),
+        ("mobilenet", 10),
+        ("gru", 10),
+    ] {
+        let mut cfg = TrainConfig::new(model, Method::Rigl);
+        cfg.sparsity = 0.9;
+        cfg.data_train = 256;
+        cfg.data_val = 64;
+        let trainer = Trainer::new(&rt, &manifest, &cfg)?;
+        let mut state = trainer.init_state(&cfg);
+        let mut rng = Rng::new(1);
+        let mut iter = trainer.batch_iter_pub(&cfg);
+        let (x, y) = trainer.next_batch(&cfg, &mut iter, &mut rng);
+        bench(&format!("train_step/{model}"), iters, || {
+            trainer.sgd_step(&mut state, &x, &y, 0.01).unwrap();
+        });
+        bench(&format!("dense_grad/{model}"), iters.div_ceil(2), || {
+            trainer.dense_grads(&state, &x, &y).unwrap();
+        });
+        bench(&format!("eval_batch/{model}"), iters, || {
+            trainer.evaluate(&state, &cfg).unwrap();
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Drop/grow mask-update latency vs layer size — the coordinator's own
+//! compute (top-k selection is O(n) via select_nth).
+
+use rigl::model::{ElemType, Kind, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
+use rigl::topology::{update_masks, Grow};
+use rigl::util::{bench, Rng};
+
+fn synth_def(n: usize) -> ModelDef {
+    ModelDef {
+        name: format!("synth{n}"),
+        backend: "jnp".into(),
+        optimizer: Optimizer::SgdMomentum,
+        task: Task::Classify,
+        input_ty: ElemType::F32,
+        input_shape: vec![1, 1],
+        target_shape: vec![1],
+        hyper: vec![],
+        artifacts: vec![],
+        specs: vec![ParamSpec {
+            name: "w".into(),
+            kind: Kind::Fc,
+            sparsifiable: true,
+            first_layer: false,
+            flops: 0.0,
+            shape: vec![n, 1],
+        }],
+    }
+}
+
+fn main() {
+    println!("== bench_topology: one Algorithm-1 mask update ==");
+    for n in [10_000usize, 100_000, 1_000_000, 4_000_000] {
+        let def = synth_def(n);
+        let mut rng = Rng::new(0);
+        let mut params = ParamSet::init(&def, &mut rng);
+        let mut masks = ParamSet::zeros(&def);
+        for i in 0..n / 10 {
+            masks.tensors[0][i * 10] = 1.0; // 10% dense
+        }
+        let mut grads = ParamSet::init(&def, &mut rng);
+        let mut mom = ParamSet::zeros(&def);
+        bench(&format!("rigl_update/n={n}"), 10, || {
+            let mut g2 = grads.clone();
+            std::mem::swap(&mut g2, &mut grads);
+            let mut bufs: Vec<&mut ParamSet> = vec![&mut mom];
+            update_masks(&def, &mut params, &mut bufs, &mut masks, 0.3, Grow::Gradient(&grads));
+        });
+        let mut rng2 = Rng::new(7);
+        bench(&format!("set_update/n={n}"), 10, || {
+            let mut bufs: Vec<&mut ParamSet> = vec![&mut mom];
+            update_masks(&def, &mut params, &mut bufs, &mut masks, 0.3, Grow::Random(&mut rng2));
+        });
+    }
+}

@@ -1,0 +1,194 @@
+//! Experiment coordinator: maps every paper table/figure id to a runner
+//! that regenerates it (DESIGN.md §4 index).
+//!
+//! `repro table --id fig2-left` etc. Runners shrink the paper's cells to
+//! the synthetic testbed; `--scale` stretches steps toward paper-like
+//! separations and `--seeds` controls repetition.
+
+mod experiments;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::{Cell, Table};
+use crate::model::{load_manifest, Manifest};
+use crate::runtime::Runtime;
+use crate::schedule::Decay;
+use crate::sparsity::Distribution;
+use crate::topology::Method;
+use crate::train::{RunResult, TrainConfig, Trainer};
+
+/// Shared experiment context: runtime, manifest, trainer cache, knobs.
+pub struct ExpContext {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    pub seeds: usize,
+    pub scale: f64,
+    pub out_dir: PathBuf,
+    trainers: RefCell<HashMap<String, Rc<Trainer>>>,
+    pub verbose: bool,
+}
+
+impl ExpContext {
+    pub fn new(seeds: usize, scale: f64, out_dir: PathBuf) -> Result<Self> {
+        Ok(ExpContext {
+            rt: Runtime::cpu()?,
+            manifest: load_manifest(&crate::artifacts_dir())?,
+            seeds: seeds.max(1),
+            scale,
+            out_dir,
+            trainers: RefCell::new(HashMap::new()),
+            verbose: true,
+        })
+    }
+
+    /// Nominal (scale=1) step counts per model family, tuned so each track
+    /// converges on the synthetic data within CPU budget.
+    pub fn nominal_steps(model: &str) -> usize {
+        match model {
+            m if m.starts_with("mlp") => 600,
+            m if m.starts_with("cnn") => 500,
+            "wrn" => 300,
+            m if m.starts_with("mobilenet") => 400,
+            m if m.starts_with("gru") => 500,
+            _ => 400,
+        }
+    }
+
+    /// Base config with paper-default hypers and scaled steps.
+    pub fn base(&self, model: &str, method: Method) -> TrainConfig {
+        let mut cfg = TrainConfig::new(model, method);
+        cfg.steps = ((Self::nominal_steps(model) as f64) * self.scale).round() as usize;
+        // ΔT scales with run length. Calibrated on this testbed (see
+        // EXPERIMENTS.md): each mask update needs roughly an epoch of
+        // recovery at batch 16, so steps/4 (a handful of updates per run)
+        // is the interior optimum the fig5-right sweep reproduces.
+        cfg.delta_t = (cfg.steps / 4).max(5);
+        cfg
+    }
+
+    /// Fetch (or build) the cached trainer for a config's model+data shape.
+    pub fn trainer(&self, cfg: &TrainConfig) -> Result<Rc<Trainer>> {
+        let key = format!("{}:{}:{}", cfg.model, cfg.data_train, cfg.data_val);
+        if let Some(t) = self.trainers.borrow().get(&key) {
+            return Ok(t.clone());
+        }
+        let t = Rc::new(Trainer::new(&self.rt, &self.manifest, cfg)?);
+        self.trainers.borrow_mut().insert(key, t.clone());
+        Ok(t)
+    }
+
+    /// Run a config across seeds, aggregating into a Cell.
+    pub fn run_cell(&self, label: &str, cfg: &TrainConfig) -> Result<Cell> {
+        let trainer = self.trainer(cfg)?;
+        let mut cell = Cell::new(label);
+        for seed in 0..self.seeds {
+            let mut c = cfg.clone();
+            c.seed = seed as u64;
+            let r = trainer.run(&c)?;
+            if self.verbose {
+                eprintln!(
+                    "  [{label} seed {seed}] metric={:.4} trainF={:.3}x testF={:.3}x S={:.3} ({:.1}s)",
+                    r.final_metric,
+                    r.train_flops_ratio,
+                    r.test_flops_ratio,
+                    r.final_sparsity,
+                    r.wall_seconds
+                );
+            }
+            cell.metrics.push(r.final_metric);
+            cell.train_flops = r.train_flops_ratio;
+            cell.test_flops = r.test_flops_ratio;
+            cell.extra
+                .push(("train_loss".into(), format!("{:.4}", r.final_train_loss)));
+        }
+        Ok(cell)
+    }
+
+    /// Run and also return the last RunResult (for train-loss tables).
+    pub fn run_once(&self, cfg: &TrainConfig) -> Result<RunResult> {
+        let trainer = self.trainer(cfg)?;
+        trainer.run(cfg)
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("table1", "Method-property taxonomy + FLOPs scaling (Table 1)"),
+    ("fig2-left", "ResNet-50 stand-in: accuracy + FLOPs, all methods, S=0.8/0.9"),
+    ("fig2-topright", "Accuracy vs training FLOPs across multipliers"),
+    ("fig2-bottomright", "Accuracy vs sparsity with extended training"),
+    ("fig3", "MobileNet: sparse vs dense incl. Big-Sparse"),
+    ("fig4-left", "Char-LM validation bits per character"),
+    ("fig4-right", "WRN CIFAR-10 stand-in: accuracy vs sparsity"),
+    ("fig5-left", "Sparsity-distribution ablation (Uniform/ER/ERK)"),
+    ("fig5-right", "Update-schedule sweep (ΔT × α)"),
+    ("fig6-left", "Loss interpolation static↔pruning (linear + Bézier)"),
+    ("fig6-right", "Escaping the static minimum (RigL vs Static warm start)"),
+    ("table2", "MLP compression vs structured pruning (Appendix B)"),
+    ("fig7", "Input-pixel connectivity heatmap (Appendix B)"),
+    ("table3", "Lottery-ticket test (Appendix E)"),
+    ("fig8-left", "Distribution ablation for all methods (Appendix C)"),
+    ("fig8-right", "SNFS momentum coefficient (Appendix D)"),
+    ("fig9", "ΔT × α sweep for SET and SNFS (Appendix F)"),
+    ("fig10", "Alternative decay schedules (Appendix G)"),
+    ("fig11-left", "Final training loss on CIFAR stand-in (Appendix J)"),
+    ("fig11-right", "ΔT sweep, Uniform vs ERK (Appendix J)"),
+    ("fig12", "ERK layer-wise sparsities (Appendix K)"),
+    ("table4", "High sparsity: S=0.95/0.965 (Appendix L)"),
+    ("appM", "Replica-desync bug ablation (Appendix M)"),
+];
+
+/// Dispatch an experiment id.
+pub fn run_experiment(ctx: &ExpContext, id: &str) -> Result<Vec<Table>> {
+    match id {
+        "table1" => experiments::table1(ctx),
+        "fig2-left" => experiments::fig2_left(ctx),
+        "fig2-topright" => experiments::fig2_topright(ctx),
+        "fig2-bottomright" => experiments::fig2_bottomright(ctx),
+        "fig3" => experiments::fig3(ctx),
+        "fig4-left" => experiments::fig4_left(ctx),
+        "fig4-right" => experiments::fig4_right(ctx),
+        "fig5-left" => experiments::fig5_left(ctx),
+        "fig5-right" => experiments::fig5_right(ctx),
+        "fig6-left" => experiments::fig6_left(ctx),
+        "fig6-right" => experiments::fig6_right(ctx),
+        "table2" => experiments::table2(ctx),
+        "fig7" => experiments::fig7(ctx),
+        "table3" => experiments::table3(ctx),
+        "fig8-left" => experiments::fig8_left(ctx),
+        "fig8-right" => experiments::fig8_right(ctx),
+        "fig9" => experiments::fig9(ctx),
+        "fig10" => experiments::fig10(ctx),
+        "fig11-left" => experiments::fig11_left(ctx),
+        "fig11-right" => experiments::fig11_right(ctx),
+        "fig12" => experiments::fig12(ctx),
+        "table4" => experiments::table4(ctx),
+        "appM" | "appm" => experiments::app_m(ctx),
+        _ => bail!(
+            "unknown experiment {id:?}; `repro list` shows all ids"
+        ),
+    }
+}
+
+// Re-exports used by experiment code.
+pub(crate) use crate::metrics::Table as T;
+pub(crate) fn dist_variants() -> [(&'static str, Distribution); 3] {
+    [
+        ("uniform", Distribution::Uniform),
+        ("er", Distribution::Er),
+        ("erk", Distribution::Erk),
+    ]
+}
+pub(crate) fn decay_variants() -> [(&'static str, Decay); 4] {
+    [
+        ("cosine", Decay::Cosine),
+        ("constant", Decay::Constant),
+        ("linear", Decay::InvPower(1.0)),
+        ("invpower3", Decay::InvPower(3.0)),
+    ]
+}

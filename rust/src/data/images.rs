@@ -1,0 +1,347 @@
+//! Procedural image datasets.
+//!
+//! `ImageDataset` (CIFAR/ImageNet stand-in): each class is a mixture of
+//! oriented sinusoidal gratings ("Gabor textures") whose frequencies,
+//! orientations, and per-channel phases are drawn deterministically from
+//! the class id; instances perturb phase, amplitude and add pixel noise.
+//! Conv nets separate these easily at low noise and meaningfully at the
+//! default noise, giving the accuracy headroom the method comparisons need.
+//!
+//! `DigitDataset` (MNIST stand-in for the Appendix-B MLP track): each
+//! class is a constellation of Gaussian blobs on a 28×28 canvas with
+//! jittered centers; border pixels are almost always ~0, reproducing the
+//! dead-input-pixel structure that Fig. 7's connectivity heatmap relies on.
+
+use crate::util::Rng;
+
+/// Dense NHWC f32 images + labels.
+pub struct ImageDataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+}
+
+impl ImageDataset {
+    /// Generate `n` images at `hw`×`hw`×3 over `classes` classes.
+    pub fn synth(n: usize, hw: usize, classes: usize, noise: f32, seed: u64) -> Self {
+        Self::synth_split(n, hw, classes, noise, seed, 0)
+    }
+
+    /// Same generator with an instance-index offset: train and validation
+    /// splits share the class prototypes (same `seed`) but draw disjoint
+    /// instances (`start` = train size for the val split).
+    pub fn synth_split(
+        n: usize,
+        hw: usize,
+        classes: usize,
+        noise: f32,
+        seed: u64,
+        start: usize,
+    ) -> Self {
+        let c = 3;
+        let base = Rng::new(seed);
+        // Class prototypes: a single oriented grating per class, with
+        // orientations evenly spaced over [0, π) so neighbouring classes
+        // are only π/C apart — instance jitter is set to half that gap and
+        // the phase is fully random, so the classifier must estimate
+        // orientation/frequency precisely and translation-invariantly.
+        // This is the regime where network capacity matters: dense nets
+        // separate the classes, heavily sparsified static nets do not.
+        let protos: Vec<[f32; 5]> = (0..classes)
+            .map(|cls| {
+                let mut r = base.split(1000 + cls as u64);
+                [
+                    std::f32::consts::PI * (cls as f32 + 0.5) / classes as f32, // angle
+                    0.55 + 0.25 * r.next_f32(),                                 // freq
+                    r.next_f32(),                                               // ch mix
+                    r.next_f32(),
+                    r.next_f32(),
+                ]
+            })
+            .collect();
+        let mut images = vec![0.0f32; n * hw * hw * c];
+        let mut labels = vec![0i32; n];
+        for i in 0..n {
+            let gi = start + i;
+            let mut r = base.split(2_000_000 + gi as u64);
+            let cls = gi % classes; // balanced
+            labels[i] = cls as i32;
+            let p = &protos[cls];
+            let gap = std::f32::consts::PI / classes as f32;
+            // Orientation jitter = half the class gap; random phase; mild
+            // frequency jitter; amplitude variation.
+            let angle = p[0] + gap * 0.5 * (r.next_f32() - 0.5);
+            let freq = p[1] * (1.0 + 0.10 * (r.next_f32() - 0.5));
+            let phase = std::f32::consts::TAU * r.next_f32();
+            let amp = 0.7 + 0.6 * r.next_f32();
+            let off = i * hw * hw * c;
+            for y in 0..hw {
+                for x in 0..hw {
+                    let (xf, yf) = (x as f32, y as f32);
+                    let g = (freq * (xf * angle.cos() + yf * angle.sin()) + phase).sin();
+                    for ch in 0..c {
+                        let mix = 0.6 + 0.4 * p[2 + ch];
+                        let v = amp * mix * g + noise * (r.next_f32() * 2.0 - 1.0);
+                        images[off + (y * hw + x) * c + ch] = v;
+                    }
+                }
+            }
+        }
+        ImageDataset {
+            images,
+            labels,
+            n,
+            h: hw,
+            w: hw,
+            c,
+            classes,
+        }
+    }
+
+    /// Copy the rows at `indices` into a flat NHWC batch.
+    pub fn gather(&self, indices: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let stride = self.h * self.w * self.c;
+        let mut x = Vec::with_capacity(indices.len() * stride);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(&self.images[i * stride..(i + 1) * stride]);
+            y.push(self.labels[i]);
+        }
+        (x, y)
+    }
+}
+
+/// Standard train-time augmentation (paper §4.1: random flips and crops):
+/// horizontal flip w.p. 0.5 and a 4-pixel-pad random crop, in place.
+pub fn augment_batch(x: &mut [f32], b: usize, h: usize, w: usize, c: usize, rng: &mut Rng) {
+    const PAD: isize = 4;
+    let stride = h * w * c;
+    let mut tmp = vec![0.0f32; stride];
+    for bi in 0..b {
+        let img = &mut x[bi * stride..(bi + 1) * stride];
+        // Horizontal flip.
+        if rng.next_f32() < 0.5 {
+            for y in 0..h {
+                for xx in 0..w / 2 {
+                    for ch in 0..c {
+                        let a = (y * w + xx) * c + ch;
+                        let bidx = (y * w + (w - 1 - xx)) * c + ch;
+                        img.swap(a, bidx);
+                    }
+                }
+            }
+        }
+        // Random crop from a zero-padded canvas: shift by [-4, 4].
+        let dy = (rng.next_below((2 * PAD as usize) + 1) as isize) - PAD;
+        let dx = (rng.next_below((2 * PAD as usize) + 1) as isize) - PAD;
+        if dx == 0 && dy == 0 {
+            continue;
+        }
+        tmp.fill(0.0);
+        for y in 0..h as isize {
+            let sy = y + dy;
+            if sy < 0 || sy >= h as isize {
+                continue;
+            }
+            for xx in 0..w as isize {
+                let sx = xx + dx;
+                if sx < 0 || sx >= w as isize {
+                    continue;
+                }
+                let dst = ((y * w as isize + xx) * c as isize) as usize;
+                let src = ((sy * w as isize + sx) * c as isize) as usize;
+                tmp[dst..dst + c].copy_from_slice(&img[src..src + c]);
+            }
+        }
+        img.copy_from_slice(&tmp);
+    }
+}
+
+/// 784-dim blob-digit dataset (flattened 28×28×1).
+pub struct DigitDataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl DigitDataset {
+    pub fn synth(n: usize, classes: usize, noise: f32, seed: u64) -> Self {
+        Self::synth_split(n, classes, noise, seed, 0)
+    }
+
+    /// See `ImageDataset::synth_split`: shared prototypes, disjoint instances.
+    pub fn synth_split(n: usize, classes: usize, noise: f32, seed: u64, start: usize) -> Self {
+        const HW: usize = 28;
+        let base = Rng::new(seed);
+        // Class prototypes: 3 blob centers each, kept away from borders.
+        let protos: Vec<Vec<(f32, f32, f32)>> = (0..classes)
+            .map(|cls| {
+                let mut r = base.split(500 + cls as u64);
+                (0..3)
+                    .map(|_| {
+                        (
+                            6.0 + 16.0 * r.next_f32(),
+                            6.0 + 16.0 * r.next_f32(),
+                            1.5 + 2.0 * r.next_f32(), // blob radius
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let dim = HW * HW;
+        let mut images = vec![0.0f32; n * dim];
+        let mut labels = vec![0i32; n];
+        for i in 0..n {
+            let gi = start + i;
+            let mut r = base.split(3_000_000 + gi as u64);
+            let cls = gi % classes;
+            labels[i] = cls as i32;
+            // Class blobs jitter by up to ±2.5px (a sizable fraction of the
+            // typical inter-prototype distance) and two DISTRACTOR blobs at
+            // random interior positions add class-independent structure —
+            // the classifier must locate the class constellation among
+            // nuisance blobs, which requires real capacity.
+            let jitter: Vec<(f32, f32)> = (0..3)
+                .map(|_| (5.0 * (r.next_f32() - 0.5), 5.0 * (r.next_f32() - 0.5)))
+                .collect();
+            let distractors: Vec<(f32, f32, f32)> = (0..2)
+                .map(|_| {
+                    (
+                        6.0 + 16.0 * r.next_f32(),
+                        6.0 + 16.0 * r.next_f32(),
+                        1.5 + 2.0 * r.next_f32(),
+                    )
+                })
+                .collect();
+            let off = i * dim;
+            for y in 0..HW {
+                for x in 0..HW {
+                    let mut v = 0.0f32;
+                    for (bi, &(cx, cy, rad)) in protos[cls].iter().enumerate() {
+                        let dx = x as f32 - (cx + jitter[bi].0);
+                        let dy = y as f32 - (cy + jitter[bi].1);
+                        v += (-(dx * dx + dy * dy) / (2.0 * rad * rad)).exp();
+                    }
+                    for &(cx, cy, rad) in &distractors {
+                        let dx = x as f32 - cx;
+                        let dy = y as f32 - cy;
+                        v += 0.8 * (-(dx * dx + dy * dy) / (2.0 * rad * rad)).exp();
+                    }
+                    images[off + y * HW + x] =
+                        v + noise * (r.next_f32() * 2.0 - 1.0) * 0.5;
+                }
+            }
+        }
+        DigitDataset {
+            images,
+            labels,
+            n,
+            dim,
+            classes,
+        }
+    }
+
+    pub fn gather(&self, indices: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(indices.len() * self.dim);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(&self.images[i * self.dim..(i + 1) * self.dim]);
+            y.push(self.labels[i]);
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_dataset_balanced_and_deterministic() {
+        let d1 = ImageDataset::synth(40, 8, 10, 0.2, 7);
+        let d2 = ImageDataset::synth(40, 8, 10, 0.2, 7);
+        assert_eq!(d1.images, d2.images);
+        for cls in 0..10 {
+            assert_eq!(d1.labels.iter().filter(|&&l| l == cls).count(), 4);
+        }
+        assert!(d1.images.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn classes_are_separable_signals() {
+        // Mean absolute inter-class pixel difference must dominate the
+        // intra-class one — otherwise nothing is learnable.
+        let d = ImageDataset::synth(60, 8, 2, 0.05, 3);
+        let stride = 8 * 8 * 3;
+        let mean_img = |cls: i32| -> Vec<f32> {
+            let idx: Vec<usize> = (0..d.n).filter(|&i| d.labels[i] == cls).collect();
+            let mut m = vec![0.0; stride];
+            for &i in &idx {
+                for j in 0..stride {
+                    m[j] += d.images[i * stride + j] / idx.len() as f32;
+                }
+            }
+            m
+        };
+        let (m0, m1) = (mean_img(0), mean_img(1));
+        let inter: f32 =
+            m0.iter().zip(&m1).map(|(a, b)| (a - b).abs()).sum::<f32>() / stride as f32;
+        assert!(inter > 0.1, "classes indistinguishable: {inter}");
+    }
+
+    #[test]
+    fn gather_layout() {
+        let d = ImageDataset::synth(10, 4, 2, 0.1, 1);
+        let (x, y) = d.gather(&[3, 0]);
+        assert_eq!(x.len(), 2 * 4 * 4 * 3);
+        assert_eq!(y, vec![d.labels[3], d.labels[0]]);
+        assert_eq!(x[..48], d.images[3 * 48..4 * 48]);
+    }
+
+    #[test]
+    fn augment_preserves_shape_and_flips() {
+        let mut rng = Rng::new(5);
+        let d = ImageDataset::synth(4, 8, 2, 0.1, 2);
+        let (mut x, _) = d.gather(&[0, 1, 2, 3]);
+        let before = x.clone();
+        augment_batch(&mut x, 4, 8, 8, 3, &mut rng);
+        assert_eq!(x.len(), before.len());
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert_ne!(x, before, "augmentation should change something");
+    }
+
+    #[test]
+    fn digit_borders_dead() {
+        let d = DigitDataset::synth(50, 10, 0.1, 4);
+        // Mean |v| on the 1-pixel border must be far below the center.
+        let mut border = 0.0f32;
+        let mut bcount = 0;
+        let mut center = 0.0f32;
+        let mut ccount = 0;
+        for i in 0..d.n {
+            for y in 0..28 {
+                for x in 0..28 {
+                    let v = d.images[i * 784 + y * 28 + x].abs();
+                    if y == 0 || y == 27 || x == 0 || x == 27 {
+                        border += v;
+                        bcount += 1;
+                    } else if (10..18).contains(&y) && (10..18).contains(&x) {
+                        center += v;
+                        ccount += 1;
+                    }
+                }
+            }
+        }
+        let (border, center) = (border / bcount as f32, center / ccount as f32);
+        assert!(
+            center > 4.0 * border,
+            "center {center} vs border {border}"
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! Synthetic data pipelines — the DESIGN.md §2 substitutions for
+//! ImageNet/CIFAR-10 (class-conditional procedural images), MNIST
+//! (blob digits with dead border pixels, so the Fig-7 connectivity
+//! heatmap is meaningful), and WikiText-103 (Markov character corpus).
+//!
+//! Everything is deterministic in the seed, cheap to generate, and hard
+//! enough that the paper's method ordering (Static < SNIP < Small-Dense <
+//! SET < SNFS/RigL ≤ Pruning/Dense) is actually exercised.
+
+mod images;
+mod text;
+
+pub use images::{augment_batch, DigitDataset, ImageDataset};
+pub use text::CharDataset;
+
+use crate::util::Rng;
+
+/// Epoch-shuffled minibatch index iterator shared by the image pipelines.
+pub struct BatchIter {
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch <= n, "batch {batch} > dataset {n}");
+        let mut it = BatchIter {
+            order: (0..n).collect(),
+            pos: 0,
+            batch,
+            rng: Rng::new(seed),
+        };
+        it.rng.shuffle(&mut it.order);
+        it
+    }
+
+    /// Next batch of dataset indices (reshuffles at epoch boundaries).
+    pub fn next_indices(&mut self) -> &[usize] {
+        if self.pos + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+        }
+        let s = &self.order[self.pos..self.pos + self.batch];
+        self.pos += self.batch;
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let mut it = BatchIter::new(10, 3, 0);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            for &i in it.next_indices() {
+                assert!(seen.insert(i), "index {i} repeated within epoch");
+            }
+        }
+        // 9 of 10 seen; next batch reshuffles.
+        assert_eq!(seen.len(), 9);
+        assert_eq!(it.next_indices().len(), 3);
+    }
+
+    #[test]
+    fn batch_iter_deterministic() {
+        let mut a = BatchIter::new(50, 8, 3);
+        let mut b = BatchIter::new(50, 8, 3);
+        for _ in 0..20 {
+            assert_eq!(a.next_indices(), b.next_indices());
+        }
+    }
+}

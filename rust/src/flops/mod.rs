@@ -1,0 +1,240 @@
+//! Appendix-H FLOPs accounting engine.
+//!
+//! Forward FLOPs `f_S` of a sparse model sum per-layer dense FLOPs scaled
+//! by layer density; a backward pass costs 2× forward; BN/xent are omitted
+//! exactly as in the paper. Per-method training FLOPs per sample:
+//!
+//! * Dense/Static/SNIP/SET: `3·f`
+//! * Pruning:               `E_t[3·f_D·(1−s_t)]`
+//! * SNFS:                  `2·f_S + f_D` (dense grads every step)
+//! * RigL:                  `(3·f_S·ΔT + 2·f_S + f_D) / (ΔT + 1)`
+//!
+//! Inference FLOPs are a single forward pass at the FINAL sparsity.
+
+use crate::model::ModelDef;
+use crate::prune::PruneSchedule;
+use crate::topology::Method;
+
+/// Sparse forward FLOPs per sample given per-spec sparsities.
+pub fn sparse_fwd_flops(def: &ModelDef, per_layer: &[f64]) -> f64 {
+    def.specs
+        .iter()
+        .zip(per_layer)
+        .map(|(s, sp)| s.flops * (1.0 - sp))
+        .sum()
+}
+
+/// Dense forward FLOPs per sample (`f_D`).
+pub fn dense_fwd_flops(def: &ModelDef) -> f64 {
+    def.dense_flops()
+}
+
+/// Per-sample *training* FLOPs for one method (Appendix H).
+pub fn train_flops_per_sample(
+    def: &ModelDef,
+    method: Method,
+    per_layer: &[f64],
+    delta_t: usize,
+    prune: Option<&PruneSchedule>,
+    total_steps: usize,
+) -> f64 {
+    let f_s = sparse_fwd_flops(def, per_layer);
+    let f_d = dense_fwd_flops(def);
+    match method {
+        Method::Dense => 3.0 * f_d,
+        Method::Static | Method::Snip | Method::Set => 3.0 * f_s,
+        Method::Snfs => 2.0 * f_s + f_d,
+        Method::Rigl => {
+            let dt = delta_t as f64;
+            (3.0 * f_s * dt + 2.0 * f_s + f_d) / (dt + 1.0)
+        }
+        Method::Pruning => {
+            // E_t[3·f_D·(1−s_t)] across the run.
+            let sched = prune.expect("pruning flops need a PruneSchedule");
+            let steps = total_steps.max(1);
+            let sum: f64 = (0..steps)
+                .map(|t| 1.0 - sched.overall_sparsity_at_scaled(def, t))
+                .sum();
+            3.0 * f_d * (sum / steps as f64)
+        }
+    }
+}
+
+impl PruneSchedule {
+    /// Network-level density weighting that accounts for the dense
+    /// (non-sparsifiable) FLOPs fraction of the model.
+    fn overall_sparsity_at_scaled(&self, def: &ModelDef, t: usize) -> f64 {
+        // FLOPs-weighted sparsity at step t (sparsifiable layers only;
+        // dense layers contribute 0 sparsity).
+        let mut pruned_flops = 0.0;
+        let total: f64 = def.specs.iter().map(|s| s.flops).sum();
+        for (li, spec) in def.specs.iter().enumerate() {
+            if spec.sparsifiable {
+                pruned_flops += self.sparsity_at(li, t) * spec.flops;
+            }
+        }
+        if total == 0.0 {
+            0.0
+        } else {
+            pruned_flops / total
+        }
+    }
+}
+
+/// Total training FLOPs for a run (`steps × batch × per-sample`).
+pub fn total_train_flops(
+    def: &ModelDef,
+    method: Method,
+    per_layer: &[f64],
+    delta_t: usize,
+    prune: Option<&PruneSchedule>,
+    steps: usize,
+) -> f64 {
+    train_flops_per_sample(def, method, per_layer, delta_t, prune, steps)
+        * steps as f64
+        * def.batch_size() as f64
+}
+
+/// Inference FLOPs per sample at final sparsity, normalized to dense.
+pub fn test_flops_ratio(def: &ModelDef, per_layer: &[f64]) -> f64 {
+    sparse_fwd_flops(def, per_layer) / dense_fwd_flops(def)
+}
+
+/// Train-FLOPs ratio vs the DENSE model trained for the same steps —
+/// the "FLOPs (Train)" column of Fig. 2.
+pub fn train_flops_ratio(
+    def: &ModelDef,
+    method: Method,
+    per_layer: &[f64],
+    delta_t: usize,
+    prune: Option<&PruneSchedule>,
+    steps: usize,
+    multiplier: f64,
+) -> f64 {
+    multiplier * train_flops_per_sample(def, method, per_layer, delta_t, prune, steps)
+        / (3.0 * dense_fwd_flops(def))
+}
+
+/// Model size in bytes under the paper's Appendix-B convention: 4-byte
+/// floats for surviving weights + a bitmask over sparsifiable tensors.
+pub fn model_bytes(def: &ModelDef, per_layer: &[f64]) -> f64 {
+    let mut bytes = 0.0;
+    for (li, spec) in def.specs.iter().enumerate() {
+        let n = spec.size() as f64;
+        if spec.sparsifiable && per_layer[li] > 0.0 {
+            bytes += 4.0 * n * (1.0 - per_layer[li]) + n / 8.0;
+        } else {
+            bytes += 4.0 * n;
+        }
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ElemType, Kind, ModelDef, Optimizer, ParamSpec, Task};
+
+    fn def2() -> ModelDef {
+        ModelDef {
+            name: "t".into(),
+            backend: "jnp".into(),
+            optimizer: Optimizer::SgdMomentum,
+            task: Task::Classify,
+            input_ty: ElemType::F32,
+            input_shape: vec![8, 10],
+            target_shape: vec![8],
+            hyper: vec![],
+            artifacts: vec![],
+            specs: vec![
+                ParamSpec {
+                    name: "a".into(),
+                    kind: Kind::Fc,
+                    sparsifiable: true,
+                    first_layer: false,
+                    flops: 600.0,
+                    shape: vec![10, 30],
+                },
+                ParamSpec {
+                    name: "b".into(),
+                    kind: Kind::Fc,
+                    sparsifiable: true,
+                    first_layer: false,
+                    flops: 400.0,
+                    shape: vec![20, 10],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn sparse_fwd_scales_with_density() {
+        let def = def2();
+        assert_eq!(sparse_fwd_flops(&def, &[0.0, 0.0]), 1000.0);
+        assert!((sparse_fwd_flops(&def, &[0.9, 0.9]) - 100.0).abs() < 1e-9);
+        assert!((sparse_fwd_flops(&def, &[0.5, 0.25]) - 600.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn appendix_h_formulas() {
+        let def = def2();
+        let s = [0.9, 0.9];
+        let f_s = 100.0;
+        let f_d = 1000.0;
+        assert_eq!(
+            train_flops_per_sample(&def, Method::Dense, &s, 100, None, 100),
+            3.0 * f_d
+        );
+        assert!(
+            (train_flops_per_sample(&def, Method::Static, &s, 100, None, 100) - 3.0 * f_s)
+                .abs()
+                < 1e-9
+        );
+        assert!(
+            (train_flops_per_sample(&def, Method::Snfs, &s, 100, None, 100)
+                - (2.0 * f_s + f_d))
+                .abs()
+                < 1e-9
+        );
+        let rigl = train_flops_per_sample(&def, Method::Rigl, &s, 100, None, 100);
+        assert!((rigl - (3.0 * f_s * 100.0 + 2.0 * f_s + f_d) / 101.0).abs() < 1e-9);
+        // RigL cost → static cost as ΔT → ∞; → SNFS cost at ΔT = 0.
+        let rigl_inf = train_flops_per_sample(&def, Method::Rigl, &s, 1_000_000, None, 100);
+        assert!((rigl_inf - 3.0 * f_s).abs() < 1.0);
+        let rigl0 = train_flops_per_sample(&def, Method::Rigl, &s, 0, None, 100);
+        assert!((rigl0 - (2.0 * f_s + f_d)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pruning_flops_between_sparse_and_dense() {
+        let def = def2();
+        let sched = crate::prune::PruneSchedule::paper_default(1000, vec![0.9, 0.9]);
+        let p = train_flops_per_sample(&def, Method::Pruning, &[0.9, 0.9], 100, Some(&sched), 1000);
+        let dense = 3.0 * 1000.0;
+        let sparse = 3.0 * 100.0;
+        assert!(p < dense, "{p}");
+        assert!(p > sparse, "{p}");
+    }
+
+    #[test]
+    fn ratios() {
+        let def = def2();
+        let s = [0.9, 0.9];
+        assert!((test_flops_ratio(&def, &s) - 0.1).abs() < 1e-9);
+        let r = train_flops_ratio(&def, Method::Static, &s, 100, None, 100, 1.0);
+        assert!((r - 0.1).abs() < 1e-9);
+        // 5× extended static training at 90% sparsity = 0.5× dense train cost.
+        let r5 = train_flops_ratio(&def, Method::Static, &s, 100, None, 100, 5.0);
+        assert!((r5 - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let def = def2();
+        // Dense: 4 bytes × 500 params.
+        assert_eq!(model_bytes(&def, &[0.0, 0.0]), 4.0 * 500.0);
+        // 90% sparse: floats shrink 10×, bitmask adds n/8.
+        let b = model_bytes(&def, &[0.9, 0.9]);
+        assert!((b - (4.0 * 50.0 + 500.0 / 8.0)).abs() < 1e-9);
+    }
+}

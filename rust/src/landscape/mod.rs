@@ -1,0 +1,215 @@
+//! Loss-landscape toolkit (paper §4.4 / Fig. 6, following Garipov et al.).
+//!
+//! * Linear interpolation between two solutions.
+//! * Quadratic/cubic Bézier curves whose control points are optimized to
+//!   minimize the mean loss along the curve, either restricted to the
+//!   sparse support (union of endpoint masks) or in the full dense space.
+//!   The control-point gradient comes from the densegrad artifact via the
+//!   chain rule: ∂L(θ(t))/∂c_j = B_j(t) · ∇_θ L(θ(t)).
+
+use anyhow::Result;
+
+use crate::model::ParamSet;
+use crate::train::{TrainConfig, Trainer, TrainState};
+
+/// Evaluate train loss along the straight line between two states.
+pub fn linear_path(
+    trainer: &Trainer,
+    cfg: &TrainConfig,
+    a: &TrainState,
+    b: &TrainState,
+    points: usize,
+    batches: usize,
+) -> Result<Vec<(f64, f64)>> {
+    let mask_union = ParamSet::mask_union(&a.masks, &b.masks);
+    let mut out = Vec::with_capacity(points);
+    for i in 0..points {
+        let t = i as f64 / (points - 1) as f64;
+        let state = TrainState {
+            params: ParamSet::lerp(&a.params, &b.params, t as f32),
+            opt: a.opt.clone(),
+            adam_t: 0.0,
+            masks: mask_union.clone(),
+            step: 0,
+        };
+        let loss = trainer.train_loss(&state, cfg, batches)?;
+        out.push((t, loss));
+    }
+    Ok(out)
+}
+
+/// Bézier curve of degree `ctrl.len()+1` with fixed endpoints.
+pub struct Bezier {
+    pub a: ParamSet,
+    pub b: ParamSet,
+    /// Interior control points (1 → quadratic, 2 → cubic).
+    pub ctrl: Vec<ParamSet>,
+}
+
+impl Bezier {
+    /// Initialize control points on the chord.
+    pub fn new(a: &ParamSet, b: &ParamSet, degree: usize) -> Self {
+        assert!((2..=3).contains(&degree), "quadratic or cubic");
+        let k = degree - 1;
+        let ctrl = (1..=k)
+            .map(|j| ParamSet::lerp(a, b, j as f32 / degree as f32))
+            .collect();
+        Bezier {
+            a: a.clone(),
+            b: b.clone(),
+            ctrl,
+        }
+    }
+
+    /// Bernstein weights for all nodes (endpoint, ctrl…, endpoint) at t.
+    fn weights(&self, t: f32) -> Vec<f32> {
+        let n = self.ctrl.len() + 1; // degree
+        let nodes = n + 1;
+        (0..nodes)
+            .map(|j| {
+                binom(n, j) as f32 * t.powi(j as i32) * (1.0 - t).powi((n - j) as i32)
+            })
+            .collect()
+    }
+
+    /// Point on the curve.
+    pub fn at(&self, t: f32) -> ParamSet {
+        let w = self.weights(t);
+        let mut out = scale(&self.a, w[0]);
+        for (j, c) in self.ctrl.iter().enumerate() {
+            add_scaled(&mut out, c, w[j + 1]);
+        }
+        add_scaled(&mut out, &self.b, *w.last().unwrap());
+        out
+    }
+
+    /// Optimize interior control points with SGD on mean curve loss.
+    ///
+    /// `mask`: None → full dense space; Some(m) → control points are
+    /// projected onto the support of `m` after every step (the "sparse
+    /// subspace" curve of Fig. 6-left).
+    pub fn optimize(
+        &mut self,
+        trainer: &Trainer,
+        cfg: &TrainConfig,
+        mask: Option<&ParamSet>,
+        iters: usize,
+        lr: f32,
+        rng_seed: u64,
+    ) -> Result<Vec<f64>> {
+        let mut rng = crate::util::Rng::new(rng_seed);
+        let mut data_rng = crate::util::Rng::new(cfg.seed ^ 0xD47A);
+        let mut iter = trainer.batch_iter_pub(cfg);
+        let mut losses = Vec::with_capacity(iters);
+        let eval_masks = mask
+            .cloned()
+            .unwrap_or_else(|| ParamSet::ones(&trainer.def));
+        for _ in 0..iters {
+            // Sample t away from the (fixed) endpoints.
+            let t = 0.1 + 0.8 * rng.next_f32();
+            let w = self.weights(t);
+            let point = self.at(t);
+            let state = TrainState {
+                params: point,
+                opt: vec![],
+                adam_t: 0.0,
+                masks: eval_masks.clone(),
+                step: 0,
+            };
+            let (x, y) = trainer.next_batch(cfg, &mut iter, &mut data_rng);
+            let (grads, loss) = trainer.dense_grads(&state, &x, &y)?;
+            losses.push(loss);
+            for (j, c) in self.ctrl.iter_mut().enumerate() {
+                let wj = w[j + 1];
+                for (li, tens) in c.tensors.iter_mut().enumerate() {
+                    let g = &grads.tensors[li];
+                    let m = mask.map(|mm| &mm.tensors[li]);
+                    for (i, v) in tens.iter_mut().enumerate() {
+                        let mut gi = g[i] * wj;
+                        if let Some(mm) = m {
+                            gi *= mm[i];
+                        }
+                        *v -= lr * gi;
+                    }
+                }
+            }
+        }
+        Ok(losses)
+    }
+
+    /// Loss profile along the optimized curve.
+    pub fn profile(
+        &self,
+        trainer: &Trainer,
+        cfg: &TrainConfig,
+        points: usize,
+        batches: usize,
+        mask: Option<&ParamSet>,
+    ) -> Result<Vec<(f64, f64)>> {
+        let eval_masks = mask
+            .cloned()
+            .unwrap_or_else(|| ParamSet::ones(&trainer.def));
+        let mut out = Vec::with_capacity(points);
+        for i in 0..points {
+            let t = i as f32 / (points - 1) as f32;
+            let state = TrainState {
+                params: self.at(t),
+                opt: vec![],
+                adam_t: 0.0,
+                masks: eval_masks.clone(),
+                step: 0,
+            };
+            out.push((t as f64, trainer.train_loss(&state, cfg, batches)?));
+        }
+        Ok(out)
+    }
+}
+
+/// Barrier height of a path: max loss minus max(endpoint losses).
+pub fn barrier(path: &[(f64, f64)]) -> f64 {
+    let endpoints = path[0].1.max(path[path.len() - 1].1);
+    path.iter().map(|p| p.1).fold(f64::MIN, f64::max) - endpoints
+}
+
+fn binom(n: usize, k: usize) -> usize {
+    (1..=k).fold(1, |acc, j| acc * (n + 1 - j) / j)
+}
+
+fn scale(p: &ParamSet, s: f32) -> ParamSet {
+    ParamSet {
+        tensors: p
+            .tensors
+            .iter()
+            .map(|t| t.iter().map(|v| v * s).collect())
+            .collect(),
+    }
+}
+
+fn add_scaled(out: &mut ParamSet, p: &ParamSet, s: f32) {
+    for (o, t) in out.tensors.iter_mut().zip(&p.tensors) {
+        for (a, b) in o.iter_mut().zip(t) {
+            *a += b * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binom_values() {
+        assert_eq!(binom(2, 0), 1);
+        assert_eq!(binom(2, 1), 2);
+        assert_eq!(binom(3, 2), 3);
+        assert_eq!(binom(3, 3), 1);
+    }
+
+    #[test]
+    fn barrier_of_flat_path_is_zero() {
+        let flat = vec![(0.0, 1.0), (0.5, 1.0), (1.0, 1.0)];
+        assert_eq!(barrier(&flat), 0.0);
+        let bump = vec![(0.0, 1.0), (0.5, 3.0), (1.0, 2.0)];
+        assert_eq!(barrier(&bump), 1.0);
+    }
+}

@@ -1,0 +1,53 @@
+//! # RigL — Rigging the Lottery: Making All Tickets Winners (ICML 2020)
+//!
+//! A Rust + JAX + Pallas reproduction of sparse-to-sparse training with
+//! magnitude-based drop and gradient-based grow.
+//!
+//! Three layers (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — the sparse-training coordinator: sparsity
+//!   distributions, drop/grow topology engines (RigL / SET / SNFS / SNIP /
+//!   static / gradual pruning), update & LR schedules, synthetic data
+//!   pipelines, the Appendix-H FLOPs accounting engine, the loss-landscape
+//!   toolkit, a data-parallel replica simulator, and the experiment
+//!   harness that regenerates every table and figure in the paper.
+//! * **L2 (python/compile, build-time only)** — JAX models (MLP, WRN-style
+//!   CNN, MicroMobileNet, GRU char-LM) AOT-lowered once to HLO text.
+//! * **L1 (python/compile/kernels)** — Pallas masked-matmul and drop/grow
+//!   score kernels, verified against pure-jnp oracles.
+//!
+//! The rust binary is self-contained after `make artifacts`: python never
+//! runs on the training path.
+
+pub mod coordinator;
+pub mod data;
+pub mod flops;
+pub mod landscape;
+pub mod metrics;
+pub mod model;
+pub mod prune;
+pub mod runtime;
+pub mod schedule;
+pub mod sparsity;
+pub mod topology;
+pub mod train;
+pub mod util;
+
+pub use model::{Kind, ModelDef, ParamSpec};
+pub use runtime::Runtime;
+pub use sparsity::Distribution;
+pub use topology::Method;
+pub use train::{TrainConfig, Trainer};
+
+/// Default artifacts directory; override with the `RIGL_ARTIFACTS` env var.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("RIGL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| {
+            // Resolve relative to the workspace root so examples/tests work
+            // from any CWD inside the repo.
+            let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            p.push("artifacts");
+            p
+        })
+}

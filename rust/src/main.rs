@@ -1,0 +1,251 @@
+//! `repro` — the RigL reproduction CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   list                         show every experiment id
+//!   info                         manifest / model-zoo summary
+//!   table --id <id> [...]       regenerate one paper table/figure
+//!   all-tables [...]             regenerate everything (long!)
+//!   train --model M --method X   one training run with full knobs
+//!   flops --model M [...]        Appendix-H accounting for one config
+//!
+//! Shared flags: --seeds N (default 1), --scale F (step multiplier,
+//! default 1.0), --out DIR (CSV output, default results/).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use rigl::coordinator::{run_experiment, ExpContext, EXPERIMENTS};
+use rigl::model::load_manifest;
+use rigl::schedule::Decay;
+use rigl::sparsity::{achieved_sparsity, layer_sparsities, Distribution};
+use rigl::topology::Method;
+use rigl::train::{TrainConfig, Trainer};
+use rigl::Runtime;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {:?}", argv[i]))?;
+            let v = argv
+                .get(i + 1)
+                .with_context(|| format!("--{k} needs a value"))?;
+            flags.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn f64(&self, k: &str, default: f64) -> Result<f64> {
+        self.get(k)
+            .map(|v| v.parse().with_context(|| format!("--{k} {v:?}")))
+            .unwrap_or(Ok(default))
+    }
+
+    fn usize(&self, k: &str, default: usize) -> Result<usize> {
+        self.get(k)
+            .map(|v| v.parse().with_context(|| format!("--{k} {v:?}")))
+            .unwrap_or(Ok(default))
+    }
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "list" => {
+            println!("{:<18} description", "id");
+            println!("{}", "-".repeat(70));
+            for (id, desc) in EXPERIMENTS {
+                println!("{id:<18} {desc}");
+            }
+        }
+        "info" => info()?,
+        "table" => {
+            let id = args.get("id").context("table needs --id <experiment>")?;
+            let ctx = context(&args)?;
+            emit_tables(&ctx, id)?;
+        }
+        "all-tables" => {
+            let ctx = context(&args)?;
+            for (id, _) in EXPERIMENTS {
+                emit_tables(&ctx, id)?;
+            }
+        }
+        "train" => train_cmd(&args)?,
+        "flops" => flops_cmd(&args)?,
+        other => {
+            print_usage();
+            bail!("unknown subcommand {other:?}");
+        }
+    }
+    Ok(())
+}
+
+fn context(args: &Args) -> Result<ExpContext> {
+    ExpContext::new(
+        args.usize("seeds", 1)?,
+        args.f64("scale", 1.0)?,
+        PathBuf::from(args.get("out").unwrap_or("results")),
+    )
+}
+
+fn emit_tables(ctx: &ExpContext, id: &str) -> Result<()> {
+    eprintln!("=== running {id} (seeds={}, scale={}) ===", ctx.seeds, ctx.scale);
+    let t0 = std::time::Instant::now();
+    let tables = run_experiment(ctx, id)?;
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.render());
+        let name = if tables.len() == 1 {
+            id.to_string()
+        } else {
+            format!("{id}.{i}")
+        };
+        t.save_csv(&ctx.out_dir, &name)?;
+    }
+    eprintln!("=== {id} done in {:.1}s → {}/ ===", t0.elapsed().as_secs_f64(), ctx.out_dir.display());
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    let manifest = load_manifest(&rigl::artifacts_dir())?;
+    println!(
+        "{:<16} {:>10} {:>12} {:>12} {:>8} {:>6}",
+        "model", "params", "sparsifiable", "denseFLOPs/s", "opt", "task"
+    );
+    for (name, def) in &manifest.models {
+        println!(
+            "{:<16} {:>10} {:>12} {:>12.3e} {:>8?} {:>6?}",
+            name,
+            def.num_params(),
+            def.sparsifiable_params(),
+            def.dense_flops(),
+            def.optimizer,
+            def.task,
+        );
+    }
+    let rt = Runtime::cpu()?;
+    println!("\nPJRT platform: {}", rt.platform());
+    Ok(())
+}
+
+fn train_cmd(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("cnn").to_string();
+    let method = Method::parse(args.get("method").unwrap_or("rigl"))?;
+    let mut cfg = TrainConfig::new(&model, method);
+    cfg.sparsity = args.f64("sparsity", 0.8)?;
+    cfg.distribution = Distribution::parse(args.get("dist").unwrap_or("uniform"))?;
+    cfg.steps = args.usize("steps", 500)?;
+    cfg.multiplier = args.f64("mult", 1.0)?;
+    cfg.seed = args.usize("seed", 0)? as u64;
+    cfg.delta_t = args.usize("delta-t", (cfg.steps / 8).max(10))?;
+    cfg.alpha = args.f64("alpha", 0.3)?;
+    cfg.t_end_frac = args.f64("t-end-frac", 0.75)?;
+    cfg.decay = Decay::parse(args.get("decay").unwrap_or("cosine"))?;
+    cfg.eval_every = args.usize("eval-every", (cfg.steps / 10).max(1))?;
+
+    let rt = Runtime::cpu()?;
+    let manifest = load_manifest(&rigl::artifacts_dir())?;
+    let trainer = Trainer::new(&rt, &manifest, &cfg)?;
+    eprintln!(
+        "training {model} ({} params) method={} S={} dist={} steps={}",
+        trainer.def.num_params(),
+        method.label(),
+        cfg.sparsity,
+        cfg.distribution.label(),
+        cfg.total_steps()
+    );
+    let r = trainer.run(&cfg)?;
+    for (t, loss) in &r.loss_history {
+        println!("step {t:>6}  loss {loss:.4}");
+    }
+    for (t, m) in &r.eval_history {
+        println!("eval {t:>6}  metric {m:.4}");
+    }
+    println!(
+        "final metric {:.4} | train loss {:.4} | trainFLOPs {:.3}x | testFLOPs {:.3}x | sparsity {:.4} | {:.1}s",
+        r.final_metric,
+        r.final_train_loss,
+        r.train_flops_ratio,
+        r.test_flops_ratio,
+        r.final_sparsity,
+        r.wall_seconds
+    );
+    Ok(())
+}
+
+fn flops_cmd(args: &Args) -> Result<()> {
+    let manifest = load_manifest(&rigl::artifacts_dir())?;
+    let model = args.get("model").unwrap_or("cnn");
+    let def = manifest.get(model)?;
+    let s = args.f64("sparsity", 0.8)?;
+    let dist = Distribution::parse(args.get("dist").unwrap_or("uniform"))?;
+    let delta_t = args.usize("delta-t", 100)?;
+    let steps = args.usize("steps", 1000)?;
+    let per_layer = layer_sparsities(def, s, &dist);
+    println!(
+        "model {model}: dense fwd FLOPs/sample {:.4e}, target S={s} ({}), achieved {:.4}",
+        def.dense_flops(),
+        dist.label(),
+        achieved_sparsity(def, &per_layer)
+    );
+    println!(
+        "{:<10} {:>14} {:>10}",
+        "method", "train FLOPs/s", "vs dense"
+    );
+    for m in [
+        Method::Dense,
+        Method::Static,
+        Method::Snip,
+        Method::Set,
+        Method::Snfs,
+        Method::Rigl,
+        Method::Pruning,
+    ] {
+        let sched = rigl::prune::PruneSchedule::paper_default(steps, per_layer.clone());
+        let f = rigl::flops::train_flops_per_sample(def, m, &per_layer, delta_t, Some(&sched), steps);
+        println!(
+            "{:<10} {:>14.4e} {:>9.3}x",
+            m.label(),
+            f,
+            f / (3.0 * def.dense_flops())
+        );
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    eprintln!(
+        "repro — RigL (ICML 2020) reproduction\n\
+         usage: repro <list|info|table|all-tables|train|flops> [--flags]\n\
+         \n\
+         repro table --id fig2-left [--seeds 3] [--scale 1.0] [--out results]\n\
+         repro train --model cnn --method rigl --sparsity 0.9 --dist erk\n\
+         repro flops --model wrn --sparsity 0.95 --dist erk"
+    );
+}

@@ -1,0 +1,181 @@
+//! Experiment records, aggregation, and paper-style table rendering.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::{mean, std_dev};
+
+/// One experiment cell: a (method, sparsity, …) configuration aggregated
+/// over seeds.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub label: String,
+    pub metrics: Vec<f64>,
+    pub train_flops: f64,
+    pub test_flops: f64,
+    pub extra: Vec<(String, String)>,
+}
+
+impl Cell {
+    pub fn new(label: impl Into<String>) -> Self {
+        Cell {
+            label: label.into(),
+            metrics: vec![],
+            train_flops: f64::NAN,
+            test_flops: f64::NAN,
+            extra: vec![],
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.metrics)
+    }
+
+    pub fn std(&self) -> f64 {
+        std_dev(&self.metrics)
+    }
+
+    pub fn metric_str(&self) -> String {
+        if self.metrics.is_empty() {
+            "n/a".into()
+        } else if self.metrics.len() == 1 {
+            format!("{:.4}", self.mean())
+        } else {
+            format!("{:.4}±{:.4}", self.mean(), self.std())
+        }
+    }
+}
+
+/// A rendered table: header + rows of strings, printed with aligned
+/// columns (the `repro table` output format) and dumpable as CSV.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "row arity");
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|h| esc(h))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save_csv(&self, dir: &Path, id: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{id}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_aggregation() {
+        let mut c = Cell::new("rigl");
+        c.metrics = vec![0.7, 0.8, 0.9];
+        assert!((c.mean() - 0.8).abs() < 1e-12);
+        assert!(c.metric_str().contains('±'));
+        let single = Cell {
+            metrics: vec![0.5],
+            ..Cell::new("x")
+        };
+        assert_eq!(single.metric_str(), "0.5000");
+        assert_eq!(Cell::new("y").metric_str(), "n/a");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Fig X", &["method", "acc"]);
+        t.push(vec!["rigl".into(), "0.91".into()]);
+        t.push(vec!["static-long-name".into(), "0.70".into()]);
+        let s = t.render();
+        assert!(s.contains("## Fig X"));
+        let lines: Vec<&str> = s.lines().collect();
+        // Columns aligned: "acc" column starts at the same offset.
+        let pos1 = lines[1].find("acc").unwrap();
+        let pos2 = lines[3].find("0.91").unwrap();
+        assert_eq!(pos1, pos2);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(vec!["with,comma".into(), "with\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"with,comma\""));
+        assert!(csv.contains("\"with\"\"quote\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(vec!["only-one".into()]);
+    }
+}

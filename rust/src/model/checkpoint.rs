@@ -1,0 +1,134 @@
+//! Minimal binary checkpoints: params + masks + opt state + step.
+//!
+//! Format (little-endian):
+//!   magic "RIGLCKPT" | u32 version | u64 step
+//!   u32 n_sets | per set: u32 n_tensors | per tensor: u64 len | f32 data…
+//!
+//! Sets are ordered: params, masks, then optimizer buffers. Used by the
+//! lottery-ticket experiment (Table 3), Fig-6 warm starts, and the e2e
+//! example's resume path.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::ParamSet;
+
+const MAGIC: &[u8; 8] = b"RIGLCKPT";
+const VERSION: u32 = 1;
+
+/// A saved training state.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub sets: Vec<ParamSet>,
+}
+
+pub fn save_checkpoint(path: &Path, ckpt: &Checkpoint) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&ckpt.step.to_le_bytes())?;
+    f.write_all(&(ckpt.sets.len() as u32).to_le_bytes())?;
+    for set in &ckpt.sets {
+        f.write_all(&(set.tensors.len() as u32).to_le_bytes())?;
+        for t in &set.tensors {
+            f.write_all(&(t.len() as u64).to_le_bytes())?;
+            // Safe little-endian serialization without unsafe casts.
+            let mut bytes = Vec::with_capacity(t.len() * 4);
+            for v in t {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&bytes)?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path) -> Result<Checkpoint> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a rigl checkpoint");
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("{path:?}: unsupported checkpoint version {version}");
+    }
+    let step = read_u64(&mut f)?;
+    let n_sets = read_u32(&mut f)? as usize;
+    if n_sets > 16 {
+        bail!("{path:?}: implausible set count {n_sets}");
+    }
+    let mut sets = Vec::with_capacity(n_sets);
+    for _ in 0..n_sets {
+        let n_tensors = read_u32(&mut f)? as usize;
+        let mut tensors = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            let len = read_u64(&mut f)? as usize;
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes)?;
+            let mut t = Vec::with_capacity(len);
+            for c in bytes.chunks_exact(4) {
+                t.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            tensors.push(t);
+        }
+        sets.push(ParamSet { tensors });
+    }
+    Ok(Checkpoint { step, sets })
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ckpt = Checkpoint {
+            step: 1234,
+            sets: vec![
+                ParamSet {
+                    tensors: vec![vec![1.0, -2.5, 3.25], vec![0.0; 5]],
+                },
+                ParamSet {
+                    tensors: vec![vec![1.0, 0.0, 1.0]],
+                },
+            ],
+        };
+        let path = std::env::temp_dir().join(format!("rigl_ckpt_{}.bin", std::process::id()));
+        save_checkpoint(&path, &ckpt).unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back.step, 1234);
+        assert_eq!(back.sets.len(), 2);
+        assert_eq!(back.sets[0].tensors, ckpt.sets[0].tensors);
+        assert_eq!(back.sets[1].tensors, ckpt.sets[1].tensors);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let path = std::env::temp_dir().join(format!("rigl_notckpt_{}.bin", std::process::id()));
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

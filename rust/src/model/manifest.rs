@@ -1,0 +1,236 @@
+//! Line-oriented manifest parser (format documented in python/compile/aot.py).
+//!
+//! The format exists because no JSON crate is reachable offline; it is
+//! deliberately trivial: whitespace-separated fields, one record per line,
+//! `model …`/`end` bracketing.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ElemType, Kind, ModelDef, Optimizer, ParamSpec, Task};
+
+/// All models described by one artifacts directory.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelDef>,
+    pub dir: std::path::PathBuf,
+}
+
+impl Manifest {
+    pub fn get(&self, name: &str) -> Result<&ModelDef> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model {name:?} not in manifest (have: {:?}) — re-run `make artifacts`?",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of a model's artifact file.
+    pub fn artifact_path(&self, model: &str, tag: &str) -> Result<std::path::PathBuf> {
+        Ok(self.dir.join(self.get(model)?.artifact(tag)?))
+    }
+}
+
+/// Parse `<dir>/manifest.txt`.
+pub fn load_manifest(dir: &Path) -> Result<Manifest> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+    let mut out = Manifest {
+        models: BTreeMap::new(),
+        dir: dir.to_path_buf(),
+    };
+    let mut cur: Option<ModelDef> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut f = line.split_whitespace();
+        let tag = f.next().unwrap();
+        let rest: Vec<&str> = f.collect();
+        let ctx = || format!("manifest.txt:{}: {line:?}", lineno + 1);
+        match tag {
+            "model" => {
+                if cur.is_some() {
+                    bail!("{}: nested model block", ctx());
+                }
+                cur = Some(ModelDef {
+                    name: rest[0].to_string(),
+                    backend: String::new(),
+                    optimizer: Optimizer::SgdMomentum,
+                    task: Task::Classify,
+                    input_ty: ElemType::F32,
+                    input_shape: vec![],
+                    target_shape: vec![],
+                    hyper: vec![],
+                    artifacts: vec![],
+                    specs: vec![],
+                });
+            }
+            "end" => {
+                let m = cur.take().with_context(ctx)?;
+                if m.input_shape.is_empty() || m.specs.is_empty() {
+                    bail!("{}: incomplete model block for {}", ctx(), m.name);
+                }
+                out.models.insert(m.name.clone(), m);
+            }
+            _ => {
+                let m = cur.as_mut().with_context(ctx)?;
+                match tag {
+                    "backend" => m.backend = rest[0].to_string(),
+                    "opt" => {
+                        m.optimizer = match rest[0] {
+                            "sgdm" => Optimizer::SgdMomentum,
+                            "adam" => Optimizer::Adam,
+                            other => bail!("{}: unknown optimizer {other:?}", ctx()),
+                        }
+                    }
+                    "task" => {
+                        m.task = match rest[0] {
+                            "classify" => Task::Classify,
+                            "lm" => Task::Lm,
+                            other => bail!("{}: unknown task {other:?}", ctx()),
+                        }
+                    }
+                    "input" => {
+                        m.input_ty = match rest[0] {
+                            "f32" => ElemType::F32,
+                            "i32" => ElemType::I32,
+                            other => bail!("{}: unknown input type {other:?}", ctx()),
+                        };
+                        m.input_shape = parse_dims(&rest[1..]).with_context(ctx)?;
+                    }
+                    "target" => {
+                        if rest[0] != "i32" {
+                            bail!("{}: targets must be i32", ctx());
+                        }
+                        m.target_shape = parse_dims(&rest[1..]).with_context(ctx)?;
+                    }
+                    "hyper" => m
+                        .hyper
+                        .push((rest[0].to_string(), rest[1].parse().with_context(ctx)?)),
+                    "artifact" => m
+                        .artifacts
+                        .push((rest[0].to_string(), rest[1].to_string())),
+                    "param" => {
+                        let spec = ParamSpec {
+                            name: rest[0].to_string(),
+                            kind: Kind::parse(rest[1]).with_context(ctx)?,
+                            sparsifiable: rest[2] == "1",
+                            first_layer: rest[3] == "1",
+                            flops: rest[4].parse().with_context(ctx)?,
+                            shape: parse_dims(&rest[5..]).with_context(ctx)?,
+                        };
+                        m.specs.push(spec);
+                    }
+                    other => bail!("{}: unknown manifest tag {other:?}", ctx()),
+                }
+            }
+        }
+    }
+    if cur.is_some() {
+        bail!("manifest.txt: unterminated model block");
+    }
+    if out.models.is_empty() {
+        bail!("manifest.txt: no models");
+    }
+    Ok(out)
+}
+
+fn parse_dims(fields: &[&str]) -> Result<Vec<usize>> {
+    fields
+        .iter()
+        .map(|s| s.parse::<usize>().map_err(Into::into))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    const SAMPLE: &str = "\
+# rigl artifact manifest v1
+model tiny
+backend jnp
+opt sgdm
+task classify
+input f32 4 8
+target i32 4
+hyper momentum 0.9
+hyper weight_decay 0.0001
+artifact train tiny_train.hlo.txt
+artifact densegrad tiny_densegrad.hlo.txt
+artifact eval tiny_eval.hlo.txt
+param fc1/w fc 1 1 80.0 8 5
+param fc1/b bias 0 0 0.0 5
+param fc2/w fc 1 0 30.0 5 3
+param fc2/b bias 0 0 0.0 3
+end
+";
+
+    #[test]
+    fn parse_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("rigl_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, SAMPLE);
+        let m = load_manifest(&dir).unwrap();
+        let tiny = m.get("tiny").unwrap();
+        assert_eq!(tiny.specs.len(), 4);
+        assert_eq!(tiny.num_params(), 8 * 5 + 5 + 5 * 3 + 3);
+        assert_eq!(tiny.sparsifiable_params(), 40 + 15);
+        assert_eq!(tiny.batch_size(), 4);
+        assert_eq!(tiny.hyper("momentum"), Some(0.9));
+        assert_eq!(tiny.artifact("eval").unwrap(), "tiny_eval.hlo.txt");
+        assert_eq!(tiny.sparse_indices(), vec![0, 2]);
+        assert_eq!(tiny.dense_flops(), 110.0);
+        assert!(tiny.specs[0].first_layer);
+        assert_eq!(tiny.specs[0].er_dims(), (8, 5, 1, 1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("rigl_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, "model x\nbogus line here\nend\n");
+        assert!(load_manifest(&dir).is_err());
+        write_manifest(&dir, "model x\ninput f32 2 2\n");
+        assert!(load_manifest(&dir).is_err(), "unterminated block");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = load_manifest(&dir).unwrap();
+        for (name, def) in &m.models {
+            assert!(!def.specs.is_empty(), "{name}");
+            assert!(def.dense_flops() > 0.0, "{name}");
+            for tag in ["train", "densegrad", "eval"] {
+                let p = m.artifact_path(name, tag).unwrap();
+                assert!(p.exists(), "{p:?}");
+            }
+            // At most one first layer per model (the MLP opts out of the
+            // Uniform first-layer exemption; see models/mlp.py).
+            assert!(
+                def.specs.iter().filter(|s| s.first_layer).count() <= 1,
+                "{name}"
+            );
+        }
+        // The zoo the harness depends on.
+        for required in ["mlp", "mlp_pallas", "cnn", "wrn", "mobilenet", "gru"] {
+            assert!(m.models.contains_key(required), "{required}");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Model metadata (manifest parsing) and parameter stores.
+//!
+//! The AOT manifest (`artifacts/manifest.txt`, emitted by
+//! `python/compile/aot.py`) is the single source of truth for parameter
+//! ordering, shapes, sparsifiability, per-layer dense FLOPs, and the flat
+//! I/O contract of each HLO artifact.
+
+mod checkpoint;
+mod manifest;
+mod params;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
+pub use manifest::{load_manifest, Manifest};
+pub use params::ParamSet;
+
+use anyhow::{bail, Result};
+
+/// Parameter tensor kind, mirroring python `ParamSpec.kind`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Fully connected: shape (in, out).
+    Fc,
+    /// Convolution: shape (kh, kw, cin, cout).
+    Conv,
+    /// Embedding: shape (vocab, dim).
+    Emb,
+    /// 1-D bias.
+    Bias,
+    /// Normalization affine.
+    Norm,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Result<Kind> {
+        Ok(match s {
+            "fc" => Kind::Fc,
+            "conv" => Kind::Conv,
+            "emb" => Kind::Emb,
+            "bias" => Kind::Bias,
+            "norm" => Kind::Norm,
+            _ => bail!("unknown param kind {s:?}"),
+        })
+    }
+}
+
+/// One parameter tensor's metadata.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub kind: Kind,
+    pub sparsifiable: bool,
+    /// Kept dense under the Uniform distribution (paper §3(1)).
+    pub first_layer: bool,
+    /// Dense forward FLOPs per sample attributable to this tensor.
+    pub flops: f64,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// (n_in, n_out, kernel_w, kernel_h) for the Erdős–Rényi(-Kernel)
+    /// scaling factors; kernel dims are 1 for non-conv tensors.
+    pub fn er_dims(&self) -> (usize, usize, usize, usize) {
+        match self.kind {
+            Kind::Conv => (self.shape[2], self.shape[3], self.shape[0], self.shape[1]),
+            Kind::Fc | Kind::Emb => (self.shape[0], self.shape[1], 1, 1),
+            _ => (self.size(), 1, 1, 1),
+        }
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// Optimizer family — determines the train artifact's opt-state arity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optimizer {
+    /// SGD + momentum: P momentum buffers.
+    SgdMomentum,
+    /// Adam: 2·P moment buffers + a scalar step counter.
+    Adam,
+}
+
+/// Task family — determines eval-metric semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// eval → (Σ cross-entropy, Σ correct).
+    Classify,
+    /// eval → (Σ nats, token count).
+    Lm,
+}
+
+/// Element type of the model input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElemType {
+    F32,
+    I32,
+}
+
+/// Everything the coordinator knows about one lowered model.
+#[derive(Clone, Debug)]
+pub struct ModelDef {
+    pub name: String,
+    pub backend: String,
+    pub optimizer: Optimizer,
+    pub task: Task,
+    pub input_ty: ElemType,
+    pub input_shape: Vec<usize>,
+    pub target_shape: Vec<usize>,
+    pub hyper: Vec<(String, f64)>,
+    /// artifact tag ("train"/"densegrad"/"eval") → file name.
+    pub artifacts: Vec<(String, String)>,
+    pub specs: Vec<ParamSpec>,
+}
+
+impl ModelDef {
+    pub fn num_params(&self) -> usize {
+        self.specs.iter().map(|s| s.size()).sum()
+    }
+
+    pub fn sparsifiable_params(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|s| s.sparsifiable)
+            .map(|s| s.size())
+            .sum()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.input_shape[0]
+    }
+
+    pub fn hyper(&self, key: &str) -> Option<f64> {
+        self.hyper
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+    }
+
+    pub fn artifact(&self, tag: &str) -> Result<&str> {
+        self.artifacts
+            .iter()
+            .find(|(t, _)| t == tag)
+            .map(|(_, f)| f.as_str())
+            .ok_or_else(|| anyhow::anyhow!("model {} has no {tag:?} artifact", self.name))
+    }
+
+    /// Indices of sparsifiable specs, in manifest (= densegrad output) order.
+    pub fn sparse_indices(&self) -> Vec<usize> {
+        self.specs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.sparsifiable)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Dense forward FLOPs per sample (Appendix H `f_D`).
+    pub fn dense_flops(&self) -> f64 {
+        self.specs.iter().map(|s| s.flops).sum()
+    }
+}

@@ -1,0 +1,213 @@
+//! Flat host-side parameter/opt-state/mask storage.
+//!
+//! The coordinator owns all training state as `Vec<f32>` per tensor (the
+//! PJRT literals are marshalled at the artifact boundary). `ParamSet` is
+//! used for parameters, optimizer moments, masks and gradients alike —
+//! they share shapes.
+
+use super::ModelDef;
+use crate::util::Rng;
+
+/// A list of tensors parallel to `ModelDef::specs`.
+#[derive(Clone, Debug, Default)]
+pub struct ParamSet {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Zeros with the model's shapes.
+    pub fn zeros(def: &ModelDef) -> Self {
+        ParamSet {
+            tensors: def.specs.iter().map(|s| vec![0.0; s.size()]).collect(),
+        }
+    }
+
+    /// All-ones (the dense mask).
+    pub fn ones(def: &ModelDef) -> Self {
+        ParamSet {
+            tensors: def.specs.iter().map(|s| vec![1.0; s.size()]).collect(),
+        }
+    }
+
+    /// He-normal init for weights, ones for norm scales, zeros for biases —
+    /// mirrors `Model.init` on the python side (seeds differ; only the
+    /// distribution matters).
+    pub fn init(def: &ModelDef, rng: &mut Rng) -> Self {
+        use super::Kind;
+        let tensors = def
+            .specs
+            .iter()
+            .map(|s| match s.kind {
+                Kind::Fc => normal(rng, s.size(), (2.0 / s.shape[0] as f64).sqrt()),
+                Kind::Conv => {
+                    let fan_in = s.shape[0] * s.shape[1] * s.shape[2];
+                    normal(rng, s.size(), (2.0 / fan_in as f64).sqrt())
+                }
+                Kind::Emb => normal(rng, s.size(), 0.1),
+                Kind::Norm => vec![1.0; s.size()],
+                Kind::Bias => vec![0.0; s.size()],
+            })
+            .collect();
+        ParamSet { tensors }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Element-wise multiply in place (e.g. re-masking).
+    pub fn mul_assign(&mut self, other: &ParamSet) {
+        for (t, o) in self.tensors.iter_mut().zip(&other.tensors) {
+            for (a, b) in t.iter_mut().zip(o) {
+                *a *= *b;
+            }
+        }
+    }
+
+    /// Total number of scalar elements.
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Count of non-zero entries in tensor `i` (mask cardinality).
+    pub fn nnz(&self, i: usize) -> usize {
+        self.tensors[i].iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Overall fraction of zeros across the given tensor indices.
+    pub fn sparsity_over(&self, indices: &[usize]) -> f64 {
+        let total: usize = indices.iter().map(|&i| self.tensors[i].len()).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let nnz: usize = indices.iter().map(|&i| self.nnz(i)).sum();
+        1.0 - nnz as f64 / total as f64
+    }
+
+    /// Linear interpolation `(1-t)·a + t·b` (landscape toolkit).
+    pub fn lerp(a: &ParamSet, b: &ParamSet, t: f32) -> ParamSet {
+        ParamSet {
+            tensors: a
+                .tensors
+                .iter()
+                .zip(&b.tensors)
+                .map(|(x, y)| {
+                    x.iter()
+                        .zip(y)
+                        .map(|(xa, yb)| (1.0 - t) * xa + t * yb)
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// Element-wise union of two 0/1 masks.
+    pub fn mask_union(a: &ParamSet, b: &ParamSet) -> ParamSet {
+        ParamSet {
+            tensors: a
+                .tensors
+                .iter()
+                .zip(&b.tensors)
+                .map(|(x, y)| {
+                    x.iter()
+                        .zip(y)
+                        .map(|(xa, yb)| if *xa != 0.0 || *yb != 0.0 { 1.0 } else { 0.0 })
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+}
+
+fn normal(rng: &mut Rng, n: usize, std: f64) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal() * std as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ElemType, Kind, Optimizer, ParamSpec, Task};
+
+    fn tiny_def() -> ModelDef {
+        ModelDef {
+            name: "t".into(),
+            backend: "jnp".into(),
+            optimizer: Optimizer::SgdMomentum,
+            task: Task::Classify,
+            input_ty: ElemType::F32,
+            input_shape: vec![2, 4],
+            target_shape: vec![2],
+            hyper: vec![],
+            artifacts: vec![],
+            specs: vec![
+                ParamSpec {
+                    name: "w".into(),
+                    kind: Kind::Fc,
+                    sparsifiable: true,
+                    first_layer: true,
+                    flops: 24.0,
+                    shape: vec![4, 3],
+                },
+                ParamSpec {
+                    name: "b".into(),
+                    kind: Kind::Bias,
+                    sparsifiable: false,
+                    first_layer: false,
+                    flops: 0.0,
+                    shape: vec![3],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_kinds() {
+        let def = tiny_def();
+        let p = ParamSet::init(&def, &mut Rng::new(0));
+        assert_eq!(p.tensors[0].len(), 12);
+        assert_eq!(p.tensors[1], vec![0.0; 3]); // bias zeros
+        assert_eq!(p.num_elements(), 15);
+    }
+
+    #[test]
+    fn mask_ops() {
+        let def = tiny_def();
+        let mut m = ParamSet::ones(&def);
+        m.tensors[0][0] = 0.0;
+        m.tensors[0][5] = 0.0;
+        assert_eq!(m.nnz(0), 10);
+        assert!((m.sparsity_over(&[0]) - 2.0 / 12.0).abs() < 1e-12);
+        let mut p = ParamSet::init(&def, &mut Rng::new(1));
+        p.mul_assign(&m);
+        assert_eq!(p.tensors[0][0], 0.0);
+        assert_eq!(p.tensors[0][5], 0.0);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        let def = tiny_def();
+        let a = ParamSet::init(&def, &mut Rng::new(2));
+        let b = ParamSet::init(&def, &mut Rng::new(3));
+        let l0 = ParamSet::lerp(&a, &b, 0.0);
+        let l1 = ParamSet::lerp(&a, &b, 1.0);
+        assert_eq!(l0.tensors, a.tensors);
+        for (x, y) in l1.tensors[0].iter().zip(&b.tensors[0]) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn union_masks() {
+        let def = tiny_def();
+        let mut a = ParamSet::zeros(&def);
+        let mut b = ParamSet::zeros(&def);
+        a.tensors[0][1] = 1.0;
+        b.tensors[0][2] = 1.0;
+        let u = ParamSet::mask_union(&a, &b);
+        assert_eq!(u.nnz(0), 2);
+    }
+}

@@ -1,0 +1,209 @@
+//! Gradual magnitude pruning baseline (Zhu & Gupta, 2018).
+//!
+//! The paper's dense-to-sparse comparator: training starts dense and the
+//! mask is re-derived from weight magnitudes on a cubic sparsity ramp
+//!
+//!   s_t = s_f · (1 − (1 − (t − t₀)/(t₁ − t₀))³)   for t ∈ [t₀, t₁]
+//!
+//! applied every `freq` steps. Because pruned weights receive no gradient
+//! under masked training they cannot recover — matching the effective
+//! behaviour of the TF model-pruning library the paper used.
+
+use crate::model::{ModelDef, ParamSet};
+use crate::util::arglargest_k;
+
+#[derive(Clone, Debug)]
+pub struct PruneSchedule {
+    pub t_start: usize,
+    pub t_end: usize,
+    pub freq: usize,
+    /// Final per-spec sparsities (0.0 for non-sparsifiable), as produced
+    /// by `sparsity::layer_sparsities`.
+    pub final_sparsity: Vec<f64>,
+}
+
+impl PruneSchedule {
+    /// The paper's default ramp: prune between 1/4 and 3/4 of training.
+    pub fn paper_default(total_steps: usize, final_sparsity: Vec<f64>) -> Self {
+        PruneSchedule {
+            t_start: total_steps / 4,
+            t_end: 3 * total_steps / 4,
+            freq: (total_steps / 40).max(1),
+            final_sparsity,
+        }
+    }
+
+    pub fn due(&self, t: usize) -> bool {
+        t >= self.t_start && t <= self.t_end && (t - self.t_start) % self.freq == 0
+    }
+
+    /// Current target sparsity for spec `li` at step `t` (cubic ramp).
+    pub fn sparsity_at(&self, li: usize, t: usize) -> f64 {
+        let sf = self.final_sparsity[li];
+        if t < self.t_start {
+            return 0.0;
+        }
+        if t >= self.t_end {
+            return sf;
+        }
+        let span = (self.t_end - self.t_start) as f64;
+        let frac = (t - self.t_start) as f64 / span;
+        sf * (1.0 - (1.0 - frac).powi(3))
+    }
+
+    /// Network-level sparsity at step `t` weighted over sparsifiable
+    /// tensors — the `s_t` in the Appendix-H pruning FLOPs expectation.
+    pub fn overall_sparsity_at(&self, def: &ModelDef, t: usize) -> f64 {
+        let mut zeros = 0.0;
+        let mut total = 0.0;
+        for (li, spec) in def.specs.iter().enumerate() {
+            if spec.sparsifiable {
+                zeros += self.sparsity_at(li, t) * spec.size() as f64;
+                total += spec.size() as f64;
+            }
+        }
+        if total == 0.0 {
+            0.0
+        } else {
+            zeros / total
+        }
+    }
+
+    /// Re-derive masks from current magnitudes at step `t`; zero pruned
+    /// weights and their optimizer moments.
+    pub fn apply(
+        &self,
+        def: &ModelDef,
+        params: &mut ParamSet,
+        opt_buffers: &mut [&mut ParamSet],
+        masks: &mut ParamSet,
+        t: usize,
+    ) -> usize {
+        let mut pruned = 0;
+        for (li, spec) in def.specs.iter().enumerate() {
+            if !spec.sparsifiable {
+                continue;
+            }
+            let s = self.sparsity_at(li, t);
+            let n = spec.size();
+            let keep = (((1.0 - s) * n as f64).round() as usize).min(n);
+            let mags: Vec<f32> = params.tensors[li].iter().map(|v| v.abs()).collect();
+            let keep_idx = arglargest_k(&mags, keep);
+            let mut new_mask = vec![0.0f32; n];
+            for i in keep_idx {
+                new_mask[i] = 1.0;
+            }
+            for i in 0..n {
+                if new_mask[i] == 0.0 && masks.tensors[li][i] != 0.0 {
+                    pruned += 1;
+                    params.tensors[li][i] = 0.0;
+                    for buf in opt_buffers.iter_mut() {
+                        buf.tensors[li][i] = 0.0;
+                    }
+                }
+            }
+            masks.tensors[li] = new_mask;
+        }
+        pruned
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ElemType, Kind, ModelDef, Optimizer, ParamSpec, Task};
+
+    fn def() -> ModelDef {
+        ModelDef {
+            name: "t".into(),
+            backend: "jnp".into(),
+            optimizer: Optimizer::SgdMomentum,
+            task: Task::Classify,
+            input_ty: ElemType::F32,
+            input_shape: vec![2, 10],
+            target_shape: vec![2],
+            hyper: vec![],
+            artifacts: vec![],
+            specs: vec![ParamSpec {
+                name: "w".into(),
+                kind: Kind::Fc,
+                sparsifiable: true,
+                first_layer: false,
+                flops: 0.0,
+                shape: vec![2, 10],
+            }],
+        }
+    }
+
+    fn sched() -> PruneSchedule {
+        PruneSchedule {
+            t_start: 100,
+            t_end: 300,
+            freq: 50,
+            final_sparsity: vec![0.8],
+        }
+    }
+
+    #[test]
+    fn ramp_shape() {
+        let s = sched();
+        assert_eq!(s.sparsity_at(0, 0), 0.0);
+        assert_eq!(s.sparsity_at(0, 99), 0.0);
+        assert_eq!(s.sparsity_at(0, 300), 0.8);
+        assert_eq!(s.sparsity_at(0, 9999), 0.8);
+        // Cubic: at the midpoint 1-(1-0.5)^3 = 0.875 of the way there.
+        assert!((s.sparsity_at(0, 200) - 0.8 * 0.875).abs() < 1e-9);
+        // Monotone.
+        let vals: Vec<f64> = (0..=40).map(|i| s.sparsity_at(0, i * 10)).collect();
+        assert!(vals.windows(2).all(|w| w[1] >= w[0] - 1e-12));
+    }
+
+    #[test]
+    fn due_cadence() {
+        let s = sched();
+        assert!(s.due(100));
+        assert!(s.due(150));
+        assert!(!s.due(160));
+        assert!(s.due(300));
+        assert!(!s.due(350));
+        assert!(!s.due(99));
+    }
+
+    #[test]
+    fn apply_prunes_smallest_magnitudes() {
+        let d = def();
+        let s = sched();
+        let mut params = ParamSet::zeros(&d);
+        params.tensors[0] = (1..=20).map(|i| i as f32).collect();
+        let mut masks = ParamSet::ones(&d);
+        let mut mom = ParamSet::ones(&d);
+        let pruned = s.apply(&d, &mut params, &mut [&mut mom], &mut masks, 300);
+        assert_eq!(pruned, 16); // 80% of 20
+        assert_eq!(masks.nnz(0), 4);
+        // Survivors are the 4 largest magnitudes (17..=20).
+        for i in 0..16 {
+            assert_eq!(masks.tensors[0][i], 0.0);
+            assert_eq!(params.tensors[0][i], 0.0);
+            assert_eq!(mom.tensors[0][i], 0.0);
+        }
+        for i in 16..20 {
+            assert_eq!(masks.tensors[0][i], 1.0);
+            assert_eq!(params.tensors[0][i], (i + 1) as f32);
+        }
+    }
+
+    #[test]
+    fn overall_sparsity_tracks_layer() {
+        let d = def();
+        let s = sched();
+        assert!((s.overall_sparsity_at(&d, 200) - 0.8 * 0.875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_default_anchors() {
+        let s = PruneSchedule::paper_default(1000, vec![0.9]);
+        assert_eq!(s.t_start, 250);
+        assert_eq!(s.t_end, 750);
+        assert!(s.freq >= 1);
+    }
+}

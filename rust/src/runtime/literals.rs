@@ -1,0 +1,59 @@
+//! Host ↔ XLA literal marshalling helpers.
+
+use anyhow::Result;
+
+/// f32 literal with the given dims (row-major).
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    debug_assert_eq!(
+        data.len() as i64,
+        dims.iter().product::<i64>().max(1),
+        "lit_f32 shape mismatch"
+    );
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(Into::into)
+}
+
+/// i32 literal with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    xla::Literal::vec1(data).reshape(dims).map_err(Into::into)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read any f32 literal back to a host vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(Into::into)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn scalar() {
+        let lit = lit_scalar_f32(2.5);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, -2, 3];
+        let lit = lit_i32(&data, &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+}

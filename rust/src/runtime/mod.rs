@@ -1,0 +1,164 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. HLO
+//! *text* is the interchange format — see python/compile/aot.py and
+//! /opt/xla-example/README.md for why serialized protos are rejected.
+//!
+//! Compiled executables are cached per path, so the coordinator can spin
+//! up many `Trainer`s against the same `Runtime` without recompiling.
+
+mod literals;
+
+pub use literals::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus an executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+    /// Cumulative compile time, reported by `repro bench`-style harnesses.
+    pub compile_seconds: RefCell<f64>,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the only backend in this testbed).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            compile_seconds: RefCell::new(0.0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        *self.compile_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
+        let exe = Rc::new(Executable {
+            exe,
+            path: path.to_path_buf(),
+        });
+        self.cache
+            .borrow_mut()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Execute with literal inputs; decompose the (return_tuple=True) root
+    /// tuple into one literal per output.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {:?}", self.path))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {:?}", self.path))?;
+        lit.to_tuple().map_err(Into::into)
+    }
+
+    /// Execute and read every output back as f32 vectors.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.run(inputs)?.iter().map(to_vec_f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::load_manifest;
+
+    /// Shared runtime for tests (PJRT client startup is expensive).
+    fn runtime() -> Runtime {
+        Runtime::cpu().unwrap()
+    }
+
+    #[test]
+    fn cpu_client_up() {
+        let rt = runtime();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn load_and_run_mlp_eval() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = load_manifest(&dir).unwrap();
+        let def = m.get("mlp").unwrap();
+        let rt = runtime();
+        let exe = rt.load(&m.artifact_path("mlp", "eval").unwrap()).unwrap();
+
+        // params (zeros) + masks (ones) + x + y → (loss_sum, correct).
+        let mut inputs = Vec::new();
+        for s in &def.specs {
+            inputs.push(lit_f32(&vec![0.0; s.size()], &s.dims_i64()).unwrap());
+        }
+        for s in &def.specs {
+            inputs.push(lit_f32(&vec![1.0; s.size()], &s.dims_i64()).unwrap());
+        }
+        let b = def.batch_size();
+        inputs.push(lit_f32(&vec![0.0; b * 784], &[b as i64, 784]).unwrap());
+        inputs.push(lit_i32(&vec![0; b], &[b as i64]).unwrap());
+        let out = exe.run_f32(&inputs).unwrap();
+        assert_eq!(out.len(), 2);
+        // Zero params ⇒ uniform logits ⇒ loss = B·ln(10).
+        let expect = b as f32 * (10f32).ln();
+        assert!(
+            (out[0][0] - expect).abs() < 1e-2,
+            "loss_sum {} vs {expect}",
+            out[0][0]
+        );
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            return;
+        }
+        let m = load_manifest(&dir).unwrap();
+        let rt = runtime();
+        let p = m.artifact_path("mlp", "eval").unwrap();
+        let a = rt.load(&p).unwrap();
+        let secs = *rt.compile_seconds.borrow();
+        let b = rt.load(&p).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        assert_eq!(*rt.compile_seconds.borrow(), secs, "second load must not compile");
+    }
+}

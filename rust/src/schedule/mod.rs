@@ -1,0 +1,193 @@
+//! Update schedules (paper §3(2), Appendix G) and LR schedules.
+
+/// The fraction-decay function `f_decay(t; α, T_end)` controlling how many
+/// connections each mask update touches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decay {
+    /// `α/2 · (1 + cos(tπ/T_end))` — the paper's default.
+    Cosine,
+    /// `α` — Appendix G.
+    Constant,
+    /// `α · (1 − t/T_end)^k` — Appendix G (k=3 is the Zhu–Gupta shape;
+    /// k=1 is linear).
+    InvPower(f64),
+}
+
+impl Decay {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "cosine" => Decay::Cosine,
+            "constant" => Decay::Constant,
+            "linear" => Decay::InvPower(1.0),
+            "invpower" | "invpower3" => Decay::InvPower(3.0),
+            _ => anyhow::bail!("unknown decay {s:?} (cosine|constant|linear|invpower3)"),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Decay::Cosine => "cosine".into(),
+            Decay::Constant => "constant".into(),
+            Decay::InvPower(k) if *k == 1.0 => "linear".into(),
+            Decay::InvPower(k) => format!("invpower{k}"),
+        }
+    }
+}
+
+/// Mask-update schedule: every `delta_t` steps until `t_end`, update a
+/// fraction `f(t)` of each layer's active connections.
+#[derive(Clone, Debug)]
+pub struct UpdateSchedule {
+    pub delta_t: usize,
+    pub t_end: usize,
+    pub alpha: f64,
+    pub decay: Decay,
+}
+
+impl UpdateSchedule {
+    /// Is a mask update due at step `t`? (t=0 is skipped: the random init
+    /// IS the step-0 topology, matching the reference implementation.)
+    pub fn due(&self, t: usize) -> bool {
+        t > 0 && t < self.t_end && t % self.delta_t == 0
+    }
+
+    /// `f_decay(t)` — the fraction of active connections to replace.
+    pub fn fraction(&self, t: usize) -> f64 {
+        let tt = t as f64;
+        let te = self.t_end as f64;
+        let f = match self.decay {
+            Decay::Cosine => self.alpha / 2.0 * (1.0 + (tt * std::f64::consts::PI / te).cos()),
+            Decay::Constant => self.alpha,
+            Decay::InvPower(k) => self.alpha * (1.0 - tt / te).max(0.0).powf(k),
+        };
+        f.clamp(0.0, 1.0)
+    }
+}
+
+/// Step-wise LR schedule with linear warmup — the paper's ImageNet recipe
+/// (warmup to peak at epoch 5, ÷10 at epochs 30/70/90) and CIFAR recipe
+/// (÷5 every 30k steps), generalized. `multiplier` stretches anchors for
+/// the extended-training runs (RigL_{M×}).
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub base: f64,
+    pub warmup_steps: usize,
+    /// (step boundary, multiplicative factor applied from that step on).
+    pub drops: Vec<(usize, f64)>,
+}
+
+impl LrSchedule {
+    /// Anchored at fractions of a nominal run length, stretched by `mult`.
+    pub fn step_drops(base: f64, warmup: usize, boundaries: &[usize], factor: f64, mult: f64) -> Self {
+        LrSchedule {
+            base,
+            warmup_steps: (warmup as f64 * mult).round() as usize,
+            drops: boundaries
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| ((b as f64 * mult).round() as usize, factor.powi(i as i32 + 1)))
+                .collect(),
+        }
+    }
+
+    pub fn constant(base: f64) -> Self {
+        LrSchedule {
+            base,
+            warmup_steps: 0,
+            drops: vec![],
+        }
+    }
+
+    pub fn at(&self, t: usize) -> f64 {
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            return self.base * (t + 1) as f64 / self.warmup_steps as f64;
+        }
+        let mut lr = self.base;
+        for &(b, f) in &self.drops {
+            if t >= b {
+                lr = self.base * f;
+            }
+        }
+        lr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched(decay: Decay) -> UpdateSchedule {
+        UpdateSchedule {
+            delta_t: 100,
+            t_end: 1000,
+            alpha: 0.3,
+            decay,
+        }
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = sched(Decay::Cosine);
+        assert!((s.fraction(0) - 0.3).abs() < 1e-12);
+        assert!(s.fraction(1000) < 1e-12);
+        // Halfway: α/2.
+        assert!((s.fraction(500) - 0.15).abs() < 1e-9);
+        // Monotone decreasing.
+        let f: Vec<f64> = (0..=10).map(|i| s.fraction(i * 100)).collect();
+        assert!(f.windows(2).all(|w| w[1] <= w[0] + 1e-12), "{f:?}");
+    }
+
+    #[test]
+    fn constant_and_invpower() {
+        assert_eq!(sched(Decay::Constant).fraction(777), 0.3);
+        let lin = sched(Decay::InvPower(1.0));
+        assert!((lin.fraction(500) - 0.15).abs() < 1e-9);
+        let cub = sched(Decay::InvPower(3.0));
+        assert!((cub.fraction(500) - 0.3 * 0.125).abs() < 1e-9);
+        assert_eq!(cub.fraction(1000), 0.0);
+    }
+
+    #[test]
+    fn due_respects_interval_and_tend() {
+        let s = sched(Decay::Cosine);
+        assert!(!s.due(0));
+        assert!(s.due(100));
+        assert!(!s.due(150));
+        assert!(s.due(900));
+        assert!(!s.due(1000), "t_end exclusive");
+        assert!(!s.due(1100));
+    }
+
+    #[test]
+    fn decay_parse_labels() {
+        for name in ["cosine", "constant", "linear", "invpower3"] {
+            let d = Decay::parse(name).unwrap();
+            assert_eq!(d.label(), name.replace("invpower", "invpower"));
+        }
+        assert!(Decay::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn lr_warmup_then_drops() {
+        let lr = LrSchedule::step_drops(1.0, 10, &[100, 200], 0.1, 1.0);
+        assert!((lr.at(0) - 0.1).abs() < 1e-9);
+        assert!((lr.at(9) - 1.0).abs() < 1e-9);
+        assert_eq!(lr.at(50), 1.0);
+        assert!((lr.at(150) - 0.1).abs() < 1e-12);
+        assert!((lr.at(250) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lr_multiplier_stretches_anchors() {
+        let lr = LrSchedule::step_drops(1.0, 10, &[100], 0.1, 2.0);
+        assert_eq!(lr.at(150), 1.0, "anchor moved to 200");
+        assert!((lr.at(200) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lr_constant() {
+        let lr = LrSchedule::constant(7e-4);
+        assert_eq!(lr.at(0), 7e-4);
+        assert_eq!(lr.at(1_000_000), 7e-4);
+    }
+}

@@ -1,0 +1,319 @@
+//! Sparsity distributions (paper §3(1)) and random mask initialization.
+//!
+//! Three strategies for allocating a global sparsity `S` across layers:
+//!
+//! * **Uniform** — every sparsifiable layer gets `s^l = S`, except the
+//!   first layer which is kept dense ("sparsifying this layer has a
+//!   disproportional effect on performance and almost no effect on size").
+//! * **Erdős–Rényi (ER)** — layer density scales with
+//!   `(n_in + n_out) / (n_in · n_out)` (Mocanu et al., 2018).
+//! * **Erdős–Rényi-Kernel (ERK)** — ER with kernel dims folded in:
+//!   `(n_in + n_out + k_w + k_h) / (n_in · n_out · k_w · k_h)`; fc layers
+//!   scale as plain ER.
+//!
+//! ER/ERK solve for a global scale ε with per-layer density clamped at 1
+//! (layers that would exceed density 1 are frozen dense and ε re-solved —
+//! the same iterative scheme as the reference implementation). `Custom`
+//! supports the Appendix-B protocol of hand-set per-layer sparsities.
+
+use crate::model::{ModelDef, ParamSet};
+use crate::util::Rng;
+
+/// Layer-wise sparsity allocation strategy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Distribution {
+    Uniform,
+    Er,
+    Erk,
+    /// Explicit per-sparsifiable-layer sparsities, in manifest order.
+    Custom(Vec<f64>),
+}
+
+impl Distribution {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "uniform" => Distribution::Uniform,
+            "er" => Distribution::Er,
+            "erk" => Distribution::Erk,
+            _ => anyhow::bail!("unknown distribution {s:?} (uniform|er|erk)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Distribution::Uniform => "uniform",
+            Distribution::Er => "er",
+            Distribution::Erk => "erk",
+            Distribution::Custom(_) => "custom",
+        }
+    }
+}
+
+/// Per-layer sparsities for every spec (0.0 for non-sparsifiable tensors).
+pub fn layer_sparsities(def: &ModelDef, overall: f64, dist: &Distribution) -> Vec<f64> {
+    assert!((0.0..1.0).contains(&overall), "sparsity {overall} out of range");
+    let mut out = vec![0.0; def.specs.len()];
+    let sparse_idx = def.sparse_indices();
+    match dist {
+        Distribution::Uniform => {
+            for &i in &sparse_idx {
+                out[i] = if def.specs[i].first_layer { 0.0 } else { overall };
+            }
+        }
+        Distribution::Custom(values) => {
+            assert_eq!(
+                values.len(),
+                sparse_idx.len(),
+                "Custom distribution arity mismatch"
+            );
+            for (&i, &s) in sparse_idx.iter().zip(values) {
+                assert!((0.0..=1.0).contains(&s));
+                out[i] = s;
+            }
+        }
+        Distribution::Er | Distribution::Erk => {
+            // raw_l: per-layer density scale factor.
+            let raw: Vec<f64> = sparse_idx
+                .iter()
+                .map(|&i| {
+                    let (nin, nout, kw, kh) = def.specs[i].er_dims();
+                    let (nin, nout, kw, kh) =
+                        (nin as f64, nout as f64, kw as f64, kh as f64);
+                    match dist {
+                        Distribution::Erk => (nin + nout + kw + kh) / (nin * nout * kw * kh),
+                        _ => (nin + nout) / (nin * nout),
+                    }
+                })
+                .collect();
+            let sizes: Vec<f64> = sparse_idx
+                .iter()
+                .map(|&i| def.specs[i].size() as f64)
+                .collect();
+            let budget: f64 = sizes.iter().sum::<f64>() * (1.0 - overall);
+            // Iteratively solve ε with density clamped at 1.
+            let mut dense_fixed = vec![false; sparse_idx.len()];
+            let mut eps = 0.0;
+            for _ in 0..sparse_idx.len() + 1 {
+                let fixed_budget: f64 = sizes
+                    .iter()
+                    .zip(&dense_fixed)
+                    .filter(|(_, &f)| f)
+                    .map(|(s, _)| *s)
+                    .sum();
+                let free_weight: f64 = sizes
+                    .iter()
+                    .zip(&raw)
+                    .zip(&dense_fixed)
+                    .filter(|(_, &f)| !f)
+                    .map(|((s, r), _)| s * r)
+                    .sum();
+                eps = if free_weight > 0.0 {
+                    ((budget - fixed_budget) / free_weight).max(0.0)
+                } else {
+                    0.0
+                };
+                let mut changed = false;
+                for (j, &r) in raw.iter().enumerate() {
+                    if !dense_fixed[j] && eps * r >= 1.0 {
+                        dense_fixed[j] = true;
+                        changed = true;
+                    }
+                }
+                if !changed {
+                    break;
+                }
+            }
+            for (j, &i) in sparse_idx.iter().enumerate() {
+                let density = if dense_fixed[j] {
+                    1.0
+                } else {
+                    (eps * raw[j]).min(1.0)
+                };
+                out[i] = 1.0 - density;
+            }
+        }
+    }
+    out
+}
+
+/// Achieved overall sparsity over the sparsifiable tensors given per-layer
+/// sparsities (`layer_sparsities` output).
+pub fn achieved_sparsity(def: &ModelDef, per_layer: &[f64]) -> f64 {
+    let mut zeros = 0.0;
+    let mut total = 0.0;
+    for (i, s) in def.specs.iter().enumerate() {
+        if s.sparsifiable {
+            zeros += per_layer[i] * s.size() as f64;
+            total += s.size() as f64;
+        }
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        zeros / total
+    }
+}
+
+/// Random mask init: exactly `round((1-s^l)·N^l)` active connections per
+/// layer; non-sparsifiable tensors get all-ones masks.
+pub fn random_masks(def: &ModelDef, per_layer: &[f64], rng: &mut Rng) -> ParamSet {
+    let mut masks = ParamSet::zeros(def);
+    for (i, spec) in def.specs.iter().enumerate() {
+        let t = &mut masks.tensors[i];
+        if !spec.sparsifiable || per_layer[i] == 0.0 {
+            t.iter_mut().for_each(|v| *v = 1.0);
+            continue;
+        }
+        let n = spec.size();
+        let k = (((1.0 - per_layer[i]) * n as f64).round() as usize).min(n);
+        // Stateless stream per layer: replicas agree by construction
+        // (Appendix M bug #1 fix).
+        let mut layer_rng = rng.split(i as u64);
+        for idx in layer_rng.sample_indices(n, k) {
+            t[idx] = 1.0;
+        }
+    }
+    masks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ElemType, Kind, ModelDef, Optimizer, ParamSpec, Task};
+
+    fn def_with(specs: Vec<ParamSpec>) -> ModelDef {
+        ModelDef {
+            name: "t".into(),
+            backend: "jnp".into(),
+            optimizer: Optimizer::SgdMomentum,
+            task: Task::Classify,
+            input_ty: ElemType::F32,
+            input_shape: vec![2, 4],
+            target_shape: vec![2],
+            hyper: vec![],
+            artifacts: vec![],
+            specs,
+        }
+    }
+
+    fn fc(name: &str, nin: usize, nout: usize, first: bool) -> ParamSpec {
+        ParamSpec {
+            name: name.into(),
+            kind: Kind::Fc,
+            sparsifiable: true,
+            first_layer: first,
+            flops: (2 * nin * nout) as f64,
+            shape: vec![nin, nout],
+        }
+    }
+
+    fn conv(name: &str, kh: usize, kw: usize, cin: usize, cout: usize) -> ParamSpec {
+        ParamSpec {
+            name: name.into(),
+            kind: Kind::Conv,
+            sparsifiable: true,
+            first_layer: false,
+            flops: 0.0,
+            shape: vec![kh, kw, cin, cout],
+        }
+    }
+
+    #[test]
+    fn uniform_keeps_first_layer_dense() {
+        let def = def_with(vec![fc("a", 10, 20, true), fc("b", 20, 30, false)]);
+        let s = layer_sparsities(&def, 0.8, &Distribution::Uniform);
+        assert_eq!(s, vec![0.0, 0.8]);
+    }
+
+    #[test]
+    fn er_hits_overall_budget() {
+        let def = def_with(vec![
+            fc("a", 784, 300, true),
+            fc("b", 300, 100, false),
+            fc("c", 100, 10, false),
+        ]);
+        for overall in [0.5, 0.8, 0.9, 0.965] {
+            for dist in [Distribution::Er, Distribution::Erk] {
+                let s = layer_sparsities(&def, overall, &dist);
+                let got = achieved_sparsity(&def, &s);
+                assert!(
+                    (got - overall).abs() < 1e-6,
+                    "{dist:?} S={overall}: got {got} ({s:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn er_gives_smaller_layers_lower_sparsity() {
+        let def = def_with(vec![
+            fc("big", 512, 512, false),
+            fc("small", 32, 16, false),
+        ]);
+        let s = layer_sparsities(&def, 0.9, &Distribution::Er);
+        assert!(s[1] < s[0], "{s:?}");
+    }
+
+    #[test]
+    fn erk_keeps_1x1_convs_denser() {
+        // Paper Appendix H: "Erdős-Rényi-Kernel distributions usually cause
+        // 1x1 convolutions to be less sparse than the 3x3 … layers" —
+        // the per-parameter density scale (nin+nout+kw+kh)/(nin·nout·kw·kh)
+        // is larger for 1×1 kernels at equal channel counts.
+        let def = def_with(vec![conv("c3", 3, 3, 64, 64), conv("c1", 1, 1, 64, 64)]);
+        let er = layer_sparsities(&def, 0.8, &Distribution::Er);
+        let erk = layer_sparsities(&def, 0.8, &Distribution::Erk);
+        assert!(erk[1] < erk[0], "1x1 should be denser under ERK: {erk:?}");
+        // Plain ER ignores kernel dims entirely: equal channel counts ⇒
+        // equal sparsities.
+        assert!((er[0] - er[1]).abs() < 1e-9, "{er:?}");
+    }
+
+    #[test]
+    fn erk_clamps_tiny_layers_dense() {
+        let def = def_with(vec![fc("big", 1000, 1000, false), fc("tiny", 4, 2, false)]);
+        let s = layer_sparsities(&def, 0.95, &Distribution::Erk);
+        assert_eq!(s[1], 0.0, "tiny layer should clamp dense: {s:?}");
+        assert!((achieved_sparsity(&def, &s) - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn custom_distribution() {
+        let def = def_with(vec![fc("a", 784, 300, true), fc("b", 300, 100, false)]);
+        let s = layer_sparsities(&def, 0.5, &Distribution::Custom(vec![0.99, 0.89]));
+        assert_eq!(s, vec![0.99, 0.89]);
+    }
+
+    #[test]
+    fn random_masks_exact_cardinality() {
+        let def = def_with(vec![fc("a", 100, 50, false), fc("b", 50, 20, false)]);
+        let s = layer_sparsities(&def, 0.9, &Distribution::Uniform);
+        let masks = random_masks(&def, &s, &mut Rng::new(1));
+        assert_eq!(masks.nnz(0), 500);
+        assert_eq!(masks.nnz(1), 100);
+        // Values strictly 0/1.
+        assert!(masks.tensors[0].iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn random_masks_deterministic_per_seed() {
+        let def = def_with(vec![fc("a", 64, 64, false)]);
+        let s = layer_sparsities(&def, 0.8, &Distribution::Uniform);
+        let a = random_masks(&def, &s, &mut Rng::new(7));
+        let b = random_masks(&def, &s, &mut Rng::new(7));
+        let c = random_masks(&def, &s, &mut Rng::new(8));
+        assert_eq!(a.tensors, b.tensors);
+        assert_ne!(a.tensors, c.tensors);
+    }
+
+    #[test]
+    fn non_sparsifiable_gets_ones() {
+        let mut bias = fc("bias", 10, 1, false);
+        bias.sparsifiable = false;
+        bias.kind = Kind::Bias;
+        let def = def_with(vec![fc("a", 10, 10, false), bias]);
+        let s = layer_sparsities(&def, 0.9, &Distribution::Erk);
+        let masks = random_masks(&def, &s, &mut Rng::new(0));
+        assert!(masks.tensors[1].iter().all(|&v| v == 1.0));
+    }
+}

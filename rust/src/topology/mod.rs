@@ -1,0 +1,465 @@
+//! Drop/grow topology engines (paper §3(3)–(4), Algorithm 1).
+//!
+//! Every ΔT steps, for each sparsifiable layer `l`:
+//!
+//! 1. **Drop** `k = f_decay(t)·(1−s^l)·N^l` active connections with the
+//!    smallest weight magnitudes — `I_active = ArgTopK(-|θ^l|, k)`.
+//! 2. **Grow** `k` connections among `i ∉ θ^l \ I_active` (everything
+//!    except the *remaining* active set — freshly dropped connections are
+//!    eligible for regrowth, exactly as in Algorithm 1):
+//!    * RigL — largest `|∇_Θ L|` (dense gradients from the densegrad
+//!      artifact, computed only at update steps);
+//!    * SNFS — largest `|momentum of ∇_Θ L|` (accumulated every step);
+//!    * SET  — uniformly at random.
+//! 3. Newly grown connections start at **zero** (they do not perturb the
+//!    network output but are guaranteed large gradients next step);
+//!    their optimizer moments are reset. Dropped weights and moments are
+//!    zeroed.
+
+use crate::model::{ModelDef, ParamSet};
+use crate::util::{arglargest_k, argsmallest_k, Rng};
+
+/// Sparse-training method taxonomy (paper Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Dense baseline (all-ones masks).
+    Dense,
+    /// Random static mask, never updated.
+    Static,
+    /// One-shot saliency mask at init (Lee et al., 2019), then static.
+    Snip,
+    /// Magnitude drop + random grow (Mocanu et al., 2018).
+    Set,
+    /// Magnitude drop + gradient-momentum grow (Dettmers & Zettlemoyer, 2019).
+    Snfs,
+    /// Magnitude drop + instantaneous-gradient grow — the paper's method.
+    Rigl,
+    /// Gradual magnitude pruning baseline (Zhu & Gupta, 2018): starts
+    /// dense, prunes on a cubic schedule (see `prune`).
+    Pruning,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "dense" => Method::Dense,
+            "static" => Method::Static,
+            "snip" => Method::Snip,
+            "set" => Method::Set,
+            "snfs" => Method::Snfs,
+            "rigl" => Method::Rigl,
+            "pruning" => Method::Pruning,
+            _ => anyhow::bail!(
+                "unknown method {s:?} (dense|static|snip|set|snfs|rigl|pruning)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::Dense => "dense",
+            Method::Static => "static",
+            Method::Snip => "snip",
+            Method::Set => "set",
+            Method::Snfs => "snfs",
+            Method::Rigl => "rigl",
+            Method::Pruning => "pruning",
+        }
+    }
+
+    /// Does this method update topology during training?
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, Method::Set | Method::Snfs | Method::Rigl)
+    }
+
+    /// Does this method need dense gradients, and how often?
+    /// (Drives the Appendix-H FLOPs accounting.)
+    pub fn dense_grad_cadence(&self) -> DenseGradCadence {
+        match self {
+            Method::Rigl => DenseGradCadence::EveryUpdate,
+            Method::Snfs => DenseGradCadence::EveryStep,
+            Method::Snip => DenseGradCadence::Once,
+            _ => DenseGradCadence::Never,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DenseGradCadence {
+    Never,
+    Once,
+    EveryUpdate,
+    EveryStep,
+}
+
+/// Grow criterion input for one mask update.
+pub enum Grow<'a> {
+    /// RigL: dense gradients ∇_Θ L (magnitudes used).
+    Gradient(&'a ParamSet),
+    /// SNFS: gradient-momentum buffer (magnitudes used).
+    Momentum(&'a ParamSet),
+    /// SET: uniform over eligible connections.
+    Random(&'a mut Rng),
+}
+
+/// Outcome of one topology update.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct UpdateStats {
+    pub dropped: usize,
+    pub grown: usize,
+    /// Per-layer (spec-index, swapped-count) for diagnostics.
+    pub per_layer: Vec<(usize, usize)>,
+}
+
+/// One Algorithm-1 mask update across all sparsifiable layers.
+///
+/// `opt_buffers` are the optimizer moment sets (1 for SGDM, 2 for Adam);
+/// moments of every touched connection are reset to preserve the paper's
+/// zero-init semantics for grown weights.
+pub fn update_masks(
+    def: &ModelDef,
+    params: &mut ParamSet,
+    opt_buffers: &mut [&mut ParamSet],
+    masks: &mut ParamSet,
+    fraction: f64,
+    mut grow: Grow<'_>,
+) -> UpdateStats {
+    let mut stats = UpdateStats::default();
+    for (li, spec) in def.specs.iter().enumerate() {
+        if !spec.sparsifiable {
+            continue;
+        }
+        let n = spec.size();
+        let mask = &mut masks.tensors[li];
+        let active: Vec<usize> = (0..n).filter(|&i| mask[i] != 0.0).collect();
+        if active.is_empty() || active.len() == n {
+            continue; // fully dense or fully empty layer: nothing to rewire
+        }
+        let k = ((fraction * active.len() as f64).round() as usize)
+            .min(active.len())
+            .min(n - active.len() + active.len()); // cap later by eligibility
+        if k == 0 {
+            continue;
+        }
+
+        // (1) Drop: k smallest |θ| among active.
+        let vals: Vec<f32> = active.iter().map(|&i| params.tensors[li][i].abs()).collect();
+        let dropped: Vec<usize> = argsmallest_k(&vals, k)
+            .into_iter()
+            .map(|p| active[p])
+            .collect();
+        for &i in &dropped {
+            mask[i] = 0.0;
+        }
+
+        // (2) Grow among NOT(remaining active) = mask==0 right now.
+        let eligible: Vec<usize> = (0..n).filter(|&i| mask[i] == 0.0).collect();
+        let k_grow = k.min(eligible.len());
+        let grown: Vec<usize> = match &mut grow {
+            Grow::Gradient(g) | Grow::Momentum(g) => {
+                let scores: Vec<f32> =
+                    eligible.iter().map(|&i| g.tensors[li][i].abs()).collect();
+                arglargest_k(&scores, k_grow)
+                    .into_iter()
+                    .map(|p| eligible[p])
+                    .collect()
+            }
+            Grow::Random(rng) => {
+                // Stateless per-layer stream (Appendix M bug #1 fix).
+                let mut layer_rng = rng.split(li as u64);
+                layer_rng
+                    .sample_indices(eligible.len(), k_grow)
+                    .into_iter()
+                    .map(|p| eligible[p])
+                    .collect()
+            }
+        };
+
+        // (3) Apply. Reference-implementation semantics
+        // (google-research/rigl sparse_optimizers.py): NEWLY-activated
+        // connections (inactive before this update) start at zero with
+        // fresh optimizer state; a just-dropped connection that is
+        // immediately regrown keeps its weight (drop+grow cancels).
+        let was_active: Vec<bool> = {
+            let mut wa = vec![false; n];
+            for &i in &active {
+                wa[i] = true;
+            }
+            wa
+        };
+        for &i in &grown {
+            mask[i] = 1.0;
+        }
+        for &i in &dropped {
+            if mask[i] == 0.0 {
+                params.tensors[li][i] = 0.0;
+                for buf in opt_buffers.iter_mut() {
+                    buf.tensors[li][i] = 0.0;
+                }
+            }
+        }
+        for &i in &grown {
+            if !was_active[i] {
+                params.tensors[li][i] = 0.0;
+                for buf in opt_buffers.iter_mut() {
+                    buf.tensors[li][i] = 0.0;
+                }
+            }
+        }
+        stats.dropped += dropped.len();
+        stats.grown += grown.len();
+        stats.per_layer.push((li, grown.len()));
+    }
+    stats
+}
+
+/// SNIP one-shot mask (Lee et al., 2019, with the paper's Appendix-M fix:
+/// saliency = |θ·∇L|, NOT |∇L|): per layer, keep the top `(1−s^l)·N^l`
+/// saliencies. Dense gradients come from one densegrad call on the init.
+pub fn snip_masks(
+    def: &ModelDef,
+    params: &ParamSet,
+    dense_grads: &ParamSet,
+    per_layer_sparsity: &[f64],
+) -> ParamSet {
+    let mut masks = ParamSet::zeros(def);
+    for (li, spec) in def.specs.iter().enumerate() {
+        let t = &mut masks.tensors[li];
+        if !spec.sparsifiable || per_layer_sparsity[li] == 0.0 {
+            t.iter_mut().for_each(|v| *v = 1.0);
+            continue;
+        }
+        let n = spec.size();
+        let keep = (((1.0 - per_layer_sparsity[li]) * n as f64).round() as usize).min(n);
+        let saliency: Vec<f32> = (0..n)
+            .map(|i| (params.tensors[li][i] * dense_grads.tensors[li][i]).abs())
+            .collect();
+        for i in arglargest_k(&saliency, keep) {
+            t[i] = 1.0;
+        }
+    }
+    masks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ElemType, Kind, ModelDef, Optimizer, ParamSpec, Task};
+
+    fn def_one_layer(n_in: usize, n_out: usize) -> ModelDef {
+        ModelDef {
+            name: "t".into(),
+            backend: "jnp".into(),
+            optimizer: Optimizer::SgdMomentum,
+            task: Task::Classify,
+            input_ty: ElemType::F32,
+            input_shape: vec![2, n_in],
+            target_shape: vec![2],
+            hyper: vec![],
+            artifacts: vec![],
+            specs: vec![ParamSpec {
+                name: "w".into(),
+                kind: Kind::Fc,
+                sparsifiable: true,
+                first_layer: false,
+                flops: 0.0,
+                shape: vec![n_in, n_out],
+            }],
+        }
+    }
+
+    /// 10 weights, 5 active (indices 0..5) with |θ| = 5,4,3,2,1.
+    fn setup() -> (ModelDef, ParamSet, ParamSet, ParamSet) {
+        let def = def_one_layer(2, 5);
+        let mut params = ParamSet::zeros(&def);
+        let mut masks = ParamSet::zeros(&def);
+        for i in 0..5 {
+            params.tensors[0][i] = (5 - i) as f32;
+            masks.tensors[0][i] = 1.0;
+        }
+        let mom = ParamSet::zeros(&def);
+        (def, params, masks, mom)
+    }
+
+    #[test]
+    fn rigl_drops_smallest_grows_highest_grad() {
+        let (def, mut params, mut masks, mut mom) = setup();
+        let mut grads = ParamSet::zeros(&def);
+        // Highest dense-gradient magnitude on inactive index 7.
+        grads.tensors[0][7] = -9.0;
+        grads.tensors[0][8] = 3.0;
+        grads.tensors[0][0] = 100.0; // active: ineligible
+        let stats = update_masks(
+            &def,
+            &mut params,
+            &mut [&mut mom],
+            &mut masks,
+            0.4, // k = round(0.4·5) = 2
+            Grow::Gradient(&grads),
+        );
+        assert_eq!(stats.dropped, 2);
+        assert_eq!(stats.grown, 2);
+        let m = &masks.tensors[0];
+        // Dropped: smallest |θ| = indices 4 (1.0) and 3 (2.0).
+        assert_eq!(m[4], 0.0);
+        assert_eq!(m[3], 0.0);
+        // Grown: indices 7 and 8 (largest |grad| among eligible).
+        assert_eq!(m[7], 1.0);
+        assert_eq!(m[8], 1.0);
+        // Active index 0 stayed (high grad but ineligible).
+        assert_eq!(m[0], 1.0);
+        // Grown weights start at zero.
+        assert_eq!(params.tensors[0][7], 0.0);
+        // Dropped weights zeroed.
+        assert_eq!(params.tensors[0][3], 0.0);
+        // Cardinality preserved.
+        assert_eq!(masks.nnz(0), 5);
+    }
+
+    #[test]
+    fn dropped_connections_are_regrow_eligible() {
+        let (def, mut params, mut masks, mut mom) = setup();
+        let mut grads = ParamSet::zeros(&def);
+        // The about-to-be-dropped index 4 has the highest dense gradient:
+        // Algorithm 1 allows regrowing it.
+        grads.tensors[0][4] = 99.0;
+        update_masks(
+            &def,
+            &mut params,
+            &mut [&mut mom],
+            &mut masks,
+            0.2, // k = 1
+            Grow::Gradient(&grads),
+        );
+        assert_eq!(masks.tensors[0][4], 1.0, "dropped idx regrown");
+        // Reference semantics: drop+grow of the same index cancels — the
+        // weight survives.
+        assert_eq!(params.tensors[0][4], 1.0);
+        assert_eq!(masks.nnz(0), 5);
+    }
+
+    #[test]
+    fn set_grows_random_and_preserves_cardinality() {
+        let (def, mut params, mut masks, mut mom) = setup();
+        let mut rng = Rng::new(42);
+        let stats = update_masks(
+            &def,
+            &mut params,
+            &mut [&mut mom],
+            &mut masks,
+            0.4,
+            Grow::Random(&mut rng),
+        );
+        assert_eq!(stats.grown, 2);
+        assert_eq!(masks.nnz(0), 5);
+    }
+
+    #[test]
+    fn set_update_is_deterministic_per_rng_stream() {
+        // Appendix M: replicas sharing the seed must agree on SET updates.
+        let run = |seed| {
+            let (def, mut params, mut masks, mut mom) = setup();
+            let mut rng = Rng::new(seed);
+            update_masks(
+                &def,
+                &mut params,
+                &mut [&mut mom],
+                &mut masks,
+                0.4,
+                Grow::Random(&mut rng),
+            );
+            masks.tensors[0].clone()
+        };
+        assert_eq!(run(1), run(1));
+    }
+
+    #[test]
+    fn momentum_of_touched_connections_reset() {
+        let (def, mut params, mut masks, _) = setup();
+        let mut mom = ParamSet::zeros(&def);
+        mom.tensors[0] = (0..10).map(|i| i as f32).collect();
+        let mut grads = ParamSet::zeros(&def);
+        grads.tensors[0][9] = 5.0;
+        update_masks(
+            &def,
+            &mut params,
+            &mut [&mut mom],
+            &mut masks,
+            0.2,
+            Grow::Gradient(&grads),
+        );
+        assert_eq!(mom.tensors[0][9], 0.0, "grown momentum reset");
+        assert_eq!(mom.tensors[0][4], 0.0, "dropped momentum reset");
+        assert_eq!(mom.tensors[0][0], 0.0, "untouched inactive stays");
+        assert_eq!(mom.tensors[0][1], 1.0, "untouched active momentum kept");
+    }
+
+    #[test]
+    fn zero_fraction_is_noop() {
+        let (def, mut params, mut masks, mut mom) = setup();
+        let before = masks.tensors[0].clone();
+        let grads = ParamSet::zeros(&def);
+        let stats = update_masks(
+            &def,
+            &mut params,
+            &mut [&mut mom],
+            &mut masks,
+            0.0,
+            Grow::Gradient(&grads),
+        );
+        assert_eq!(stats.dropped + stats.grown, 0);
+        assert_eq!(masks.tensors[0], before);
+    }
+
+    #[test]
+    fn dense_layer_not_rewired() {
+        let def = def_one_layer(2, 5);
+        let mut params = ParamSet::ones(&def);
+        let mut masks = ParamSet::ones(&def); // fully dense
+        let mut mom = ParamSet::zeros(&def);
+        let grads = ParamSet::zeros(&def);
+        let stats = update_masks(
+            &def,
+            &mut params,
+            &mut [&mut mom],
+            &mut masks,
+            0.3,
+            Grow::Gradient(&grads),
+        );
+        assert_eq!(stats.dropped, 0);
+        assert_eq!(masks.nnz(0), 10);
+    }
+
+    #[test]
+    fn snip_keeps_top_saliency() {
+        let def = def_one_layer(2, 5);
+        let mut params = ParamSet::zeros(&def);
+        let mut grads = ParamSet::zeros(&def);
+        // saliency = |θ·g|: make indices 2 and 7 the winners.
+        params.tensors[0][2] = 3.0;
+        grads.tensors[0][2] = 3.0; // saliency 9
+        params.tensors[0][7] = -2.0;
+        grads.tensors[0][7] = 4.0; // saliency 8
+        params.tensors[0][1] = 10.0;
+        grads.tensors[0][1] = 0.1; // saliency 1
+        params.tensors[0][5] = 0.1;
+        grads.tensors[0][5] = 10.0; // saliency 1
+        let masks = snip_masks(&def, &params, &grads, &[0.8]);
+        assert_eq!(masks.nnz(0), 2);
+        assert_eq!(masks.tensors[0][2], 1.0);
+        assert_eq!(masks.tensors[0][7], 1.0);
+    }
+
+    #[test]
+    fn method_taxonomy() {
+        assert!(Method::Rigl.is_dynamic());
+        assert!(!Method::Static.is_dynamic());
+        assert_eq!(Method::Rigl.dense_grad_cadence(), DenseGradCadence::EveryUpdate);
+        assert_eq!(Method::Snfs.dense_grad_cadence(), DenseGradCadence::EveryStep);
+        assert_eq!(Method::Snip.dense_grad_cadence(), DenseGradCadence::Once);
+        assert_eq!(Method::Set.dense_grad_cadence(), DenseGradCadence::Never);
+        for name in ["dense", "static", "snip", "set", "snfs", "rigl", "pruning"] {
+            assert_eq!(Method::parse(name).unwrap().label(), name);
+        }
+    }
+}

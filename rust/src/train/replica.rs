@@ -1,0 +1,223 @@
+//! Data-parallel replica simulator — the Appendix-M bug study.
+//!
+//! The paper documents two distributed-training bugs that silently
+//! degraded every sparse method:
+//!
+//! 1. **Random operations on multiple replicas** — replicas made
+//!    *different* random drop/grow choices, so topologies diverged; the
+//!    periodic (~1000-step) parameter broadcast from replica 0 masked the
+//!    damage. Fixed with stateless (seed, step, layer)-keyed randomness.
+//! 2. **Missing ALL-REDUCE on dense gradients** — RigL/SNFS grew from each
+//!    replica's local ∇_Θ L instead of the aggregated one.
+//!
+//! This simulator trains R replicas with synchronous parameter averaging
+//! (equivalent to gradient all-reduce for SGD) and lets each bug be
+//! injected, reproducing the ablation as `repro table --id appM`.
+
+use anyhow::Result;
+
+use super::{Trainer, TrainConfig, TrainState};
+use crate::model::ParamSet;
+use crate::topology::{Grow, Method};
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaBugs {
+    /// Bug 1: per-replica RNG streams for SET's random grow.
+    pub desync_rng: bool,
+    /// Bug 2: skip the all-reduce on dense gradients (RigL grows from
+    /// local gradients).
+    pub skip_grad_allreduce: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct ReplicaConfig {
+    pub replicas: usize,
+    pub bugs: ReplicaBugs,
+    /// The TF-Estimator behaviour that masked both bugs: broadcast
+    /// replica 0's parameters AND masks every `broadcast_every` steps
+    /// (0 = never).
+    pub broadcast_every: usize,
+}
+
+/// Result of a replica-simulated run (metric measured on replica 0).
+#[derive(Clone, Debug)]
+pub struct ReplicaResult {
+    pub final_metric: f64,
+    /// Mean per-step fraction of mask entries that disagree between
+    /// replicas — 0.0 when the stateless-RNG + all-reduce fixes are on.
+    pub mask_divergence: f64,
+}
+
+/// Train `cfg` under data-parallel simulation.
+pub fn run_replicated(
+    trainer: &Trainer,
+    cfg: &TrainConfig,
+    rep: &ReplicaConfig,
+) -> Result<ReplicaResult> {
+    let r = rep.replicas.max(1);
+    // All replicas start from the same state (same seed).
+    let mut states: Vec<TrainState> = (0..r).map(|_| trainer.init_state(cfg)).collect();
+    let update = cfg.update_schedule();
+    let lr = super::default_lr(&trainer.def, cfg);
+    let total = cfg.total_steps();
+    let mut divergence_sum = 0.0;
+    let mut divergence_n = 0usize;
+
+    // Each replica sees its own shard: distinct data RNG streams AND
+    // distinct epoch shuffles (the batch iterator is seeded from cfg.seed,
+    // so each replica gets a per-replica config copy for data order only —
+    // init/masks still come from the shared cfg).
+    let mut data_rngs: Vec<Rng> = (0..r)
+        .map(|i| Rng::new(cfg.seed ^ 0xD47A).split(i as u64))
+        .collect();
+    let mut iters: Vec<_> = (0..r)
+        .map(|i| {
+            let mut c = cfg.clone();
+            c.seed = cfg.seed ^ ((i as u64 + 1) << 48);
+            trainer.batch_iter(&c)
+        })
+        .collect();
+
+    for t in 0..total {
+        let batches: Vec<_> = (0..r)
+            .map(|i| trainer.next_batch(cfg, &mut iters[i], &mut data_rngs[i]))
+            .collect();
+
+        if cfg.method.is_dynamic() && update.due(t) {
+            let frac = update.fraction(t);
+            match cfg.method {
+                Method::Rigl => {
+                    // Compute dense grads per replica.
+                    let mut grads: Vec<ParamSet> = Vec::with_capacity(r);
+                    for (i, (x, y)) in batches.iter().enumerate() {
+                        let (g, _) = trainer.dense_grads(&states[i], x, y)?;
+                        grads.push(g);
+                    }
+                    if !rep.bugs.skip_grad_allreduce {
+                        // ALL-REDUCE: average, then share with every replica.
+                        let avg = average_sets(&grads);
+                        grads = vec![avg; r];
+                    }
+                    for (i, g) in grads.iter().enumerate() {
+                        let st = &mut states[i];
+                        let (params, opt, masks) = (&mut st.params, &mut st.opt, &mut st.masks);
+                        let mut bufs: Vec<&mut ParamSet> = opt.iter_mut().collect();
+                        crate::topology::update_masks(
+                            &trainer.def,
+                            params,
+                            &mut bufs,
+                            masks,
+                            frac,
+                            Grow::Gradient(g),
+                        );
+                    }
+                }
+                Method::Set => {
+                    for i in 0..r {
+                        // Stateless stream keyed on (seed, step) — identical
+                        // across replicas unless the bug is injected.
+                        let stream = if rep.bugs.desync_rng {
+                            (t as u64) ^ ((i as u64 + 1) << 32)
+                        } else {
+                            t as u64
+                        };
+                        let mut rng = Rng::new(cfg.seed ^ 0x5E7).split(stream);
+                        let st = &mut states[i];
+                        let (params, opt, masks) = (&mut st.params, &mut st.opt, &mut st.masks);
+                        let mut bufs: Vec<&mut ParamSet> = opt.iter_mut().collect();
+                        crate::topology::update_masks(
+                            &trainer.def,
+                            params,
+                            &mut bufs,
+                            masks,
+                            frac,
+                            Grow::Random(&mut rng),
+                        );
+                    }
+                }
+                _ => {}
+            }
+            divergence_sum += mask_disagreement(&states);
+            divergence_n += 1;
+        } else {
+            for (i, (x, y)) in batches.iter().enumerate() {
+                trainer.sgd_step(&mut states[i], x, y, lr.at(t) as f32)?;
+            }
+            // Synchronous data parallelism: average parameters (masks may
+            // disagree under the bugs; averaging leaks weights across
+            // topologies exactly like the real bug did).
+            sync_average(&mut states);
+        }
+
+        for s in states.iter_mut() {
+            s.step = t + 1;
+        }
+        if rep.broadcast_every > 0 && (t + 1) % rep.broadcast_every == 0 {
+            let lead = states[0].clone();
+            for s in states.iter_mut().skip(1) {
+                *s = lead.clone();
+            }
+        }
+    }
+
+    let final_metric = trainer.evaluate(&states[0], cfg)?;
+    Ok(ReplicaResult {
+        final_metric,
+        mask_divergence: if divergence_n == 0 {
+            0.0
+        } else {
+            divergence_sum / divergence_n as f64
+        },
+    })
+}
+
+fn average_sets(sets: &[ParamSet]) -> ParamSet {
+    let mut out = sets[0].clone();
+    let r = sets.len() as f32;
+    for s in &sets[1..] {
+        for (a, b) in out.tensors.iter_mut().zip(&s.tensors) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += *y;
+            }
+        }
+    }
+    for a in out.tensors.iter_mut() {
+        for x in a.iter_mut() {
+            *x /= r;
+        }
+    }
+    out
+}
+
+fn sync_average(states: &mut [TrainState]) {
+    if states.len() < 2 {
+        return;
+    }
+    let params: Vec<ParamSet> = states.iter().map(|s| s.params.clone()).collect();
+    let avg = average_sets(&params);
+    for s in states.iter_mut() {
+        s.params = avg.clone();
+        // Re-impose each replica's own mask (the masked-training invariant).
+        s.params.mul_assign(&s.masks);
+    }
+}
+
+fn mask_disagreement(states: &[TrainState]) -> f64 {
+    if states.len() < 2 {
+        return 0.0;
+    }
+    let a = &states[0].masks;
+    let b = &states[1].masks;
+    let mut diff = 0usize;
+    let mut total = 0usize;
+    for (x, y) in a.tensors.iter().zip(&b.tensors) {
+        for (u, v) in x.iter().zip(y) {
+            if (u != v) as usize == 1 {
+                diff += 1;
+            }
+            total += 1;
+        }
+    }
+    diff as f64 / total as f64
+}

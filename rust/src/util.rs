@@ -1,0 +1,271 @@
+//! Deterministic RNG, top-k selection, and small statistics helpers.
+//!
+//! No external `rand` crate is available offline, so the coordinator ships
+//! its own SplitMix64/xoshiro-style generator. Determinism matters twice
+//! over here: experiment cells are seeded, and the Appendix-M replica study
+//! depends on *stateless* random choices shared across replicas (the
+//! paper's bug #1 was replicas disagreeing on random drop/grow choices).
+
+/// SplitMix64: tiny, fast, passes BigCrush when used as a stream.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point and decorrelate small seeds.
+        Rng {
+            state: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x1234_5678_9ABC_DEF0,
+        }
+    }
+
+    /// Derive an independent stream — the stateless-random idiom from the
+    /// paper's Appendix M fix: `Rng::new(seed).split(layer).split(step)`
+    /// gives every (seed, layer, step) cell the same stream on every
+    /// replica.
+    pub fn split(&self, stream: u64) -> Rng {
+        let mut r = Rng::new(self.state ^ stream.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        r.next_u64();
+        r
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (used for He-init).
+    pub fn next_normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) — partial Fisher–Yates.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        // For dense draws a full shuffle is cheaper than rejection.
+        if k * 3 >= n {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.next_below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        } else {
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let i = self.next_below(n);
+                if seen.insert(i) {
+                    out.push(i);
+                }
+            }
+            out
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.next_below(i + 1);
+            v.swap(i, j);
+        }
+    }
+}
+
+/// Indices of the `k` smallest values (ties broken by index; O(n) selection
+/// + O(k log k) sort for determinism). This is the paper's
+/// `ArgTopK(-|θ|, k)` drop criterion.
+pub fn argsmallest_k(values: &[f32], k: usize) -> Vec<usize> {
+    argselect_k(values, k, false)
+}
+
+/// Indices of the `k` largest values — the `ArgTopK(|∇L|, k)` grow criterion.
+pub fn arglargest_k(values: &[f32], k: usize) -> Vec<usize> {
+    argselect_k(values, k, true)
+}
+
+fn argselect_k(values: &[f32], k: usize, largest: bool) -> Vec<usize> {
+    let n = values.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    let cmp = |a: &u32, b: &u32| {
+        let (va, vb) = (values[*a as usize], values[*b as usize]);
+        let ord = if largest {
+            vb.partial_cmp(&va)
+        } else {
+            va.partial_cmp(&vb)
+        };
+        ord.unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(b))
+    };
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(cmp);
+    idx.into_iter().map(|i| i as usize).collect()
+}
+
+/// Minimal bench harness (criterion is unreachable offline): warm up,
+/// time `iters` calls, print mean/min per iteration. Used by the
+/// `rust/benches/*` targets under `cargo bench`.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10).min(3) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let total: f64 = samples.iter().sum();
+    let mean_s = total / iters as f64;
+    let min_s = samples.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "{name:<44} {iters:>4} iters  mean {:>10}  min {:>10}",
+        fmt_duration(mean_s),
+        fmt_duration(min_s)
+    );
+    mean_s
+}
+
+fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (0 for n<2 — experiment cells with one seed).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_split_streams_differ() {
+        let base = Rng::new(7);
+        let (mut a, mut b) = (base.split(0), base.split(1));
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn rng_split_is_stateless() {
+        // Same (seed, stream) → same stream regardless of what else was drawn.
+        let base = Rng::new(9);
+        let mut a = base.split(42);
+        let mut b = Rng::new(9).split(42);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let f = r.next_f32();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f64> = (0..20000).map(|_| r.next_normal() as f64).collect();
+        assert!(mean(&xs).abs() < 0.03, "mean {}", mean(&xs));
+        let sd = std_dev(&xs);
+        assert!((sd - 1.0).abs() < 0.05, "sd {sd}");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_complete() {
+        let mut r = Rng::new(5);
+        for (n, k) in [(10, 10), (100, 3), (50, 40), (1, 1), (7, 0)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn topk_smallest_and_largest() {
+        let v = [5.0, 1.0, 3.0, 1.0, 9.0, -2.0];
+        assert_eq!(argsmallest_k(&v, 2), vec![5, 1]);
+        assert_eq!(arglargest_k(&v, 2), vec![4, 0]);
+        // Tie-break by index: both 1.0s, lower index first.
+        assert_eq!(argsmallest_k(&v, 3), vec![5, 1, 3]);
+        assert_eq!(argsmallest_k(&v, 0), Vec::<usize>::new());
+        assert_eq!(argsmallest_k(&v, 99).len(), 6);
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138).abs() < 1e-3);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+}
