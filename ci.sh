@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI gate for the RigL reproduction workspace.
+#
+# Mirrors the tier-1 verify from ROADMAP.md plus style/lint gates. Run
+# from anywhere; requires a Rust toolchain (and, for the artifact-gated
+# integration tests to actually execute rather than skip, `make
+# artifacts` beforehand).
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "CI OK"

@@ -1,0 +1,119 @@
+//! Coordinator-level before/after benchmark → `BENCH_coordinator.json`.
+//!
+//! Measures the two claims of the thread-parallel/allocation-free PR:
+//!
+//! 1. **Topology hot path** — one Algorithm-1 update through the
+//!    allocating wrapper (`fresh_scratch`, the seed's allocation
+//!    pattern) vs the reused-scratch hot path, on a 1M-element layer.
+//! 2. **Cell fan-out** — wall-clock of a 4-seed `run_cell` at
+//!    `--jobs 1` vs `--jobs 4` (requires AOT artifacts; skipped with a
+//!    note otherwise). The ≥2× acceptance target lives here.
+//!
+//! Run with `cargo bench --bench bench_coordinator`; records append as
+//! JSON lines, so history accumulates across commits.
+
+use rigl::model::{ElemType, Kind, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
+use rigl::topology::{update_masks, update_masks_scratch, Grow, Method, TopoScratch, UpdateStats};
+use rigl::util::{append_bench_record, bench_to, git_rev, BenchRecord, Rng};
+
+fn synth_def(n: usize) -> ModelDef {
+    ModelDef {
+        name: format!("synth{n}"),
+        backend: "jnp".into(),
+        optimizer: Optimizer::SgdMomentum,
+        task: Task::Classify,
+        input_ty: ElemType::F32,
+        input_shape: vec![1, 1],
+        target_shape: vec![1],
+        hyper: vec![],
+        artifacts: vec![],
+        specs: vec![ParamSpec {
+            name: "w".into(),
+            kind: Kind::Fc,
+            sparsifiable: true,
+            first_layer: false,
+            flops: 0.0,
+            shape: vec![n, 1],
+        }],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench_coordinator: hot-path + fan-out wall-clock ==");
+
+    // ---------------- topology before/after (always runs) ------------
+    let n = 1_000_000usize;
+    let def = synth_def(n);
+    let mut rng = Rng::new(0);
+    let mut params = ParamSet::init(&def, &mut rng);
+    let mut masks = ParamSet::zeros(&def);
+    for i in 0..n / 10 {
+        masks.tensors[0][i * 10] = 1.0;
+    }
+    let grads = ParamSet::init(&def, &mut rng);
+    let mut mom = ParamSet::zeros(&def);
+    bench_to("coordinator", &format!("update_masks/fresh_scratch/n={n}"), 10, || {
+        update_masks(
+            &def,
+            &mut params,
+            std::slice::from_mut(&mut mom),
+            &mut masks,
+            0.3,
+            Grow::Gradient(&grads),
+        );
+    });
+    let mut scratch = TopoScratch::default();
+    let mut stats = UpdateStats::default();
+    bench_to("coordinator", &format!("update_masks/reused_scratch/n={n}"), 10, || {
+        update_masks_scratch(
+            &def,
+            &mut params,
+            std::slice::from_mut(&mut mom),
+            &mut masks,
+            0.3,
+            Grow::Gradient(&grads),
+            &mut scratch,
+            &mut stats,
+        );
+    });
+
+    // ---------------- cell fan-out (needs AOT artifacts) --------------
+    if !rigl::artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping run_cell fan-out bench: artifacts not built (`make artifacts`)");
+        return Ok(());
+    }
+    use rigl::coordinator::ExpContext;
+    let mut walls = Vec::new();
+    for jobs in [1usize, 4] {
+        let mut ctx = ExpContext::new(4, 1.0, jobs, std::env::temp_dir())?;
+        ctx.verbose = false;
+        let mut cfg = ctx.base("mlp", Method::Rigl);
+        cfg.sparsity = 0.9;
+        cfg.steps = 100;
+        cfg.delta_t = 25;
+        cfg.augment = false;
+        cfg.data_train = 512;
+        cfg.data_val = 256;
+        // Warm the compile + trainer caches so wall-clock is training only.
+        ctx.run_cell("warmup", &cfg)?;
+        let t0 = std::time::Instant::now();
+        let cell = ctx.run_cell("bench", &cfg)?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!("run_cell/jobs={jobs}: {wall:.2}s over 4 seeds (metrics {:?})", cell.metrics);
+        append_bench_record(
+            "coordinator",
+            &BenchRecord {
+                name: format!("run_cell/4seeds/jobs={jobs}"),
+                iters: 1,
+                mean_s: wall,
+                min_s: wall,
+                git_rev: git_rev(),
+            },
+        )?;
+        walls.push(wall);
+    }
+    if walls.len() == 2 && walls[1] > 0.0 {
+        println!("speedup jobs=4 vs jobs=1: {:.2}x", walls[0] / walls[1]);
+    }
+    Ok(())
+}

@@ -6,7 +6,7 @@
 use rigl::model::load_manifest;
 use rigl::topology::Method;
 use rigl::train::{TrainConfig, Trainer};
-use rigl::util::{bench, Rng};
+use rigl::util::{bench_to, Rng};
 use rigl::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -30,13 +30,13 @@ fn main() -> anyhow::Result<()> {
         let mut rng = Rng::new(1);
         let mut iter = trainer.batch_iter_pub(&cfg);
         let (x, y) = trainer.next_batch(&cfg, &mut iter, &mut rng);
-        bench(&format!("train_step/{model}"), iters, || {
+        bench_to("step", &format!("train_step/{model}"), iters, || {
             trainer.sgd_step(&mut state, &x, &y, 0.01).unwrap();
         });
-        bench(&format!("dense_grad/{model}"), iters.div_ceil(2), || {
+        bench_to("step", &format!("dense_grad/{model}"), iters.div_ceil(2), || {
             trainer.dense_grads(&state, &x, &y).unwrap();
         });
-        bench(&format!("eval_batch/{model}"), iters, || {
+        bench_to("step", &format!("eval_batch/{model}"), iters, || {
             trainer.evaluate(&state, &cfg).unwrap();
         });
     }

@@ -1,9 +1,48 @@
-//! Drop/grow mask-update latency vs layer size — the coordinator's own
-//! compute (top-k selection is O(n) via select_nth).
+//! Drop/grow mask-update latency and allocation counts vs layer size —
+//! the coordinator's own compute (top-k selection is O(n) via select_nth).
+//!
+//! Two paths are measured and recorded to `BENCH_topology.json`:
+//!
+//! * `fresh_scratch` — the allocating wrapper `update_masks`, which
+//!   builds its working buffers per call (the seed's allocation
+//!   pattern);
+//! * `reused_scratch` — `update_masks_scratch` with a warm
+//!   `TopoScratch`, the training-loop hot path.
+//!
+//! A counting global allocator verifies the headline property: the
+//! reused-scratch path performs ZERO heap allocations per update in the
+//! steady state. The binary exits non-zero if that regresses.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use rigl::model::{ElemType, Kind, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
-use rigl::topology::{update_masks, Grow};
-use rigl::util::{bench, Rng};
+use rigl::topology::{update_masks, update_masks_scratch, Grow, TopoScratch, UpdateStats};
+use rigl::util::{append_bench_record, bench_to, git_rev, BenchRecord, Rng};
+
+/// Forwarding allocator that counts allocation events (alloc + realloc).
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn synth_def(n: usize) -> ModelDef {
     ModelDef {
@@ -27,28 +66,107 @@ fn synth_def(n: usize) -> ModelDef {
     }
 }
 
+fn setup(n: usize) -> (ModelDef, ParamSet, ParamSet, ParamSet, ParamSet) {
+    let def = synth_def(n);
+    let mut rng = Rng::new(0);
+    let params = ParamSet::init(&def, &mut rng);
+    let mut masks = ParamSet::zeros(&def);
+    for i in 0..n / 10 {
+        masks.tensors[0][i * 10] = 1.0; // 10% dense
+    }
+    let grads = ParamSet::init(&def, &mut rng);
+    let mom = ParamSet::zeros(&def);
+    (def, params, masks, grads, mom)
+}
+
 fn main() {
     println!("== bench_topology: one Algorithm-1 mask update ==");
+    let mut steady_state_ok = true;
     for n in [10_000usize, 100_000, 1_000_000, 4_000_000] {
-        let def = synth_def(n);
-        let mut rng = Rng::new(0);
-        let mut params = ParamSet::init(&def, &mut rng);
-        let mut masks = ParamSet::zeros(&def);
-        for i in 0..n / 10 {
-            masks.tensors[0][i * 10] = 1.0; // 10% dense
+        // ------- fresh scratch (the seed's allocation pattern) -------
+        let (def, mut params, mut masks, grads, mut mom) = setup(n);
+        bench_to("topology", &format!("rigl_update/fresh_scratch/n={n}"), 10, || {
+            update_masks(
+                &def,
+                &mut params,
+                std::slice::from_mut(&mut mom),
+                &mut masks,
+                0.3,
+                Grow::Gradient(&grads),
+            );
+        });
+
+        // ------- reused scratch (the training-loop hot path) ---------
+        let (def, mut params, mut masks, grads, mut mom) = setup(n);
+        let mut scratch = TopoScratch::default();
+        let mut stats = UpdateStats::default();
+        bench_to("topology", &format!("rigl_update/reused_scratch/n={n}"), 10, || {
+            update_masks_scratch(
+                &def,
+                &mut params,
+                std::slice::from_mut(&mut mom),
+                &mut masks,
+                0.3,
+                Grow::Gradient(&grads),
+                &mut scratch,
+                &mut stats,
+            );
+        });
+
+        // Steady-state allocation count: buffers are warm after the
+        // bench above, so further updates must not touch the heap.
+        let updates = 5u64;
+        let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+        for _ in 0..updates {
+            update_masks_scratch(
+                &def,
+                &mut params,
+                std::slice::from_mut(&mut mom),
+                &mut masks,
+                0.3,
+                Grow::Gradient(&grads),
+                &mut scratch,
+                &mut stats,
+            );
         }
-        let mut grads = ParamSet::init(&def, &mut rng);
-        let mut mom = ParamSet::zeros(&def);
-        bench(&format!("rigl_update/n={n}"), 10, || {
-            let mut g2 = grads.clone();
-            std::mem::swap(&mut g2, &mut grads);
-            let mut bufs: Vec<&mut ParamSet> = vec![&mut mom];
-            update_masks(&def, &mut params, &mut bufs, &mut masks, 0.3, Grow::Gradient(&grads));
-        });
+        let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+        let per_update = allocs as f64 / updates as f64;
+        println!("rigl_update/steady_state_allocs/n={n}      {per_update:.1} allocs/update");
+        // Machine-readable: mean_s carries allocs-per-update for /allocs
+        // records (documented in ROADMAP; the bench is about counts, not
+        // time).
+        let _ = append_bench_record(
+            "topology",
+            &BenchRecord {
+                name: format!("rigl_update/steady_state_allocs/n={n}"),
+                iters: updates as usize,
+                mean_s: per_update,
+                min_s: per_update,
+                git_rev: git_rev(),
+            },
+        );
+        if allocs != 0 {
+            steady_state_ok = false;
+            eprintln!("REGRESSION: {allocs} heap allocations over {updates} warm updates (n={n})");
+        }
+
+        // ------- SET random grow, reused scratch ---------------------
+        let (def, mut params, mut masks, _, mut mom) = setup(n);
         let mut rng2 = Rng::new(7);
-        bench(&format!("set_update/n={n}"), 10, || {
-            let mut bufs: Vec<&mut ParamSet> = vec![&mut mom];
-            update_masks(&def, &mut params, &mut bufs, &mut masks, 0.3, Grow::Random(&mut rng2));
+        bench_to("topology", &format!("set_update/reused_scratch/n={n}"), 10, || {
+            update_masks_scratch(
+                &def,
+                &mut params,
+                std::slice::from_mut(&mut mom),
+                &mut masks,
+                0.3,
+                Grow::Random(&mut rng2),
+                &mut scratch,
+                &mut stats,
+            );
         });
+    }
+    if !steady_state_ok {
+        std::process::exit(1);
     }
 }

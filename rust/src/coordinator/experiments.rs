@@ -1,15 +1,24 @@
 //! One runner per paper table/figure. Each returns `Vec<Table>` that the
 //! CLI renders and saves as CSV (DESIGN.md §4 maps ids → modules).
+//!
+//! Grid-style runners (sweeps, method × sparsity tables) build their
+//! full `(label, config)` list up front and hand it to
+//! `ExpContext::run_cells`, which fans the independent cells × seeds out
+//! over the worker pool; rows are rendered afterwards from the
+//! order-preserved results. Runners with sequential data dependencies
+//! (warm starts, landscape paths, the replica study) stay serial.
 
 use anyhow::Result;
 
 use super::{decay_variants, dist_variants, ExpContext, T};
 use crate::flops;
 use crate::landscape::{barrier, linear_path, Bezier};
+use crate::metrics::Cell;
 use crate::model::ParamSet;
 use crate::sparsity::{layer_sparsities, Distribution};
 use crate::topology::Method;
 use crate::train::replica::{run_replicated, ReplicaBugs, ReplicaConfig};
+use crate::train::TrainConfig;
 
 const FIG2_MODEL: &str = "cnn";
 
@@ -19,6 +28,41 @@ fn fmt(v: f64) -> String {
 
 fn fmtx(v: f64) -> String {
     format!("{v:.3}x")
+}
+
+/// One planned table row: presentation columns plus an optional FLOPs
+/// override (dense references and width-scaled models report analytic
+/// ratios rather than the cell's own accounting).
+struct Row {
+    label: String,
+    s: String,
+    flops_override: Option<f64>,
+}
+
+impl Row {
+    fn new(label: impl Into<String>, s: impl Into<String>) -> Self {
+        Row {
+            label: label.into(),
+            s: s.into(),
+            flops_override: None,
+        }
+    }
+
+    fn fixed(label: impl Into<String>, s: impl Into<String>, ratio: f64) -> Self {
+        Row {
+            label: label.into(),
+            s: s.into(),
+            flops_override: Some(ratio),
+        }
+    }
+
+    fn train_flops(&self, cell: &Cell) -> f64 {
+        self.flops_override.unwrap_or(cell.train_flops)
+    }
+
+    fn test_flops(&self, cell: &Cell) -> f64 {
+        self.flops_override.unwrap_or(cell.test_flops)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -69,15 +113,11 @@ pub fn fig2_left(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 2-left — ResNet-50 stand-in (WRN-10-1 on synth-images)",
         &["Method", "S", "Top-1", "FLOPs(Train)", "FLOPs(Test)"],
     );
+    let mut rows: Vec<Row> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
     // Dense reference.
-    let dense = ctx.run_cell("dense", &ctx.base(FIG2_MODEL, Method::Dense))?;
-    t.push(vec![
-        "Dense".into(),
-        "0".into(),
-        dense.metric_str(),
-        "1.000x".into(),
-        "1.000x".into(),
-    ]);
+    rows.push(Row::fixed("Dense", "0", 1.0));
+    specs.push(("dense".into(), ctx.base(FIG2_MODEL, Method::Dense)));
     for &s in &[0.8, 0.9] {
         let sd_model = if s == 0.8 { "cnn_sd80" } else { "cnn_sd90" };
         // Uniform-distribution sub-group.
@@ -96,29 +136,23 @@ pub fn fig2_left(ctx: &ExpContext) -> Result<Vec<T>> {
             cfg.sparsity = s;
             cfg.distribution = dist;
             cfg.multiplier = mult;
-            let cell = ctx.run_cell(&format!("{label}@{s}"), &cfg)?;
-            t.push(vec![
-                label.into(),
-                fmt(s),
-                cell.metric_str(),
-                fmtx(cell.train_flops),
-                fmtx(cell.test_flops),
-            ]);
+            rows.push(Row::new(label, fmt(s)));
+            specs.push((format!("{label}@{s}"), cfg));
         }
         // Small-Dense: dense training of a width-shrunk model; FLOPs
         // normalized to the BIG model's dense cost.
-        let cell = ctx.run_cell(
-            &format!("small-dense@{s}"),
-            &ctx.base(sd_model, Method::Dense),
-        )?;
         let big = ctx.manifest.get(FIG2_MODEL)?.dense_flops();
         let small = ctx.manifest.get(sd_model)?.dense_flops();
+        rows.push(Row::fixed("Small-Dense", fmt(s), small / big));
+        specs.push((format!("small-dense@{s}"), ctx.base(sd_model, Method::Dense)));
+    }
+    for (row, cell) in rows.iter().zip(ctx.run_cells(specs)?) {
         t.push(vec![
-            "Small-Dense".into(),
-            fmt(s),
+            row.label.clone(),
+            row.s.clone(),
             cell.metric_str(),
-            fmtx(small / big),
-            fmtx(small / big),
+            fmtx(row.train_flops(&cell)),
+            fmtx(row.test_flops(&cell)),
         ]);
     }
     Ok(vec![t])
@@ -132,6 +166,8 @@ pub fn fig2_topright(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 2-top-right — 80% sparse, accuracy vs training multiplier",
         &["Method", "Multiplier", "Top-1", "FLOPs(Train)"],
     );
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
     for (label, method) in [
         ("Static", Method::Static),
         ("SET", Method::Set),
@@ -148,14 +184,17 @@ pub fn fig2_topright(ctx: &ExpContext) -> Result<Vec<T>> {
             let mut cfg = ctx.base(FIG2_MODEL, method);
             cfg.sparsity = 0.8;
             cfg.multiplier = m;
-            let cell = ctx.run_cell(&format!("{label}x{m}"), &cfg)?;
-            t.push(vec![
-                label.into(),
-                format!("{m}"),
-                cell.metric_str(),
-                fmtx(cell.train_flops),
-            ]);
+            rows.push((label.into(), m));
+            specs.push((format!("{label}x{m}"), cfg));
         }
+    }
+    for ((label, m), cell) in rows.into_iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![
+            label,
+            format!("{m}"),
+            cell.metric_str(),
+            fmtx(cell.train_flops),
+        ]);
     }
     Ok(vec![t])
 }
@@ -168,6 +207,8 @@ pub fn fig2_bottomright(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 2-bottom-right — accuracy vs sparsity (2x extended)",
         &["Method", "S", "Top-1", "FLOPs(Train)"],
     );
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
     for &s in &[0.8, 0.9, 0.95, 0.965] {
         for (label, method, dist) in [
             ("RigL_2x", Method::Rigl, Distribution::Uniform),
@@ -179,14 +220,12 @@ pub fn fig2_bottomright(ctx: &ExpContext) -> Result<Vec<T>> {
             cfg.sparsity = s;
             cfg.distribution = dist;
             cfg.multiplier = if method == Method::Pruning { 1.5 } else { 2.0 };
-            let cell = ctx.run_cell(&format!("{label}@{s}"), &cfg)?;
-            t.push(vec![
-                label.into(),
-                fmt(s),
-                cell.metric_str(),
-                fmtx(cell.train_flops),
-            ]);
+            rows.push((label.into(), s));
+            specs.push((format!("{label}@{s}"), cfg));
         }
+    }
+    for ((label, s), cell) in rows.into_iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![label, fmt(s), cell.metric_str(), fmtx(cell.train_flops)]);
     }
     Ok(vec![t])
 }
@@ -199,14 +238,12 @@ pub fn fig3(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 3 — MicroMobileNet (dw convs kept dense) + Big-Sparse",
         &["Model", "Method", "S", "Top-1", "FLOPs(Test)"],
     );
-    let dense = ctx.run_cell("mobilenet-dense", &ctx.base("mobilenet", Method::Dense))?;
-    t.push(vec![
-        "mobilenet".into(),
-        "Dense".into(),
-        "0".into(),
-        dense.metric_str(),
-        "1.000x".into(),
-    ]);
+    // (model column, Row) plans; Row.s doubles as the S column.
+    let mut rows: Vec<(String, Row)> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
+
+    rows.push(("mobilenet".into(), Row::fixed("Dense", "0", 1.0)));
+    specs.push(("mobilenet-dense".into(), ctx.base("mobilenet", Method::Dense)));
     for &s in &[0.75, 0.9] {
         for (label, method, dist) in [
             ("RigL", Method::Rigl, Distribution::Uniform),
@@ -216,46 +253,42 @@ pub fn fig3(ctx: &ExpContext) -> Result<Vec<T>> {
             let mut cfg = ctx.base("mobilenet", method);
             cfg.sparsity = s;
             cfg.distribution = dist;
-            let cell = ctx.run_cell(&format!("mb-{label}@{s}"), &cfg)?;
-            t.push(vec![
-                "mobilenet".into(),
-                label.into(),
-                fmt(s),
-                cell.metric_str(),
-                fmtx(cell.test_flops),
-            ]);
+            rows.push(("mobilenet".into(), Row::new(label, fmt(s))));
+            specs.push((format!("mb-{label}@{s}"), cfg));
         }
     }
     // Small-Dense at 75%-equivalent params.
-    let sd = ctx.run_cell("mb-small-dense", &ctx.base("mobilenet_sd75", Method::Dense))?;
     let big = ctx.manifest.get("mobilenet")?.dense_flops();
     let small = ctx.manifest.get("mobilenet_sd75")?.dense_flops();
-    t.push(vec![
+    rows.push((
         "mobilenet_sd75".into(),
-        "Small-Dense".into(),
-        "0.75(eq)".into(),
-        sd.metric_str(),
-        fmtx(small / big),
-    ]);
+        Row::fixed("Small-Dense", "0.75(eq)", small / big),
+    ));
+    specs.push((
+        "mb-small-dense".into(),
+        ctx.base("mobilenet_sd75", Method::Dense),
+    ));
     // Big-Sparse: 2× width at 75% sparsity ≈ dense FLOPs/params.
+    let big_def = ctx.manifest.get("mobilenet_big")?;
+    let s_layers = layer_sparsities(big_def, 0.75, &Distribution::Uniform);
+    let bs_test = flops::sparse_fwd_flops(big_def, &s_layers) / big;
     let mut cfg = ctx.base("mobilenet_big", Method::Rigl);
     cfg.sparsity = 0.75;
-    let bigsparse = ctx.run_cell("mb-big-sparse", &cfg)?;
-    let bigf = ctx.manifest.get("mobilenet_big")?.dense_flops();
-    let s_layers = layer_sparsities(
-        ctx.manifest.get("mobilenet_big")?,
-        0.75,
-        &Distribution::Uniform,
-    );
-    let bs_test = flops::sparse_fwd_flops(ctx.manifest.get("mobilenet_big")?, &s_layers) / big;
-    let _ = bigf;
-    t.push(vec![
+    rows.push((
         "mobilenet_big".into(),
-        "Big-Sparse(RigL)".into(),
-        "0.75".into(),
-        bigsparse.metric_str(),
-        fmtx(bs_test),
-    ]);
+        Row::fixed("Big-Sparse(RigL)", "0.75", bs_test),
+    ));
+    specs.push(("mb-big-sparse".into(), cfg));
+
+    for ((model, row), cell) in rows.iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![
+            model.clone(),
+            row.label.clone(),
+            row.s.clone(),
+            cell.metric_str(),
+            fmtx(row.test_flops(&cell)),
+        ]);
+    }
     Ok(vec![t])
 }
 
@@ -267,13 +300,10 @@ pub fn fig4_left(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 4-left — GRU char-LM validation bits/char (S=0.75, Markov corpus)",
         &["Method", "Multiplier", "Bits/char", "FLOPs(Train)"],
     );
-    let dense = ctx.run_cell("gru-dense", &ctx.base("gru", Method::Dense))?;
-    t.push(vec![
-        "Dense".into(),
-        "1".into(),
-        dense.metric_str(),
-        "1.000x".into(),
-    ]);
+    let mut rows: Vec<Row> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
+    rows.push(Row::fixed("Dense", "1", 1.0));
+    specs.push(("gru-dense".into(), ctx.base("gru", Method::Dense)));
     for (label, method) in [
         ("Static", Method::Static),
         ("SET", Method::Set),
@@ -287,14 +317,17 @@ pub fn fig4_left(ctx: &ExpContext) -> Result<Vec<T>> {
             cfg.alpha = 0.1; // paper Appendix I
             cfg.multiplier = m;
             cfg.t_end_frac = 1.0; // paper: keep updating until the end
-            let cell = ctx.run_cell(&format!("gru-{label}x{m}"), &cfg)?;
-            t.push(vec![
-                label.into(),
-                format!("{m}"),
-                cell.metric_str(),
-                fmtx(cell.train_flops),
-            ]);
+            rows.push(Row::new(label, format!("{m}")));
+            specs.push((format!("gru-{label}x{m}"), cfg));
         }
+    }
+    for (row, cell) in rows.iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![
+            row.label.clone(),
+            row.s.clone(), // multiplier column
+            cell.metric_str(),
+            fmtx(row.train_flops(&cell)),
+        ]);
     }
     Ok(vec![t])
 }
@@ -307,8 +340,10 @@ pub fn fig4_right(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 4-right — WRN-16-2 accuracy vs sparsity (ERK)",
         &["Method", "S", "Top-1"],
     );
-    let dense = ctx.run_cell("wrn-dense", &ctx.base("wrn", Method::Dense))?;
-    t.push(vec!["Dense".into(), "0".into(), dense.metric_str()]);
+    let mut rows: Vec<(String, String)> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
+    rows.push(("Dense".into(), "0".into()));
+    specs.push(("wrn-dense".into(), ctx.base("wrn", Method::Dense)));
     for &s in &[0.5, 0.8, 0.9, 0.95] {
         for (label, method, mult) in [
             ("Pruning", Method::Pruning, 1.0),
@@ -325,9 +360,12 @@ pub fn fig4_right(ctx: &ExpContext) -> Result<Vec<T>> {
                 Distribution::Erk
             };
             cfg.multiplier = mult;
-            let cell = ctx.run_cell(&format!("wrn-{label}@{s}"), &cfg)?;
-            t.push(vec![label.into(), fmt(s), cell.metric_str()]);
+            rows.push((label.into(), fmt(s)));
+            specs.push((format!("wrn-{label}@{s}"), cfg));
         }
+    }
+    for ((label, s), cell) in rows.into_iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![label, s, cell.metric_str()]);
     }
     Ok(vec![t])
 }
@@ -340,19 +378,19 @@ pub fn fig5_left(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 5-left — sparsity distribution vs accuracy (RigL)",
         &["Distribution", "S", "Top-1", "FLOPs(Test)"],
     );
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
     for &s in &[0.8, 0.9, 0.95] {
         for (label, dist) in dist_variants() {
             let mut cfg = ctx.base(FIG2_MODEL, Method::Rigl);
             cfg.sparsity = s;
             cfg.distribution = dist;
-            let cell = ctx.run_cell(&format!("{label}@{s}"), &cfg)?;
-            t.push(vec![
-                label.into(),
-                fmt(s),
-                cell.metric_str(),
-                fmtx(cell.test_flops),
-            ]);
+            rows.push((label.into(), s));
+            specs.push((format!("{label}@{s}"), cfg));
         }
+    }
+    for ((label, s), cell) in rows.into_iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![label, fmt(s), cell.metric_str(), fmtx(cell.test_flops)]);
     }
     Ok(vec![t])
 }
@@ -367,16 +405,23 @@ fn sweep_dt_alpha(ctx: &ExpContext, method: Method, title: &str) -> Result<T> {
     // ΔT expressed as a fraction of run length (the paper's 50..1000 over
     // 32k steps ≈ 1/640 .. 1/32 of the run; our runs are shorter, so the
     // grid is denominated in updates-per-run and brackets the calibrated
-    // optimum at steps/4).
+    // optimum at steps/4). The 12 cells are independent — this grid is
+    // the PR's ≥2× `--jobs` speedup benchmark (`repro table --id
+    // fig5-right --jobs 4`).
+    let mut rows: Vec<(usize, f64)> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
     for &den in &[8usize, 4, 2, 1] {
         for &alpha in &[0.1, 0.3, 0.5] {
             let mut cfg = ctx.base(FIG2_MODEL, method);
             cfg.sparsity = 0.8;
             cfg.alpha = alpha;
             cfg.delta_t = (cfg.steps / den.max(1)).max(5);
-            let cell = ctx.run_cell(&format!("dt1/{den}-a{alpha}"), &cfg)?;
-            t.push(vec![format!("1/{den}"), format!("{alpha}"), cell.metric_str()]);
+            rows.push((den, alpha));
+            specs.push((format!("dt1/{den}-a{alpha}"), cfg));
         }
+    }
+    for ((den, alpha), cell) in rows.into_iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![format!("1/{den}"), format!("{alpha}"), cell.metric_str()]);
     }
     Ok(t)
 }
@@ -714,6 +759,8 @@ pub fn fig8_left(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 8-left — distribution effect across methods (S=0.9)",
         &["Method", "Distribution", "Top-1"],
     );
+    let mut rows: Vec<(String, String)> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
     for (mlabel, method) in [
         ("Static", Method::Static),
         ("SET", Method::Set),
@@ -724,9 +771,12 @@ pub fn fig8_left(ctx: &ExpContext) -> Result<Vec<T>> {
             let mut cfg = ctx.base(FIG2_MODEL, method);
             cfg.sparsity = 0.9;
             cfg.distribution = dist;
-            let cell = ctx.run_cell(&format!("{mlabel}-{dlabel}"), &cfg)?;
-            t.push(vec![mlabel.into(), dlabel.into(), cell.metric_str()]);
+            rows.push((mlabel.into(), dlabel.into()));
+            specs.push((format!("{mlabel}-{dlabel}"), cfg));
         }
+    }
+    for ((mlabel, dlabel), cell) in rows.into_iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![mlabel, dlabel, cell.metric_str()]);
     }
     Ok(vec![t])
 }
@@ -736,11 +786,16 @@ pub fn fig8_right(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 8-right — SNFS grow-momentum coefficient (S=0.8)",
         &["Momentum", "Top-1"],
     );
+    let mut rows: Vec<f32> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
     for &beta in &[0.0f32, 0.5, 0.9, 0.99] {
         let mut cfg = ctx.base(FIG2_MODEL, Method::Snfs);
         cfg.sparsity = 0.8;
         cfg.snfs_beta = beta;
-        let cell = ctx.run_cell(&format!("snfs-b{beta}"), &cfg)?;
+        rows.push(beta);
+        specs.push((format!("snfs-b{beta}"), cfg));
+    }
+    for (beta, cell) in rows.into_iter().zip(ctx.run_cells(specs)?) {
         t.push(vec![format!("{beta}"), cell.metric_str()]);
     }
     Ok(vec![t])
@@ -758,15 +813,20 @@ pub fn fig10(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 10 — alternative f_decay schedules (RigL, S=0.8)",
         &["Decay", "α", "Top-1"],
     );
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
     for (dlabel, decay) in decay_variants() {
         for &alpha in &[0.1, 0.3, 0.5] {
             let mut cfg = ctx.base(FIG2_MODEL, Method::Rigl);
             cfg.sparsity = 0.8;
             cfg.decay = decay;
             cfg.alpha = alpha;
-            let cell = ctx.run_cell(&format!("{dlabel}-a{alpha}"), &cfg)?;
-            t.push(vec![dlabel.into(), format!("{alpha}"), cell.metric_str()]);
+            rows.push((dlabel.into(), alpha));
+            specs.push((format!("{dlabel}-a{alpha}"), cfg));
         }
+    }
+    for ((dlabel, alpha), cell) in rows.into_iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![dlabel, format!("{alpha}"), cell.metric_str()]);
     }
     Ok(vec![t])
 }
@@ -811,6 +871,8 @@ pub fn fig11_right(ctx: &ExpContext) -> Result<Vec<T>> {
         "Fig 11-right — mask-update interval sweep (RigL, S=0.8)",
         &["ΔT(frac of run)", "Distribution", "Top-1"],
     );
+    let mut rows: Vec<(usize, String)> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
     for &den in &[8usize, 4, 2, 1] {
         for (dlabel, dist) in [
             ("uniform", Distribution::Uniform),
@@ -820,9 +882,12 @@ pub fn fig11_right(ctx: &ExpContext) -> Result<Vec<T>> {
             cfg.sparsity = 0.8;
             cfg.distribution = dist;
             cfg.delta_t = (cfg.steps / den).max(5);
-            let cell = ctx.run_cell(&format!("dt1/{den}-{dlabel}"), &cfg)?;
-            t.push(vec![format!("1/{den}"), dlabel.into(), cell.metric_str()]);
+            rows.push((den, dlabel.into()));
+            specs.push((format!("dt1/{den}-{dlabel}"), cfg));
         }
+    }
+    for ((den, dlabel), cell) in rows.into_iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![format!("1/{den}"), dlabel, cell.metric_str()]);
     }
     Ok(vec![t])
 }
@@ -866,6 +931,8 @@ pub fn table4(ctx: &ExpContext) -> Result<Vec<T>> {
         "Table 4 — S=0.95 / 0.965 (WRN-10-1 stand-in)",
         &["Method", "S", "Top-1", "FLOPs(Train)", "FLOPs(Test)"],
     );
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut specs: Vec<(String, TrainConfig)> = Vec::new();
     for &s in &[0.95, 0.965] {
         for (label, method, dist, mult) in [
             ("Static", Method::Static, Distribution::Uniform, 1.0),
@@ -881,15 +948,18 @@ pub fn table4(ctx: &ExpContext) -> Result<Vec<T>> {
             cfg.sparsity = s;
             cfg.distribution = dist;
             cfg.multiplier = mult;
-            let cell = ctx.run_cell(&format!("{label}@{s}"), &cfg)?;
-            t.push(vec![
-                label.into(),
-                fmt(s),
-                cell.metric_str(),
-                fmtx(cell.train_flops),
-                fmtx(cell.test_flops),
-            ]);
+            rows.push((label.into(), s));
+            specs.push((format!("{label}@{s}"), cfg));
         }
+    }
+    for ((label, s), cell) in rows.into_iter().zip(ctx.run_cells(specs)?) {
+        t.push(vec![
+            label,
+            fmt(s),
+            cell.metric_str(),
+            fmtx(cell.train_flops),
+            fmtx(cell.test_flops),
+        ]);
     }
     Ok(vec![t])
 }

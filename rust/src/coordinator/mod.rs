@@ -3,19 +3,39 @@
 //!
 //! `repro table --id fig2-left` etc. Runners shrink the paper's cells to
 //! the synthetic testbed; `--scale` stretches steps toward paper-like
-//! separations and `--seeds` controls repetition.
+//! separations, `--seeds` controls repetition, and `--jobs` bounds the
+//! worker-thread pool.
+//!
+//! ## Concurrency model
+//!
+//! The coordinator fans experiment work out over a scoped thread pool
+//! (`pool::par_map`):
+//!
+//! * `run_cell` parallelizes one cell **across seeds**;
+//! * `run_cells` parallelizes a whole grid **across cells × seeds** —
+//!   experiment runners build their full `(label, config)` list first
+//!   and render rows from the returned cells, so independent cells of a
+//!   sweep (e.g. the ΔT × α grid) run concurrently.
+//!
+//! Shared state is immutable or lock-protected: the `Runtime` serializes
+//! compilation behind its cache lock (execution is lock-free), the
+//! trainer cache below is a `Mutex<HashMap<…, Arc<Trainer>>>`, and all
+//! mutable training state is per-run. Determinism is preserved because
+//! every seed derives stateless RNG streams and `par_map` returns
+//! results in input order — `--jobs 1` and `--jobs N` are bit-identical
+//! (asserted by the serial-vs-parallel integration test).
 
 mod experiments;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
 use crate::metrics::{Cell, Table};
 use crate::model::{load_manifest, Manifest};
+use crate::pool;
 use crate::runtime::Runtime;
 use crate::schedule::Decay;
 use crate::sparsity::Distribution;
@@ -28,20 +48,23 @@ pub struct ExpContext {
     pub manifest: Manifest,
     pub seeds: usize,
     pub scale: f64,
+    /// Worker-thread bound for cell/seed fan-out (1 = serial).
+    pub jobs: usize,
     pub out_dir: PathBuf,
-    trainers: RefCell<HashMap<String, Rc<Trainer>>>,
+    trainers: Mutex<HashMap<String, Arc<Trainer>>>,
     pub verbose: bool,
 }
 
 impl ExpContext {
-    pub fn new(seeds: usize, scale: f64, out_dir: PathBuf) -> Result<Self> {
+    pub fn new(seeds: usize, scale: f64, jobs: usize, out_dir: PathBuf) -> Result<Self> {
         Ok(ExpContext {
             rt: Runtime::cpu()?,
             manifest: load_manifest(&crate::artifacts_dir())?,
             seeds: seeds.max(1),
             scale,
+            jobs: jobs.max(1),
             out_dir,
-            trainers: RefCell::new(HashMap::new()),
+            trainers: Mutex::new(HashMap::new()),
             verbose: true,
         })
     }
@@ -72,24 +95,72 @@ impl ExpContext {
     }
 
     /// Fetch (or build) the cached trainer for a config's model+data shape.
-    pub fn trainer(&self, cfg: &TrainConfig) -> Result<Rc<Trainer>> {
+    pub fn trainer(&self, cfg: &TrainConfig) -> Result<Arc<Trainer>> {
         let key = format!("{}:{}:{}", cfg.model, cfg.data_train, cfg.data_val);
-        if let Some(t) = self.trainers.borrow().get(&key) {
+        if let Some(t) = self.trainers.lock().unwrap().get(&key) {
             return Ok(t.clone());
         }
-        let t = Rc::new(Trainer::new(&self.rt, &self.manifest, cfg)?);
-        self.trainers.borrow_mut().insert(key, t.clone());
-        Ok(t)
+        // Built outside the map lock: compilation is already serialized
+        // by the Runtime's cache lock, and a duplicate build (two threads
+        // missing simultaneously) only costs the loser a cache-hit
+        // rebuild of the dataset — `or_insert` keeps one winner.
+        let t = Arc::new(Trainer::new(&self.rt, &self.manifest, cfg)?);
+        Ok(self
+            .trainers
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(t)
+            .clone())
     }
 
-    /// Run a config across seeds, aggregating into a Cell.
+    /// Run a config across seeds (in parallel up to `jobs`), aggregating
+    /// into a Cell. Per-seed results are bit-identical at any job count.
     pub fn run_cell(&self, label: &str, cfg: &TrainConfig) -> Result<Cell> {
         let trainer = self.trainer(cfg)?;
-        let mut cell = Cell::new(label);
-        for seed in 0..self.seeds {
+        let seeds: Vec<u64> = (0..self.seeds as u64).collect();
+        let results = pool::par_map(&seeds, self.jobs, |_, &seed| {
             let mut c = cfg.clone();
-            c.seed = seed as u64;
-            let r = trainer.run(&c)?;
+            c.seed = seed;
+            trainer.run(&c)
+        });
+        self.aggregate(label, results)
+    }
+
+    /// Run a whole grid of `(label, config)` cells with cells × seeds
+    /// fanned out together over the thread pool. Returns cells in input
+    /// order; each cell's per-seed results are in seed order.
+    pub fn run_cells(&self, specs: Vec<(String, TrainConfig)>) -> Result<Vec<Cell>> {
+        // Prebuild every distinct trainer serially first: compilation is
+        // cached per artifact, and building here keeps the fan-out phase
+        // free of duplicate dataset construction.
+        for (_, cfg) in &specs {
+            self.trainer(cfg)?;
+        }
+        let seeds = self.seeds as u64;
+        let tasks: Vec<(usize, u64)> = (0..specs.len())
+            .flat_map(|c| (0..seeds).map(move |s| (c, s)))
+            .collect();
+        let mut results = pool::par_map(&tasks, self.jobs, |_, &(ci, seed)| {
+            let mut c = specs[ci].1.clone();
+            c.seed = seed;
+            let trainer = self.trainer(&c)?; // cache hit
+            trainer.run(&c)
+        });
+        let mut cells = Vec::with_capacity(specs.len());
+        // Drain in order: `results` is task-ordered (cell-major).
+        for (label, _) in &specs {
+            let rest = results.split_off(self.seeds.min(results.len()));
+            let chunk = std::mem::replace(&mut results, rest);
+            cells.push(self.aggregate(label, chunk)?);
+        }
+        Ok(cells)
+    }
+
+    fn aggregate(&self, label: &str, results: Vec<Result<RunResult>>) -> Result<Cell> {
+        let mut cell = Cell::new(label);
+        for (seed, r) in results.into_iter().enumerate() {
+            let r = r?;
             if self.verbose {
                 eprintln!(
                     "  [{label} seed {seed}] metric={:.4} trainF={:.3}x testF={:.3}x S={:.3} ({:.1}s)",
@@ -105,6 +176,8 @@ impl ExpContext {
             cell.test_flops = r.test_flops_ratio;
             cell.extra
                 .push(("train_loss".into(), format!("{:.4}", r.final_train_loss)));
+            cell.extra
+                .push(("total_swapped".into(), r.total_swapped.to_string()));
         }
         Ok(cell)
     }

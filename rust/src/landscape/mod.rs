@@ -176,13 +176,12 @@ fn binom(n: usize, k: usize) -> usize {
 }
 
 fn scale(p: &ParamSet, s: f32) -> ParamSet {
-    ParamSet {
-        tensors: p
-            .tensors
+    ParamSet::from_tensors(
+        p.tensors
             .iter()
             .map(|t| t.iter().map(|v| v * s).collect())
             .collect(),
-    }
+    )
 }
 
 fn add_scaled(out: &mut ParamSet, p: &ParamSet, s: f32) {

@@ -25,6 +25,7 @@ pub mod flops;
 pub mod landscape;
 pub mod metrics;
 pub mod model;
+pub mod pool;
 pub mod prune;
 pub mod runtime;
 pub mod schedule;

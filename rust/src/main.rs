@@ -9,7 +9,9 @@
 //!   flops --model M [...]        Appendix-H accounting for one config
 //!
 //! Shared flags: --seeds N (default 1), --scale F (step multiplier,
-//! default 1.0), --out DIR (CSV output, default results/).
+//! default 1.0), --jobs N (worker threads for cell/seed fan-out,
+//! default = available cores; results are bit-identical at any value),
+//! --out DIR (CSV output, default results/).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -111,12 +113,16 @@ fn context(args: &Args) -> Result<ExpContext> {
     ExpContext::new(
         args.usize("seeds", 1)?,
         args.f64("scale", 1.0)?,
+        args.usize("jobs", rigl::pool::default_jobs())?,
         PathBuf::from(args.get("out").unwrap_or("results")),
     )
 }
 
 fn emit_tables(ctx: &ExpContext, id: &str) -> Result<()> {
-    eprintln!("=== running {id} (seeds={}, scale={}) ===", ctx.seeds, ctx.scale);
+    eprintln!(
+        "=== running {id} (seeds={}, scale={}, jobs={}) ===",
+        ctx.seeds, ctx.scale, ctx.jobs
+    );
     let t0 = std::time::Instant::now();
     let tables = run_experiment(ctx, id)?;
     for (i, t) in tables.iter().enumerate() {
@@ -244,7 +250,7 @@ fn print_usage() {
         "repro — RigL (ICML 2020) reproduction\n\
          usage: repro <list|info|table|all-tables|train|flops> [--flags]\n\
          \n\
-         repro table --id fig2-left [--seeds 3] [--scale 1.0] [--out results]\n\
+         repro table --id fig2-left [--seeds 3] [--scale 1.0] [--jobs 4] [--out results]\n\
          repro train --model cnn --method rigl --sparsity 0.9 --dist erk\n\
          repro flops --model wrn --sparsity 0.95 --dist erk"
     );

@@ -80,7 +80,7 @@ pub fn load_checkpoint(path: &Path) -> Result<Checkpoint> {
             }
             tensors.push(t);
         }
-        sets.push(ParamSet { tensors });
+        sets.push(ParamSet::from_tensors(tensors));
     }
     Ok(Checkpoint { step, sets })
 }
@@ -106,12 +106,8 @@ mod tests {
         let ckpt = Checkpoint {
             step: 1234,
             sets: vec![
-                ParamSet {
-                    tensors: vec![vec![1.0, -2.5, 3.25], vec![0.0; 5]],
-                },
-                ParamSet {
-                    tensors: vec![vec![1.0, 0.0, 1.0]],
-                },
+                ParamSet::from_tensors(vec![vec![1.0, -2.5, 3.25], vec![0.0; 5]]),
+                ParamSet::from_tensors(vec![vec![1.0, 0.0, 1.0]]),
             ],
         };
         let path = std::env::temp_dir().join(format!("rigl_ckpt_{}.bin", std::process::id()));

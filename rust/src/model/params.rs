@@ -4,6 +4,20 @@
 //! PJRT literals are marshalled at the artifact boundary). `ParamSet` is
 //! used for parameters, optimizer moments, masks and gradients alike —
 //! they share shapes.
+//!
+//! ## Incremental nnz tracking
+//!
+//! Mask cardinality queries (`nnz`, `sparsity_over`) used to rescan whole
+//! tensors — O(N) per call, paid on every mask update and at every run's
+//! end. A `ParamSet` can now opt into incremental counting via
+//! `track_nnz()`: the per-tensor nonzero counts are computed once and
+//! thereafter maintained by the mutators that know their exact deltas
+//! (`topology::update_masks*` via `bump_nnz`, `prune::PruneSchedule::apply`
+//! via `set_nnz`). Tracking is opt-in because most `ParamSet`s are
+//! params/grads whose nonzero structure nobody queries; code that mutates
+//! a *tracked* set's `tensors` directly must call `track_nnz()` again (or
+//! the counts go stale). `mul_assign` conservatively drops tracking for
+//! this reason.
 
 use super::ModelDef;
 use crate::util::Rng;
@@ -12,21 +26,27 @@ use crate::util::Rng;
 #[derive(Clone, Debug, Default)]
 pub struct ParamSet {
     pub tensors: Vec<Vec<f32>>,
+    /// Per-tensor nonzero counts; `None` until `track_nnz` opts in.
+    nnz_counts: Option<Vec<usize>>,
 }
 
 impl ParamSet {
+    /// Wrap raw tensors (checkpoint loading, landscape arithmetic).
+    pub fn from_tensors(tensors: Vec<Vec<f32>>) -> Self {
+        ParamSet {
+            tensors,
+            nnz_counts: None,
+        }
+    }
+
     /// Zeros with the model's shapes.
     pub fn zeros(def: &ModelDef) -> Self {
-        ParamSet {
-            tensors: def.specs.iter().map(|s| vec![0.0; s.size()]).collect(),
-        }
+        ParamSet::from_tensors(def.specs.iter().map(|s| vec![0.0; s.size()]).collect())
     }
 
     /// All-ones (the dense mask).
     pub fn ones(def: &ModelDef) -> Self {
-        ParamSet {
-            tensors: def.specs.iter().map(|s| vec![1.0; s.size()]).collect(),
-        }
+        ParamSet::from_tensors(def.specs.iter().map(|s| vec![1.0; s.size()]).collect())
     }
 
     /// He-normal init for weights, ones for norm scales, zeros for biases —
@@ -48,7 +68,7 @@ impl ParamSet {
                 Kind::Bias => vec![0.0; s.size()],
             })
             .collect();
-        ParamSet { tensors }
+        ParamSet::from_tensors(tensors)
     }
 
     pub fn len(&self) -> usize {
@@ -59,8 +79,11 @@ impl ParamSet {
         self.tensors.is_empty()
     }
 
-    /// Element-wise multiply in place (e.g. re-masking).
+    /// Element-wise multiply in place (e.g. re-masking). Drops nnz
+    /// tracking on `self`: the result's nonzero structure depends on
+    /// `other`, and callers re-masking params don't query it.
     pub fn mul_assign(&mut self, other: &ParamSet) {
+        self.nnz_counts = None;
         for (t, o) in self.tensors.iter_mut().zip(&other.tensors) {
             for (a, b) in t.iter_mut().zip(o) {
                 *a *= *b;
@@ -73,9 +96,48 @@ impl ParamSet {
         self.tensors.iter().map(|t| t.len()).sum()
     }
 
+    /// (Re)compute per-tensor nonzero counts and keep them maintained
+    /// incrementally from here on. One O(N) scan, amortized over every
+    /// later `nnz`/`sparsity_over` query.
+    pub fn track_nnz(&mut self) {
+        self.nnz_counts = Some(
+            self.tensors
+                .iter()
+                .map(|t| t.iter().filter(|&&v| v != 0.0).count())
+                .collect(),
+        );
+    }
+
+    /// Is incremental nnz tracking active?
+    pub fn nnz_tracked(&self) -> bool {
+        self.nnz_counts.is_some()
+    }
+
+    /// Adjust the tracked count of tensor `i` by `delta` (no-op when
+    /// untracked). Called by mutators that know their exact flip delta.
+    pub(crate) fn bump_nnz(&mut self, i: usize, delta: isize) {
+        if let Some(c) = self.nnz_counts.as_mut() {
+            debug_assert!(delta >= 0 || c[i] >= delta.unsigned_abs());
+            c[i] = (c[i] as isize + delta) as usize;
+        }
+    }
+
+    /// Overwrite the tracked count of tensor `i` (no-op when untracked).
+    /// For mutators that rebuild a tensor wholesale with a known
+    /// cardinality (gradual pruning).
+    pub(crate) fn set_nnz(&mut self, i: usize, count: usize) {
+        if let Some(c) = self.nnz_counts.as_mut() {
+            c[i] = count;
+        }
+    }
+
     /// Count of non-zero entries in tensor `i` (mask cardinality).
+    /// O(1) when tracked, O(N) scan otherwise.
     pub fn nnz(&self, i: usize) -> usize {
-        self.tensors[i].iter().filter(|&&v| v != 0.0).count()
+        match &self.nnz_counts {
+            Some(c) => c[i],
+            None => self.tensors[i].iter().filter(|&&v| v != 0.0).count(),
+        }
     }
 
     /// Overall fraction of zeros across the given tensor indices.
@@ -90,9 +152,8 @@ impl ParamSet {
 
     /// Linear interpolation `(1-t)·a + t·b` (landscape toolkit).
     pub fn lerp(a: &ParamSet, b: &ParamSet, t: f32) -> ParamSet {
-        ParamSet {
-            tensors: a
-                .tensors
+        ParamSet::from_tensors(
+            a.tensors
                 .iter()
                 .zip(&b.tensors)
                 .map(|(x, y)| {
@@ -102,14 +163,13 @@ impl ParamSet {
                         .collect()
                 })
                 .collect(),
-        }
+        )
     }
 
     /// Element-wise union of two 0/1 masks.
     pub fn mask_union(a: &ParamSet, b: &ParamSet) -> ParamSet {
-        ParamSet {
-            tensors: a
-                .tensors
+        ParamSet::from_tensors(
+            a.tensors
                 .iter()
                 .zip(&b.tensors)
                 .map(|(x, y)| {
@@ -119,7 +179,7 @@ impl ParamSet {
                         .collect()
                 })
                 .collect(),
-        }
+        )
     }
 }
 
@@ -185,6 +245,51 @@ mod tests {
         p.mul_assign(&m);
         assert_eq!(p.tensors[0][0], 0.0);
         assert_eq!(p.tensors[0][5], 0.0);
+    }
+
+    #[test]
+    fn tracked_nnz_matches_scan_and_updates() {
+        let def = tiny_def();
+        let mut m = ParamSet::ones(&def);
+        m.tensors[0][0] = 0.0;
+        m.track_nnz();
+        assert!(m.nnz_tracked());
+        assert_eq!(m.nnz(0), 11);
+        assert_eq!(m.nnz(1), 3);
+        // Incremental maintenance via the crate-private hooks.
+        m.tensors[0][1] = 0.0;
+        m.bump_nnz(0, -1);
+        assert_eq!(m.nnz(0), 10);
+        m.tensors[0] = vec![1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        m.set_nnz(0, 1);
+        assert_eq!(m.nnz(0), 1);
+        // O(1) cached answer equals a fresh scan.
+        let scan = m.tensors[0].iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(m.nnz(0), scan);
+        assert!((m.sparsity_over(&[0]) - 11.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mul_assign_drops_tracking() {
+        let def = tiny_def();
+        let mut p = ParamSet::ones(&def);
+        p.track_nnz();
+        let mut m = ParamSet::ones(&def);
+        m.tensors[0][3] = 0.0;
+        p.mul_assign(&m);
+        assert!(!p.nnz_tracked());
+        // Untracked fallback rescans and sees the new zero.
+        assert_eq!(p.nnz(0), 11);
+    }
+
+    #[test]
+    fn clone_carries_tracking() {
+        let def = tiny_def();
+        let mut m = ParamSet::ones(&def);
+        m.track_nnz();
+        let c = m.clone();
+        assert!(c.nnz_tracked());
+        assert_eq!(c.nnz(0), 12);
     }
 
     #[test]

@@ -1,0 +1,113 @@
+//! Scoped thread-pool helpers for the experiment coordinator.
+//!
+//! No external thread-pool crate is reachable offline, so this module
+//! implements the one primitive the coordinator needs: a bounded,
+//! order-preserving parallel map over a work list (`par_map`), built on
+//! `std::thread::scope`.
+//!
+//! ## Determinism contract
+//!
+//! `par_map` guarantees two things the serial-vs-parallel equivalence
+//! test (rust/tests/integration.rs) relies on:
+//!
+//! 1. Results come back **in input order**, no matter which worker
+//!    finished first — each worker tags results with the item index and
+//!    the combined list is sorted before returning.
+//! 2. `jobs <= 1` (or a single item) short-circuits to a plain serial
+//!    loop, so `--jobs 1` IS the serial path, not a one-thread pool.
+//!
+//! Because every experiment cell derives its own *stateless* RNG streams
+//! from `(seed, layer, step)` (see `util::Rng::split`) and shares only
+//! immutable state (`Trainer`, `Runtime` caches behind locks), running
+//! the same closure on the same items is bit-identical at any job count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default worker count: all available cores (the `--jobs` default).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` with at most `jobs` worker threads, returning
+/// results in input order. `f` receives `(index, &item)`.
+///
+/// Work is distributed dynamically (an atomic cursor), so heterogeneous
+/// item costs — e.g. a ΔT sweep where cells differ in step count — still
+/// load-balance across workers.
+pub fn par_map<T, R, F>(items: &[T], jobs: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
+    if jobs <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let collected: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(items.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, R)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    local.push((i, f(i, &items[i])));
+                }
+                collected.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut tagged = collected.into_inner().unwrap();
+    tagged.sort_unstable_by_key(|(i, _)| *i);
+    tagged.into_iter().map(|(_, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(&items, 8, |i, &x| {
+            assert_eq!(i, x);
+            x * 3
+        });
+        assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let items: Vec<u64> = (0..100).collect();
+        // A seed-style computation: pure function of the item only.
+        let f = |_: usize, &x: &u64| crate::util::Rng::new(x).next_u64();
+        let serial = par_map(&items, 1, f);
+        let parallel = par_map(&items, 7, f);
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, 4, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[42u32], 4, |_, &x| x + 1), vec![43]);
+    }
+
+    #[test]
+    fn more_jobs_than_items() {
+        let items = [1u32, 2, 3];
+        assert_eq!(par_map(&items, 64, |_, &x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

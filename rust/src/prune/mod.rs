@@ -70,12 +70,13 @@ impl PruneSchedule {
     }
 
     /// Re-derive masks from current magnitudes at step `t`; zero pruned
-    /// weights and their optimizer moments.
+    /// weights and their optimizer moments. Maintains the mask's tracked
+    /// nnz counts (each rebuilt layer mask has exactly `keep` ones).
     pub fn apply(
         &self,
         def: &ModelDef,
         params: &mut ParamSet,
-        opt_buffers: &mut [&mut ParamSet],
+        opt_buffers: &mut [ParamSet],
         masks: &mut ParamSet,
         t: usize,
     ) -> usize {
@@ -103,6 +104,7 @@ impl PruneSchedule {
                 }
             }
             masks.tensors[li] = new_mask;
+            masks.set_nnz(li, keep);
         }
         pruned
     }
@@ -176,10 +178,14 @@ mod tests {
         let mut params = ParamSet::zeros(&d);
         params.tensors[0] = (1..=20).map(|i| i as f32).collect();
         let mut masks = ParamSet::ones(&d);
+        masks.track_nnz();
         let mut mom = ParamSet::ones(&d);
-        let pruned = s.apply(&d, &mut params, &mut [&mut mom], &mut masks, 300);
+        let pruned = s.apply(&d, &mut params, std::slice::from_mut(&mut mom), &mut masks, 300);
         assert_eq!(pruned, 16); // 80% of 20
         assert_eq!(masks.nnz(0), 4);
+        // Tracked count stayed in sync with the rebuilt mask.
+        let scan = masks.tensors[0].iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(masks.nnz(0), scan);
         // Survivors are the 4 largest magnitudes (17..=20).
         for i in 0..16 {
             assert_eq!(masks.tensors[0][i], 0.0);

@@ -7,15 +7,32 @@
 //!
 //! Compiled executables are cached per path, so the coordinator can spin
 //! up many `Trainer`s against the same `Runtime` without recompiling.
+//!
+//! ## Concurrency model
+//!
+//! `Runtime` and `Executable` are shared across the coordinator's worker
+//! threads: every `Trainer` holds `Arc<Executable>`s and many trainers
+//! run concurrently under `pool::par_map`. The PJRT C API specifies that
+//! clients and loaded executables are thread-safe — `Compile` and
+//! `Execute` may be invoked concurrently from any thread (each `Execute`
+//! owns its own output buffers). The `xla` crate wraps raw C++ pointers
+//! and therefore does not *derive* `Send`/`Sync`, so this module asserts
+//! them explicitly on the two owning types below.
+//!
+//! The only interior mutability is the executable cache and the
+//! cumulative compile-time counter, both behind one `Mutex`. The lock is
+//! deliberately held **across compilation**: concurrent first-time loads
+//! of the same artifact then compile exactly once, and PJRT compilation
+//! (not specified reentrant by every plugin) is serialized. Execution
+//! never takes the lock, so the training hot path is uncontended.
 
 mod literals;
 
 pub use literals::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32};
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -23,10 +40,28 @@ use anyhow::{Context, Result};
 /// A PJRT client plus an executable cache.
 pub struct Runtime {
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<PathBuf, Rc<Executable>>>,
+    /// Path → compiled executable. Guards the cache AND serializes
+    /// compilation (see module docs).
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
     /// Cumulative compile time, reported by `repro bench`-style harnesses.
-    pub compile_seconds: RefCell<f64>,
+    compile_seconds: Mutex<f64>,
 }
+
+// SAFETY: `xla::PjRtClient` is a shared handle to a PJRT C-API client.
+// The PJRT contract requires clients to be thread-safe (compilation and
+// buffer creation from arbitrary threads); the CPU plugin used here
+// honors it. The `xla` crate does not declare this itself because its
+// inner type is a raw pointer. All Rust-side mutable state in `Runtime`
+// is behind a `Mutex`.
+//
+// CAVEAT (validation debt): this soundness argument rests on the PJRT
+// contract, not on an audit of the xla-rs 0.1.6 wrapper internals, and
+// was authored in a container without a Rust toolchain. Before trusting
+// `--jobs > 1` output, run the serial-vs-parallel integration test on a
+// toolchain-equipped machine (ideally under ThreadSanitizer) — see
+// ROADMAP.md "Open items". `--jobs 1` stays on the strictly serial path.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
 
 impl Runtime {
     /// CPU PJRT client (the only backend in this testbed).
@@ -34,8 +69,8 @@ impl Runtime {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
             client,
-            cache: RefCell::new(HashMap::new()),
-            compile_seconds: RefCell::new(0.0),
+            cache: Mutex::new(HashMap::new()),
+            compile_seconds: Mutex::new(0.0),
         })
     }
 
@@ -43,9 +78,16 @@ impl Runtime {
         self.client.platform_name()
     }
 
-    /// Load + compile an HLO-text artifact (cached).
-    pub fn load(&self, path: &Path) -> Result<Rc<Executable>> {
-        if let Some(exe) = self.cache.borrow().get(path) {
+    /// Cumulative seconds spent compiling artifacts on this runtime.
+    pub fn compile_seconds(&self) -> f64 {
+        *self.compile_seconds.lock().unwrap()
+    }
+
+    /// Load + compile an HLO-text artifact (cached; compile-once even
+    /// under concurrent callers).
+    pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(path) {
             return Ok(exe.clone());
         }
         let t0 = Instant::now();
@@ -58,14 +100,12 @@ impl Runtime {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {path:?}"))?;
-        *self.compile_seconds.borrow_mut() += t0.elapsed().as_secs_f64();
-        let exe = Rc::new(Executable {
+        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        let exe = Arc::new(Executable {
             exe,
             path: path.to_path_buf(),
         });
-        self.cache
-            .borrow_mut()
-            .insert(path.to_path_buf(), exe.clone());
+        cache.insert(path.to_path_buf(), exe.clone());
         Ok(exe)
     }
 }
@@ -75,6 +115,12 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub path: PathBuf,
 }
+
+// SAFETY: PJRT loaded executables are immutable after compilation and
+// the PJRT contract allows concurrent `Execute` calls; each call returns
+// freshly-allocated output buffers. `run` takes `&self` only.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
 
 impl Executable {
     /// Execute with literal inputs; decompose the (return_tuple=True) root
@@ -156,9 +202,18 @@ mod tests {
         let rt = runtime();
         let p = m.artifact_path("mlp", "eval").unwrap();
         let a = rt.load(&p).unwrap();
-        let secs = *rt.compile_seconds.borrow();
+        let secs = rt.compile_seconds();
         let b = rt.load(&p).unwrap();
-        assert!(Rc::ptr_eq(&a, &b));
-        assert_eq!(*rt.compile_seconds.borrow(), secs, "second load must not compile");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(rt.compile_seconds(), secs, "second load must not compile");
+    }
+
+    #[test]
+    fn runtime_is_send_and_sync() {
+        // Compile-time guarantee the coordinator's thread pool relies on.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Runtime>();
+        assert_send_sync::<Executable>();
+        assert_send_sync::<Arc<Executable>>();
     }
 }

@@ -15,9 +15,24 @@
 //!    network output but are guaranteed large gradients next step);
 //!    their optimizer moments are reset. Dropped weights and moments are
 //!    zeroed.
+//!
+//! ## The allocation-free hot path
+//!
+//! `update_masks_scratch` is the coordinator's inner loop: one call per
+//! ΔT across every cell × seed of every sweep. All working storage
+//! (active/eligible index lists, score buffers, selection buffers, the
+//! `was_active` bitmap, the sampling bitmap) lives in a caller-owned
+//! [`TopoScratch`] whose buffers retain capacity across updates, so the
+//! steady state performs **zero heap allocations** per update
+//! (bench_topology asserts this with a counting allocator). The
+//! historical entry point `update_masks` wraps it with a fresh scratch
+//! for tests and one-shot callers. When the mask `ParamSet` has
+//! `track_nnz()` enabled, per-layer cardinality counts are maintained
+//! incrementally here (every grown index was inactive at selection time
+//! and every dropped index active, so the delta is exact).
 
 use crate::model::{ModelDef, ParamSet};
-use crate::util::{arglargest_k, argsmallest_k, Rng};
+use crate::util::{argselect_k_into, arglargest_k, Rng};
 
 /// Sparse-training method taxonomy (paper Table 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -111,7 +126,44 @@ pub struct UpdateStats {
     pub per_layer: Vec<(usize, usize)>,
 }
 
-/// One Algorithm-1 mask update across all sparsifiable layers.
+impl UpdateStats {
+    /// Reset for reuse across updates (`per_layer` keeps its capacity).
+    pub fn clear(&mut self) {
+        self.dropped = 0;
+        self.grown = 0;
+        self.per_layer.clear();
+    }
+}
+
+/// Reusable working storage for `update_masks_scratch`. Hold one per
+/// training loop; every buffer keeps its capacity between updates, which
+/// is what makes the drop/grow path allocation-free in the steady state.
+#[derive(Clone, Debug, Default)]
+pub struct TopoScratch {
+    /// Indices of active (mask != 0) connections in the current layer.
+    active: Vec<u32>,
+    /// Indices of grow-eligible (mask == 0 after drop) connections.
+    eligible: Vec<u32>,
+    /// Scores parallel to `active` (|θ|) or `eligible` (|∇L| etc.).
+    scores: Vec<f32>,
+    /// argselect output: positions into `active`/`eligible`.
+    selected: Vec<u32>,
+    /// argselect working index buffer.
+    sel_idx: Vec<u32>,
+    /// Resolved dropped/grown connection indices.
+    dropped: Vec<u32>,
+    grown: Vec<u32>,
+    /// Bitmap over layer elements: active before this update.
+    was_active: Vec<u64>,
+    /// Sampling buffers for the SET random grow (see
+    /// `Rng::sample_indices_into`).
+    sample_perm: Vec<u32>,
+    sample_seen: Vec<u64>,
+}
+
+/// One Algorithm-1 mask update across all sparsifiable layers —
+/// convenience wrapper that allocates a fresh [`TopoScratch`]. Training
+/// loops should hold a scratch and call [`update_masks_scratch`] instead.
 ///
 /// `opt_buffers` are the optimizer moment sets (1 for SGDM, 2 for Adam);
 /// moments of every touched connection are reset to preserve the paper's
@@ -119,98 +171,169 @@ pub struct UpdateStats {
 pub fn update_masks(
     def: &ModelDef,
     params: &mut ParamSet,
-    opt_buffers: &mut [&mut ParamSet],
+    opt_buffers: &mut [ParamSet],
+    masks: &mut ParamSet,
+    fraction: f64,
+    grow: Grow<'_>,
+) -> UpdateStats {
+    let mut scratch = TopoScratch::default();
+    let mut stats = UpdateStats::default();
+    update_masks_scratch(
+        def,
+        params,
+        opt_buffers,
+        masks,
+        fraction,
+        grow,
+        &mut scratch,
+        &mut stats,
+    );
+    stats
+}
+
+/// One Algorithm-1 mask update with caller-owned scratch and stats —
+/// zero heap allocations per call once the buffers are warm.
+#[allow(clippy::too_many_arguments)]
+pub fn update_masks_scratch(
+    def: &ModelDef,
+    params: &mut ParamSet,
+    opt_buffers: &mut [ParamSet],
     masks: &mut ParamSet,
     fraction: f64,
     mut grow: Grow<'_>,
-) -> UpdateStats {
-    let mut stats = UpdateStats::default();
+    scratch: &mut TopoScratch,
+    stats: &mut UpdateStats,
+) {
+    stats.clear();
     for (li, spec) in def.specs.iter().enumerate() {
         if !spec.sparsifiable {
             continue;
         }
         let n = spec.size();
-        let mask = &mut masks.tensors[li];
-        let active: Vec<usize> = (0..n).filter(|&i| mask[i] != 0.0).collect();
-        if active.is_empty() || active.len() == n {
+
+        // (0) Gather active indices.
+        scratch.active.clear();
+        for (i, &m) in masks.tensors[li].iter().enumerate() {
+            if m != 0.0 {
+                scratch.active.push(i as u32);
+            }
+        }
+        let a = scratch.active.len();
+        if a == 0 || a == n {
             continue; // fully dense or fully empty layer: nothing to rewire
         }
-        let k = ((fraction * active.len() as f64).round() as usize)
-            .min(active.len())
-            .min(n - active.len() + active.len()); // cap later by eligibility
+        // Cap the swap count by the active count AND by the number of
+        // currently-inactive connections: a near-dense layer has at most
+        // `n - a` fresh slots to grow into, so dropping more than that
+        // would just churn connections it is forced to regrow. (The seed
+        // shipped a dead `.min(n - a + a)` here — a no-op `.min(n)`.)
+        let k = ((fraction * a as f64).round() as usize)
+            .min(a)
+            .min(n - a);
         if k == 0 {
             continue;
         }
 
         // (1) Drop: k smallest |θ| among active.
-        let vals: Vec<f32> = active.iter().map(|&i| params.tensors[li][i].abs()).collect();
-        let dropped: Vec<usize> = argsmallest_k(&vals, k)
-            .into_iter()
-            .map(|p| active[p])
-            .collect();
-        for &i in &dropped {
-            mask[i] = 0.0;
+        scratch.scores.clear();
+        for &i in &scratch.active {
+            scratch.scores.push(params.tensors[li][i as usize].abs());
+        }
+        argselect_k_into(
+            &scratch.scores,
+            k,
+            false,
+            &mut scratch.sel_idx,
+            &mut scratch.selected,
+        );
+        scratch.dropped.clear();
+        for &p in &scratch.selected {
+            scratch.dropped.push(scratch.active[p as usize]);
+        }
+        for &i in &scratch.dropped {
+            masks.tensors[li][i as usize] = 0.0;
         }
 
         // (2) Grow among NOT(remaining active) = mask==0 right now.
-        let eligible: Vec<usize> = (0..n).filter(|&i| mask[i] == 0.0).collect();
-        let k_grow = k.min(eligible.len());
-        let grown: Vec<usize> = match &mut grow {
+        scratch.eligible.clear();
+        for (i, &m) in masks.tensors[li].iter().enumerate() {
+            if m == 0.0 {
+                scratch.eligible.push(i as u32);
+            }
+        }
+        let k_grow = k.min(scratch.eligible.len());
+        match &mut grow {
             Grow::Gradient(g) | Grow::Momentum(g) => {
-                let scores: Vec<f32> =
-                    eligible.iter().map(|&i| g.tensors[li][i].abs()).collect();
-                arglargest_k(&scores, k_grow)
-                    .into_iter()
-                    .map(|p| eligible[p])
-                    .collect()
+                scratch.scores.clear();
+                for &i in &scratch.eligible {
+                    scratch.scores.push(g.tensors[li][i as usize].abs());
+                }
+                argselect_k_into(
+                    &scratch.scores,
+                    k_grow,
+                    true,
+                    &mut scratch.sel_idx,
+                    &mut scratch.selected,
+                );
             }
             Grow::Random(rng) => {
                 // Stateless per-layer stream (Appendix M bug #1 fix).
                 let mut layer_rng = rng.split(li as u64);
-                layer_rng
-                    .sample_indices(eligible.len(), k_grow)
-                    .into_iter()
-                    .map(|p| eligible[p])
-                    .collect()
+                layer_rng.sample_indices_into(
+                    scratch.eligible.len(),
+                    k_grow,
+                    &mut scratch.sample_perm,
+                    &mut scratch.sample_seen,
+                    &mut scratch.selected,
+                );
             }
-        };
+        }
+        scratch.grown.clear();
+        for &p in &scratch.selected {
+            scratch.grown.push(scratch.eligible[p as usize]);
+        }
 
         // (3) Apply. Reference-implementation semantics
         // (google-research/rigl sparse_optimizers.py): NEWLY-activated
         // connections (inactive before this update) start at zero with
         // fresh optimizer state; a just-dropped connection that is
         // immediately regrown keeps its weight (drop+grow cancels).
-        let was_active: Vec<bool> = {
-            let mut wa = vec![false; n];
-            for &i in &active {
-                wa[i] = true;
-            }
-            wa
-        };
-        for &i in &grown {
-            mask[i] = 1.0;
+        scratch.was_active.clear();
+        scratch.was_active.resize(n.div_ceil(64), 0);
+        for &i in &scratch.active {
+            scratch.was_active[(i / 64) as usize] |= 1u64 << (i % 64);
         }
-        for &i in &dropped {
-            if mask[i] == 0.0 {
-                params.tensors[li][i] = 0.0;
+        for &i in &scratch.grown {
+            masks.tensors[li][i as usize] = 1.0;
+        }
+        for &i in &scratch.dropped {
+            let iu = i as usize;
+            if masks.tensors[li][iu] == 0.0 {
+                params.tensors[li][iu] = 0.0;
                 for buf in opt_buffers.iter_mut() {
-                    buf.tensors[li][i] = 0.0;
+                    buf.tensors[li][iu] = 0.0;
                 }
             }
         }
-        for &i in &grown {
-            if !was_active[i] {
-                params.tensors[li][i] = 0.0;
+        for &i in &scratch.grown {
+            let iu = i as usize;
+            if scratch.was_active[iu / 64] & (1u64 << (iu % 64)) == 0 {
+                params.tensors[li][iu] = 0.0;
                 for buf in opt_buffers.iter_mut() {
-                    buf.tensors[li][i] = 0.0;
+                    buf.tensors[li][iu] = 0.0;
                 }
             }
         }
-        stats.dropped += dropped.len();
-        stats.grown += grown.len();
-        stats.per_layer.push((li, grown.len()));
+        // Exact cardinality delta: each dropped index was active, each
+        // grown index was inactive at its selection time.
+        masks.bump_nnz(
+            li,
+            scratch.grown.len() as isize - scratch.dropped.len() as isize,
+        );
+        stats.dropped += scratch.dropped.len();
+        stats.grown += scratch.grown.len();
+        stats.per_layer.push((li, scratch.grown.len()));
     }
-    stats
 }
 
 /// SNIP one-shot mask (Lee et al., 2019, with the paper's Appendix-M fix:
@@ -292,7 +415,7 @@ mod tests {
         let stats = update_masks(
             &def,
             &mut params,
-            &mut [&mut mom],
+            std::slice::from_mut(&mut mom),
             &mut masks,
             0.4, // k = round(0.4·5) = 2
             Grow::Gradient(&grads),
@@ -326,7 +449,7 @@ mod tests {
         update_masks(
             &def,
             &mut params,
-            &mut [&mut mom],
+            std::slice::from_mut(&mut mom),
             &mut masks,
             0.2, // k = 1
             Grow::Gradient(&grads),
@@ -345,7 +468,7 @@ mod tests {
         let stats = update_masks(
             &def,
             &mut params,
-            &mut [&mut mom],
+            std::slice::from_mut(&mut mom),
             &mut masks,
             0.4,
             Grow::Random(&mut rng),
@@ -363,7 +486,7 @@ mod tests {
             update_masks(
                 &def,
                 &mut params,
-                &mut [&mut mom],
+                std::slice::from_mut(&mut mom),
                 &mut masks,
                 0.4,
                 Grow::Random(&mut rng),
@@ -383,7 +506,7 @@ mod tests {
         update_masks(
             &def,
             &mut params,
-            &mut [&mut mom],
+            std::slice::from_mut(&mut mom),
             &mut masks,
             0.2,
             Grow::Gradient(&grads),
@@ -402,7 +525,7 @@ mod tests {
         let stats = update_masks(
             &def,
             &mut params,
-            &mut [&mut mom],
+            std::slice::from_mut(&mut mom),
             &mut masks,
             0.0,
             Grow::Gradient(&grads),
@@ -421,13 +544,105 @@ mod tests {
         let stats = update_masks(
             &def,
             &mut params,
-            &mut [&mut mom],
+            std::slice::from_mut(&mut mom),
             &mut masks,
             0.3,
             Grow::Gradient(&grads),
         );
         assert_eq!(stats.dropped, 0);
         assert_eq!(masks.nnz(0), 10);
+    }
+
+    #[test]
+    fn near_dense_layer_caps_swap_at_inactive_count() {
+        // Regression for the seed's dead `.min(n - a + a)` cap: 9 of 10
+        // connections active, so only ONE fresh slot exists. An uncapped
+        // k = round(0.6·9) = 5 would churn connections it must regrow;
+        // the intended cap limits the swap to the inactive count.
+        let def = def_one_layer(2, 5);
+        let mut params = ParamSet::zeros(&def);
+        let mut masks = ParamSet::zeros(&def);
+        for i in 0..9 {
+            params.tensors[0][i] = (i + 1) as f32;
+            masks.tensors[0][i] = 1.0;
+        }
+        let mut mom = ParamSet::zeros(&def);
+        let mut grads = ParamSet::zeros(&def);
+        grads.tensors[0][9] = 7.0; // the only inactive index
+        let stats = update_masks(
+            &def,
+            &mut params,
+            std::slice::from_mut(&mut mom),
+            &mut masks,
+            0.6,
+            Grow::Gradient(&grads),
+        );
+        assert_eq!(stats.dropped, 1, "k capped at n - active = 1");
+        assert_eq!(stats.grown, 1);
+        // Smallest-|θ| active index 0 dropped, fresh index 9 grown.
+        assert_eq!(masks.tensors[0][0], 0.0);
+        assert_eq!(masks.tensors[0][9], 1.0);
+        assert_eq!(masks.nnz(0), 9, "cardinality preserved");
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        // The same update through a warm, reused scratch must be
+        // bit-identical to the allocating wrapper.
+        let mut scratch = TopoScratch::default();
+        let mut stats = UpdateStats::default();
+        for seed in 0..5u64 {
+            let (def, mut p1, mut m1, mut o1) = setup();
+            let (_, mut p2, mut m2, mut o2) = setup();
+            let mut grads = ParamSet::zeros(&def);
+            let mut rng = Rng::new(seed);
+            for g in grads.tensors[0].iter_mut() {
+                *g = rng.next_f32() - 0.5;
+            }
+            let ref_stats = update_masks(
+                &def,
+                &mut p1,
+                std::slice::from_mut(&mut o1),
+                &mut m1,
+                0.4,
+                Grow::Gradient(&grads),
+            );
+            update_masks_scratch(
+                &def,
+                &mut p2,
+                std::slice::from_mut(&mut o2),
+                &mut m2,
+                0.4,
+                Grow::Gradient(&grads),
+                &mut scratch,
+                &mut stats,
+            );
+            assert_eq!(ref_stats, stats, "seed {seed}");
+            assert_eq!(m1.tensors, m2.tensors, "seed {seed}");
+            assert_eq!(p1.tensors, p2.tensors, "seed {seed}");
+            assert_eq!(o1.tensors, o2.tensors, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn tracked_nnz_maintained_incrementally() {
+        let (def, mut params, mut masks, mut mom) = setup();
+        masks.track_nnz();
+        let mut grads = ParamSet::zeros(&def);
+        grads.tensors[0][7] = 2.0;
+        grads.tensors[0][8] = 1.0;
+        update_masks(
+            &def,
+            &mut params,
+            std::slice::from_mut(&mut mom),
+            &mut masks,
+            0.4,
+            Grow::Gradient(&grads),
+        );
+        assert!(masks.nnz_tracked());
+        let scan = masks.tensors[0].iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(masks.nnz(0), scan, "incremental count drifted from scan");
+        assert_eq!(masks.nnz(0), 5);
     }
 
     #[test]

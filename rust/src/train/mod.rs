@@ -11,10 +11,28 @@
 //! iterations the dense-gradient computation **replaces** the SGD step
 //! (this is what makes RigL's amortized cost `(3·f_S·ΔT + 2·f_S + f_D) /
 //! (ΔT + 1)` — Appendix H).
+//!
+//! ## Concurrency model
+//!
+//! A `Trainer` is immutable after construction (model def, compiled
+//! `Arc<Executable>`s, dataset) and is therefore `Send + Sync`: the
+//! coordinator shares one trainer across worker threads via
+//! `Arc<Trainer>` and runs many seeds/cells on it concurrently. ALL
+//! mutable training state lives in the caller-owned `TrainState` plus
+//! per-run locals (data RNG, batch iterator, topology scratch), so
+//! concurrent runs cannot interfere — and because every random choice
+//! is derived from stateless `(seed, layer, step)` streams, a run's
+//! results are bit-identical whether it executes serially or on a pool
+//! (see `pool` and the serial-vs-parallel integration test).
+//!
+//! The topology scratch (`TopoScratch`) is per-run rather than
+//! per-trainer precisely because trainers are shared immutably across
+//! threads; within a run it is reused across every mask update, which is
+//! what keeps the drop/grow hot path allocation-free.
 
 pub mod replica;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -24,7 +42,7 @@ use crate::prune::PruneSchedule;
 use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, Executable, Runtime};
 use crate::schedule::{Decay, LrSchedule, UpdateSchedule};
 use crate::sparsity::{layer_sparsities, random_masks, Distribution};
-use crate::topology::{snip_masks, update_masks, Grow, Method};
+use crate::topology::{snip_masks, update_masks_scratch, Grow, Method, TopoScratch, UpdateStats};
 use crate::util::Rng;
 
 /// Everything that defines one training run.
@@ -145,9 +163,9 @@ pub enum TaskData {
 
 pub struct Trainer {
     pub def: ModelDef,
-    train_exe: Rc<Executable>,
-    densegrad_exe: Rc<Executable>,
-    eval_exe: Rc<Executable>,
+    train_exe: Arc<Executable>,
+    densegrad_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
     pub data: TaskData,
 }
 
@@ -220,6 +238,10 @@ impl Trainer {
         let mut eval_history = Vec::new();
         let mut recent_losses = std::collections::VecDeque::with_capacity(20);
         let mut total_swapped = 0usize;
+        // Per-run topology scratch + stats: reused across every mask
+        // update so the drop/grow hot path is allocation-free.
+        let mut topo_scratch = TopoScratch::default();
+        let mut topo_stats = UpdateStats::default();
 
         // SNIP: derive the one-shot mask from dense gradients at init.
         if cfg.method == Method::Snip && state.step == 0 {
@@ -230,6 +252,11 @@ impl Trainer {
             state.params.mul_assign(&state.masks);
             loss_history.push((0, loss));
         }
+
+        // Enable incremental mask cardinality counts: `update_masks` and
+        // `PruneSchedule::apply` maintain them, so the per-layer
+        // sparsity readouts at the end are O(1) instead of O(N) rescans.
+        state.masks.track_nnz();
 
         while state.step < total {
             let t = state.step;
@@ -249,23 +276,42 @@ impl Trainer {
             if dynamic && update.due(t) {
                 // Mask-update iteration: dense grads REPLACE the SGD step.
                 let frac = update.fraction(t);
-                let stats = match cfg.method {
+                match cfg.method {
                     Method::Rigl => {
                         let (grads, loss) = self.dense_grads(state, &x, &y)?;
                         recent_losses.push_back(loss);
-                        self.apply_update(state, frac, Grow::Gradient(&grads))
+                        self.apply_update(
+                            state,
+                            frac,
+                            Grow::Gradient(&grads),
+                            &mut topo_scratch,
+                            &mut topo_stats,
+                        );
                     }
                     Method::Snfs => {
-                        let gm = snfs_mom.as_ref().unwrap().clone();
-                        self.apply_update(state, frac, Grow::Momentum(&gm))
+                        // The momentum buffer is a run-local, disjoint
+                        // from `state` — no clone needed.
+                        self.apply_update(
+                            state,
+                            frac,
+                            Grow::Momentum(snfs_mom.as_ref().unwrap()),
+                            &mut topo_scratch,
+                            &mut topo_stats,
+                        );
                     }
                     Method::Set => {
                         let mut rng = Rng::new(cfg.seed ^ 0x5E7).split(t as u64);
-                        self.apply_update(state, frac, Grow::Random(&mut rng))
+                        self.apply_update(
+                            state,
+                            frac,
+                            Grow::Random(&mut rng),
+                            &mut topo_scratch,
+                            &mut topo_stats,
+                        );
                     }
                     _ => unreachable!(),
-                };
-                total_swapped += stats.grown;
+                }
+                total_swapped += topo_stats.grown;
             } else {
                 let loss = self.sgd_step(state, &x, &y, lr.at(t) as f32)?;
                 recent_losses.push_back(loss);
@@ -277,8 +323,7 @@ impl Trainer {
                 }
                 if let Some(p) = &prune {
                     if p.due(t) {
-                        let mut bufs: Vec<&mut ParamSet> = state.opt.iter_mut().collect();
-                        p.apply(&self.def, &mut state.params, &mut bufs, &mut state.masks, t);
+                        p.apply(&self.def, &mut state.params, &mut state.opt, &mut state.masks, t);
                     }
                 }
             }
@@ -342,16 +387,19 @@ impl Trainer {
         state: &mut TrainState,
         frac: f64,
         grow: Grow<'_>,
-    ) -> crate::topology::UpdateStats {
-        let mut bufs: Vec<&mut ParamSet> = state.opt.iter_mut().collect();
-        update_masks(
+        scratch: &mut TopoScratch,
+        stats: &mut UpdateStats,
+    ) {
+        update_masks_scratch(
             &self.def,
             &mut state.params,
-            &mut bufs,
+            &mut state.opt,
             &mut state.masks,
             frac,
             grow,
-        )
+            scratch,
+            stats,
+        );
     }
 
     // ----------------------------------------------------------------

@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use super::{Trainer, TrainConfig, TrainState};
 use crate::model::ParamSet;
-use crate::topology::{Grow, Method};
+use crate::topology::{update_masks_scratch, Grow, Method, TopoScratch, UpdateStats};
 use crate::util::Rng;
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -63,6 +63,10 @@ pub fn run_replicated(
     let total = cfg.total_steps();
     let mut divergence_sum = 0.0;
     let mut divergence_n = 0usize;
+    // One reusable topology scratch for the whole simulation (see
+    // `topology::TopoScratch`): replicas update sequentially here.
+    let mut scratch = TopoScratch::default();
+    let mut ustats = UpdateStats::default();
 
     // Each replica sees its own shard: distinct data RNG streams AND
     // distinct epoch shuffles (the batch iterator is seeded from cfg.seed,
@@ -101,15 +105,15 @@ pub fn run_replicated(
                     }
                     for (i, g) in grads.iter().enumerate() {
                         let st = &mut states[i];
-                        let (params, opt, masks) = (&mut st.params, &mut st.opt, &mut st.masks);
-                        let mut bufs: Vec<&mut ParamSet> = opt.iter_mut().collect();
-                        crate::topology::update_masks(
+                        update_masks_scratch(
                             &trainer.def,
-                            params,
-                            &mut bufs,
-                            masks,
+                            &mut st.params,
+                            &mut st.opt,
+                            &mut st.masks,
                             frac,
                             Grow::Gradient(g),
+                            &mut scratch,
+                            &mut ustats,
                         );
                     }
                 }
@@ -124,15 +128,15 @@ pub fn run_replicated(
                         };
                         let mut rng = Rng::new(cfg.seed ^ 0x5E7).split(stream);
                         let st = &mut states[i];
-                        let (params, opt, masks) = (&mut st.params, &mut st.opt, &mut st.masks);
-                        let mut bufs: Vec<&mut ParamSet> = opt.iter_mut().collect();
-                        crate::topology::update_masks(
+                        update_masks_scratch(
                             &trainer.def,
-                            params,
-                            &mut bufs,
-                            masks,
+                            &mut st.params,
+                            &mut st.opt,
+                            &mut st.masks,
                             frac,
                             Grow::Random(&mut rng),
+                            &mut scratch,
+                            &mut ustats,
                         );
                     }
                 }

@@ -1,10 +1,16 @@
-//! Deterministic RNG, top-k selection, and small statistics helpers.
+//! Deterministic RNG, top-k selection, bench harness, and small statistics
+//! helpers.
 //!
 //! No external `rand` crate is available offline, so the coordinator ships
 //! its own SplitMix64/xoshiro-style generator. Determinism matters twice
 //! over here: experiment cells are seeded, and the Appendix-M replica study
 //! depends on *stateless* random choices shared across replicas (the
 //! paper's bug #1 was replicas disagreeing on random drop/grow choices).
+//!
+//! The `*_into` variants of selection and sampling exist for the
+//! allocation-free topology hot path (`topology::TopoScratch`): they are
+//! bit-identical to their allocating counterparts but write into
+//! caller-owned buffers whose capacity persists across mask updates.
 
 /// SplitMix64: tiny, fast, passes BigCrush when used as a stream.
 #[derive(Clone, Debug)]
@@ -72,26 +78,47 @@ impl Rng {
 
     /// Sample `k` distinct indices from [0, n) — partial Fisher–Yates.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let (mut perm, mut seen, mut out) = (Vec::new(), Vec::new(), Vec::new());
+        self.sample_indices_into(n, k, &mut perm, &mut seen, &mut out);
+        out.into_iter().map(|i| i as usize).collect()
+    }
+
+    /// Allocation-free `sample_indices`: identical draw sequence (and so
+    /// identical output) for a given RNG state, but the permutation and
+    /// seen-bitmap buffers are supplied by the caller and `out` receives
+    /// the `k` sampled indices. In the steady state all three buffers
+    /// retain capacity, so repeated calls perform zero heap allocations.
+    pub fn sample_indices_into(
+        &mut self,
+        n: usize,
+        k: usize,
+        perm: &mut Vec<u32>,
+        seen: &mut Vec<u64>,
+        out: &mut Vec<u32>,
+    ) {
         assert!(k <= n, "sample_indices: k={k} > n={n}");
+        debug_assert!(n <= u32::MAX as usize, "index space exceeds u32");
+        out.clear();
         // For dense draws a full shuffle is cheaper than rejection.
         if k * 3 >= n {
-            let mut idx: Vec<usize> = (0..n).collect();
+            perm.clear();
+            perm.extend(0..n as u32);
             for i in 0..k {
                 let j = i + self.next_below(n - i);
-                idx.swap(i, j);
+                perm.swap(i, j);
             }
-            idx.truncate(k);
-            idx
+            out.extend_from_slice(&perm[..k]);
         } else {
-            let mut seen = std::collections::HashSet::with_capacity(k * 2);
-            let mut out = Vec::with_capacity(k);
+            seen.clear();
+            seen.resize(n.div_ceil(64), 0);
             while out.len() < k {
                 let i = self.next_below(n);
-                if seen.insert(i) {
-                    out.push(i);
+                let (w, b) = (i / 64, i % 64);
+                if seen[w] & (1u64 << b) == 0 {
+                    seen[w] |= 1u64 << b;
+                    out.push(i as u32);
                 }
             }
-            out
         }
     }
 
@@ -116,13 +143,36 @@ pub fn arglargest_k(values: &[f32], k: usize) -> Vec<usize> {
     argselect_k(values, k, true)
 }
 
-fn argselect_k(values: &[f32], k: usize, largest: bool) -> Vec<usize> {
+/// Indices of the `k` extreme values (`largest` picks the direction), in
+/// sorted order with ties broken by index. Public so property tests and
+/// callers that want the direction as data can reach the single
+/// implementation behind `argsmallest_k` / `arglargest_k`.
+pub fn argselect_k(values: &[f32], k: usize, largest: bool) -> Vec<usize> {
+    let (mut idx, mut out) = (Vec::new(), Vec::new());
+    argselect_k_into(values, k, largest, &mut idx, &mut out);
+    out.into_iter().map(|i| i as usize).collect()
+}
+
+/// Allocation-free `argselect_k`: `idx` is the O(n) working buffer, `out`
+/// receives the selected indices. Both retain capacity across calls, so
+/// the steady-state cost is zero heap allocations (select_nth + unstable
+/// sort are both in-place).
+pub fn argselect_k_into(
+    values: &[f32],
+    k: usize,
+    largest: bool,
+    idx: &mut Vec<u32>,
+    out: &mut Vec<u32>,
+) {
     let n = values.len();
+    debug_assert!(n <= u32::MAX as usize, "index space exceeds u32");
     let k = k.min(n);
+    out.clear();
     if k == 0 {
-        return Vec::new();
+        return;
     }
-    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.clear();
+    idx.extend(0..n as u32);
     let cmp = |a: &u32, b: &u32| {
         let (va, vb) = (values[*a as usize], values[*b as usize]);
         let ord = if largest {
@@ -137,13 +187,35 @@ fn argselect_k(values: &[f32], k: usize, largest: bool) -> Vec<usize> {
         idx.truncate(k);
     }
     idx.sort_unstable_by(cmp);
-    idx.into_iter().map(|i| i as usize).collect()
+    out.extend_from_slice(idx);
 }
 
 /// Minimal bench harness (criterion is unreachable offline): warm up,
 /// time `iters` calls, print mean/min per iteration. Used by the
-/// `rust/benches/*` targets under `cargo bench`.
-pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+/// `rust/benches/*` targets under `cargo bench`. Returns the mean.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, f: F) -> f64 {
+    bench_stats(name, iters, f).0
+}
+
+/// Like `bench`, but also appends a JSON record to `BENCH_<target>.json`
+/// at the workspace root, so the perf trajectory is tracked commit over
+/// commit.
+pub fn bench_to<F: FnMut()>(target: &str, name: &str, iters: usize, f: F) -> f64 {
+    let (mean_s, min_s) = bench_stats(name, iters, f);
+    let rec = BenchRecord {
+        name: name.to_string(),
+        iters,
+        mean_s,
+        min_s,
+        git_rev: git_rev(),
+    };
+    if let Err(e) = append_bench_record(target, &rec) {
+        eprintln!("warning: could not append BENCH_{target}.json: {e}");
+    }
+    mean_s
+}
+
+fn bench_stats<F: FnMut()>(name: &str, iters: usize, mut f: F) -> (f64, f64) {
     // Warmup.
     for _ in 0..iters.div_ceil(10).min(3) {
         f();
@@ -162,7 +234,67 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
         fmt_duration(mean_s),
         fmt_duration(min_s)
     );
-    mean_s
+    (mean_s, min_s)
+}
+
+/// One machine-readable bench sample (a line in `BENCH_<target>.json`).
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub git_rev: String,
+}
+
+impl BenchRecord {
+    /// Serialize as a single JSON object (no JSON crate offline; names
+    /// are plain ASCII bench ids, escaped minimally).
+    pub fn to_json(&self) -> String {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_s\":{:.9},\"min_s\":{:.9},\"git_rev\":\"{}\"}}",
+            esc(&self.name),
+            self.iters,
+            self.mean_s,
+            self.min_s,
+            esc(&self.git_rev)
+        )
+    }
+}
+
+/// Append one record to `BENCH_<target>.json` (JSON-lines: one object per
+/// line, append-only so concurrent bench targets can't clobber history).
+/// Records land at the workspace root: cargo runs bench binaries with the
+/// package dir (`rust/`) as CWD, so the path is resolved via
+/// `CARGO_MANIFEST_DIR/..` when available.
+pub fn append_bench_record(target: &str, rec: &BenchRecord) -> std::io::Result<()> {
+    use std::io::Write;
+    let dir = match std::env::var_os("CARGO_MANIFEST_DIR") {
+        Some(d) => {
+            let p = std::path::PathBuf::from(d);
+            p.parent().map(|w| w.to_path_buf()).unwrap_or(p)
+        }
+        None => std::path::PathBuf::from("."),
+    };
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join(format!("BENCH_{target}.json")))?;
+    writeln!(f, "{}", rec.to_json())
+}
+
+/// Short git revision of the working tree, or "unknown" outside a repo.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
 }
 
 fn fmt_duration(s: f64) -> String {
@@ -252,6 +384,20 @@ mod tests {
     }
 
     #[test]
+    fn sample_indices_into_matches_allocating_path() {
+        // Same RNG state ⇒ bit-identical sample, buffers reused.
+        let (mut perm, mut seen, mut out) = (Vec::new(), Vec::new(), Vec::new());
+        for (n, k) in [(10, 10), (100, 3), (50, 40), (64, 2), (129, 5)] {
+            let mut a = Rng::new(77).split(n as u64);
+            let mut b = a.clone();
+            let reference = a.sample_indices(n, k);
+            b.sample_indices_into(n, k, &mut perm, &mut seen, &mut out);
+            let got: Vec<usize> = out.iter().map(|&i| i as usize).collect();
+            assert_eq!(reference, got, "n={n} k={k}");
+        }
+    }
+
+    #[test]
     fn topk_smallest_and_largest() {
         let v = [5.0, 1.0, 3.0, 1.0, 9.0, -2.0];
         assert_eq!(argsmallest_k(&v, 2), vec![5, 1]);
@@ -260,6 +406,82 @@ mod tests {
         assert_eq!(argsmallest_k(&v, 3), vec![5, 1, 3]);
         assert_eq!(argsmallest_k(&v, 0), Vec::<usize>::new());
         assert_eq!(argsmallest_k(&v, 99).len(), 6);
+    }
+
+    /// Naive oracle: full stable sort by (value, index), take k.
+    fn oracle(values: &[f32], k: usize, largest: bool) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..values.len()).collect();
+        idx.sort_by(|&a, &b| {
+            let ord = if largest {
+                values[b].partial_cmp(&values[a])
+            } else {
+                values[a].partial_cmp(&values[b])
+            };
+            ord.unwrap().then(a.cmp(&b))
+        });
+        idx.truncate(k.min(values.len()));
+        idx
+    }
+
+    #[test]
+    fn argselect_property_matches_sort_oracle() {
+        // Randomized lengths, heavy ties (quantized values), NaN-free
+        // f32s, k spanning {0, 1, n/2, n, n+5}.
+        let mut rng = Rng::new(0xA55);
+        for case in 0..200 {
+            let n = rng.next_below(50) + 1;
+            let values: Vec<f32> = (0..n)
+                .map(|_| {
+                    if case % 2 == 0 {
+                        // Quantize to force ties.
+                        (rng.next_below(5) as f32) - 2.0
+                    } else {
+                        rng.next_f32() * 10.0 - 5.0
+                    }
+                })
+                .collect();
+            for k in [0usize, 1, n / 2, n, n + 5] {
+                for largest in [false, true] {
+                    let got = argselect_k(&values, k, largest);
+                    let want = oracle(&values, k, largest);
+                    assert_eq!(
+                        got, want,
+                        "case={case} n={n} k={k} largest={largest} values={values:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn argselect_into_reuses_buffers() {
+        let (mut idx, mut out) = (Vec::new(), Vec::new());
+        let v = [3.0f32, 1.0, 2.0];
+        argselect_k_into(&v, 2, false, &mut idx, &mut out);
+        assert_eq!(out, vec![1, 2]);
+        let cap_idx = idx.capacity();
+        let cap_out = out.capacity();
+        // Second call on an equal-size input must not grow either buffer.
+        argselect_k_into(&v, 2, true, &mut idx, &mut out);
+        assert_eq!(out, vec![0, 2]);
+        assert_eq!(idx.capacity(), cap_idx);
+        assert_eq!(out.capacity(), cap_out);
+    }
+
+    #[test]
+    fn bench_record_json_shape() {
+        let rec = BenchRecord {
+            name: "rigl_update/n=10".into(),
+            iters: 10,
+            mean_s: 0.001,
+            min_s: 0.0005,
+            git_rev: "abc123".into(),
+        };
+        let j = rec.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        for key in ["\"name\"", "\"iters\"", "\"mean_s\"", "\"min_s\"", "\"git_rev\""] {
+            assert!(j.contains(key), "{j}");
+        }
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! assert the semantic properties every experiment depends on. Skipped
 //! gracefully when `make artifacts` has not run.
 
+use rigl::coordinator::ExpContext;
 use rigl::model::{load_checkpoint, load_manifest, save_checkpoint, Checkpoint, Manifest};
 use rigl::sparsity::Distribution;
 use rigl::topology::Method;
@@ -254,6 +255,70 @@ fn erk_distribution_changes_flops_not_params() {
     );
     // …but a different layout.
     assert_ne!(su.masks.nnz(0), se.masks.nnz(0));
+}
+
+/// A small coordinator context with `jobs` workers (artifact-gated by
+/// the caller via `setup`).
+fn small_ctx(seeds: usize, jobs: usize) -> ExpContext {
+    let mut ctx = ExpContext::new(seeds, 1.0, jobs, std::env::temp_dir()).unwrap();
+    ctx.verbose = false;
+    ctx
+}
+
+fn small_cell_cfg(ctx: &ExpContext, delta_t: usize) -> TrainConfig {
+    let mut cfg = ctx.base("mlp", Method::Rigl);
+    cfg.sparsity = 0.9;
+    cfg.steps = 60;
+    cfg.delta_t = delta_t;
+    cfg.augment = false;
+    cfg.data_train = 512;
+    cfg.data_val = 256;
+    cfg
+}
+
+#[test]
+fn parallel_jobs_bit_identical_to_serial() {
+    // The determinism contract of the thread-pool refactor: `--jobs 1`
+    // and `--jobs 4` must produce byte-identical per-seed results.
+    let Some(_) = setup() else { return };
+    let run = |jobs: usize| {
+        let ctx = small_ctx(3, jobs);
+        let cfg = small_cell_cfg(&ctx, 15);
+        ctx.run_cell("equivalence", &cfg).unwrap()
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(
+        serial.metrics, parallel.metrics,
+        "per-seed final_metric must be bit-identical across job counts"
+    );
+    // `extra` carries per-seed train_loss AND total_swapped in seed order.
+    assert_eq!(
+        serial.extra, parallel.extra,
+        "per-seed train_loss/total_swapped must be identical across job counts"
+    );
+}
+
+#[test]
+fn run_cells_matches_run_cell_and_preserves_order() {
+    let Some(_) = setup() else { return };
+    let ctx = small_ctx(2, 4);
+    let cfg_a = small_cell_cfg(&ctx, 15);
+    let cfg_b = small_cell_cfg(&ctx, 30);
+    let cells = ctx
+        .run_cells(vec![
+            ("cell-a".into(), cfg_a.clone()),
+            ("cell-b".into(), cfg_b.clone()),
+        ])
+        .unwrap();
+    assert_eq!(cells.len(), 2);
+    assert_eq!(cells[0].label, "cell-a");
+    assert_eq!(cells[1].label, "cell-b");
+    // Grid fan-out must agree with cell-at-a-time execution.
+    let a = ctx.run_cell("cell-a", &cfg_a).unwrap();
+    let b = ctx.run_cell("cell-b", &cfg_b).unwrap();
+    assert_eq!(cells[0].metrics, a.metrics);
+    assert_eq!(cells[1].metrics, b.metrics);
 }
 
 #[test]
