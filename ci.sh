@@ -5,19 +5,31 @@
 # from anywhere; requires a Rust toolchain (and, for the artifact-gated
 # integration tests to actually execute rather than skip, `make
 # artifacts` beforehand).
+#
+# `./ci.sh --no-pjrt` builds and tests WITHOUT the `pjrt` cargo feature:
+# no xla crate, no XLA install, no artifacts — the native CSR backend's
+# hermetic suite (unit tests + backend_parity.rs + bench_backend) must
+# pass on a bare CPU. Machines without an XLA toolchain should run this
+# path; machines with one should run both.
 set -euo pipefail
 cd "$(dirname "$0")"
 
+FLAGS=()
+if [[ "${1:-}" == "--no-pjrt" ]]; then
+  FLAGS=(--no-default-features)
+  echo "== no-pjrt mode: building without the xla dependency =="
+fi
+
 echo "== cargo build --release =="
-cargo build --release
+cargo build --release "${FLAGS[@]+"${FLAGS[@]}"}"
 
 echo "== cargo test -q =="
-cargo test -q
+cargo test -q "${FLAGS[@]+"${FLAGS[@]}"}"
 
 echo "== cargo fmt --check =="
 cargo fmt --check
 
 echo "== cargo clippy -- -D warnings =="
-cargo clippy --all-targets -- -D warnings
+cargo clippy --all-targets "${FLAGS[@]+"${FLAGS[@]}"}" -- -D warnings
 
 echo "CI OK"

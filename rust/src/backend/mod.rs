@@ -1,0 +1,152 @@
+//! Pluggable execution backends.
+//!
+//! The trainer's inner loop needs exactly four operations: a masked
+//! optimizer step, dense gradients (RigL's grow signal), a per-batch eval
+//! metric, and a way to keep any backend-private sparse views in sync
+//! with the masks. Everything else (data, schedules, topology, FLOPs
+//! accounting) is backend-agnostic. This module captures that contract
+//! as the [`Backend`]/[`Session`] trait pair with two implementations:
+//!
+//! * [`pjrt`] — a thin adapter over the `runtime` module: state is
+//!   uploaded as PJRT literals per call, the AOT HLO artifacts execute
+//!   the step, and outputs are downloaded back into the host-side
+//!   `ParamSet`s. Dense math, any model in the zoo. Compiled only with
+//!   the `pjrt` cargo feature (the default).
+//! * [`native`] — a pure-Rust, std-only sparse engine for the FC tracks:
+//!   masked layers execute as CSR sparse×dense products, so per-step
+//!   cost is proportional to nnz rather than to the dense parameter
+//!   count, and nothing outside this crate (no XLA install, no AOT
+//!   artifacts) is needed. Build with `--no-default-features` to get a
+//!   fully hermetic binary.
+//!
+//! ## Ownership and state
+//!
+//! Host memory is canonical: all training state lives in the caller's
+//! [`TrainState`] (`Vec<f32>` per tensor) and backends are stateless
+//! between calls *except* for per-run derived views. Those views live in
+//! a [`Session`]:
+//!
+//! * a `Backend` is immutable and `Send + Sync` — one per model, shared
+//!   across the coordinator's worker threads via the `Trainer`;
+//! * a `Session` is per-run and mutable — it owns whatever the backend
+//!   derives from the masks (the native engine's CSR topologies and
+//!   activation buffers; nothing for PJRT). Sessions are cheap to open
+//!   for PJRT and O(params) for native (one CSR build), after which mask
+//!   changes are patched **incrementally** via [`Session::masks_updated`]
+//!   with the exact drop/grow lists from
+//!   [`topology::update_masks_visit`](crate::topology::update_masks_visit).
+//!
+//! A session's sparse views mirror `state.masks` at all times: callers
+//! that replace masks wholesale (SNIP's one-shot mask, gradual pruning)
+//! must call [`Session::resync`] afterwards.
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub mod native;
+
+use anyhow::Result;
+
+use crate::model::{load_manifest, Manifest, ParamSet};
+use crate::train::{Batch, TrainState};
+
+/// The model manifest a backend trains from: the AOT artifacts manifest
+/// when present, else (native only, and only when the manifest is
+/// genuinely *absent* — a present-but-corrupt one still propagates its
+/// parse error) the built-in FC model zoo. The one fallback rule shared
+/// by the CLI and the experiment coordinator.
+pub fn manifest_for(kind: BackendKind) -> Result<Manifest> {
+    match load_manifest(&crate::artifacts_dir()) {
+        Ok(m) => Ok(m),
+        Err(e) if kind == BackendKind::Native && is_not_found(&e) => {
+            Ok(native::builtin_manifest())
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn is_not_found(e: &anyhow::Error) -> bool {
+    e.root_cause()
+        .downcast_ref::<std::io::Error>()
+        .is_some_and(|io| io.kind() == std::io::ErrorKind::NotFound)
+}
+
+/// Which engine executes the training math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO artifacts through the PJRT runtime (requires `make
+    /// artifacts` and the `pjrt` cargo feature).
+    Pjrt,
+    /// The pure-Rust CSR engine (FC classify models, SGD+momentum).
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "pjrt" => BackendKind::Pjrt,
+            "native" => BackendKind::Native,
+            _ => anyhow::bail!("unknown backend {s:?} (pjrt|native)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+/// An immutable, thread-shareable execution engine for one model.
+pub trait Backend: Send + Sync {
+    fn kind(&self) -> BackendKind;
+
+    /// Open a per-run session whose derived views mirror the given
+    /// state's masks. The returned session borrows the backend only —
+    /// it holds no reference to `state`, so callers keep full mutable
+    /// access to their training state between calls.
+    fn session<'b>(&'b self, state: &TrainState) -> Result<Box<dyn Session + 'b>>;
+}
+
+/// Per-run mutable execution context (buffers + sparse views).
+///
+/// Every method takes the state explicitly: upload/download of whatever
+/// device- or layout-specific buffers the backend uses happens inside
+/// the call, and the host `TrainState` is authoritative before and
+/// after.
+pub trait Session {
+    /// One masked optimizer step (`params/opt` updated in place);
+    /// returns the training loss. Mirrors the `train` AOT artifact.
+    fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        x: &Batch,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f64>;
+
+    /// Dense gradients ∇_Θ L as a full `ParamSet` (zeros on
+    /// non-sparsifiable tensors) plus the loss. Mirrors `densegrad`.
+    fn dense_grads(&mut self, state: &TrainState, x: &Batch, y: &[i32])
+        -> Result<(ParamSet, f64)>;
+
+    /// One eval batch → `(metric_sum, count)`: classify = (Σ plain
+    /// cross-entropy, Σ correct); lm = (Σ nats, token count). Mirrors
+    /// `eval`.
+    fn eval_batch(&mut self, state: &TrainState, x: &Batch, y: &[i32]) -> Result<(f64, f64)>;
+
+    /// Incremental structural patch after a topology update on spec
+    /// `li`: the layer's new active set is `(active \ dropped) ∪ grown`
+    /// (flat element indices). Backends without derived sparse views
+    /// ignore this.
+    fn masks_updated(&mut self, li: usize, dropped: &[u32], grown: &[u32]) {
+        let _ = (li, dropped, grown);
+    }
+
+    /// Full rebuild of derived views after a wholesale mask replacement
+    /// (SNIP init, gradual-pruning events).
+    fn resync(&mut self, state: &TrainState) {
+        let _ = state;
+    }
+}

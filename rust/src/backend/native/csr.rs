@@ -1,0 +1,290 @@
+//! CSR topology views over the coordinator's dense mask storage.
+//!
+//! A [`CsrTopo`] records *structure only* — `row_ptr` + sorted column
+//! indices per row. Weight values are never copied: kernels read them
+//! straight out of the dense `ParamSet` tensor by flat index
+//! (`row·cols + col`), so the CSR view shares storage with the masks and
+//! params the topology engine already maintains, and a weight update
+//! needs no value scatter/gather.
+//!
+//! Structure changes only at mask updates. [`CsrTopo::apply_swap`]
+//! patches the view **incrementally** from the exact drop/grow lists the
+//! hot path in `topology::update_masks_visit` produces — O(nnz + k·log k)
+//! per layer instead of an O(rows·cols) dense rescan — with all working
+//! storage in a caller-owned [`CsrScratch`] (allocation-free once warm,
+//! same discipline as `TopoScratch`).
+
+/// Sparse structure of one `(rows × cols)` row-major FC weight tensor.
+#[derive(Clone, Debug, Default)]
+pub struct CsrTopo {
+    pub rows: usize,
+    pub cols: usize,
+    /// `row_ptr[r]..row_ptr[r+1]` indexes `col_idx` for row `r`.
+    pub row_ptr: Vec<u32>,
+    /// Column indices, sorted within each row.
+    pub col_idx: Vec<u32>,
+}
+
+/// Reusable working storage for [`CsrTopo::apply_swap`] /
+/// [`CsrTopo::rebuild_from_mask`].
+#[derive(Clone, Debug, Default)]
+pub struct CsrScratch {
+    drop_sorted: Vec<u32>,
+    grow_sorted: Vec<u32>,
+    new_ptr: Vec<u32>,
+    new_cols: Vec<u32>,
+}
+
+impl CsrTopo {
+    /// Build from a dense 0/1 mask in row-major order.
+    pub fn from_mask(mask: &[f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(mask.len(), rows * cols, "mask/shape mismatch");
+        assert!(mask.len() <= u32::MAX as usize, "index space exceeds u32");
+        let mut topo = CsrTopo {
+            rows,
+            cols,
+            row_ptr: Vec::with_capacity(rows + 1),
+            col_idx: Vec::new(),
+        };
+        topo.fill_from_mask(mask);
+        topo
+    }
+
+    /// Recompute structure from the mask in place (buffers keep
+    /// capacity). Used by `Session::resync` after wholesale mask
+    /// replacement.
+    pub fn rebuild_from_mask(&mut self, mask: &[f32]) {
+        debug_assert_eq!(mask.len(), self.rows * self.cols);
+        self.fill_from_mask(mask);
+    }
+
+    fn fill_from_mask(&mut self, mask: &[f32]) {
+        self.row_ptr.clear();
+        self.col_idx.clear();
+        self.row_ptr.push(0);
+        for r in 0..self.rows {
+            let base = r * self.cols;
+            for c in 0..self.cols {
+                if mask[base + c] != 0.0 {
+                    self.col_idx.push(c as u32);
+                }
+            }
+            self.row_ptr.push(self.col_idx.len() as u32);
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Column slice of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[r] as usize..self.row_ptr[r + 1] as usize]
+    }
+
+    /// Apply one topology swap: the new active set is
+    /// `(current \ dropped) ∪ grown`, with both lists given as flat
+    /// element indices exactly as `topology::update_masks_visit` reports
+    /// them. An index present in both lists was drop-then-regrown and
+    /// survives unchanged. Every `grown` index not in `dropped` is
+    /// guaranteed absent from the current structure (the topology engine
+    /// grows only inactive connections), so the result is a clean merge.
+    pub fn apply_swap(&mut self, dropped: &[u32], grown: &[u32], s: &mut CsrScratch) {
+        s.drop_sorted.clear();
+        s.drop_sorted.extend_from_slice(dropped);
+        s.drop_sorted.sort_unstable();
+        s.grow_sorted.clear();
+        s.grow_sorted.extend_from_slice(grown);
+        s.grow_sorted.sort_unstable();
+
+        s.new_ptr.clear();
+        s.new_cols.clear();
+        s.new_ptr.push(0);
+        let (mut di, mut gi) = (0usize, 0usize);
+        for r in 0..self.rows {
+            let base = (r * self.cols) as u32;
+            let row_end_flat = base + self.cols as u32;
+            let mut k = self.row_ptr[r] as usize;
+            let k_end = self.row_ptr[r + 1] as usize;
+            loop {
+                // Next surviving old entry in this row (skip dropped).
+                let mut old_flat = None;
+                while k < k_end {
+                    let flat = base + self.col_idx[k];
+                    while di < s.drop_sorted.len() && s.drop_sorted[di] < flat {
+                        di += 1;
+                    }
+                    if di < s.drop_sorted.len() && s.drop_sorted[di] == flat {
+                        di += 1;
+                        k += 1;
+                        continue;
+                    }
+                    old_flat = Some(flat);
+                    break;
+                }
+                // Next grown entry in this row.
+                let grow_flat = (gi < s.grow_sorted.len() && s.grow_sorted[gi] < row_end_flat)
+                    .then(|| s.grow_sorted[gi]);
+                match (old_flat, grow_flat) {
+                    (None, None) => break,
+                    (Some(of), None) => {
+                        s.new_cols.push(of - base);
+                        k += 1;
+                    }
+                    (None, Some(gf)) => {
+                        s.new_cols.push(gf - base);
+                        gi += 1;
+                    }
+                    (Some(of), Some(gf)) => {
+                        // A regrown-after-drop index was skipped from the
+                        // old stream above, so of != gf always holds.
+                        debug_assert_ne!(of, gf, "grown index already active");
+                        if of < gf {
+                            s.new_cols.push(of - base);
+                            k += 1;
+                        } else {
+                            s.new_cols.push(gf - base);
+                            gi += 1;
+                        }
+                    }
+                }
+            }
+            s.new_ptr.push(s.new_cols.len() as u32);
+        }
+        debug_assert_eq!(gi, s.grow_sorted.len(), "grown index out of range");
+        std::mem::swap(&mut self.row_ptr, &mut s.new_ptr);
+        std::mem::swap(&mut self.col_idx, &mut s.new_cols);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_mask(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Vec<f32> {
+        (0..rows * cols)
+            .map(|_| if rng.next_f64() < density { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn from_mask_structure() {
+        let mask = [1.0, 0.0, 1.0, /* row 1 */ 0.0, 0.0, 0.0, /* row 2 */ 0.0, 1.0, 0.0];
+        let t = CsrTopo::from_mask(&mask, 3, 3);
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.row_ptr, vec![0, 2, 2, 3]);
+        assert_eq!(t.row(0), &[0, 2]);
+        assert_eq!(t.row(1), &[] as &[u32]);
+        assert_eq!(t.row(2), &[1]);
+    }
+
+    #[test]
+    fn apply_swap_matches_rebuild_randomized() {
+        let mut rng = Rng::new(0xC5A);
+        let mut scratch = CsrScratch::default();
+        for case in 0..50 {
+            let rows = rng.next_below(12) + 1;
+            let cols = rng.next_below(12) + 1;
+            let mut mask = random_mask(&mut rng, rows, cols, 0.4);
+            let mut topo = CsrTopo::from_mask(&mask, rows, cols);
+
+            // Random swap honoring the topology engine's contract:
+            // dropped ⊆ active; grown ⊆ inactive-after-drop.
+            let active: Vec<u32> = (0..mask.len())
+                .filter(|&i| mask[i] != 0.0)
+                .map(|i| i as u32)
+                .collect();
+            let k = if active.is_empty() {
+                0
+            } else {
+                rng.next_below(active.len() + 1)
+            };
+            let mut dropped: Vec<u32> = active.clone();
+            rng.shuffle(&mut dropped);
+            dropped.truncate(k);
+            for &i in &dropped {
+                mask[i as usize] = 0.0;
+            }
+            let inactive: Vec<u32> = (0..mask.len())
+                .filter(|&i| mask[i] == 0.0)
+                .map(|i| i as u32)
+                .collect();
+            let g = rng.next_below(inactive.len().min(k + 2) + 1);
+            let mut grown: Vec<u32> = inactive;
+            rng.shuffle(&mut grown);
+            grown.truncate(g);
+            for &i in &grown {
+                mask[i as usize] = 1.0;
+            }
+
+            topo.apply_swap(&dropped, &grown, &mut scratch);
+            let want = CsrTopo::from_mask(&mask, rows, cols);
+            assert_eq!(topo.row_ptr, want.row_ptr, "case {case} ({rows}x{cols})");
+            assert_eq!(topo.col_idx, want.col_idx, "case {case} ({rows}x{cols})");
+        }
+    }
+
+    #[test]
+    fn apply_swap_regrow_cancels() {
+        // An index in both dropped and grown survives unchanged.
+        let mask = [1.0, 1.0, 0.0, 0.0];
+        let mut topo = CsrTopo::from_mask(&mask, 1, 4);
+        let mut s = CsrScratch::default();
+        topo.apply_swap(&[1, 0], &[0, 3], &mut s);
+        // final = ({0,1} \ {0,1}) ∪ {0,3} = {0,3}
+        assert_eq!(topo.row(0), &[0, 3]);
+        assert_eq!(topo.nnz(), 2);
+    }
+
+    #[test]
+    fn apply_swap_shrinks_and_grows() {
+        let mask = [1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        let mut topo = CsrTopo::from_mask(&mask, 2, 3);
+        let mut s = CsrScratch::default();
+        // Drop 2 (row 0), grow nothing: nnz shrinks.
+        topo.apply_swap(&[2], &[], &mut s);
+        assert_eq!(topo.nnz(), 2);
+        assert_eq!(topo.row(0), &[0]);
+        // Grow 2 entries, drop nothing: nnz grows, order kept sorted.
+        topo.apply_swap(&[], &[5, 1], &mut s);
+        assert_eq!(topo.row(0), &[0, 1]);
+        assert_eq!(topo.row(1), &[1, 2]);
+    }
+
+    #[test]
+    fn repeated_swaps_through_one_scratch_stay_exact() {
+        // The double-buffer swap discipline: the same scratch serves many
+        // updates and the structure never drifts from a fresh rebuild.
+        let mut rng = Rng::new(7);
+        let mut mask = random_mask(&mut rng, 10, 10, 0.3);
+        let mut topo = CsrTopo::from_mask(&mask, 10, 10);
+        let mut s = CsrScratch::default();
+        for _ in 0..20 {
+            let active: Vec<u32> = (0..mask.len())
+                .filter(|&i| mask[i] != 0.0)
+                .map(|i| i as u32)
+                .collect();
+            let mut dropped = active.clone();
+            rng.shuffle(&mut dropped);
+            dropped.truncate(active.len() / 3);
+            for &i in &dropped {
+                mask[i as usize] = 0.0;
+            }
+            let mut grown: Vec<u32> = (0..mask.len())
+                .filter(|&i| mask[i] == 0.0)
+                .map(|i| i as u32)
+                .collect();
+            rng.shuffle(&mut grown);
+            grown.truncate(dropped.len());
+            for &i in &grown {
+                mask[i as usize] = 1.0;
+            }
+            topo.apply_swap(&dropped, &grown, &mut s);
+            let want = CsrTopo::from_mask(&mask, 10, 10);
+            assert_eq!(topo.row_ptr, want.row_ptr);
+            assert_eq!(topo.col_idx, want.col_idx);
+        }
+    }
+}

@@ -1,0 +1,433 @@
+//! Sparse×dense FC kernels, softmax cross-entropy, and the SGD-momentum
+//! update — the native engine's math, as free functions over slices so
+//! every kernel is unit-testable against a dense oracle.
+//!
+//! Layout conventions (all row-major):
+//! * activations `x`/`y`/`dy` are `(batch × dim)`;
+//! * an FC weight tensor is `(in_dim × out_dim)`, flat index
+//!   `i·out_dim + o`, with its sparsity structure in a [`CsrTopo`]
+//!   (values stay in the dense tensor — see `csr` module docs);
+//! * gradient values for sparse weights are accumulated *positionally*,
+//!   parallel to `CsrTopo::col_idx`, so backward cost is O(nnz·batch)
+//!   like the forward.
+//!
+//! The batch loop is outermost everywhere: each sample streams the CSR
+//! structure once while its activation row stays cache-resident. Zero
+//! input activations (common after ReLU) short-circuit the forward and
+//! the weight-gradient accumulation.
+
+use super::csr::CsrTopo;
+
+/// Forward: `y = x·W + bias` with `W` sparse. `y` is fully overwritten.
+pub fn spmm_bias_fwd(
+    x: &[f32],
+    batch: usize,
+    topo: &CsrTopo,
+    w: &[f32],
+    bias: &[f32],
+    y: &mut [f32],
+) {
+    let (ind, outd) = (topo.rows, topo.cols);
+    debug_assert_eq!(x.len(), batch * ind);
+    debug_assert_eq!(y.len(), batch * outd);
+    debug_assert_eq!(bias.len(), outd);
+    for b in 0..batch {
+        let xrow = &x[b * ind..(b + 1) * ind];
+        let yrow = &mut y[b * outd..(b + 1) * outd];
+        yrow.copy_from_slice(bias);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = i * outd;
+            for &c in topo.row(i) {
+                yrow[c as usize] += xv * w[wrow + c as usize];
+            }
+        }
+    }
+}
+
+/// Backward data product: `dx = dy·Wᵀ` with `W` sparse. `dx` is fully
+/// overwritten.
+pub fn spmm_back_dx(dy: &[f32], batch: usize, topo: &CsrTopo, w: &[f32], dx: &mut [f32]) {
+    let (ind, outd) = (topo.rows, topo.cols);
+    debug_assert_eq!(dy.len(), batch * outd);
+    debug_assert_eq!(dx.len(), batch * ind);
+    for b in 0..batch {
+        let dyrow = &dy[b * outd..(b + 1) * outd];
+        let dxrow = &mut dx[b * ind..(b + 1) * ind];
+        for (i, slot) in dxrow.iter_mut().enumerate() {
+            let wrow = i * outd;
+            let mut acc = 0.0f32;
+            for &c in topo.row(i) {
+                acc += w[wrow + c as usize] * dyrow[c as usize];
+            }
+            *slot = acc;
+        }
+    }
+}
+
+/// Backward weight product at the active positions only:
+/// `dw_vals[k] += Σ_b x[b,i]·dy[b,o]` for the k-th structural entry
+/// `(i,o)`. `dw_vals` is parallel to `topo.col_idx`; the caller zeroes it.
+pub fn spmm_back_dw(x: &[f32], dy: &[f32], batch: usize, topo: &CsrTopo, dw_vals: &mut [f32]) {
+    let (ind, outd) = (topo.rows, topo.cols);
+    debug_assert_eq!(dw_vals.len(), topo.nnz());
+    for b in 0..batch {
+        let xrow = &x[b * ind..(b + 1) * ind];
+        let dyrow = &dy[b * outd..(b + 1) * outd];
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let (start, end) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
+            for k in start..end {
+                dw_vals[k] += xv * dyrow[topo.col_idx[k] as usize];
+            }
+        }
+    }
+}
+
+/// Full dense weight gradient `dw[i,o] += Σ_b x[b,i]·dy[b,o]` — the RigL
+/// grow signal (∇ w.r.t. *every* connection, active or not). The caller
+/// zeroes `dw`. O(in·out·batch): paid only on mask-update steps.
+pub fn dense_back_dw(
+    x: &[f32],
+    dy: &[f32],
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    dw: &mut [f32],
+) {
+    debug_assert_eq!(dw.len(), in_dim * out_dim);
+    for b in 0..batch {
+        let xrow = &x[b * in_dim..(b + 1) * in_dim];
+        let dyrow = &dy[b * out_dim..(b + 1) * out_dim];
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let dwrow = &mut dw[i * out_dim..(i + 1) * out_dim];
+            for (slot, &d) in dwrow.iter_mut().zip(dyrow) {
+                *slot += xv * d;
+            }
+        }
+    }
+}
+
+/// Bias gradient `db[o] = Σ_b dy[b,o]` (overwritten).
+pub fn bias_grad(dy: &[f32], batch: usize, out_dim: usize, db: &mut [f32]) {
+    debug_assert_eq!(db.len(), out_dim);
+    db.fill(0.0);
+    for b in 0..batch {
+        let dyrow = &dy[b * out_dim..(b + 1) * out_dim];
+        for (slot, &d) in db.iter_mut().zip(dyrow) {
+            *slot += d;
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(h: &mut [f32]) {
+    for v in h {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU backward: zero `dh` wherever the post-activation `act` is ≤ 0
+/// (matches `jax.nn.relu`'s zero subgradient at 0).
+pub fn relu_bwd(dh: &mut [f32], act: &[f32]) {
+    for (d, &a) in dh.iter_mut().zip(act) {
+        if a <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// Label-smoothed softmax cross-entropy, mean over the batch (nats), and
+/// its gradient w.r.t. the logits (already scaled by 1/batch) written to
+/// `dlogits`. Mirrors `smoothed_xent` + `jax.value_and_grad` on the
+/// python side: `d/dl_j = p_j − ((1−s)·1{j=y} + s/K)`.
+pub fn softmax_xent_grad(
+    logits: &[f32],
+    batch: usize,
+    classes: usize,
+    y: &[i32],
+    smoothing: f32,
+    dlogits: &mut [f32],
+) -> f64 {
+    debug_assert_eq!(logits.len(), batch * classes);
+    debug_assert_eq!(dlogits.len(), batch * classes);
+    debug_assert_eq!(y.len(), batch);
+    let inv_b = 1.0f32 / batch as f32;
+    let uniform = smoothing / classes as f32;
+    let mut loss_sum = 0.0f64;
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let drow = &mut dlogits[b * classes..(b + 1) * classes];
+        let target = y[b] as usize;
+        debug_assert!(target < classes);
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for &l in row {
+            z += (l - m).exp();
+        }
+        let lse = m + z.ln();
+        let nll = (lse - row[target]) as f64;
+        if smoothing > 0.0 {
+            let mean_nll: f64 =
+                row.iter().map(|&l| (lse - l) as f64).sum::<f64>() / classes as f64;
+            loss_sum += (1.0 - smoothing as f64) * nll + smoothing as f64 * mean_nll;
+        } else {
+            loss_sum += nll;
+        }
+        for (j, (slot, &l)) in drow.iter_mut().zip(row).enumerate() {
+            let p = (l - lse).exp();
+            let hard = if j == target { 1.0 - smoothing } else { 0.0 };
+            *slot = (p - hard - uniform) * inv_b;
+        }
+    }
+    loss_sum / batch as f64
+}
+
+/// Eval metrics for classification: `(Σ plain cross-entropy, Σ correct)`,
+/// mirroring `classify_metrics` (argmax ties break to the first index,
+/// like `jnp.argmax`).
+pub fn xent_metrics(logits: &[f32], batch: usize, classes: usize, y: &[i32]) -> (f64, f64) {
+    let (mut nll_sum, mut correct) = (0.0f64, 0.0f64);
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let target = y[b] as usize;
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for &l in row {
+            z += (l - m).exp();
+        }
+        let lse = m + z.ln();
+        nll_sum += (lse - row[target]) as f64;
+        let mut arg = 0usize;
+        for (j, &l) in row.iter().enumerate() {
+            if l > row[arg] {
+                arg = j;
+            }
+        }
+        if arg == target {
+            correct += 1.0;
+        }
+    }
+    (nll_sum, correct)
+}
+
+/// SGD-with-momentum over the active entries of one sparse weight tensor,
+/// mirroring the sgdm train artifact exactly:
+/// `g = dw + wd·q; v ← µ·v + g; q ← q − lr·v` (off-mask entries are zero
+/// in `w`, `v` AND `dw`, so skipping them reproduces the artifact's
+/// `(·)·m` re-masking for free).
+#[allow(clippy::too_many_arguments)]
+pub fn sgdm_update_sparse(
+    topo: &CsrTopo,
+    w: &mut [f32],
+    v: &mut [f32],
+    dw_vals: &[f32],
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+) {
+    debug_assert_eq!(dw_vals.len(), topo.nnz());
+    for i in 0..topo.rows {
+        let wrow = i * topo.cols;
+        let (start, end) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
+        for k in start..end {
+            let f = wrow + topo.col_idx[k] as usize;
+            let g = dw_vals[k] + weight_decay * w[f];
+            let v2 = momentum * v[f] + g;
+            v[f] = v2;
+            w[f] -= lr * v2;
+        }
+    }
+}
+
+/// SGD-with-momentum over a dense 1-D tensor (biases).
+pub fn sgdm_update_dense(
+    w: &mut [f32],
+    v: &mut [f32],
+    dw: &[f32],
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+) {
+    for ((q, vv), &g0) in w.iter_mut().zip(v.iter_mut()).zip(dw) {
+        let g = g0 + weight_decay * *q;
+        let v2 = momentum * *vv + g;
+        *vv = v2;
+        *q -= lr * v2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn dense_mm(x: &[f32], w: &[f32], b: usize, ind: usize, outd: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; b * outd];
+        for bi in 0..b {
+            for i in 0..ind {
+                for o in 0..outd {
+                    y[bi * outd + o] += x[bi * ind + i] * w[i * outd + o];
+                }
+            }
+        }
+        y
+    }
+
+    /// Random masked layer: returns (mask, masked weights, topo).
+    fn setup(rng: &mut Rng, ind: usize, outd: usize, density: f64) -> (Vec<f32>, CsrTopo) {
+        let mut w = vec![0.0f32; ind * outd];
+        let mut mask = vec![0.0f32; ind * outd];
+        for (wi, mi) in w.iter_mut().zip(mask.iter_mut()) {
+            if rng.next_f64() < density {
+                *mi = 1.0;
+                *wi = rng.next_f32() - 0.5;
+            }
+        }
+        let topo = CsrTopo::from_mask(&mask, ind, outd);
+        (w, topo)
+    }
+
+    #[test]
+    fn spmm_matches_dense_oracle() {
+        let mut rng = Rng::new(1);
+        for &(b, ind, outd, density) in
+            &[(1, 4, 3, 1.0), (3, 8, 5, 0.4), (2, 6, 6, 0.0), (4, 5, 7, 0.7)]
+        {
+            let (w, topo) = setup(&mut rng, ind, outd, density);
+            let x: Vec<f32> = (0..b * ind).map(|_| rng.next_f32() - 0.3).collect();
+            let bias: Vec<f32> = (0..outd).map(|_| rng.next_f32()).collect();
+            let mut y = vec![0.0f32; b * outd];
+            spmm_bias_fwd(&x, b, &topo, &w, &bias, &mut y);
+            let mut want = dense_mm(&x, &w, b, ind, outd);
+            for bi in 0..b {
+                for o in 0..outd {
+                    want[bi * outd + o] += bias[o];
+                }
+            }
+            for (a, e) in y.iter().zip(&want) {
+                assert!((a - e).abs() < 1e-5, "{a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn back_dx_matches_dense_oracle() {
+        let mut rng = Rng::new(2);
+        let (b, ind, outd) = (3, 7, 4);
+        let (w, topo) = setup(&mut rng, ind, outd, 0.5);
+        let dy: Vec<f32> = (0..b * outd).map(|_| rng.next_f32() - 0.5).collect();
+        let mut dx = vec![9.0f32; b * ind];
+        spmm_back_dx(&dy, b, &topo, &w, &mut dx);
+        // dx = dy · Wᵀ
+        let mut want = vec![0.0f32; b * ind];
+        for bi in 0..b {
+            for i in 0..ind {
+                for o in 0..outd {
+                    want[bi * ind + i] += w[i * outd + o] * dy[bi * outd + o];
+                }
+            }
+        }
+        for (a, e) in dx.iter().zip(&want) {
+            assert!((a - e).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn back_dw_matches_outer_product_at_active_positions() {
+        let mut rng = Rng::new(3);
+        let (b, ind, outd) = (4, 5, 6);
+        let (_, topo) = setup(&mut rng, ind, outd, 0.4);
+        let x: Vec<f32> = (0..b * ind).map(|_| rng.next_f32() - 0.5).collect();
+        let dy: Vec<f32> = (0..b * outd).map(|_| rng.next_f32() - 0.5).collect();
+        let mut dw_vals = vec![0.0f32; topo.nnz()];
+        spmm_back_dw(&x, &dy, b, &topo, &mut dw_vals);
+        let mut dense = vec![0.0f32; ind * outd];
+        dense_back_dw(&x, &dy, b, ind, outd, &mut dense);
+        for i in 0..ind {
+            for (k, &c) in topo.row(i).iter().enumerate() {
+                let kk = topo.row_ptr[i] as usize + k;
+                let want = dense[i * outd + c as usize];
+                assert!((dw_vals[kk] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_xent_against_finite_differences() {
+        let mut rng = Rng::new(4);
+        let (b, k) = (3, 5);
+        let logits: Vec<f32> = (0..b * k).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let y: Vec<i32> = (0..b).map(|_| rng.next_below(k) as i32).collect();
+        for &s in &[0.0f32, 0.1] {
+            let mut d = vec![0.0f32; b * k];
+            let loss = softmax_xent_grad(&logits, b, k, &y, s, &mut d);
+            assert!(loss.is_finite() && loss > 0.0);
+            let eps = 1e-3f32;
+            for j in 0..b * k {
+                let mut lp = logits.clone();
+                lp[j] += eps;
+                let mut scratch = vec![0.0f32; b * k];
+                let lplus = softmax_xent_grad(&lp, b, k, &y, s, &mut scratch);
+                lp[j] -= 2.0 * eps;
+                let lminus = softmax_xent_grad(&lp, b, k, &y, s, &mut scratch);
+                let fd = ((lplus - lminus) / (2.0 * eps as f64)) as f32;
+                assert!(
+                    (d[j] - fd).abs() < 2e-3,
+                    "smoothing={s} j={j}: analytic {} vs fd {fd}",
+                    d[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn xent_metrics_counts_correct_and_sums_nats() {
+        // Two samples: one confidently right, one wrong.
+        let logits = [5.0f32, 0.0, 0.0, /* s2 */ 0.0, 0.0, 5.0];
+        let y = [0i32, 0];
+        let (nll, correct) = xent_metrics(&logits, 2, 3, &y);
+        assert_eq!(correct, 1.0);
+        // s1 nll ≈ ln(1 + 2e^-5) ≈ 0.0134; s2 nll ≈ 5 + ln(1+2e^-5).
+        assert!((nll - (0.013434 + 5.013434)).abs() < 1e-3, "{nll}");
+    }
+
+    #[test]
+    fn sgdm_sparse_matches_reference_formula() {
+        let mask = [1.0f32, 0.0, 1.0, 1.0];
+        let topo = CsrTopo::from_mask(&mask, 2, 2);
+        let mut w = [1.0f32, 0.0, -2.0, 0.5];
+        let mut v = [0.1f32, 0.0, 0.0, -0.2];
+        let dw_vals = [0.3f32, 0.4, 0.5]; // entries (0,0) (1,0) (1,1)
+        let (lr, mu, wd) = (0.1f32, 0.9f32, 0.01f32);
+        sgdm_update_sparse(&topo, &mut w, &mut v, &dw_vals, lr, mu, wd);
+        // (0,0): g=0.3+0.01·1=0.31, v=0.09+0.31=0.4, w=1−0.04=0.96
+        assert!((v[0] - 0.4).abs() < 1e-6);
+        assert!((w[0] - 0.96).abs() < 1e-6);
+        // masked entry untouched
+        assert_eq!(w[1], 0.0);
+        assert_eq!(v[1], 0.0);
+        // (1,1): g=0.5+0.005=0.505, v=−0.18+0.505=0.325, w=0.5−0.0325
+        assert!((v[3] - 0.325).abs() < 1e-6);
+        assert!((w[3] - 0.4675).abs() < 1e-6);
+    }
+
+    #[test]
+    fn relu_roundtrip() {
+        let mut h = [1.0f32, -2.0, 0.0, 3.0];
+        relu(&mut h);
+        assert_eq!(h, [1.0, 0.0, 0.0, 3.0]);
+        let mut dh = [5.0f32, 5.0, 5.0, 5.0];
+        relu_bwd(&mut dh, &h);
+        assert_eq!(dh, [5.0, 0.0, 0.0, 5.0]);
+    }
+}

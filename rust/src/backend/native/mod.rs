@@ -1,0 +1,582 @@
+//! The native execution backend: a pure-Rust, std-only sparse engine.
+//!
+//! RigL's headline promise is that training cost scales with sparsity;
+//! the PJRT path executes dense AOT artifacts, so its wall-clock never
+//! sees the masks. This engine makes the masks *physical*: every FC
+//! weight tensor executes through a [`CsrTopo`] view (structure only —
+//! values stay in the coordinator's dense `ParamSet` storage), so the
+//! forward pass, both backward products, and the optimizer step all cost
+//! O(nnz·batch) rather than O(in·out·batch). Dense gradients for the
+//! RigL grow signal remain an O(in·out·batch) outer product, paid only
+//! every ΔT steps — exactly the Appendix-H amortization the `flops`
+//! module accounts for, now realized in measured step time
+//! (`cargo bench --bench bench_backend` → `BENCH_backend.json`).
+//!
+//! ## Supported models
+//!
+//! FC/bias stacks trained with SGD+momentum on a classification task —
+//! the MLP track (`mlp`, `mlp_pallas`, Appendix-B compression). Conv,
+//! GRU and Adam models stay on the PJRT backend; [`NativeBackend::new`]
+//! rejects them with a descriptive error. [`mlp_def`] builds manifest-
+//! equivalent `ModelDef`s in code (mirroring `python/compile/models/
+//! mlp.py`), so native training needs no artifacts directory at all:
+//! tests, benches and `--backend native` runs are hermetic on a bare
+//! CPU.
+//!
+//! ## Semantics
+//!
+//! Bit-for-bit the same *math* as the AOT sgdm train artifact
+//! (`python/compile/steps.py`): label-smoothed softmax cross-entropy
+//! (mean), `g = ∇L + wd·θ`, `v ← µ·v + g`, `θ ← (θ − lr·v)·m` — with the
+//! re-masking implicit because off-mask weights, moments and gradients
+//! are identically zero here. Floating-point summation order differs
+//! from XLA's, so trajectories agree to tolerance, not bitwise (see the
+//! backend-parity integration test).
+//!
+//! Mask updates arrive as exact drop/grow lists via
+//! [`Session::masks_updated`] (wired from `topology::update_masks_visit`
+//! through the trainer), and each CSR view is patched incrementally in
+//! O(nnz + k·log k); nnz is conserved by construction because the view
+//! mirrors the mask the topology engine maintains.
+
+pub mod csr;
+pub mod kernels;
+
+use anyhow::{bail, ensure, Result};
+
+use self::csr::{CsrScratch, CsrTopo};
+use crate::model::{ElemType, Kind, Manifest, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
+use crate::train::{Batch, TrainState};
+
+use super::{Backend, BackendKind, Session};
+
+/// One FC layer: weight spec + bias spec indices and shape.
+#[derive(Clone, Copy, Debug)]
+struct FcLayer {
+    w: usize,
+    b: usize,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+/// The native engine for one validated FC-stack model.
+pub struct NativeBackend {
+    def: ModelDef,
+    layers: Vec<FcLayer>,
+    momentum: f32,
+    weight_decay: f32,
+    label_smoothing: f32,
+}
+
+impl NativeBackend {
+    /// Validate a model for native execution. Accepted: classification,
+    /// SGD+momentum, rank-2 f32 input, specs forming an `[fc, bias]`
+    /// chain whose dimensions connect input → classes.
+    pub fn new(def: &ModelDef) -> Result<Self> {
+        ensure!(
+            def.optimizer == Optimizer::SgdMomentum,
+            "native backend: model {:?} uses {:?}; only SGD+momentum is supported",
+            def.name,
+            def.optimizer
+        );
+        ensure!(
+            def.task == Task::Classify && def.input_ty == ElemType::F32
+                && def.input_shape.len() == 2,
+            "native backend: model {:?} is not a rank-2 f32 classifier",
+            def.name
+        );
+        ensure!(
+            def.specs.len() >= 2 && def.specs.len() % 2 == 0,
+            "native backend: model {:?} is not an [fc, bias] stack",
+            def.name
+        );
+        let mut layers = Vec::with_capacity(def.specs.len() / 2);
+        let mut in_dim = def.input_shape[1];
+        for pair in def.specs.chunks(2) {
+            let (w, b) = (&pair[0], &pair[1]);
+            ensure!(
+                w.kind == Kind::Fc && w.shape.len() == 2 && w.shape[0] == in_dim,
+                "native backend: model {:?} spec {:?} breaks the fc chain \
+                 (expected fc of shape [{in_dim}, _])",
+                def.name,
+                w.name
+            );
+            ensure!(
+                b.kind == Kind::Bias && b.shape == vec![w.shape[1]],
+                "native backend: model {:?} spec {:?} is not the bias of {:?}",
+                def.name,
+                b.name,
+                w.name
+            );
+            ensure!(
+                w.size() <= u32::MAX as usize,
+                "native backend: layer {:?} exceeds the u32 index space",
+                w.name
+            );
+            let li = layers.len() * 2;
+            layers.push(FcLayer {
+                w: li,
+                b: li + 1,
+                in_dim,
+                out_dim: w.shape[1],
+            });
+            in_dim = w.shape[1];
+        }
+        let momentum = def
+            .hyper("momentum")
+            .ok_or_else(|| anyhow::anyhow!("model {:?} has no momentum hyper", def.name))?
+            as f32;
+        Ok(NativeBackend {
+            def: def.clone(),
+            layers,
+            momentum,
+            weight_decay: def.hyper("weight_decay").unwrap_or(0.0) as f32,
+            label_smoothing: def.hyper("label_smoothing").unwrap_or(0.0) as f32,
+        })
+    }
+
+    fn classes(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+}
+
+impl Backend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn session<'b>(&'b self, state: &TrainState) -> Result<Box<dyn Session + 'b>> {
+        Ok(Box::new(NativeSession::new(self, state)))
+    }
+}
+
+/// Per-run buffers + CSR views. All storage is allocated once here and
+/// reused every step; the only per-step clears are O(nnz) (`dw_vals`)
+/// and O(out) (`db`).
+struct NativeSession<'a> {
+    be: &'a NativeBackend,
+    batch: usize,
+    topos: Vec<CsrTopo>,
+    csr_scratch: CsrScratch,
+    /// Spec index → layer index (None for biases).
+    spec_layer: Vec<Option<usize>>,
+    /// Post-activation output per layer (`batch × out`); last = logits.
+    acts: Vec<Vec<f32>>,
+    /// Gradient w.r.t. each layer's output.
+    dbuf: Vec<Vec<f32>>,
+    /// Weight-gradient values, positionally parallel to each CSR view.
+    dw_vals: Vec<Vec<f32>>,
+    /// Bias gradients.
+    db: Vec<Vec<f32>>,
+}
+
+impl<'a> NativeSession<'a> {
+    fn new(be: &'a NativeBackend, state: &TrainState) -> Self {
+        let batch = be.def.batch_size();
+        let mut spec_layer = vec![None; be.def.specs.len()];
+        let mut topos = Vec::with_capacity(be.layers.len());
+        for (l, lay) in be.layers.iter().enumerate() {
+            spec_layer[lay.w] = Some(l);
+            topos.push(CsrTopo::from_mask(
+                &state.masks.tensors[lay.w],
+                lay.in_dim,
+                lay.out_dim,
+            ));
+        }
+        let dw_vals = topos.iter().map(|t| vec![0.0; t.nnz()]).collect();
+        NativeSession {
+            be,
+            batch,
+            csr_scratch: CsrScratch::default(),
+            spec_layer,
+            acts: be.layers.iter().map(|l| vec![0.0; batch * l.out_dim]).collect(),
+            dbuf: be.layers.iter().map(|l| vec![0.0; batch * l.out_dim]).collect(),
+            dw_vals,
+            db: be.layers.iter().map(|l| vec![0.0; l.out_dim]).collect(),
+            topos,
+        }
+    }
+
+    fn input<'x>(&self, x: &'x Batch) -> Result<&'x [f32]> {
+        match x {
+            Batch::F32(v) => {
+                ensure!(
+                    v.len() == self.batch * self.be.layers[0].in_dim,
+                    "native backend: batch of {} values, expected {}×{}",
+                    v.len(),
+                    self.batch,
+                    self.be.layers[0].in_dim
+                );
+                Ok(v)
+            }
+            Batch::I32(_) => bail!("native backend: i32 (LM) inputs unsupported"),
+        }
+    }
+
+    /// Forward through every layer; logits land in `acts.last()`.
+    fn forward(&mut self, state: &TrainState, x: &[f32]) {
+        for l in 0..self.be.layers.len() {
+            let lay = self.be.layers[l];
+            let (prev, rest) = self.acts.split_at_mut(l);
+            let input: &[f32] = if l == 0 { x } else { &prev[l - 1] };
+            let y = &mut rest[0];
+            kernels::spmm_bias_fwd(
+                input,
+                self.batch,
+                &self.topos[l],
+                &state.params.tensors[lay.w],
+                &state.params.tensors[lay.b],
+                y,
+            );
+            if l + 1 < self.be.layers.len() {
+                kernels::relu(y);
+            }
+        }
+    }
+
+    /// Backward from `dbuf[last]` (already holding dLoss/dlogits). For
+    /// each layer: weight grads (sparse into `dw_vals`, or dense into
+    /// `dense_dw[spec]` when provided and the spec is sparsifiable),
+    /// bias grads, then the data gradient chained down with the ReLU
+    /// mask.
+    fn backward(&mut self, state: &TrainState, x: &[f32], mut dense_dw: Option<&mut ParamSet>) {
+        for l in (0..self.be.layers.len()).rev() {
+            let lay = self.be.layers[l];
+            let (dprev, dcur) = self.dbuf.split_at_mut(l);
+            let dy: &[f32] = &dcur[0];
+            let input: &[f32] = if l == 0 { x } else { &self.acts[l - 1] };
+            match &mut dense_dw {
+                Some(grads) if self.be.def.specs[lay.w].sparsifiable => {
+                    // Grow signal: ∇ w.r.t. every connection.
+                    kernels::dense_back_dw(
+                        input,
+                        dy,
+                        self.batch,
+                        lay.in_dim,
+                        lay.out_dim,
+                        &mut grads.tensors[lay.w],
+                    );
+                }
+                Some(_) => {}
+                None => {
+                    self.dw_vals[l].fill(0.0);
+                    kernels::spmm_back_dw(input, dy, self.batch, &self.topos[l], &mut self.dw_vals[l]);
+                    kernels::bias_grad(dy, self.batch, lay.out_dim, &mut self.db[l]);
+                }
+            }
+            if l > 0 {
+                kernels::spmm_back_dx(
+                    dy,
+                    self.batch,
+                    &self.topos[l],
+                    &state.params.tensors[lay.w],
+                    &mut dprev[l - 1],
+                );
+                kernels::relu_bwd(&mut dprev[l - 1], &self.acts[l - 1]);
+            }
+        }
+    }
+}
+
+impl Session for NativeSession<'_> {
+    fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        x: &Batch,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f64> {
+        let xs = self.input(x)?;
+        self.forward(state, xs);
+        let classes = self.be.classes();
+        let last = self.be.layers.len() - 1;
+        let loss = kernels::softmax_xent_grad(
+            &self.acts[last],
+            self.batch,
+            classes,
+            y,
+            self.be.label_smoothing,
+            &mut self.dbuf[last],
+        );
+        self.backward(state, xs, None);
+        for l in 0..self.be.layers.len() {
+            let lay = self.be.layers[l];
+            let (mu, wd) = (self.be.momentum, self.be.weight_decay);
+            kernels::sgdm_update_sparse(
+                &self.topos[l],
+                &mut state.params.tensors[lay.w],
+                &mut state.opt[0].tensors[lay.w],
+                &self.dw_vals[l],
+                lr,
+                mu,
+                wd,
+            );
+            kernels::sgdm_update_dense(
+                &mut state.params.tensors[lay.b],
+                &mut state.opt[0].tensors[lay.b],
+                &self.db[l],
+                lr,
+                mu,
+                wd,
+            );
+        }
+        Ok(loss)
+    }
+
+    fn dense_grads(
+        &mut self,
+        state: &TrainState,
+        x: &Batch,
+        y: &[i32],
+    ) -> Result<(ParamSet, f64)> {
+        let xs = self.input(x)?;
+        self.forward(state, xs);
+        let classes = self.be.classes();
+        let last = self.be.layers.len() - 1;
+        let loss = kernels::softmax_xent_grad(
+            &self.acts[last],
+            self.batch,
+            classes,
+            y,
+            self.be.label_smoothing,
+            &mut self.dbuf[last],
+        );
+        let mut grads = ParamSet::zeros(&self.be.def);
+        self.backward(state, xs, Some(&mut grads));
+        Ok((grads, loss))
+    }
+
+    fn eval_batch(&mut self, state: &TrainState, x: &Batch, y: &[i32]) -> Result<(f64, f64)> {
+        let xs = self.input(x)?;
+        self.forward(state, xs);
+        let last = self.be.layers.len() - 1;
+        Ok(kernels::xent_metrics(
+            &self.acts[last],
+            self.batch,
+            self.be.classes(),
+            y,
+        ))
+    }
+
+    fn masks_updated(&mut self, li: usize, dropped: &[u32], grown: &[u32]) {
+        if let Some(l) = self.spec_layer.get(li).copied().flatten() {
+            self.topos[l].apply_swap(dropped, grown, &mut self.csr_scratch);
+            self.dw_vals[l].resize(self.topos[l].nnz(), 0.0);
+        }
+    }
+
+    fn resync(&mut self, state: &TrainState) {
+        for (l, lay) in self.be.layers.iter().enumerate() {
+            self.topos[l].rebuild_from_mask(&state.masks.tensors[lay.w]);
+            self.dw_vals[l].resize(self.topos[l].nnz(), 0.0);
+        }
+    }
+}
+
+/// Build a manifest-equivalent MLP `ModelDef` in code, mirroring
+/// `python/compile/models/mlp.py` (hidden weights sparsifiable, output
+/// layer dense, no Uniform first-layer exemption, SGDM with the paper's
+/// hypers). Lets native training run with no artifacts directory.
+pub fn mlp_def(
+    name: &str,
+    input_dim: usize,
+    hidden: &[usize],
+    classes: usize,
+    batch: usize,
+) -> ModelDef {
+    let mut dims = vec![input_dim];
+    dims.extend_from_slice(hidden);
+    dims.push(classes);
+    let nlayers = dims.len() - 1;
+    let mut specs = Vec::with_capacity(2 * nlayers);
+    for i in 0..nlayers {
+        let is_out = i == nlayers - 1;
+        specs.push(ParamSpec {
+            name: format!("fc{}/w", i + 1),
+            kind: Kind::Fc,
+            sparsifiable: !is_out,
+            first_layer: false,
+            flops: 2.0 * dims[i] as f64 * dims[i + 1] as f64,
+            shape: vec![dims[i], dims[i + 1]],
+        });
+        specs.push(ParamSpec {
+            name: format!("fc{}/b", i + 1),
+            kind: Kind::Bias,
+            sparsifiable: false,
+            first_layer: false,
+            flops: 0.0,
+            shape: vec![dims[i + 1]],
+        });
+    }
+    ModelDef {
+        name: name.to_string(),
+        backend: "native".to_string(),
+        optimizer: Optimizer::SgdMomentum,
+        task: Task::Classify,
+        input_ty: ElemType::F32,
+        input_shape: vec![batch, input_dim],
+        target_shape: vec![batch],
+        hyper: vec![
+            ("weight_decay".to_string(), 1e-4),
+            ("momentum".to_string(), 0.9),
+            ("label_smoothing".to_string(), 0.0),
+        ],
+        artifacts: vec![],
+        specs,
+    }
+}
+
+/// Fallback manifest for artifact-less machines: the paper's
+/// LeNet-300-100 MLP under its canonical name, so `--backend native`
+/// works out of the box when `make artifacts` has never run.
+pub fn builtin_manifest() -> Manifest {
+    let mut m = Manifest::default();
+    let def = mlp_def("mlp", 784, &[300, 100], 10, 128);
+    m.models.insert(def.name.clone(), def);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mlp_def_validates() {
+        let def = mlp_def("t", 784, &[32, 16], 10, 8);
+        let be = NativeBackend::new(&def).unwrap();
+        assert_eq!(be.layers.len(), 3);
+        assert_eq!(be.layers[0].in_dim, 784);
+        assert_eq!(be.layers[2].out_dim, 10);
+        assert_eq!(be.classes(), 10);
+        assert!((be.momentum - 0.9).abs() < 1e-9);
+        // Output layer dense, hidden sparsifiable — Appendix-B protocol.
+        assert!(def.specs[0].sparsifiable);
+        assert!(!def.specs[4].sparsifiable);
+    }
+
+    #[test]
+    fn rejects_non_fc_models() {
+        let mut def = mlp_def("t", 16, &[8], 4, 2);
+        def.specs[0].kind = Kind::Conv;
+        assert!(NativeBackend::new(&def).is_err());
+        let mut def2 = mlp_def("t", 16, &[8], 4, 2);
+        def2.optimizer = Optimizer::Adam;
+        assert!(NativeBackend::new(&def2).is_err());
+        let mut def3 = mlp_def("t", 16, &[8], 4, 2);
+        def3.specs[2].shape = vec![9, 4]; // breaks the 16→8→4 chain
+        assert!(NativeBackend::new(&def3).is_err());
+    }
+
+    #[test]
+    fn builtin_manifest_has_canonical_mlp() {
+        let m = builtin_manifest();
+        let def = m.get("mlp").unwrap();
+        assert_eq!(def.num_params(), 784 * 300 + 300 + 300 * 100 + 100 + 100 * 10 + 10);
+        assert!(NativeBackend::new(def).is_ok());
+    }
+
+    /// Finite-difference check of the full masked backward pass through
+    /// a 2-layer net: perturb active weights, compare dLoss/dθ.
+    #[test]
+    fn train_step_gradient_matches_finite_difference() {
+        let def = mlp_def("t", 6, &[5], 3, 4);
+        let be = NativeBackend::new(&def).unwrap();
+        let mut rng = Rng::new(9);
+        let mut state = TrainState {
+            params: ParamSet::init(&def, &mut rng),
+            opt: vec![ParamSet::zeros(&def)],
+            adam_t: 0.0,
+            masks: ParamSet::ones(&def),
+            step: 0,
+        };
+        // Sparsify layer 0: drop ~half the connections.
+        for i in 0..state.masks.tensors[0].len() {
+            if rng.next_f64() < 0.5 {
+                state.masks.tensors[0][i] = 0.0;
+            }
+        }
+        state.params.mul_assign(&state.masks);
+        let x: Vec<f32> = (0..4 * 6).map(|_| rng.next_f32() - 0.5).collect();
+        let y: Vec<i32> = (0..4).map(|_| rng.next_below(3) as i32).collect();
+
+        // Analytic masked grads via a zero-lr "train step" (momentum 0,
+        // wd 0 so v ends equal to the raw gradient).
+        let mut def0 = def.clone();
+        def0.hyper = vec![("momentum".to_string(), 0.0)];
+        let be0 = NativeBackend::new(&def0).unwrap();
+        let mut s0 = state.clone();
+        let mut sess = be0.session(&s0).unwrap();
+        let loss0 = sess
+            .train_step(&mut s0, &Batch::F32(x.clone()), &y, 0.0)
+            .unwrap();
+        assert!(loss0.is_finite());
+        drop(sess);
+
+        // Finite differences on a few active entries of each tensor.
+        let mut sess_e = be.session(&state).unwrap();
+        let mut eval_loss = |st: &TrainState| {
+            // dense_grads returns the smoothed mean loss of the forward.
+            sess_e
+                .dense_grads(st, &Batch::F32(x.clone()), &y)
+                .unwrap()
+                .1
+        };
+        let eps = 1e-3f32;
+        for ti in [0usize, 1, 2, 3] {
+            let n = state.params.tensors[ti].len();
+            for probe in [0usize, n / 2, n - 1] {
+                if state.masks.tensors[ti][probe] == 0.0 {
+                    continue; // masked: analytic grad is 0 by construction
+                }
+                let mut sp = state.clone();
+                sp.params.tensors[ti][probe] += eps;
+                let lp = eval_loss(&sp);
+                sp.params.tensors[ti][probe] -= 2.0 * eps;
+                let lm = eval_loss(&sp);
+                let fd = (lp - lm) / (2.0 * eps as f64);
+                let analytic = s0.opt[0].tensors[ti][probe] as f64;
+                assert!(
+                    (analytic - fd).abs() < 5e-3,
+                    "tensor {ti} idx {probe}: analytic {analytic} vs fd {fd}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_connections_never_receive_updates() {
+        let def = mlp_def("t", 8, &[6], 3, 2);
+        let be = NativeBackend::new(&def).unwrap();
+        let mut rng = Rng::new(3);
+        let mut state = TrainState {
+            params: ParamSet::init(&def, &mut rng),
+            opt: vec![ParamSet::zeros(&def)],
+            adam_t: 0.0,
+            masks: ParamSet::ones(&def),
+            step: 0,
+        };
+        for i in 0..state.masks.tensors[0].len() {
+            if i % 3 != 0 {
+                state.masks.tensors[0][i] = 0.0;
+            }
+        }
+        state.params.mul_assign(&state.masks);
+        let mut sess = be.session(&state).unwrap();
+        for step in 0..5 {
+            let x: Vec<f32> = (0..2 * 8).map(|_| rng.next_f32()).collect();
+            let y = vec![(step % 3) as i32, ((step + 1) % 3) as i32];
+            sess.train_step(&mut state, &Batch::F32(x), &y, 0.1).unwrap();
+        }
+        for (i, (&p, &m)) in state.params.tensors[0]
+            .iter()
+            .zip(&state.masks.tensors[0])
+            .enumerate()
+        {
+            if m == 0.0 {
+                assert_eq!(p, 0.0, "masked weight {i} resurrected");
+                assert_eq!(state.opt[0].tensors[0][i], 0.0, "masked moment {i} nonzero");
+            }
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! PJRT execution backend: a thin adapter over the `runtime` module.
+//!
+//! Holds one model's three compiled AOT artifacts (`train`, `densegrad`,
+//! `eval`) and marshals the host-side `TrainState` to/from PJRT literals
+//! around each call — the buffer upload/download half of the `Backend`
+//! contract. The artifact I/O layout is documented in
+//! `python/compile/steps.py`; this module is the only Rust code that
+//! still speaks it.
+//!
+//! Sessions are stateless borrows (all state lives in the caller's
+//! `TrainState`; executables are immutable and thread-safe), so opening
+//! one is free and `masks_updated`/`resync` are no-ops: the artifacts
+//! re-read the dense masks on every call.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::{Manifest, ModelDef, Optimizer, ParamSet};
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, Executable, Runtime};
+use crate::train::{Batch, TrainState};
+
+use super::{Backend, BackendKind, Session};
+
+/// One model's compiled artifacts plus its I/O metadata.
+pub struct PjrtBackend {
+    def: ModelDef,
+    train_exe: Arc<Executable>,
+    densegrad_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+}
+
+impl PjrtBackend {
+    /// Compile (or fetch cached) the model's three artifacts.
+    pub fn new(rt: &Runtime, manifest: &Manifest, model: &str) -> Result<Self> {
+        let def = manifest.get(model)?.clone();
+        Ok(PjrtBackend {
+            train_exe: rt.load(&manifest.artifact_path(model, "train")?)?,
+            densegrad_exe: rt.load(&manifest.artifact_path(model, "densegrad")?)?,
+            eval_exe: rt.load(&manifest.artifact_path(model, "eval")?)?,
+            def,
+        })
+    }
+
+    fn push_set(&self, inputs: &mut Vec<xla::Literal>, set: &ParamSet) -> Result<()> {
+        for (t, s) in set.tensors.iter().zip(&self.def.specs) {
+            inputs.push(lit_f32(t, &s.dims_i64())?);
+        }
+        Ok(())
+    }
+
+    fn batch_literal(&self, x: &Batch) -> Result<xla::Literal> {
+        let dims = i64_dims(&self.def.input_shape);
+        match x {
+            Batch::F32(v) => lit_f32(v, &dims),
+            Batch::I32(v) => lit_i32(v, &dims),
+        }
+    }
+
+    fn target_literal(&self, y: &[i32]) -> Result<xla::Literal> {
+        lit_i32(y, &i64_dims(&self.def.target_shape))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn session<'b>(&'b self, _state: &TrainState) -> Result<Box<dyn Session + 'b>> {
+        Ok(Box::new(PjrtSession { be: self }))
+    }
+}
+
+struct PjrtSession<'a> {
+    be: &'a PjrtBackend,
+}
+
+impl Session for PjrtSession<'_> {
+    fn train_step(
+        &mut self,
+        state: &mut TrainState,
+        x: &Batch,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<f64> {
+        let be = self.be;
+        let p = be.def.specs.len();
+        let mut inputs = Vec::with_capacity(4 * p + 4);
+        be.push_set(&mut inputs, &state.params)?;
+        for opt in &state.opt {
+            be.push_set(&mut inputs, opt)?;
+        }
+        if be.def.optimizer == Optimizer::Adam {
+            inputs.push(lit_scalar_f32(state.adam_t));
+        }
+        be.push_set(&mut inputs, &state.masks)?;
+        inputs.push(be.batch_literal(x)?);
+        inputs.push(be.target_literal(y)?);
+        inputs.push(lit_scalar_f32(lr));
+        let out = be.train_exe.run(&inputs)?;
+
+        let expect = match be.def.optimizer {
+            Optimizer::SgdMomentum => 2 * p + 1,
+            Optimizer::Adam => 3 * p + 2,
+        };
+        anyhow::ensure!(
+            out.len() == expect,
+            "train artifact returned {} outputs, expected {expect}",
+            out.len()
+        );
+        for (i, lit) in out[..p].iter().enumerate() {
+            state.params.tensors[i] = to_vec_f32(lit)?;
+        }
+        match be.def.optimizer {
+            Optimizer::SgdMomentum => {
+                for (i, lit) in out[p..2 * p].iter().enumerate() {
+                    state.opt[0].tensors[i] = to_vec_f32(lit)?;
+                }
+            }
+            Optimizer::Adam => {
+                for (i, lit) in out[p..2 * p].iter().enumerate() {
+                    state.opt[0].tensors[i] = to_vec_f32(lit)?;
+                }
+                for (i, lit) in out[2 * p..3 * p].iter().enumerate() {
+                    state.opt[1].tensors[i] = to_vec_f32(lit)?;
+                }
+                state.adam_t = to_vec_f32(&out[3 * p])?[0];
+            }
+        }
+        Ok(to_vec_f32(out.last().unwrap())?[0] as f64)
+    }
+
+    fn dense_grads(
+        &mut self,
+        state: &TrainState,
+        x: &Batch,
+        y: &[i32],
+    ) -> Result<(ParamSet, f64)> {
+        let be = self.be;
+        let p = be.def.specs.len();
+        let mut inputs = Vec::with_capacity(2 * p + 2);
+        be.push_set(&mut inputs, &state.params)?;
+        be.push_set(&mut inputs, &state.masks)?;
+        inputs.push(be.batch_literal(x)?);
+        inputs.push(be.target_literal(y)?);
+        let out = be.densegrad_exe.run(&inputs)?;
+        let sparse_idx = be.def.sparse_indices();
+        anyhow::ensure!(
+            out.len() == 2 * sparse_idx.len() + 1,
+            "densegrad arity mismatch: {} vs {}",
+            out.len(),
+            2 * sparse_idx.len() + 1
+        );
+        let mut grads = ParamSet::zeros(&be.def);
+        for (k, &i) in sparse_idx.iter().enumerate() {
+            grads.tensors[i] = to_vec_f32(&out[k])?;
+        }
+        let loss = to_vec_f32(out.last().unwrap())?[0] as f64;
+        Ok((grads, loss))
+    }
+
+    fn eval_batch(&mut self, state: &TrainState, x: &Batch, y: &[i32]) -> Result<(f64, f64)> {
+        let be = self.be;
+        let p = be.def.specs.len();
+        let mut inputs = Vec::with_capacity(2 * p + 2);
+        be.push_set(&mut inputs, &state.params)?;
+        be.push_set(&mut inputs, &state.masks)?;
+        inputs.push(be.batch_literal(x)?);
+        inputs.push(be.target_literal(y)?);
+        let out = be.eval_exe.run(&inputs)?;
+        let s = to_vec_f32(&out[0])?[0] as f64;
+        let c = to_vec_f32(&out[1])?[0] as f64;
+        Ok((s, c))
+    }
+}
+
+fn i64_dims(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}

@@ -33,18 +33,24 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
+use crate::backend::BackendKind;
 use crate::metrics::{Cell, Table};
-use crate::model::{load_manifest, Manifest};
+use crate::model::Manifest;
 use crate::pool;
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::schedule::Decay;
 use crate::sparsity::Distribution;
 use crate::topology::Method;
 use crate::train::{RunResult, TrainConfig, Trainer};
 
-/// Shared experiment context: runtime, manifest, trainer cache, knobs.
+/// Shared experiment context: backend, manifest, trainer cache, knobs.
 pub struct ExpContext {
-    pub rt: Runtime,
+    /// PJRT runtime — `Some` only for pjrt-backed contexts.
+    #[cfg(feature = "pjrt")]
+    pub rt: Option<Runtime>,
+    /// Which execution engine trainers are built on (`--backend`).
+    pub backend: BackendKind,
     pub manifest: Manifest,
     pub seeds: usize,
     pub scale: f64,
@@ -56,10 +62,37 @@ pub struct ExpContext {
 }
 
 impl ExpContext {
+    /// PJRT-backed context (the historical default).
     pub fn new(seeds: usize, scale: f64, jobs: usize, out_dir: PathBuf) -> Result<Self> {
+        Self::with_backend(seeds, scale, jobs, out_dir, BackendKind::Pjrt)
+    }
+
+    /// Context on an explicit backend. `native` needs no PJRT client and
+    /// no AOT artifacts: when `artifacts/manifest.txt` is absent it falls
+    /// back to the built-in MLP model zoo, so experiments on the MLP
+    /// track run on a bare CPU.
+    pub fn with_backend(
+        seeds: usize,
+        scale: f64,
+        jobs: usize,
+        out_dir: PathBuf,
+        backend: BackendKind,
+    ) -> Result<Self> {
+        #[cfg(not(feature = "pjrt"))]
+        if backend == BackendKind::Pjrt {
+            bail!("this binary was built without the `pjrt` feature; use --backend native");
+        }
+        let manifest = crate::backend::manifest_for(backend)?;
+        #[cfg(feature = "pjrt")]
+        let rt = match backend {
+            BackendKind::Pjrt => Some(Runtime::cpu()?),
+            BackendKind::Native => None,
+        };
         Ok(ExpContext {
-            rt: Runtime::cpu()?,
-            manifest: load_manifest(&crate::artifacts_dir())?,
+            #[cfg(feature = "pjrt")]
+            rt,
+            backend,
+            manifest,
             seeds: seeds.max(1),
             scale,
             jobs: jobs.max(1),
@@ -104,7 +137,7 @@ impl ExpContext {
         // by the Runtime's cache lock, and a duplicate build (two threads
         // missing simultaneously) only costs the loser a cache-hit
         // rebuild of the dataset — `or_insert` keeps one winner.
-        let t = Arc::new(Trainer::new(&self.rt, &self.manifest, cfg)?);
+        let t = Arc::new(self.build_trainer(cfg)?);
         Ok(self
             .trainers
             .lock()
@@ -112,6 +145,26 @@ impl ExpContext {
             .entry(key)
             .or_insert(t)
             .clone())
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn build_trainer(&self, cfg: &TrainConfig) -> Result<Trainer> {
+        match self.backend {
+            BackendKind::Pjrt => Trainer::new(
+                self.rt.as_ref().expect("pjrt context holds a runtime"),
+                &self.manifest,
+                cfg,
+            ),
+            BackendKind::Native => Trainer::native(&self.manifest, cfg),
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn build_trainer(&self, cfg: &TrainConfig) -> Result<Trainer> {
+        match self.backend {
+            BackendKind::Pjrt => bail!("pjrt backend unavailable in this build"),
+            BackendKind::Native => Trainer::native(&self.manifest, cfg),
+        }
     }
 
     /// Run a config across seeds (in parallel up to `jobs`), aggregating

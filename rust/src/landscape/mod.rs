@@ -9,8 +9,23 @@
 
 use anyhow::Result;
 
+use crate::backend::Session;
 use crate::model::ParamSet;
 use crate::train::{TrainConfig, Trainer, TrainState};
+
+/// A probe state with the given masks (every landscape loop evaluates
+/// many parameter points under ONE fixed mask set, so a single backend
+/// session — and, on the native backend, a single CSR build — serves
+/// the whole loop).
+fn probe_state(masks: ParamSet) -> TrainState {
+    TrainState {
+        params: ParamSet::default(),
+        opt: vec![],
+        adam_t: 0.0,
+        masks,
+        step: 0,
+    }
+}
 
 /// Evaluate train loss along the straight line between two states.
 pub fn linear_path(
@@ -21,18 +36,14 @@ pub fn linear_path(
     points: usize,
     batches: usize,
 ) -> Result<Vec<(f64, f64)>> {
-    let mask_union = ParamSet::mask_union(&a.masks, &b.masks);
+    let mut state = probe_state(ParamSet::mask_union(&a.masks, &b.masks));
+    state.opt = a.opt.clone();
+    let mut sess = trainer.open_session(&state)?;
     let mut out = Vec::with_capacity(points);
     for i in 0..points {
         let t = i as f64 / (points - 1) as f64;
-        let state = TrainState {
-            params: ParamSet::lerp(&a.params, &b.params, t as f32),
-            opt: a.opt.clone(),
-            adam_t: 0.0,
-            masks: mask_union.clone(),
-            step: 0,
-        };
-        let loss = trainer.train_loss(&state, cfg, batches)?;
+        state.params = ParamSet::lerp(&a.params, &b.params, t as f32);
+        let loss = trainer.train_loss_with(sess.as_mut(), &state, cfg, batches)?;
         out.push((t, loss));
     }
     Ok(out)
@@ -101,23 +112,18 @@ impl Bezier {
         let mut data_rng = crate::util::Rng::new(cfg.seed ^ 0xD47A);
         let mut iter = trainer.batch_iter_pub(cfg);
         let mut losses = Vec::with_capacity(iters);
-        let eval_masks = mask
-            .cloned()
-            .unwrap_or_else(|| ParamSet::ones(&trainer.def));
+        let mut state = probe_state(
+            mask.cloned()
+                .unwrap_or_else(|| ParamSet::ones(&trainer.def)),
+        );
+        let mut sess = trainer.open_session(&state)?;
         for _ in 0..iters {
             // Sample t away from the (fixed) endpoints.
             let t = 0.1 + 0.8 * rng.next_f32();
             let w = self.weights(t);
-            let point = self.at(t);
-            let state = TrainState {
-                params: point,
-                opt: vec![],
-                adam_t: 0.0,
-                masks: eval_masks.clone(),
-                step: 0,
-            };
+            state.params = self.at(t);
             let (x, y) = trainer.next_batch(cfg, &mut iter, &mut data_rng);
-            let (grads, loss) = trainer.dense_grads(&state, &x, &y)?;
+            let (grads, loss) = sess.dense_grads(&state, &x, &y)?;
             losses.push(loss);
             for (j, c) in self.ctrl.iter_mut().enumerate() {
                 let wj = w[j + 1];
@@ -146,20 +152,19 @@ impl Bezier {
         batches: usize,
         mask: Option<&ParamSet>,
     ) -> Result<Vec<(f64, f64)>> {
-        let eval_masks = mask
-            .cloned()
-            .unwrap_or_else(|| ParamSet::ones(&trainer.def));
+        let mut state = probe_state(
+            mask.cloned()
+                .unwrap_or_else(|| ParamSet::ones(&trainer.def)),
+        );
+        let mut sess = trainer.open_session(&state)?;
         let mut out = Vec::with_capacity(points);
         for i in 0..points {
             let t = i as f32 / (points - 1) as f32;
-            let state = TrainState {
-                params: self.at(t),
-                opt: vec![],
-                adam_t: 0.0,
-                masks: eval_masks.clone(),
-                step: 0,
-            };
-            out.push((t as f64, trainer.train_loss(&state, cfg, batches)?));
+            state.params = self.at(t);
+            out.push((
+                t as f64,
+                trainer.train_loss_with(sess.as_mut(), &state, cfg, batches)?,
+            ));
         }
         Ok(out)
     }

@@ -16,9 +16,17 @@
 //! * **L1 (python/compile/kernels)** — Pallas masked-matmul and drop/grow
 //!   score kernels, verified against pure-jnp oracles.
 //!
+//! Execution is pluggable (`backend` module): the default `pjrt` backend
+//! drives the AOT artifacts through PJRT, while the `native` backend is
+//! a pure-Rust CSR engine whose step cost scales with nnz — build with
+//! `--no-default-features` for a hermetic, XLA-free binary that still
+//! trains the FC tracks end to end.
+//!
 //! The rust binary is self-contained after `make artifacts`: python never
-//! runs on the training path.
+//! runs on the training path (and under `--backend native`, neither does
+//! `make artifacts`).
 
+pub mod backend;
 pub mod coordinator;
 pub mod data;
 pub mod flops;
@@ -27,6 +35,7 @@ pub mod metrics;
 pub mod model;
 pub mod pool;
 pub mod prune;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod schedule;
 pub mod sparsity;
@@ -34,7 +43,9 @@ pub mod topology;
 pub mod train;
 pub mod util;
 
+pub use backend::BackendKind;
 pub use model::{Kind, ModelDef, ParamSpec};
+#[cfg(feature = "pjrt")]
 pub use runtime::Runtime;
 pub use sparsity::Distribution;
 pub use topology::Method;

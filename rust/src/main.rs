@@ -11,6 +11,8 @@
 //! Shared flags: --seeds N (default 1), --scale F (step multiplier,
 //! default 1.0), --jobs N (worker threads for cell/seed fan-out,
 //! default = available cores; results are bit-identical at any value),
+//! --backend pjrt|native (execution engine, default pjrt; native is the
+//! pure-Rust CSR engine — FC tracks only, no artifacts needed),
 //! --out DIR (CSV output, default results/).
 
 use std::collections::HashMap;
@@ -19,11 +21,12 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use rigl::coordinator::{run_experiment, ExpContext, EXPERIMENTS};
-use rigl::model::load_manifest;
 use rigl::schedule::Decay;
 use rigl::sparsity::{achieved_sparsity, layer_sparsities, Distribution};
 use rigl::topology::Method;
-use rigl::train::{TrainConfig, Trainer};
+use rigl::train::TrainConfig;
+use rigl::BackendKind;
+#[cfg(feature = "pjrt")]
 use rigl::Runtime;
 
 fn main() {
@@ -109,19 +112,36 @@ fn run() -> Result<()> {
     Ok(())
 }
 
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    BackendKind::parse(args.get("backend").unwrap_or(default_backend()))
+}
+
+/// Without the `pjrt` feature only the native engine exists.
+fn default_backend() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "pjrt"
+    } else {
+        "native"
+    }
+}
+
 fn context(args: &Args) -> Result<ExpContext> {
-    ExpContext::new(
+    ExpContext::with_backend(
         args.usize("seeds", 1)?,
         args.f64("scale", 1.0)?,
         args.usize("jobs", rigl::pool::default_jobs())?,
         PathBuf::from(args.get("out").unwrap_or("results")),
+        backend_kind(args)?,
     )
 }
 
 fn emit_tables(ctx: &ExpContext, id: &str) -> Result<()> {
     eprintln!(
-        "=== running {id} (seeds={}, scale={}, jobs={}) ===",
-        ctx.seeds, ctx.scale, ctx.jobs
+        "=== running {id} (seeds={}, scale={}, jobs={}, backend={}) ===",
+        ctx.seeds,
+        ctx.scale,
+        ctx.jobs,
+        ctx.backend.label()
     );
     let t0 = std::time::Instant::now();
     let tables = run_experiment(ctx, id)?;
@@ -139,24 +159,31 @@ fn emit_tables(ctx: &ExpContext, id: &str) -> Result<()> {
 }
 
 fn info() -> Result<()> {
-    let manifest = load_manifest(&rigl::artifacts_dir())?;
+    let manifest = rigl::backend::manifest_for(BackendKind::Native)?;
     println!(
-        "{:<16} {:>10} {:>12} {:>12} {:>8} {:>6}",
-        "model", "params", "sparsifiable", "denseFLOPs/s", "opt", "task"
+        "{:<16} {:>10} {:>12} {:>12} {:>8} {:>6} {:>7}",
+        "model", "params", "sparsifiable", "denseFLOPs/s", "opt", "task", "native"
     );
     for (name, def) in &manifest.models {
+        let native_ok = rigl::backend::native::NativeBackend::new(def).is_ok();
         println!(
-            "{:<16} {:>10} {:>12} {:>12.3e} {:>8?} {:>6?}",
+            "{:<16} {:>10} {:>12} {:>12.3e} {:>8?} {:>6?} {:>7}",
             name,
             def.num_params(),
             def.sparsifiable_params(),
             def.dense_flops(),
             def.optimizer,
             def.task,
+            if native_ok { "yes" } else { "no" },
         );
     }
-    let rt = Runtime::cpu()?;
-    println!("\nPJRT platform: {}", rt.platform());
+    #[cfg(feature = "pjrt")]
+    {
+        let rt = Runtime::cpu()?;
+        println!("\nPJRT platform: {}", rt.platform());
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("\nPJRT: unavailable (built without the `pjrt` feature)");
     Ok(())
 }
 
@@ -175,16 +202,19 @@ fn train_cmd(args: &Args) -> Result<()> {
     cfg.decay = Decay::parse(args.get("decay").unwrap_or("cosine"))?;
     cfg.eval_every = args.usize("eval-every", (cfg.steps / 10).max(1))?;
 
-    let rt = Runtime::cpu()?;
-    let manifest = load_manifest(&rigl::artifacts_dir())?;
-    let trainer = Trainer::new(&rt, &manifest, &cfg)?;
+    let kind = backend_kind(args)?;
+    // One-cell context: reuses the coordinator's backend dispatch +
+    // manifest fallback instead of duplicating them here.
+    let ctx = ExpContext::with_backend(1, 1.0, 1, PathBuf::from("results"), kind)?;
+    let trainer = ctx.trainer(&cfg)?;
     eprintln!(
-        "training {model} ({} params) method={} S={} dist={} steps={}",
+        "training {model} ({} params) method={} S={} dist={} steps={} backend={}",
         trainer.def.num_params(),
         method.label(),
         cfg.sparsity,
         cfg.distribution.label(),
-        cfg.total_steps()
+        cfg.total_steps(),
+        kind.label()
     );
     let r = trainer.run(&cfg)?;
     for (t, loss) in &r.loss_history {
@@ -206,7 +236,7 @@ fn train_cmd(args: &Args) -> Result<()> {
 }
 
 fn flops_cmd(args: &Args) -> Result<()> {
-    let manifest = load_manifest(&rigl::artifacts_dir())?;
+    let manifest = rigl::backend::manifest_for(backend_kind(args)?)?;
     let model = args.get("model").unwrap_or("cnn");
     let def = manifest.get(model)?;
     let s = args.f64("sparsity", 0.8)?;
@@ -252,6 +282,7 @@ fn print_usage() {
          \n\
          repro table --id fig2-left [--seeds 3] [--scale 1.0] [--jobs 4] [--out results]\n\
          repro train --model cnn --method rigl --sparsity 0.9 --dist erk\n\
+         repro train --model mlp --method rigl --backend native   (no XLA needed)\n\
          repro flops --model wrn --sparsity 0.95 --dist erk"
     );
 }

@@ -60,6 +60,14 @@ pub struct Runtime {
 // `--jobs > 1` output, run the serial-vs-parallel integration test on a
 // toolchain-equipped machine (ideally under ThreadSanitizer) — see
 // ROADMAP.md "Open items". `--jobs 1` stays on the strictly serial path.
+//
+// VERDICT LOG: 2026-07-28 (backend-subsystem PR) — attempted; the
+// container again ships no cargo/rustc, so the equivalence test and
+// TSan run remain UNEXECUTED and this Send/Sync assertion remains
+// unvalidated. Two mitigations landed in that PR: the whole module is
+// now behind the `pjrt` cargo feature (a `--no-default-features` build
+// carries no unsafe at all), and `--backend native` offers a PJRT-free
+// execution path whose thread-safety is ordinary safe Rust.
 unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
 

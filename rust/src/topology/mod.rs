@@ -200,9 +200,41 @@ pub fn update_masks_scratch(
     opt_buffers: &mut [ParamSet],
     masks: &mut ParamSet,
     fraction: f64,
+    grow: Grow<'_>,
+    scratch: &mut TopoScratch,
+    stats: &mut UpdateStats,
+) {
+    update_masks_visit(
+        def,
+        params,
+        opt_buffers,
+        masks,
+        fraction,
+        grow,
+        scratch,
+        stats,
+        |_, _, _| {},
+    );
+}
+
+/// Like [`update_masks_scratch`], but invokes `visit(spec_index, dropped,
+/// grown)` after each layer's swap is applied (flat element indices, in
+/// selection order). This is how execution backends keep derived sparse
+/// views (e.g. the native engine's CSR topologies) in sync incrementally
+/// instead of rescanning the dense mask: the final active set of a layer
+/// is `(active \ dropped) ∪ grown`, and an index present in both lists
+/// was drop-then-regrown (net unchanged).
+#[allow(clippy::too_many_arguments)]
+pub fn update_masks_visit(
+    def: &ModelDef,
+    params: &mut ParamSet,
+    opt_buffers: &mut [ParamSet],
+    masks: &mut ParamSet,
+    fraction: f64,
     mut grow: Grow<'_>,
     scratch: &mut TopoScratch,
     stats: &mut UpdateStats,
+    mut visit: impl FnMut(usize, &[u32], &[u32]),
 ) {
     stats.clear();
     for (li, spec) in def.specs.iter().enumerate() {
@@ -333,6 +365,7 @@ pub fn update_masks_scratch(
         stats.dropped += scratch.dropped.len();
         stats.grown += scratch.grown.len();
         stats.per_layer.push((li, scratch.grown.len()));
+        visit(li, &scratch.dropped, &scratch.grown);
     }
 }
 

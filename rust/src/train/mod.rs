@@ -1,11 +1,13 @@
 //! The sparse-training orchestrator: Algorithm 1 and every baseline,
-//! driving the AOT artifacts through PJRT.
+//! driving a pluggable execution backend.
 //!
-//! One `Trainer` owns a model's compiled train/densegrad/eval executables
-//! plus its dataset; `run(TrainConfig)` executes a full training run and
-//! returns the metrics the experiment harness aggregates into paper
-//! tables. All state (params, optimizer moments, masks, SNFS gradient
-//! momentum) lives in Rust; python never runs here.
+//! One `Trainer` owns a model's execution [`Backend`] (PJRT artifacts or
+//! the native CSR engine — see the `backend` module) plus its dataset;
+//! `run(TrainConfig)` executes a full training run and returns the
+//! metrics the experiment harness aggregates into paper tables. All
+//! state (params, optimizer moments, masks, SNFS gradient momentum)
+//! lives in Rust; python never runs here, and with `--backend native`
+//! neither does XLA.
 //!
 //! Step semantics follow the reference implementation: on mask-update
 //! iterations the dense-gradient computation **replaces** the SGD step
@@ -14,8 +16,8 @@
 //!
 //! ## Concurrency model
 //!
-//! A `Trainer` is immutable after construction (model def, compiled
-//! `Arc<Executable>`s, dataset) and is therefore `Send + Sync`: the
+//! A `Trainer` is immutable after construction (model def, backend,
+//! dataset) and is therefore `Send + Sync`: the
 //! coordinator shares one trainer across worker threads via
 //! `Arc<Trainer>` and runs many seeds/cells on it concurrently. ALL
 //! mutable training state lives in the caller-owned `TrainState` plus
@@ -28,7 +30,10 @@
 //! The topology scratch (`TopoScratch`) is per-run rather than
 //! per-trainer precisely because trainers are shared immutably across
 //! threads; within a run it is reused across every mask update, which is
-//! what keeps the drop/grow hot path allocation-free.
+//! what keeps the drop/grow hot path allocation-free. The same pattern
+//! holds for backend sessions: a `Session` (the native engine's CSR
+//! views + work buffers) is opened per run and kept in sync with the
+//! masks via the exact drop/grow lists `update_masks_visit` reports.
 
 pub mod replica;
 
@@ -36,13 +41,18 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::backend::native::NativeBackend;
+#[cfg(feature = "pjrt")]
+use crate::backend::pjrt::PjrtBackend;
+use crate::backend::{Backend, BackendKind, Session};
 use crate::data::{augment_batch, BatchIter, CharDataset, DigitDataset, ImageDataset};
 use crate::model::{ElemType, Manifest, ModelDef, Optimizer, ParamSet, Task};
 use crate::prune::PruneSchedule;
-use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, Executable, Runtime};
+#[cfg(feature = "pjrt")]
+use crate::runtime::Runtime;
 use crate::schedule::{Decay, LrSchedule, UpdateSchedule};
 use crate::sparsity::{layer_sparsities, random_masks, Distribution};
-use crate::topology::{snip_masks, update_masks_scratch, Grow, Method, TopoScratch, UpdateStats};
+use crate::topology::{snip_masks, update_masks_visit, Grow, Method, TopoScratch, UpdateStats};
 use crate::util::Rng;
 
 /// Everything that defines one training run.
@@ -163,28 +173,43 @@ pub enum TaskData {
 
 pub struct Trainer {
     pub def: ModelDef,
-    train_exe: Arc<Executable>,
-    densegrad_exe: Arc<Executable>,
-    eval_exe: Arc<Executable>,
+    backend: Arc<dyn Backend>,
     pub data: TaskData,
 }
 
 impl Trainer {
-    /// Compile (or fetch cached) executables and build the dataset matched
-    /// to the model's input signature.
+    /// PJRT-backed trainer: compile (or fetch cached) the model's AOT
+    /// executables and build the dataset matched to its input signature.
+    #[cfg(feature = "pjrt")]
     pub fn new(rt: &Runtime, manifest: &Manifest, cfg: &TrainConfig) -> Result<Self> {
         let def = manifest.get(&cfg.model)?.clone();
-        let train_exe = rt.load(&manifest.artifact_path(&cfg.model, "train")?)?;
-        let densegrad_exe = rt.load(&manifest.artifact_path(&cfg.model, "densegrad")?)?;
-        let eval_exe = rt.load(&manifest.artifact_path(&cfg.model, "eval")?)?;
+        let backend = Arc::new(PjrtBackend::new(rt, manifest, &cfg.model)?);
+        Trainer::from_parts(def, backend, cfg)
+    }
+
+    /// Native-backed trainer: validate the model for the pure-Rust CSR
+    /// engine (FC classify stacks under SGD+momentum). Needs no runtime
+    /// and no artifacts directory.
+    pub fn native(manifest: &Manifest, cfg: &TrainConfig) -> Result<Self> {
+        let def = manifest.get(&cfg.model)?.clone();
+        let backend = Arc::new(NativeBackend::new(&def)?);
+        Trainer::from_parts(def, backend, cfg)
+    }
+
+    /// Assemble a trainer from an explicit model definition and backend
+    /// (tests and benches construct tiny in-code models this way).
+    pub fn from_parts(
+        def: ModelDef,
+        backend: Arc<dyn Backend>,
+        cfg: &TrainConfig,
+    ) -> Result<Self> {
         let data = build_data(&def, cfg)?;
-        Ok(Trainer {
-            def,
-            train_exe,
-            densegrad_exe,
-            eval_exe,
-            data,
-        })
+        Ok(Trainer { def, backend, data })
+    }
+
+    /// Which engine this trainer executes on.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
     }
 
     /// Initialize params/masks/opt for a config (separating this from
@@ -243,13 +268,19 @@ impl Trainer {
         let mut topo_scratch = TopoScratch::default();
         let mut topo_stats = UpdateStats::default();
 
+        // One backend session for the whole run: for the native engine
+        // this is where the CSR views over the masks live (kept in sync
+        // incrementally below); for PJRT it is a stateless borrow.
+        let mut sess = self.backend.session(state)?;
+
         // SNIP: derive the one-shot mask from dense gradients at init.
         if cfg.method == Method::Snip && state.step == 0 {
             let (x, y) = self.next_batch(cfg, &mut iter, &mut data_rng);
-            let (grads, loss) = self.dense_grads(state, &x, &y)?;
+            let (grads, loss) = sess.dense_grads(state, &x, &y)?;
             let s = layer_sparsities(&self.def, cfg.sparsity, &cfg.distribution);
             state.masks = snip_masks(&self.def, &state.params, &grads, &s);
             state.params.mul_assign(&state.masks);
+            sess.resync(state); // wholesale mask replacement
             loss_history.push((0, loss));
         }
 
@@ -264,7 +295,7 @@ impl Trainer {
 
             // SNFS accumulates dense-gradient momentum EVERY step.
             if let Some(gm) = snfs_mom.as_mut() {
-                let (grads, _) = self.dense_grads(state, &x, &y)?;
+                let (grads, _) = sess.dense_grads(state, &x, &y)?;
                 for (m, g) in gm.tensors.iter_mut().zip(&grads.tensors) {
                     for (a, b) in m.iter_mut().zip(g) {
                         *a = cfg.snfs_beta * *a + *b;
@@ -278,9 +309,13 @@ impl Trainer {
                 let frac = update.fraction(t);
                 match cfg.method {
                     Method::Rigl => {
-                        let (grads, loss) = self.dense_grads(state, &x, &y)?;
+                        let (grads, loss) = sess.dense_grads(state, &x, &y)?;
                         recent_losses.push_back(loss);
+                        if recent_losses.len() > 20 {
+                            recent_losses.pop_front();
+                        }
                         self.apply_update(
+                            sess.as_mut(),
                             state,
                             frac,
                             Grow::Gradient(&grads),
@@ -292,6 +327,7 @@ impl Trainer {
                         // The momentum buffer is a run-local, disjoint
                         // from `state` — no clone needed.
                         self.apply_update(
+                            sess.as_mut(),
                             state,
                             frac,
                             Grow::Momentum(snfs_mom.as_ref().unwrap()),
@@ -302,6 +338,7 @@ impl Trainer {
                     Method::Set => {
                         let mut rng = Rng::new(cfg.seed ^ 0x5E7).split(t as u64);
                         self.apply_update(
+                            sess.as_mut(),
                             state,
                             frac,
                             Grow::Random(&mut rng),
@@ -313,7 +350,7 @@ impl Trainer {
                 }
                 total_swapped += topo_stats.grown;
             } else {
-                let loss = self.sgd_step(state, &x, &y, lr.at(t) as f32)?;
+                let loss = sess.train_step(state, &x, &y, lr.at(t) as f32)?;
                 recent_losses.push_back(loss);
                 if recent_losses.len() > 20 {
                     recent_losses.pop_front();
@@ -324,18 +361,19 @@ impl Trainer {
                 if let Some(p) = &prune {
                     if p.due(t) {
                         p.apply(&self.def, &mut state.params, &mut state.opt, &mut state.masks, t);
+                        sess.resync(state); // wholesale mask replacement
                     }
                 }
             }
 
             state.step += 1;
             if cfg.eval_every > 0 && state.step % cfg.eval_every == 0 {
-                let m = self.evaluate(state, cfg)?;
+                let m = self.evaluate_with(sess.as_mut(), state, cfg)?;
                 eval_history.push((state.step, m));
             }
         }
 
-        let final_metric = self.evaluate(state, cfg)?;
+        let final_metric = self.evaluate_with(sess.as_mut(), state, cfg)?;
         let per_layer = self.current_layer_sparsities(state);
         let flops_cfg_sparsities: Vec<f64> = per_layer.clone();
         let train_ratio = crate::flops::train_flops_ratio(
@@ -382,15 +420,19 @@ impl Trainer {
             .collect()
     }
 
+    /// One Algorithm-1 mask update, with the backend session's sparse
+    /// views patched incrementally from the exact per-layer drop/grow
+    /// lists (no dense rescan).
     fn apply_update(
         &self,
+        sess: &mut dyn Session,
         state: &mut TrainState,
         frac: f64,
         grow: Grow<'_>,
         scratch: &mut TopoScratch,
         stats: &mut UpdateStats,
     ) {
-        update_masks_scratch(
+        update_masks_visit(
             &self.def,
             &mut state.params,
             &mut state.opt,
@@ -399,11 +441,13 @@ impl Trainer {
             grow,
             scratch,
             stats,
+            |li, dropped, grown| sess.masks_updated(li, dropped, grown),
         );
     }
 
     // ----------------------------------------------------------------
-    // Artifact invocation
+    // Backend invocation (one-shot sessions for external callers; the
+    // training loop holds a long-lived session instead)
     // ----------------------------------------------------------------
 
     /// One optimizer step; returns the training loss.
@@ -414,51 +458,8 @@ impl Trainer {
         y: &[i32],
         lr: f32,
     ) -> Result<f64> {
-        let p = self.def.specs.len();
-        let mut inputs = Vec::with_capacity(4 * p + 4);
-        self.push_set(&mut inputs, &state.params)?;
-        for opt in &state.opt {
-            self.push_set(&mut inputs, opt)?;
-        }
-        if self.def.optimizer == Optimizer::Adam {
-            inputs.push(lit_scalar_f32(state.adam_t));
-        }
-        self.push_set(&mut inputs, &state.masks)?;
-        inputs.push(self.batch_literal(x)?);
-        inputs.push(lit_i32(y, &i64_dims(&self.def.target_shape))?);
-        inputs.push(lit_scalar_f32(lr));
-        let out = self.train_exe.run(&inputs)?;
-
-        let expect = match self.def.optimizer {
-            Optimizer::SgdMomentum => 2 * p + 1,
-            Optimizer::Adam => 3 * p + 2,
-        };
-        anyhow::ensure!(
-            out.len() == expect,
-            "train artifact returned {} outputs, expected {expect}",
-            out.len()
-        );
-        for (i, lit) in out[..p].iter().enumerate() {
-            state.params.tensors[i] = crate::runtime::to_vec_f32(lit)?;
-        }
-        match self.def.optimizer {
-            Optimizer::SgdMomentum => {
-                for (i, lit) in out[p..2 * p].iter().enumerate() {
-                    state.opt[0].tensors[i] = crate::runtime::to_vec_f32(lit)?;
-                }
-            }
-            Optimizer::Adam => {
-                for (i, lit) in out[p..2 * p].iter().enumerate() {
-                    state.opt[0].tensors[i] = crate::runtime::to_vec_f32(lit)?;
-                }
-                for (i, lit) in out[2 * p..3 * p].iter().enumerate() {
-                    state.opt[1].tensors[i] = crate::runtime::to_vec_f32(lit)?;
-                }
-                state.adam_t = crate::runtime::to_vec_f32(&out[3 * p])?[0];
-            }
-        }
-        let loss = crate::runtime::to_vec_f32(out.last().unwrap())?[0] as f64;
-        Ok(loss)
+        let mut sess = self.backend.session(state)?;
+        sess.train_step(state, x, y, lr)
     }
 
     /// Dense gradients ∇_Θ L as a full ParamSet (zeros on non-sparsifiable
@@ -469,33 +470,35 @@ impl Trainer {
         x: &Batch,
         y: &[i32],
     ) -> Result<(ParamSet, f64)> {
-        let p = self.def.specs.len();
-        let mut inputs = Vec::with_capacity(2 * p + 2);
-        self.push_set(&mut inputs, &state.params)?;
-        self.push_set(&mut inputs, &state.masks)?;
-        inputs.push(self.batch_literal(x)?);
-        inputs.push(lit_i32(y, &i64_dims(&self.def.target_shape))?);
-        let out = self.densegrad_exe.run(&inputs)?;
-        let sparse_idx = self.def.sparse_indices();
-        anyhow::ensure!(
-            out.len() == 2 * sparse_idx.len() + 1,
-            "densegrad arity mismatch: {} vs {}",
-            out.len(),
-            2 * sparse_idx.len() + 1
-        );
-        let mut grads = ParamSet::zeros(&self.def);
-        for (k, &i) in sparse_idx.iter().enumerate() {
-            grads.tensors[i] = crate::runtime::to_vec_f32(&out[k])?;
-        }
-        let loss = crate::runtime::to_vec_f32(out.last().unwrap())?[0] as f64;
-        Ok((grads, loss))
+        let mut sess = self.backend.session(state)?;
+        sess.dense_grads(state, x, y)
+    }
+
+    /// Open a backend session pinned to `state`'s masks. For callers
+    /// that probe many states sharing one mask set (the landscape
+    /// toolkit, the replica sim), holding a session across the loop
+    /// pays the native engine's CSR build once instead of per call —
+    /// the session stays valid as long as the masks' sparsity structure
+    /// does (see [`Session::resync`]).
+    pub fn open_session<'t>(&'t self, state: &TrainState) -> Result<Box<dyn Session + 't>> {
+        self.backend.session(state)
     }
 
     /// Validation metric: accuracy (classify) or bits/char (lm).
     pub fn evaluate(&self, state: &TrainState, cfg: &TrainConfig) -> Result<f64> {
+        let mut sess = self.backend.session(state)?;
+        self.evaluate_with(sess.as_mut(), state, cfg)
+    }
+
+    fn evaluate_with(
+        &self,
+        sess: &mut dyn Session,
+        state: &TrainState,
+        cfg: &TrainConfig,
+    ) -> Result<f64> {
         let (mut sum, mut count) = (0.0f64, 0.0f64);
         for (x, y) in self.eval_batches(cfg) {
-            let (s, c) = self.eval_batch(state, &x, &y)?;
+            let (s, c) = sess.eval_batch(state, &x, &y)?;
             match self.def.task {
                 Task::Classify => {
                     sum += c;
@@ -516,12 +519,25 @@ impl Trainer {
     /// Mean train loss of the state over `n` deterministic batches — the
     /// landscape toolkit's loss oracle.
     pub fn train_loss(&self, state: &TrainState, cfg: &TrainConfig, n: usize) -> Result<f64> {
+        let mut sess = self.backend.session(state)?;
+        self.train_loss_with(sess.as_mut(), state, cfg, n)
+    }
+
+    /// `train_loss` through a caller-held session (same deterministic
+    /// batch stream per call).
+    pub fn train_loss_with(
+        &self,
+        sess: &mut dyn Session,
+        state: &TrainState,
+        cfg: &TrainConfig,
+        n: usize,
+    ) -> Result<f64> {
         let mut rng = Rng::new(cfg.seed ^ 0x10c0);
         let mut iter = self.batch_iter(cfg);
         let mut sum = 0.0;
         for _ in 0..n {
             let (x, y) = self.next_batch_noaug(cfg, &mut iter, &mut rng);
-            let (s, c) = self.eval_batch(state, &x, &y)?;
+            let (s, c) = sess.eval_batch(state, &x, &y)?;
             let per = match self.def.task {
                 Task::Classify => s / y.len() as f64,
                 Task::Lm => s / c,
@@ -529,34 +545,6 @@ impl Trainer {
             sum += per;
         }
         Ok(sum / n as f64)
-    }
-
-    fn eval_batch(&self, state: &TrainState, x: &Batch, y: &[i32]) -> Result<(f64, f64)> {
-        let p = self.def.specs.len();
-        let mut inputs = Vec::with_capacity(2 * p + 2);
-        self.push_set(&mut inputs, &state.params)?;
-        self.push_set(&mut inputs, &state.masks)?;
-        inputs.push(self.batch_literal(x)?);
-        inputs.push(lit_i32(y, &i64_dims(&self.def.target_shape))?);
-        let out = self.eval_exe.run(&inputs)?;
-        let s = crate::runtime::to_vec_f32(&out[0])?[0] as f64;
-        let c = crate::runtime::to_vec_f32(&out[1])?[0] as f64;
-        Ok((s, c))
-    }
-
-    fn push_set(&self, inputs: &mut Vec<xla::Literal>, set: &ParamSet) -> Result<()> {
-        for (t, s) in set.tensors.iter().zip(&self.def.specs) {
-            inputs.push(lit_f32(t, &s.dims_i64())?);
-        }
-        Ok(())
-    }
-
-    fn batch_literal(&self, x: &Batch) -> Result<xla::Literal> {
-        let dims = i64_dims(&self.def.input_shape);
-        match x {
-            Batch::F32(v) => lit_f32(v, &dims),
-            Batch::I32(v) => lit_i32(v, &dims),
-        }
     }
 
     // ----------------------------------------------------------------
@@ -658,10 +646,6 @@ fn chunk_eval(n: usize, b: usize) -> Vec<Vec<usize>> {
     (0..n / b)
         .map(|k| (k * b..(k + 1) * b).collect())
         .collect()
-}
-
-fn i64_dims(shape: &[usize]) -> Vec<i64> {
-    shape.iter().map(|&d| d as i64).collect()
 }
 
 fn build_data(def: &ModelDef, cfg: &TrainConfig) -> Result<TaskData> {

@@ -17,8 +17,9 @@
 use anyhow::Result;
 
 use super::{Trainer, TrainConfig, TrainState};
+use crate::backend::Session;
 use crate::model::ParamSet;
-use crate::topology::{update_masks_scratch, Grow, Method, TopoScratch, UpdateStats};
+use crate::topology::{update_masks_visit, Grow, Method, TopoScratch, UpdateStats};
 use crate::util::Rng;
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -58,6 +59,14 @@ pub fn run_replicated(
     let r = rep.replicas.max(1);
     // All replicas start from the same state (same seed).
     let mut states: Vec<TrainState> = (0..r).map(|_| trainer.init_state(cfg)).collect();
+    // One long-lived backend session per replica (each replica's masks
+    // evolve independently under the injected bugs), kept in sync with
+    // the drop/grow lists below — per-step cost stays ∝ nnz on the
+    // native backend instead of paying a CSR rebuild every step.
+    let mut sessions: Vec<Box<dyn Session + '_>> = states
+        .iter()
+        .map(|s| trainer.open_session(s))
+        .collect::<Result<_>>()?;
     let update = cfg.update_schedule();
     let lr = super::default_lr(&trainer.def, cfg);
     let total = cfg.total_steps();
@@ -95,7 +104,7 @@ pub fn run_replicated(
                     // Compute dense grads per replica.
                     let mut grads: Vec<ParamSet> = Vec::with_capacity(r);
                     for (i, (x, y)) in batches.iter().enumerate() {
-                        let (g, _) = trainer.dense_grads(&states[i], x, y)?;
+                        let (g, _) = sessions[i].dense_grads(&states[i], x, y)?;
                         grads.push(g);
                     }
                     if !rep.bugs.skip_grad_allreduce {
@@ -105,7 +114,8 @@ pub fn run_replicated(
                     }
                     for (i, g) in grads.iter().enumerate() {
                         let st = &mut states[i];
-                        update_masks_scratch(
+                        let sess = &mut sessions[i];
+                        update_masks_visit(
                             &trainer.def,
                             &mut st.params,
                             &mut st.opt,
@@ -114,6 +124,7 @@ pub fn run_replicated(
                             Grow::Gradient(g),
                             &mut scratch,
                             &mut ustats,
+                            |li, dropped, grown| sess.masks_updated(li, dropped, grown),
                         );
                     }
                 }
@@ -128,7 +139,8 @@ pub fn run_replicated(
                         };
                         let mut rng = Rng::new(cfg.seed ^ 0x5E7).split(stream);
                         let st = &mut states[i];
-                        update_masks_scratch(
+                        let sess = &mut sessions[i];
+                        update_masks_visit(
                             &trainer.def,
                             &mut st.params,
                             &mut st.opt,
@@ -137,6 +149,7 @@ pub fn run_replicated(
                             Grow::Random(&mut rng),
                             &mut scratch,
                             &mut ustats,
+                            |li, dropped, grown| sess.masks_updated(li, dropped, grown),
                         );
                     }
                 }
@@ -146,7 +159,7 @@ pub fn run_replicated(
             divergence_n += 1;
         } else {
             for (i, (x, y)) in batches.iter().enumerate() {
-                trainer.sgd_step(&mut states[i], x, y, lr.at(t) as f32)?;
+                sessions[i].train_step(&mut states[i], x, y, lr.at(t) as f32)?;
             }
             // Synchronous data parallelism: average parameters (masks may
             // disagree under the bugs; averaging leaks weights across
@@ -161,6 +174,10 @@ pub fn run_replicated(
             let lead = states[0].clone();
             for s in states.iter_mut().skip(1) {
                 *s = lead.clone();
+            }
+            // Masks were replaced wholesale: rebuild derived views.
+            for (sess, s) in sessions.iter_mut().zip(&states).skip(1) {
+                sess.resync(s);
             }
         }
     }

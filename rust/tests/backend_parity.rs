@@ -1,0 +1,187 @@
+//! Backend contract tests: the native CSR engine end to end, and (when
+//! PJRT artifacts are available) native-vs-pjrt trajectory parity.
+//!
+//! The native half is hermetic — models are built in code via
+//! `backend::native::mlp_def`, data is synthetic — so these run on a
+//! bare CPU with no XLA install and no `make artifacts` (the `--no-pjrt`
+//! CI path). The parity half auto-skips without artifacts.
+
+use std::sync::Arc;
+
+use rigl::backend::native::{mlp_def, NativeBackend};
+use rigl::backend::BackendKind;
+use rigl::topology::Method;
+use rigl::train::{TrainConfig, Trainer};
+
+fn native_trainer(hidden: &[usize], batch: usize, cfg: &TrainConfig) -> Trainer {
+    let def = mlp_def(&cfg.model, 784, hidden, 10, batch);
+    let backend = Arc::new(NativeBackend::new(&def).unwrap());
+    Trainer::from_parts(def, backend, cfg).unwrap()
+}
+
+fn tiny_cfg(method: Method) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny_mlp", method);
+    cfg.sparsity = 0.9;
+    cfg.steps = 200;
+    cfg.delta_t = 40;
+    cfg.augment = false;
+    cfg.data_train = 512;
+    cfg.data_val = 256;
+    cfg
+}
+
+#[test]
+fn native_rigl_trains_end_to_end() {
+    let cfg = tiny_cfg(Method::Rigl);
+    let trainer = native_trainer(&[32], 32, &cfg);
+    assert_eq!(trainer.backend_kind(), BackendKind::Native);
+    let mut state = trainer.init_state(&cfg);
+    let r = trainer.run_from(&cfg, &mut state).unwrap();
+
+    // Finite, decreasing loss.
+    assert!(r.final_train_loss.is_finite());
+    for (_, l) in &r.loss_history {
+        assert!(l.is_finite(), "non-finite loss in history");
+    }
+    let first = r.loss_history.first().unwrap().1;
+    assert!(
+        r.final_train_loss < first,
+        "loss did not decrease: {first} → {}",
+        r.final_train_loss
+    );
+    // Learns something real (chance accuracy is 0.1 on 10 classes).
+    assert!(r.final_metric > 0.3, "accuracy {}", r.final_metric);
+    // Topology actually rewired and overall sparsity held.
+    assert!(r.total_swapped > 0, "no topology updates happened");
+    assert!(
+        (r.final_sparsity - 0.9).abs() < 0.01,
+        "sparsity drifted: {}",
+        r.final_sparsity
+    );
+
+    // params == params·mask must hold exactly after the run.
+    for (i, spec) in trainer.def.specs.iter().enumerate() {
+        if !spec.sparsifiable {
+            continue;
+        }
+        for (p, m) in state.params.tensors[i].iter().zip(&state.masks.tensors[i]) {
+            if *m == 0.0 {
+                assert_eq!(*p, 0.0, "pruned weight resurrected in {}", spec.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn native_nnz_conserved_exactly_across_mask_updates() {
+    let cfg = tiny_cfg(Method::Rigl);
+    let trainer = native_trainer(&[48, 24], 16, &cfg);
+    let mut state = trainer.init_state(&cfg);
+    let before: Vec<usize> = (0..trainer.def.specs.len())
+        .map(|i| state.masks.nnz(i))
+        .collect();
+    let r = trainer.run_from(&cfg, &mut state).unwrap();
+    assert!(r.total_swapped > 0, "test needs at least one mask update");
+    for (i, spec) in trainer.def.specs.iter().enumerate() {
+        // Incremental count must equal a fresh scan AND the initial
+        // cardinality: RigL drops and grows in equal measure.
+        let scan = state.masks.tensors[i]
+            .iter()
+            .filter(|&&v| v != 0.0)
+            .count();
+        assert_eq!(state.masks.nnz(i), scan, "tracked nnz drifted in {}", spec.name);
+        assert_eq!(
+            scan, before[i],
+            "nnz not conserved in {} ({} → {scan})",
+            spec.name, before[i]
+        );
+    }
+}
+
+#[test]
+fn native_set_and_static_methods_run() {
+    for method in [Method::Set, Method::Static, Method::Dense] {
+        let mut cfg = tiny_cfg(method);
+        cfg.steps = 60;
+        cfg.delta_t = 15;
+        let trainer = native_trainer(&[24], 16, &cfg);
+        let r = trainer.run(&cfg).unwrap();
+        assert!(r.final_train_loss.is_finite(), "{method:?}");
+        assert!(r.final_metric > 0.1, "{method:?}: {}", r.final_metric);
+        if method == Method::Set {
+            assert!(r.total_swapped > 0);
+        }
+        if method == Method::Dense {
+            assert_eq!(r.final_sparsity, 0.0);
+        }
+    }
+}
+
+#[test]
+fn native_is_deterministic() {
+    let cfg = tiny_cfg(Method::Rigl);
+    let trainer = native_trainer(&[24], 16, &cfg);
+    let a = trainer.run(&cfg).unwrap();
+    let b = trainer.run(&cfg).unwrap();
+    assert_eq!(a.final_metric, b.final_metric);
+    assert_eq!(a.final_train_loss, b.final_train_loss);
+    assert_eq!(a.total_swapped, b.total_swapped);
+}
+
+/// Native and PJRT execute the same math on the same data: short
+/// trajectories must agree to float-reordering tolerance. Auto-skips
+/// when the AOT artifacts are absent.
+#[cfg(feature = "pjrt")]
+#[test]
+fn native_matches_pjrt_losses() {
+    use rigl::model::load_manifest;
+    use rigl::Runtime;
+
+    let dir = rigl::artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping backend parity: artifacts not built");
+        return;
+    }
+    let manifest = load_manifest(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+
+    let mut cfg = TrainConfig::new("mlp", Method::Static);
+    cfg.sparsity = 0.9;
+    cfg.steps = 40;
+    cfg.augment = false;
+    cfg.data_train = 512;
+    cfg.data_val = 256;
+
+    let pjrt = Trainer::new(&rt, &manifest, &cfg).unwrap();
+    let native = Trainer::native(&manifest, &cfg).unwrap();
+    assert_eq!(pjrt.backend_kind(), BackendKind::Pjrt);
+    assert_eq!(native.backend_kind(), BackendKind::Native);
+
+    let rp = pjrt.run(&cfg).unwrap();
+    let rn = native.run(&cfg).unwrap();
+
+    assert_eq!(rp.loss_history.len(), rn.loss_history.len());
+    for ((tp, lp), (tn, ln)) in rp.loss_history.iter().zip(&rn.loss_history) {
+        assert_eq!(tp, tn);
+        assert!(
+            (lp - ln).abs() < 0.05,
+            "loss diverged at step {tp}: pjrt {lp} vs native {ln}"
+        );
+    }
+    assert!(
+        (rp.final_metric - rn.final_metric).abs() < 0.1,
+        "metric diverged: pjrt {} vs native {}",
+        rp.final_metric,
+        rn.final_metric
+    );
+
+    // RigL end-to-end on both backends: same sparsity invariants even if
+    // float noise flips individual grow choices over time.
+    let mut cfg_r = cfg.clone();
+    cfg_r.method = Method::Rigl;
+    cfg_r.delta_t = 10;
+    let rr_p = pjrt.run(&cfg_r).unwrap();
+    let rr_n = native.run(&cfg_r).unwrap();
+    assert!((rr_p.final_sparsity - rr_n.final_sparsity).abs() < 1e-6);
+    assert!(rr_n.total_swapped > 0);
+}

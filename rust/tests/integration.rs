@@ -2,7 +2,10 @@
 //!
 //! These run short trainings on the MLP track (the fastest artifacts) and
 //! assert the semantic properties every experiment depends on. Skipped
-//! gracefully when `make artifacts` has not run.
+//! gracefully when `make artifacts` has not run, and compiled out
+//! entirely without the `pjrt` feature (the hermetic native-backend
+//! suite lives in `backend_parity.rs`).
+#![cfg(feature = "pjrt")]
 
 use rigl::coordinator::ExpContext;
 use rigl::model::{load_checkpoint, load_manifest, save_checkpoint, Checkpoint, Manifest};
