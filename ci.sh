@@ -8,15 +8,19 @@
 #
 # `./ci.sh --no-pjrt` builds and tests WITHOUT the `pjrt` cargo feature:
 # no xla crate, no XLA install, no artifacts — the native CSR backend's
-# hermetic suite (unit tests + backend_parity.rs + bench_backend) must
-# pass on a bare CPU. Machines without an XLA toolchain should run this
-# path; machines with one should run both.
+# hermetic suite (unit tests + backend_parity.rs + serve_roundtrip.rs +
+# bench_backend/bench_serve) must pass on a bare CPU, and the serve
+# smoke test below must export, serve and answer over loopback TCP.
+# Machines without an XLA toolchain should run this path; machines with
+# one should run both.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 FLAGS=()
+NO_PJRT=0
 if [[ "${1:-}" == "--no-pjrt" ]]; then
   FLAGS=(--no-default-features)
+  NO_PJRT=1
   echo "== no-pjrt mode: building without the xla dependency =="
 fi
 
@@ -25,6 +29,40 @@ cargo build --release "${FLAGS[@]+"${FLAGS[@]}"}"
 
 echo "== cargo test -q =="
 cargo test -q "${FLAGS[@]+"${FLAGS[@]}"}"
+
+# Hermetic serve smoke test (no-pjrt path: no XLA, no artifacts dir —
+# the builtin LeNet-300-100 is exported, served on an ephemeral
+# loopback port, answers one request, and exits on its own via
+# --max-requests). Exercises the shipped binary end to end, not just
+# the library tests.
+if [[ "$NO_PJRT" == 1 ]]; then
+  echo "== serve smoke test (export → serve → one request → clean shutdown) =="
+  BIN=target/release/repro
+  SMOKE=$(mktemp -d)
+  SERVE_PID=""
+  cleanup() {
+    [[ -n "$SERVE_PID" ]] && kill "$SERVE_PID" 2>/dev/null || true
+    rm -rf "$SMOKE"
+  }
+  trap cleanup EXIT
+  "$BIN" export --model mlp --sparsity 0.9 --out "$SMOKE/mlp.srvd"
+  : > "$SMOKE/serve.log"
+  "$BIN" serve --model "$SMOKE/mlp.srvd" --port 0 --workers 2 --max-requests 1 \
+    >> "$SMOKE/serve.log" 2>&1 &
+  SERVE_PID=$!
+  ADDR=""
+  for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's/^serve: listening on \([0-9.:]*\).*/\1/p' "$SMOKE/serve.log")
+    [[ -n "$ADDR" ]] && break
+    kill -0 "$SERVE_PID" 2>/dev/null || { cat "$SMOKE/serve.log"; exit 1; }
+    sleep 0.1
+  done
+  [[ -n "$ADDR" ]] || { echo "server never reported its address"; cat "$SMOKE/serve.log"; exit 1; }
+  "$BIN" serve-bench --addr "$ADDR" --concurrency 1 --requests 1
+  wait "$SERVE_PID"   # --max-requests 1 ⇒ exits 0 after the reply
+  SERVE_PID=""
+  echo "serve smoke OK"
+fi
 
 echo "== cargo fmt --check =="
 cargo fmt --check

@@ -1,0 +1,170 @@
+//! Serving performance → `BENCH_serve.json`: inference latency vs
+//! sparsity (cost ∝ nnz, the paper's motivating claim, measured at the
+//! serving layer) and micro-batched throughput vs batch=1 at the same
+//! worker count.
+//!
+//! Three record families land in `BENCH_serve.json`:
+//!
+//! * `engine/forward/b=1/S=*` — in-process single-row latency through
+//!   the frozen CSR engine ([`util::BenchRecord`] shape). Mean time
+//!   must DECREASE as sparsity increases.
+//! * `engine/steady_state_allocs/S=*` — heap allocations per request on
+//!   a warm engine, counted by the global allocator; any nonzero value
+//!   is a regression and the binary exits 1 (same discipline as
+//!   bench_topology).
+//! * `tcp/*` — end-to-end loopback numbers from the load generator
+//!   (`{requests, wall_s, rps, mean_us, p50_us, p99_us}`):
+//!   `tcp/single/S=*` for per-request latency vs sparsity and
+//!   `tcp/batched-vs-serial/*` for the coalescing win — micro-batched
+//!   throughput (`max_batch` 32) must exceed batch=1 throughput at the
+//!   SAME worker count under concurrent load.
+//!
+//! Hermetic: no artifacts, no PJRT, models are built in code
+//! (`cargo bench --bench bench_serve`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use rigl::backend::native::mlp_def;
+use rigl::serve::{run_load, top_k, InferEngine, ServeConfig, Server, SparseModel, TopKScratch};
+use rigl::sparsity::Distribution;
+use rigl::util::{append_bench_json, bench_to, Rng};
+
+/// Forwarding allocator that counts allocation events (alloc + realloc).
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn model_at(sparsity: f64) -> SparseModel {
+    let def = mlp_def("bench_serve_mlp", 784, &[512, 256], 10, 1);
+    SparseModel::init_random(&def, sparsity, &Distribution::Uniform, 0xBE).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench_serve: frozen-CSR inference latency + micro-batch throughput ==");
+    let sparsities = [0.98f64, 0.9, 0.5, 0.0];
+
+    // ---- engine-only: single-row latency vs sparsity + zero-alloc ----
+    let mut engine_means = Vec::new();
+    for &s in &sparsities {
+        let model = model_at(s);
+        let mut eng = InferEngine::new(&model, 1);
+        let mut scratch = TopKScratch::default();
+        let mut pairs = Vec::new();
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+        let mean = bench_to("serve", &format!("engine/forward/b=1/S={s}"), 300, || {
+            let logits = eng.forward(&model, &x, 1);
+            top_k(logits, 1, &mut scratch, &mut pairs);
+        });
+        engine_means.push((s, mean));
+
+        // Warm from the bench above: further requests must not allocate.
+        let iters = 100u64;
+        let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+        for _ in 0..iters {
+            let logits = eng.forward(&model, &x, 1);
+            top_k(logits, 1, &mut scratch, &mut pairs);
+        }
+        let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+        let per_req = allocs as f64 / iters as f64;
+        println!("engine/steady_state_allocs/S={s}             {per_req:.2} allocs/request");
+        append_bench_json(
+            "serve",
+            &format!(
+                "{{\"name\":\"engine/steady_state_allocs/S={s}\",\"iters\":{iters},\
+                 \"mean_s\":{per_req:.9},\"min_s\":{per_req:.9},\"git_rev\":\"{}\"}}",
+                rigl::util::git_rev()
+            ),
+        )?;
+        if allocs != 0 {
+            eprintln!("REGRESSION: {allocs} heap allocations over {iters} warm requests (S={s})");
+            std::process::exit(1);
+        }
+    }
+    if let (Some(sparse), Some(dense)) = (
+        engine_means.iter().find(|m| m.0 == 0.9),
+        engine_means.iter().find(|m| m.0 == 0.0),
+    ) {
+        println!(
+            "engine latency ratio dense/S=0.9: {:.2}x (cost ∝ nnz ⇒ should approach the \
+             sparsifiable share)",
+            dense.1 / sparse.1
+        );
+    }
+
+    // ---- TCP end to end: single-request latency vs sparsity ----------
+    for &s in &sparsities {
+        let server = Server::start(
+            model_at(s),
+            None,
+            ServeConfig {
+                workers: 1,
+                max_batch: 1,
+                max_wait_us: 0,
+                ..ServeConfig::default()
+            },
+        )?;
+        let stats = run_load(&server.addr().to_string(), 1, 300, 1)?;
+        println!("tcp/single/S={s}: {}", stats.render());
+        append_bench_json("serve", &stats.to_json(&format!("tcp/single/S={s}")))?;
+        server.shutdown();
+    }
+
+    // ---- micro-batching: throughput at fixed worker count ------------
+    let concurrency = 16;
+    let requests = 200;
+    let mut rps = Vec::new();
+    for &(label, max_batch, max_wait_us) in
+        &[("serial/b=1", 1usize, 0u64), ("batched/b=32", 32, 300)]
+    {
+        let server = Server::start(
+            model_at(0.9),
+            None,
+            ServeConfig {
+                workers: 2,
+                max_batch,
+                max_wait_us,
+                ..ServeConfig::default()
+            },
+        )?;
+        let stats = run_load(&server.addr().to_string(), concurrency, requests, 1)?;
+        let (reqs, batches) = server.stats();
+        println!(
+            "tcp/batched-vs-serial/{label}: {} ({reqs} requests in {batches} batches)",
+            stats.render()
+        );
+        append_bench_json(
+            "serve",
+            &stats.to_json(&format!("tcp/batched-vs-serial/{label}/c={concurrency}")),
+        )?;
+        rps.push(stats.rps);
+        server.shutdown();
+    }
+    if rps.len() == 2 {
+        println!(
+            "micro-batch throughput gain at 2 workers, c={concurrency}: {:.2}x",
+            rps[1] / rps[0]
+        );
+    }
+    Ok(())
+}

@@ -47,6 +47,43 @@ pub fn spmm_bias_fwd(
     }
 }
 
+/// Forward `y = x·W + bias` with `W` as a value-carrying CSR: `vals` is
+/// positionally parallel to `topo.col_idx`, so no dense weight tensor
+/// exists at all — the frozen serve artifact format (`serve::artifact`).
+/// Iteration order (batch → input row → structural entry) is identical
+/// to [`spmm_bias_fwd`], so logits are bit-identical to the training
+/// engine's forward on the same weights, and each batch row's
+/// accumulation is independent — batched execution is bit-identical to
+/// batch=1 (the micro-batcher's correctness contract).
+pub fn csr_spmm_bias_fwd(
+    x: &[f32],
+    batch: usize,
+    topo: &CsrTopo,
+    vals: &[f32],
+    bias: &[f32],
+    y: &mut [f32],
+) {
+    let (ind, outd) = (topo.rows, topo.cols);
+    debug_assert_eq!(x.len(), batch * ind);
+    debug_assert_eq!(y.len(), batch * outd);
+    debug_assert_eq!(bias.len(), outd);
+    debug_assert_eq!(vals.len(), topo.nnz());
+    for b in 0..batch {
+        let xrow = &x[b * ind..(b + 1) * ind];
+        let yrow = &mut y[b * outd..(b + 1) * outd];
+        yrow.copy_from_slice(bias);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let (start, end) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
+            for k in start..end {
+                yrow[topo.col_idx[k] as usize] += xv * vals[k];
+            }
+        }
+    }
+}
+
 /// Backward data product: `dx = dy·Wᵀ` with `W` sparse. `dx` is fully
 /// overwritten.
 pub fn spmm_back_dx(dy: &[f32], batch: usize, topo: &CsrTopo, w: &[f32], dx: &mut [f32]) {
@@ -316,6 +353,41 @@ mod tests {
             }
             for (a, e) in y.iter().zip(&want) {
                 assert!((a - e).abs() < 1e-5, "{a} vs {e}");
+            }
+        }
+    }
+
+    /// The value-carrying CSR forward must be bit-identical to the
+    /// structure-only forward over the dense tensor it was gathered
+    /// from, and batched rows must equal batch=1 rows exactly.
+    #[test]
+    fn csr_valued_fwd_matches_dense_backed_fwd_bitwise() {
+        let mut rng = Rng::new(6);
+        for &(b, ind, outd, density) in &[(1, 4, 3, 1.0), (3, 8, 5, 0.4), (4, 6, 6, 0.0)] {
+            let (w, topo) = setup(&mut rng, ind, outd, density);
+            // Positional gather: vals[k] = w[row(k)·outd + col(k)].
+            let mut vals = Vec::with_capacity(topo.nnz());
+            for i in 0..ind {
+                for &c in topo.row(i) {
+                    vals.push(w[i * outd + c as usize]);
+                }
+            }
+            let x: Vec<f32> = (0..b * ind).map(|_| rng.next_f32() - 0.3).collect();
+            let bias: Vec<f32> = (0..outd).map(|_| rng.next_f32()).collect();
+            let mut y_dense = vec![0.0f32; b * outd];
+            spmm_bias_fwd(&x, b, &topo, &w, &bias, &mut y_dense);
+            let mut y_csr = vec![0.0f32; b * outd];
+            csr_spmm_bias_fwd(&x, b, &topo, &vals, &bias, &mut y_csr);
+            for (a, e) in y_csr.iter().zip(&y_dense) {
+                assert_eq!(a.to_bits(), e.to_bits());
+            }
+            // Row independence: batch=1 execution per row, bit-identical.
+            for bi in 0..b {
+                let mut y1 = vec![0.0f32; outd];
+                csr_spmm_bias_fwd(&x[bi * ind..(bi + 1) * ind], 1, &topo, &vals, &bias, &mut y1);
+                for (a, e) in y1.iter().zip(&y_csr[bi * outd..(bi + 1) * outd]) {
+                    assert_eq!(a.to_bits(), e.to_bits());
+                }
             }
         }
     }

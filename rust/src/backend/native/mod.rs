@@ -50,13 +50,69 @@ use crate::train::{Batch, TrainState};
 
 use super::{Backend, BackendKind, Session};
 
-/// One FC layer: weight spec + bias spec indices and shape.
+/// One FC layer of a validated `[fc, bias]` chain: weight/bias spec
+/// indices plus connecting dimensions. Shared by the training engine
+/// below and the serve exporter (`serve::artifact`).
 #[derive(Clone, Copy, Debug)]
-struct FcLayer {
-    w: usize,
-    b: usize,
-    in_dim: usize,
-    out_dim: usize,
+pub struct FcLayer {
+    /// Index of the weight spec in `ModelDef::specs`.
+    pub w: usize,
+    /// Index of the bias spec in `ModelDef::specs`.
+    pub b: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+/// Validate that a model is a rank-2 f32 classifier whose specs form an
+/// `[fc, bias]` chain connecting input → classes, and return the chain.
+/// This is the structural half of [`NativeBackend::new`]'s validation;
+/// the serve exporter uses it directly (frozen inference doesn't care
+/// which optimizer trained the weights).
+pub fn fc_chain(def: &ModelDef) -> Result<Vec<FcLayer>> {
+    ensure!(
+        def.task == Task::Classify && def.input_ty == ElemType::F32
+            && def.input_shape.len() == 2,
+        "native backend: model {:?} is not a rank-2 f32 classifier",
+        def.name
+    );
+    ensure!(
+        def.specs.len() >= 2 && def.specs.len() % 2 == 0,
+        "native backend: model {:?} is not an [fc, bias] stack",
+        def.name
+    );
+    let mut layers = Vec::with_capacity(def.specs.len() / 2);
+    let mut in_dim = def.input_shape[1];
+    for pair in def.specs.chunks(2) {
+        let (w, b) = (&pair[0], &pair[1]);
+        ensure!(
+            w.kind == Kind::Fc && w.shape.len() == 2 && w.shape[0] == in_dim,
+            "native backend: model {:?} spec {:?} breaks the fc chain \
+             (expected fc of shape [{in_dim}, _])",
+            def.name,
+            w.name
+        );
+        ensure!(
+            b.kind == Kind::Bias && b.shape == vec![w.shape[1]],
+            "native backend: model {:?} spec {:?} is not the bias of {:?}",
+            def.name,
+            b.name,
+            w.name
+        );
+        ensure!(
+            w.size() <= u32::MAX as usize,
+            "native backend: layer {:?} exceeds the u32 index space",
+            w.name
+        );
+        let li = layers.len() * 2;
+        layers.push(FcLayer {
+            w: li,
+            b: li + 1,
+            in_dim,
+            out_dim: w.shape[1],
+        });
+        in_dim = w.shape[1];
+    }
+    Ok(layers)
 }
 
 /// The native engine for one validated FC-stack model.
@@ -79,49 +135,7 @@ impl NativeBackend {
             def.name,
             def.optimizer
         );
-        ensure!(
-            def.task == Task::Classify && def.input_ty == ElemType::F32
-                && def.input_shape.len() == 2,
-            "native backend: model {:?} is not a rank-2 f32 classifier",
-            def.name
-        );
-        ensure!(
-            def.specs.len() >= 2 && def.specs.len() % 2 == 0,
-            "native backend: model {:?} is not an [fc, bias] stack",
-            def.name
-        );
-        let mut layers = Vec::with_capacity(def.specs.len() / 2);
-        let mut in_dim = def.input_shape[1];
-        for pair in def.specs.chunks(2) {
-            let (w, b) = (&pair[0], &pair[1]);
-            ensure!(
-                w.kind == Kind::Fc && w.shape.len() == 2 && w.shape[0] == in_dim,
-                "native backend: model {:?} spec {:?} breaks the fc chain \
-                 (expected fc of shape [{in_dim}, _])",
-                def.name,
-                w.name
-            );
-            ensure!(
-                b.kind == Kind::Bias && b.shape == vec![w.shape[1]],
-                "native backend: model {:?} spec {:?} is not the bias of {:?}",
-                def.name,
-                b.name,
-                w.name
-            );
-            ensure!(
-                w.size() <= u32::MAX as usize,
-                "native backend: layer {:?} exceeds the u32 index space",
-                w.name
-            );
-            let li = layers.len() * 2;
-            layers.push(FcLayer {
-                w: li,
-                b: li + 1,
-                in_dim,
-                out_dim: w.shape[1],
-            });
-            in_dim = w.shape[1];
-        }
+        let layers = fc_chain(def)?;
         let momentum = def
             .hyper("momentum")
             .ok_or_else(|| anyhow::anyhow!("model {:?} has no momentum hyper", def.name))?

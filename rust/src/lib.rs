@@ -20,7 +20,9 @@
 //! drives the AOT artifacts through PJRT, while the `native` backend is
 //! a pure-Rust CSR engine whose step cost scales with nnz — build with
 //! `--no-default-features` for a hermetic, XLA-free binary that still
-//! trains the FC tracks end to end.
+//! trains the FC tracks end to end. Trained FC models can be frozen into
+//! value-carrying CSR artifacts and served over TCP with request
+//! micro-batching (`serve` module; `repro export` / `repro serve`).
 //!
 //! The rust binary is self-contained after `make artifacts`: python never
 //! runs on the training path (and under `--backend native`, neither does
@@ -38,6 +40,7 @@ pub mod prune;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod sparsity;
 pub mod topology;
 pub mod train;

@@ -7,6 +7,9 @@
 //!   all-tables [...]             regenerate everything (long!)
 //!   train --model M --method X   one training run with full knobs
 //!   flops --model M [...]        Appendix-H accounting for one config
+//!   export --model M [...]       freeze a model into a .srvd artifact
+//!   serve --model m.srvd [...]   serve it over TCP with micro-batching
+//!   serve-bench [...]            load-generate against a serve endpoint
 //!
 //! Shared flags: --seeds N (default 1), --scale F (step multiplier,
 //! default 1.0), --jobs N (worker threads for cell/seed fan-out,
@@ -22,6 +25,7 @@ use anyhow::{bail, Context, Result};
 
 use rigl::coordinator::{run_experiment, ExpContext, EXPERIMENTS};
 use rigl::schedule::Decay;
+use rigl::serve::{ServeConfig, Server, SparseModel};
 use rigl::sparsity::{achieved_sparsity, layer_sparsities, Distribution};
 use rigl::topology::Method;
 use rigl::train::TrainConfig;
@@ -104,6 +108,9 @@ fn run() -> Result<()> {
         }
         "train" => train_cmd(&args)?,
         "flops" => flops_cmd(&args)?,
+        "export" => export_cmd(&args)?,
+        "serve" => serve_cmd(&args)?,
+        "serve-bench" => serve_bench_cmd(&args)?,
         other => {
             print_usage();
             bail!("unknown subcommand {other:?}");
@@ -216,7 +223,8 @@ fn train_cmd(args: &Args) -> Result<()> {
         cfg.total_steps(),
         kind.label()
     );
-    let r = trainer.run(&cfg)?;
+    let mut state = trainer.init_state(&cfg);
+    let r = trainer.run_from(&cfg, &mut state)?;
     for (t, loss) in &r.loss_history {
         println!("step {t:>6}  loss {loss:.4}");
     }
@@ -232,6 +240,145 @@ fn train_cmd(args: &Args) -> Result<()> {
         r.final_sparsity,
         r.wall_seconds
     );
+    // Save the full training state (params, masks, opt — the set order
+    // `repro export --ckpt` and the resume paths read back).
+    if let Some(out) = args.get("save-ckpt") {
+        let out = PathBuf::from(out);
+        let mut sets = vec![state.params.clone(), state.masks.clone()];
+        sets.extend(state.opt.iter().cloned());
+        rigl::model::save_checkpoint(
+            &out,
+            &rigl::model::Checkpoint {
+                step: state.step as u64,
+                sets,
+            },
+        )?;
+        println!("checkpoint → {} (step {})", out.display(), state.step);
+    }
+    // Freeze the trained weights straight into a serve artifact.
+    if let Some(out) = args.get("export") {
+        let out = PathBuf::from(out);
+        let sm = SparseModel::from_state(&trainer.def, &state.params, &state.masks)?;
+        sm.save(&out)?;
+        println!("exported {} → {} ({})", trainer.def.name, out.display(), describe(&sm));
+    }
+    Ok(())
+}
+
+fn describe(m: &SparseModel) -> String {
+    format!(
+        "{} layers, {} nnz of {} dense, S={:.4}",
+        m.layers.len(),
+        m.nnz(),
+        m.dense_elements(),
+        1.0 - m.nnz() as f64 / m.dense_elements() as f64
+    )
+}
+
+/// Freeze a model into a `.srvd` serve artifact: from a training
+/// checkpoint when `--ckpt` is given, else He-init weights through a
+/// random mask at `--sparsity` (the hermetic path — works with no
+/// artifacts dir via the builtin MLP zoo).
+fn export_cmd(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("mlp");
+    let out = PathBuf::from(args.get("out").unwrap_or("model.srvd"));
+    let manifest = rigl::backend::manifest_for(BackendKind::Native)?;
+    let def = manifest.get(model)?;
+    let sm = match args.get("ckpt") {
+        Some(ckpt) => {
+            let c = rigl::model::load_checkpoint(std::path::Path::new(ckpt))?;
+            SparseModel::from_checkpoint(def, &c)?
+        }
+        None => SparseModel::init_random(
+            def,
+            args.f64("sparsity", 0.9)?,
+            &Distribution::parse(args.get("dist").unwrap_or("uniform"))?,
+            args.usize("seed", 0)? as u64,
+        )?,
+    };
+    sm.save(&out)?;
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!("exported {model} → {} ({}, {bytes} bytes)", out.display(), describe(&sm));
+    Ok(())
+}
+
+/// Serve a frozen artifact over TCP with micro-batching and hot reload.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let path = PathBuf::from(args.get("model").context("serve needs --model <file.srvd>")?);
+    let port = args.usize("port", 0)?;
+    anyhow::ensure!(port <= u16::MAX as usize, "--port {port} is out of range (0-65535)");
+    let cfg = ServeConfig {
+        port: port as u16,
+        workers: args.usize("workers", rigl::pool::default_jobs().min(4))?,
+        max_batch: args.usize("max-batch", 16)?,
+        max_wait_us: args.usize("max-wait-us", 200)? as u64,
+        max_requests: args.usize("max-requests", 0)?,
+        reload_poll_ms: args.usize("reload-poll-ms", 200)? as u64,
+    };
+    // start_watching stamps the artifact before loading it, so an
+    // export racing this startup is caught by the watcher's first poll.
+    let server = Server::start_watching(path, cfg.clone())?;
+    // Scoped so this Arc doesn't pin the initial model in memory for
+    // the server's whole lifetime across hot reloads.
+    let (name, desc) = {
+        let model = server.handle.get();
+        (model.name.clone(), describe(&model))
+    };
+    // stdout may be piped (the CI smoke test captures it), so flush the
+    // address line explicitly rather than relying on line buffering.
+    {
+        use std::io::Write;
+        let mut so = std::io::stdout();
+        writeln!(
+            so,
+            "serve: listening on {} | model {name} ({desc}) | workers={} max_batch={} \
+             max_wait={}µs{}",
+            server.addr(),
+            cfg.workers,
+            cfg.max_batch,
+            cfg.max_wait_us,
+            if cfg.max_requests > 0 {
+                format!(" | exiting after {} requests", cfg.max_requests)
+            } else {
+                String::new()
+            }
+        )?;
+        so.flush()?;
+    }
+    server.wait();
+    Ok(())
+}
+
+/// Load-generate against a serve endpoint (`--addr`), or self-host a
+/// frozen artifact first (`--model`) and bench over loopback.
+fn serve_bench_cmd(args: &Args) -> Result<()> {
+    let concurrency = args.usize("concurrency", 4)?;
+    let requests = args.usize("requests", 100)?;
+    let k = args.usize("k", 1)?;
+    let stats = match (args.get("addr"), args.get("model")) {
+        (Some(addr), _) => rigl::serve::run_load(addr, concurrency, requests, k)?,
+        (None, Some(path)) => {
+            let model = SparseModel::load(std::path::Path::new(path))?;
+            let server = Server::start(
+                model,
+                None,
+                ServeConfig {
+                    workers: args.usize("workers", rigl::pool::default_jobs().min(4))?,
+                    max_batch: args.usize("max-batch", 16)?,
+                    max_wait_us: args.usize("max-wait-us", 200)? as u64,
+                    ..ServeConfig::default()
+                },
+            )?;
+            let addr = server.addr().to_string();
+            let stats = rigl::serve::run_load(&addr, concurrency, requests, k)?;
+            let (reqs, batches) = server.stats();
+            server.shutdown();
+            eprintln!("serve-bench: {reqs} requests fused into {batches} batches");
+            stats
+        }
+        (None, None) => bail!("serve-bench needs --addr host:port or --model file.srvd"),
+    };
+    println!("{}", stats.render());
     Ok(())
 }
 
@@ -278,11 +425,23 @@ fn flops_cmd(args: &Args) -> Result<()> {
 fn print_usage() {
     eprintln!(
         "repro — RigL (ICML 2020) reproduction\n\
-         usage: repro <list|info|table|all-tables|train|flops> [--flags]\n\
+         usage: repro <list|info|table|all-tables|train|flops|export|serve|serve-bench> [--flags]\n\
          \n\
          repro table --id fig2-left [--seeds 3] [--scale 1.0] [--jobs 4] [--out results]\n\
          repro train --model cnn --method rigl --sparsity 0.9 --dist erk\n\
          repro train --model mlp --method rigl --backend native   (no XLA needed)\n\
-         repro flops --model wrn --sparsity 0.95 --dist erk"
+         repro train --model mlp --method rigl --backend native --export mlp.srvd\n\
+         \x20          [--save-ckpt ckpt.bin]   (full state: params, masks, opt)\n\
+         repro flops --model wrn --sparsity 0.95 --dist erk\n\
+         \n\
+         serving (std-only, hermetic — no XLA, no artifacts dir):\n\
+         repro export --model mlp --out mlp.srvd [--ckpt ckpt.bin | --sparsity 0.9 --dist uniform --seed 0]\n\
+         repro serve --model mlp.srvd [--port 0] [--workers 4] [--max-batch 16]\n\
+         \x20          [--max-wait-us 200] [--max-requests 0] [--reload-poll-ms 200]\n\
+         \x20          (port 0 = ephemeral, printed on stdout; the artifact file is\n\
+         \x20           watched and hot-reloaded on change)\n\
+         repro serve-bench --addr 127.0.0.1:PORT [--concurrency 4] [--requests 100] [--k 1]\n\
+         \x20          (--requests is PER CONNECTION: total load = concurrency × requests)\n\
+         repro serve-bench --model mlp.srvd      (self-host over loopback and bench)"
     );
 }

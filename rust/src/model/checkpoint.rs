@@ -25,27 +25,31 @@ pub struct Checkpoint {
     pub sets: Vec<ParamSet>,
 }
 
+/// Crash-safe: the bytes stream into a `.tmp` sibling which is fsynced
+/// and atomically renamed over `path`, so a concurrent or later reader
+/// (Fig-6/Table-3 resume, the serve hot-reload watcher's export
+/// counterpart) can never observe a torn checkpoint.
 pub fn save_checkpoint(path: &Path, ckpt: &Checkpoint) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
-    );
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&ckpt.step.to_le_bytes())?;
-    f.write_all(&(ckpt.sets.len() as u32).to_le_bytes())?;
-    for set in &ckpt.sets {
-        f.write_all(&(set.tensors.len() as u32).to_le_bytes())?;
-        for t in &set.tensors {
-            f.write_all(&(t.len() as u64).to_le_bytes())?;
-            // Safe little-endian serialization without unsafe casts.
-            let mut bytes = Vec::with_capacity(t.len() * 4);
-            for v in t {
-                bytes.extend_from_slice(&v.to_le_bytes());
+    crate::util::atomic_write(path, |f| {
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&ckpt.step.to_le_bytes())?;
+        f.write_all(&(ckpt.sets.len() as u32).to_le_bytes())?;
+        for set in &ckpt.sets {
+            f.write_all(&(set.tensors.len() as u32).to_le_bytes())?;
+            for t in &set.tensors {
+                f.write_all(&(t.len() as u64).to_le_bytes())?;
+                // Safe little-endian serialization without unsafe casts.
+                let mut bytes = Vec::with_capacity(t.len() * 4);
+                for v in t {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                f.write_all(&bytes)?;
             }
-            f.write_all(&bytes)?;
         }
-    }
-    Ok(())
+        Ok(())
+    })
+    .with_context(|| format!("writing {path:?}"))
 }
 
 pub fn load_checkpoint(path: &Path) -> Result<Checkpoint> {
@@ -117,6 +121,49 @@ mod tests {
         assert_eq!(back.sets.len(), 2);
         assert_eq!(back.sets[0].tensors, ckpt.sets[0].tensors);
         assert_eq!(back.sets[1].tensors, ckpt.sets[1].tensors);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Zero-length tensors (e.g. a model with an empty opt-state set)
+    /// must survive the round trip, saving over an existing checkpoint
+    /// must fully replace it, and the atomic-rename discipline must
+    /// leave no `.tmp` sibling behind.
+    #[test]
+    fn roundtrip_zero_length_tensors_and_overwrite() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("rigl_ckpt0_{}.bin", std::process::id()));
+        let a = Checkpoint {
+            step: 1,
+            sets: vec![ParamSet::from_tensors(vec![vec![], vec![1.5], vec![]])],
+        };
+        save_checkpoint(&path, &a).unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back.sets[0].tensors, vec![vec![], vec![1.5], vec![]]);
+
+        // Overwrite with a larger checkpoint: the old bytes are fully
+        // replaced (rename, not in-place truncate-and-write).
+        let b = Checkpoint {
+            step: 2,
+            sets: vec![
+                ParamSet::from_tensors(vec![vec![0.25; 64]]),
+                ParamSet::from_tensors(vec![vec![]]),
+            ],
+        };
+        save_checkpoint(&path, &b).unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back.step, 2);
+        assert_eq!(back.sets.len(), 2);
+        assert_eq!(back.sets[0].tensors[0], vec![0.25; 64]);
+        assert_eq!(back.sets[1].tensors[0], Vec::<f32>::new());
+
+        let stem = format!("rigl_ckpt0_{}", std::process::id());
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+            assert!(
+                !(name.starts_with(&stem) && name.ends_with(".tmp")),
+                "stray temporary {name}"
+            );
+        }
         std::fs::remove_file(&path).ok();
     }
 

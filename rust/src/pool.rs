@@ -69,6 +69,55 @@ where
     tagged.into_iter().map(|(_, r)| r).collect()
 }
 
+/// A set of long-lived named worker threads, all running the same
+/// closure with their worker index. Where [`par_map`] fans a finite work
+/// list out and joins, `WorkerPool` serves open-ended streams: the serve
+/// micro-batcher's workers each loop pulling request batches off a
+/// shared queue until the queue's senders disappear. Dropping the pool
+/// joins every worker (so the closure must terminate once its input
+/// source is closed — blocking forever would hang the drop).
+pub struct WorkerPool {
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers.max(1)` threads named `<name>-<i>`, each running
+    /// `f(i)` to completion.
+    pub fn spawn<F>(workers: usize, name: &str, f: F) -> WorkerPool
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = std::sync::Arc::new(f);
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let f = f.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || f(i))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    /// Block until every worker's closure returns.
+    pub fn join(mut self) {
+        self.join_all();
+    }
+
+    fn join_all(&mut self) {
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.join_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,5 +158,43 @@ mod tests {
     #[test]
     fn default_jobs_is_positive() {
         assert!(default_jobs() >= 1);
+    }
+
+    #[test]
+    fn worker_pool_runs_every_index_and_joins_on_drop() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        use std::sync::Arc;
+        let hits = Arc::new(AtomicU32::new(0));
+        let h = hits.clone();
+        let pool = WorkerPool::spawn(4, "t", move |i| {
+            h.fetch_add(1 << i, Ordering::SeqCst);
+        });
+        drop(pool); // joins
+        assert_eq!(hits.load(Ordering::SeqCst), 0b1111);
+    }
+
+    #[test]
+    fn worker_pool_drains_a_channel_until_senders_close() {
+        use std::sync::mpsc;
+        use std::sync::{Arc, Mutex};
+        let (tx, rx) = mpsc::sync_channel::<u32>(8);
+        let rx = Arc::new(Mutex::new(rx));
+        let sum = Arc::new(std::sync::atomic::AtomicU32::new(0));
+        let (rx2, sum2) = (rx.clone(), sum.clone());
+        let pool = WorkerPool::spawn(3, "drain", move |_| loop {
+            let item = rx2.lock().unwrap().recv();
+            match item {
+                Ok(v) => {
+                    sum2.fetch_add(v, std::sync::atomic::Ordering::SeqCst);
+                }
+                Err(_) => break,
+            }
+        });
+        for v in 1..=100u32 {
+            tx.send(v).unwrap();
+        }
+        drop(tx); // closes the stream; workers exit
+        pool.join();
+        assert_eq!(sum.load(std::sync::atomic::Ordering::SeqCst), 5050);
     }
 }

@@ -1,0 +1,491 @@
+//! The frozen `RIGLSRVD` inference artifact: a value-carrying CSR
+//! snapshot of one FC-stack classifier.
+//!
+//! Unlike training state — dense `ParamSet` tensors with a separate 0/1
+//! mask — the serve artifact stores ONLY the surviving connections:
+//! per layer `indptr` (u32, rows+1), sorted `indices` (u32, nnz) and
+//! `values` (f32, nnz, positionally parallel to `indices`), plus the
+//! dense bias. No dense weight storage, no optimizer state, so file
+//! size and load time are ∝ nnz — at S=0.9 the artifact is ~10× smaller
+//! than a checkpoint of the same model before even counting the absent
+//! opt buffers.
+//!
+//! Format (little-endian, versioned):
+//!
+//! ```text
+//! magic "RIGLSRVD" | u32 version=1 | u32 name_len | name utf-8
+//! u32 n_layers
+//! per layer:
+//!   u64 in_dim | u64 out_dim | u64 nnz
+//!   (in_dim+1) × u32 indptr
+//!   nnz × u32 indices          (strictly increasing within each row)
+//!   nnz × f32 values
+//!   out_dim × f32 bias
+//! ```
+//!
+//! Loading fully validates structure (monotone indptr, in-range sorted
+//! indices, dims chaining layer to layer, no trailing bytes), so a
+//! loaded model is safe to execute without further checks. Saving goes
+//! through `util::atomic_write` (tmp sibling + rename): the serve
+//! hot-reload watcher can never observe a torn artifact.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::backend::native::csr::CsrTopo;
+use crate::backend::native::fc_chain;
+use crate::model::{Checkpoint, ModelDef, ParamSet};
+
+const MAGIC: &[u8; 8] = b"RIGLSRVD";
+const VERSION: u32 = 1;
+/// Sanity bound on the layer count (the deepest model in the zoo has 8
+/// specs; anything bigger than this is a corrupt or hostile file).
+const MAX_LAYERS: usize = 64;
+
+/// One frozen FC layer: sparsity structure + values + bias.
+#[derive(Clone, Debug)]
+pub struct ServeLayer {
+    /// CSR structure, `(in_dim × out_dim)`; shared with the training
+    /// engine's view type so the kernels are reused as-is.
+    pub topo: CsrTopo,
+    /// Weight values, positionally parallel to `topo.col_idx`.
+    pub values: Vec<f32>,
+    /// Dense bias, length `out_dim`.
+    pub bias: Vec<f32>,
+}
+
+/// A frozen FC-stack classifier ready for inference.
+#[derive(Clone, Debug)]
+pub struct SparseModel {
+    pub name: String,
+    pub layers: Vec<ServeLayer>,
+}
+
+impl SparseModel {
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].topo.rows
+    }
+
+    pub fn classes(&self) -> usize {
+        self.layers.last().unwrap().topo.cols
+    }
+
+    /// Total surviving connections across all layers.
+    pub fn nnz(&self) -> usize {
+        self.layers.iter().map(|l| l.topo.nnz()).sum()
+    }
+
+    /// Total dense positions (for the achieved-sparsity readout).
+    pub fn dense_elements(&self) -> usize {
+        self.layers.iter().map(|l| l.topo.rows * l.topo.cols).sum()
+    }
+
+    /// Freeze in-memory training state: gather each FC weight tensor's
+    /// surviving values through its mask into value-carrying CSR.
+    /// Gather order matches the structure-only kernels' iteration order,
+    /// so served logits are bit-identical to the training engine's
+    /// forward on the same weights.
+    pub fn from_state(def: &ModelDef, params: &ParamSet, masks: &ParamSet) -> Result<Self> {
+        let chain = fc_chain(def)?;
+        // Checkpoints carry no model name, so a mismatched --ckpt/--model
+        // pair must be a contextual error, not an index panic.
+        ensure!(
+            params.len() >= def.specs.len() && masks.len() >= def.specs.len(),
+            "model {:?} has {} tensors but the state carries {} params / {} masks \
+             (checkpoint from a different model?)",
+            def.name,
+            def.specs.len(),
+            params.len(),
+            masks.len()
+        );
+        let mut layers = Vec::with_capacity(chain.len());
+        for lay in &chain {
+            let w = &params.tensors[lay.w];
+            let mask = &masks.tensors[lay.w];
+            ensure!(
+                w.len() == lay.in_dim * lay.out_dim
+                    && mask.len() == w.len()
+                    && params.tensors[lay.b].len() == lay.out_dim,
+                "model {:?}: tensor {} has {} values for shape [{}, {}] \
+                 (checkpoint from a different model?)",
+                def.name,
+                lay.w,
+                w.len(),
+                lay.in_dim,
+                lay.out_dim
+            );
+            let topo = CsrTopo::from_mask(mask, lay.in_dim, lay.out_dim);
+            let mut values = Vec::with_capacity(topo.nnz());
+            for i in 0..lay.in_dim {
+                let wrow = i * lay.out_dim;
+                for &c in topo.row(i) {
+                    values.push(w[wrow + c as usize]);
+                }
+            }
+            layers.push(ServeLayer {
+                topo,
+                values,
+                bias: params.tensors[lay.b].clone(),
+            });
+        }
+        Ok(SparseModel {
+            name: def.name.clone(),
+            layers,
+        })
+    }
+
+    /// Freeze a fresh (untrained) model: He-init weights through a
+    /// random mask at the given overall sparsity. This is what `repro
+    /// export` without `--ckpt` ships — the hermetic path the CI smoke
+    /// test and `bench_serve` use, where serving cost ∝ nnz is measured
+    /// on weights whose *structure* is what matters, not their training.
+    pub fn init_random(
+        def: &ModelDef,
+        sparsity: f64,
+        dist: &crate::sparsity::Distribution,
+        seed: u64,
+    ) -> Result<Self> {
+        let rng = crate::util::Rng::new(seed);
+        let mut params = ParamSet::init(def, &mut rng.split(1));
+        let masks = if sparsity > 0.0 {
+            let s = crate::sparsity::layer_sparsities(def, sparsity, dist);
+            crate::sparsity::random_masks(def, &s, &mut rng.split(2))
+        } else {
+            ParamSet::ones(def)
+        };
+        params.mul_assign(&masks);
+        Self::from_state(def, &params, &masks)
+    }
+
+    /// Freeze a saved training checkpoint (sets are ordered params,
+    /// masks, opt… — the opt buffers are simply not read).
+    pub fn from_checkpoint(def: &ModelDef, ckpt: &Checkpoint) -> Result<Self> {
+        ensure!(
+            ckpt.sets.len() >= 2,
+            "checkpoint has {} tensor sets; need params + masks",
+            ckpt.sets.len()
+        );
+        Self::from_state(def, &ckpt.sets[0], &ckpt.sets[1])
+    }
+
+    /// Write the artifact atomically (tmp sibling + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::util::atomic_write(path, |f| {
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&(self.name.len() as u32).to_le_bytes())?;
+            f.write_all(self.name.as_bytes())?;
+            f.write_all(&(self.layers.len() as u32).to_le_bytes())?;
+            for l in &self.layers {
+                f.write_all(&(l.topo.rows as u64).to_le_bytes())?;
+                f.write_all(&(l.topo.cols as u64).to_le_bytes())?;
+                f.write_all(&(l.topo.nnz() as u64).to_le_bytes())?;
+                write_u32s(f, &l.topo.row_ptr)?;
+                write_u32s(f, &l.topo.col_idx)?;
+                write_f32s(f, &l.values)?;
+                write_f32s(f, &l.bias)?;
+            }
+            Ok(())
+        })
+        .with_context(|| format!("writing {path:?}"))
+    }
+
+    /// Load and fully validate an artifact.
+    pub fn load(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+        // Every declared size is checked against the real file length
+        // BEFORE being allocated: a corrupt header must produce an Err
+        // (the hot-reload watcher keeps the old model on Err), never an
+        // OOM abort of the serving process.
+        let file_len = file.metadata()?.len();
+        let mut f = std::io::BufReader::new(file);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)
+            .with_context(|| format!("reading {path:?}"))?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not a RIGLSRVD serve artifact");
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("{path:?}: unsupported serve artifact version {version}");
+        }
+        let name_len = read_u32(&mut f)? as usize;
+        ensure!(name_len <= 4096, "{path:?}: implausible name length {name_len}");
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).with_context(|| format!("{path:?}: model name"))?;
+        let n_layers = read_u32(&mut f)? as usize;
+        ensure!(
+            (1..=MAX_LAYERS).contains(&n_layers),
+            "{path:?}: implausible layer count {n_layers}"
+        );
+        let mut layers: Vec<ServeLayer> = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let rows = read_u64(&mut f)? as usize;
+            let cols = read_u64(&mut f)? as usize;
+            let nnz = read_u64(&mut f)? as usize;
+            ensure!(
+                rows >= 1 && cols >= 1 && rows * cols <= u32::MAX as usize && nnz <= rows * cols,
+                "{path:?}: layer {li} has bad dims [{rows}, {cols}] nnz {nnz}"
+            );
+            // The layer's payload ((rows+1) indptr + nnz indices + nnz
+            // values + cols biases, 4 bytes each) must fit in the file.
+            let payload = (rows as u64 + 1 + 2 * nnz as u64 + cols as u64) * 4;
+            ensure!(
+                payload <= file_len,
+                "{path:?}: layer {li} declares {payload} payload bytes but the file has {file_len}"
+            );
+            if let Some(prev) = layers.last() {
+                ensure!(
+                    prev.topo.cols == rows,
+                    "{path:?}: layer {li} in_dim {rows} breaks the chain (prev out_dim {})",
+                    prev.topo.cols
+                );
+            }
+            let row_ptr = read_u32s(&mut f, rows + 1)?;
+            let col_idx = read_u32s(&mut f, nnz)?;
+            let values = read_f32s(&mut f, nnz)?;
+            let bias = read_f32s(&mut f, cols)?;
+            ensure!(
+                row_ptr[0] == 0 && row_ptr[rows] as usize == nnz,
+                "{path:?}: layer {li} indptr endpoints are wrong"
+            );
+            for r in 0..rows {
+                ensure!(
+                    row_ptr[r] <= row_ptr[r + 1],
+                    "{path:?}: layer {li} indptr not monotone at row {r}"
+                );
+                let row = &col_idx[row_ptr[r] as usize..row_ptr[r + 1] as usize];
+                for (k, &c) in row.iter().enumerate() {
+                    ensure!(
+                        (c as usize) < cols && (k == 0 || row[k - 1] < c),
+                        "{path:?}: layer {li} row {r} indices not sorted in-range"
+                    );
+                }
+            }
+            layers.push(ServeLayer {
+                topo: CsrTopo {
+                    rows,
+                    cols,
+                    row_ptr,
+                    col_idx,
+                },
+                values,
+                bias,
+            });
+        }
+        // The format is self-describing; anything after the last layer
+        // is corruption (e.g. a concatenated or truncated-then-appended
+        // file), not data.
+        let mut probe = [0u8; 1];
+        ensure!(
+            f.read(&mut probe)? == 0,
+            "{path:?}: trailing bytes after the last layer"
+        );
+        Ok(SparseModel { name, layers })
+    }
+}
+
+fn write_u32s(f: &mut impl Write, xs: &[u32]) -> std::io::Result<()> {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for v in xs {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&bytes)
+}
+
+fn write_f32s(f: &mut impl Write, xs: &[f32]) -> std::io::Result<()> {
+    let mut bytes = Vec::with_capacity(xs.len() * 4);
+    for v in xs {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&bytes)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::mlp_def;
+    use crate::sparsity::Distribution;
+    use crate::util::Rng;
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rigl_srvd_{}_{name}", std::process::id()))
+    }
+
+    fn random_model(sparsity: f64, seed: u64) -> (crate::model::ModelDef, SparseModel) {
+        let def = mlp_def("t", 12, &[9, 7], 4, 2);
+        let m = SparseModel::init_random(&def, sparsity, &Distribution::Uniform, seed).unwrap();
+        (def, m)
+    }
+
+    #[test]
+    fn from_state_gathers_exact_values() {
+        let def = mlp_def("t", 3, &[2], 2, 1);
+        let mut params = ParamSet::zeros(&def);
+        let mut masks = ParamSet::ones(&def);
+        // fc1/w is 3×2; keep (0,1), (2,0).
+        params.tensors[0] = vec![0.5, -1.5, 9.0, 9.0, 2.25, 9.0];
+        masks.tensors[0] = vec![0.0, 1.0, 0.0, 0.0, 1.0, 0.0];
+        params.tensors[1] = vec![0.125, -0.25];
+        // fc2/w is the dense output layer (2×2), all kept.
+        params.tensors[2] = vec![1.0, 2.0, 3.0, 4.0];
+        params.tensors[3] = vec![0.0, 1.0];
+        params.mul_assign(&masks);
+        let m = SparseModel::from_state(&def, &params, &masks).unwrap();
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].topo.row_ptr, vec![0, 1, 1, 2]);
+        assert_eq!(m.layers[0].topo.col_idx, vec![1, 0]);
+        assert_eq!(m.layers[0].values, vec![-1.5, 2.25]);
+        assert_eq!(m.layers[0].bias, vec![0.125, -0.25]);
+        assert_eq!(m.layers[1].values, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.in_dim(), 3);
+        assert_eq!(m.classes(), 2);
+        assert_eq!(m.nnz(), 6);
+        assert_eq!(m.dense_elements(), 10);
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_bit_exact() {
+        let (_, m) = random_model(0.7, 3);
+        let path = temp("rt.srvd");
+        m.save(&path).unwrap();
+        let back = SparseModel::load(&path).unwrap();
+        assert_eq!(back.name, m.name);
+        assert_eq!(back.layers.len(), m.layers.len());
+        for (a, b) in back.layers.iter().zip(&m.layers) {
+            assert_eq!(a.topo.rows, b.topo.rows);
+            assert_eq!(a.topo.cols, b.topo.cols);
+            assert_eq!(a.topo.row_ptr, b.topo.row_ptr);
+            assert_eq!(a.topo.col_idx, b.topo.col_idx);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.values), bits(&b.values));
+            assert_eq!(bits(&a.bias), bits(&b.bias));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_corruption() {
+        let (_, m) = random_model(0.5, 4);
+        let path = temp("bad.srvd");
+
+        // Wrong magic.
+        std::fs::write(&path, b"NOTSRVDX rest").unwrap();
+        assert!(SparseModel::load(&path).is_err());
+
+        // Truncation mid-layer.
+        m.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(SparseModel::load(&path).is_err());
+
+        // Trailing garbage.
+        let mut extended = bytes.clone();
+        extended.extend_from_slice(b"xx");
+        std::fs::write(&path, &extended).unwrap();
+        assert!(SparseModel::load(&path).is_err());
+
+        // Out-of-range column index.
+        std::fs::write(&path, &bytes).unwrap();
+        let good = SparseModel::load(&path).unwrap();
+        let mut mangled = good.clone();
+        if mangled.layers[0].topo.nnz() > 0 {
+            let cols = mangled.layers[0].topo.cols as u32;
+            *mangled.layers[0].topo.col_idx.last_mut().unwrap() = cols; // == cols ⇒ out of range
+            mangled.save(&path).unwrap();
+            assert!(SparseModel::load(&path).is_err());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A hostile header declaring gigabyte-scale dims must produce an
+    /// Err (the hot-reload watcher keeps the old model on Err), not an
+    /// out-of-memory abort — sizes are validated against the real file
+    /// length before any allocation.
+    #[test]
+    fn load_rejects_oversized_declared_dims_without_allocating() {
+        let path = temp("huge.srvd");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        bytes.push(b't');
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_layers
+        bytes.extend_from_slice(&1_000_000_000u64.to_le_bytes()); // rows
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // cols
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // nnz
+        std::fs::write(&path, &bytes).unwrap();
+        let err = SparseModel::load(&path).unwrap_err().to_string();
+        assert!(err.contains("payload"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// A state whose tensor count doesn't match the model (a checkpoint
+    /// from a different model) is a contextual error, not a panic.
+    #[test]
+    fn from_state_rejects_mismatched_tensor_counts() {
+        let def = mlp_def("t", 6, &[4], 3, 1);
+        let short = ParamSet::from_tensors(vec![vec![0.0; 24]]);
+        let err = SparseModel::from_state(&def, &short, &short)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("different model"), "{err}");
+    }
+
+    #[test]
+    fn from_checkpoint_reads_params_and_masks_sets() {
+        let def = mlp_def("t", 6, &[4], 3, 1);
+        let rng = Rng::new(9);
+        let mut params = ParamSet::init(&def, &mut rng.split(1));
+        let mut masks = ParamSet::ones(&def);
+        masks.tensors[0][2] = 0.0;
+        params.mul_assign(&masks);
+        let ckpt = Checkpoint {
+            step: 5,
+            sets: vec![params.clone(), masks.clone(), ParamSet::zeros(&def)],
+        };
+        let a = SparseModel::from_checkpoint(&def, &ckpt).unwrap();
+        let b = SparseModel::from_state(&def, &params, &masks).unwrap();
+        assert_eq!(a.layers[0].topo.col_idx, b.layers[0].topo.col_idx);
+        assert_eq!(a.layers[0].values, b.layers[0].values);
+        // Too few sets is an error, not an index panic.
+        let short = Checkpoint {
+            step: 0,
+            sets: vec![ParamSet::zeros(&def)],
+        };
+        assert!(SparseModel::from_checkpoint(&def, &short).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Serve client + load generator.
+//!
+//! [`Client`] is the blocking counterpart of the wire [`protocol`]:
+//! one TCP connection, frame buffers reused across calls. [`run_load`]
+//! is the measurement half of the subsystem — `repro serve-bench` and
+//! `bench_serve` drive it to record throughput and latency percentiles
+//! against a live server (in-process or remote).
+//!
+//! [`protocol`]: super::protocol
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Rng;
+
+use super::protocol as proto;
+
+/// What an INFO request reports about the served model.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelInfo {
+    pub in_dim: usize,
+    pub classes: usize,
+    pub layers: usize,
+    pub nnz: u64,
+}
+
+/// One blocking connection to a serve front end.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(&addr).with_context(|| format!("connecting {addr:?}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone().context("cloning the stream")?);
+        Ok(Client {
+            reader,
+            writer: BufWriter::new(stream),
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+        })
+    }
+
+    fn roundtrip(&mut self) -> Result<()> {
+        proto::write_frame(&mut self.writer, &self.outbuf)?;
+        self.writer.flush()?;
+        if !proto::read_frame(&mut self.reader, &mut self.inbuf)? {
+            bail!("server closed the connection");
+        }
+        Ok(())
+    }
+
+    /// Describe the served model.
+    pub fn info(&mut self) -> Result<ModelInfo> {
+        proto::encode_info(&mut self.outbuf);
+        self.roundtrip()?;
+        match proto::decode_info_response(&self.inbuf)? {
+            proto::Response::Info {
+                in_dim,
+                classes,
+                layers,
+                nnz,
+            } => Ok(ModelInfo {
+                in_dim,
+                classes,
+                layers,
+                nnz,
+            }),
+            proto::Response::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Classify one input; returns `(class, logit)` pairs, best first.
+    pub fn infer(&mut self, input: &[f32], k: usize) -> Result<Vec<(u32, f32)>> {
+        proto::encode_infer(k.min(u16::MAX as usize) as u16, input, &mut self.outbuf);
+        self.roundtrip()?;
+        match proto::decode_topk_response(&self.inbuf)? {
+            proto::Response::TopK(pairs) => Ok(pairs),
+            proto::Response::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+}
+
+/// Aggregate results of one load-generation run.
+#[derive(Clone, Debug)]
+pub struct LoadStats {
+    /// Completed requests (across all connections).
+    pub requests: usize,
+    pub wall_s: f64,
+    /// Completed requests per wall-clock second.
+    pub rps: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+impl LoadStats {
+    /// One `BENCH_serve.json` JSON line (append-only history, like
+    /// `util::BenchRecord` but with throughput/percentile fields).
+    pub fn to_json(&self, name: &str) -> String {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        format!(
+            "{{\"name\":\"{}\",\"requests\":{},\"wall_s\":{:.6},\"rps\":{:.3},\
+             \"mean_us\":{:.3},\"p50_us\":{:.3},\"p99_us\":{:.3},\"git_rev\":\"{}\"}}",
+            esc(name),
+            self.requests,
+            self.wall_s,
+            self.rps,
+            self.mean_us,
+            self.p50_us,
+            self.p99_us,
+            esc(&crate::util::git_rev())
+        )
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{} requests in {:.3}s → {:.1} req/s | latency mean {:.1}µs p50 {:.1}µs p99 {:.1}µs",
+            self.requests, self.wall_s, self.rps, self.mean_us, self.p50_us, self.p99_us
+        )
+    }
+}
+
+/// Drive `concurrency` connections of `requests` random inferences each
+/// (deterministic per-connection input streams) against `addr`, timing
+/// every request. The probe INFO request learns the input width, so
+/// the generator works against any served model.
+pub fn run_load(addr: &str, concurrency: usize, requests: usize, k: usize) -> Result<LoadStats> {
+    let info = Client::connect(addr)?.info()?;
+    let conns: Vec<usize> = (0..concurrency.max(1)).collect();
+    let t0 = Instant::now();
+    let per_conn = crate::pool::par_map(&conns, conns.len(), |_, &ci| -> Result<Vec<f64>> {
+        let mut client = Client::connect(addr)?;
+        let mut rng = Rng::new(0x10AD ^ ci as u64);
+        let mut input = vec![0.0f32; info.in_dim];
+        let mut lat = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            for v in input.iter_mut() {
+                *v = rng.next_f32();
+            }
+            let t = Instant::now();
+            let pairs = client.infer(&input, k)?;
+            lat.push(t.elapsed().as_secs_f64() * 1e6);
+            anyhow::ensure!(!pairs.is_empty(), "empty reply");
+        }
+        Ok(lat)
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut lat: Vec<f64> = Vec::with_capacity(concurrency * requests);
+    for r in per_conn {
+        lat.extend(r?);
+    }
+    if lat.is_empty() {
+        bail!("load run completed zero requests");
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| lat[((q * (lat.len() - 1) as f64).round() as usize).min(lat.len() - 1)];
+    Ok(LoadStats {
+        requests: lat.len(),
+        wall_s,
+        rps: lat.len() as f64 / wall_s.max(1e-12),
+        mean_us: lat.iter().sum::<f64>() / lat.len() as f64,
+        p50_us: pct(0.50),
+        p99_us: pct(0.99),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_stats_json_shape() {
+        let s = LoadStats {
+            requests: 10,
+            wall_s: 0.5,
+            rps: 20.0,
+            mean_us: 100.0,
+            p50_us: 90.0,
+            p99_us: 400.0,
+        };
+        let j = s.to_json("tcp/b=1/S=0.9");
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        for key in ["\"name\"", "\"requests\"", "\"rps\"", "\"p50_us\"", "\"p99_us\"", "\"git_rev\""] {
+            assert!(j.contains(key), "{j}");
+        }
+        assert!(!s.render().is_empty());
+    }
+}

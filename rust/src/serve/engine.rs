@@ -1,0 +1,253 @@
+//! Forward-only inference over a frozen [`SparseModel`].
+//!
+//! An [`InferEngine`] is per-worker reusable scratch — one activation
+//! buffer per layer, sized for the worker's batch capacity — so in
+//! steady state a request performs ZERO heap allocations inside the
+//! engine (same counting-allocator discipline as `TopoScratch`;
+//! `bench_serve` verifies it with the counting global allocator and
+//! exits non-zero on regression). The math is the training engine's own
+//! kernels (`csr_spmm_bias_fwd` + `relu`), value-carrying instead of
+//! dense-backed, so per-request cost is O(nnz·batch) and logits are
+//! bit-identical to the native training forward on the same weights.
+//!
+//! The classification heads ([`top_k`], [`argmax`]) run over one logits
+//! row; `top_k` reuses `util::argselect_k_into`'s allocation-free
+//! selection with ties broken by class index, so results are
+//! deterministic and (for k = classes) a total ranking.
+
+use crate::backend::native::kernels::{csr_spmm_bias_fwd, relu};
+use crate::util::argselect_k_into;
+
+use super::artifact::SparseModel;
+
+/// Per-worker activation scratch for one model shape.
+#[derive(Default)]
+pub struct InferEngine {
+    /// Per-layer `(in_dim, out_dim)` the buffers are currently sized for.
+    dims: Vec<(usize, usize)>,
+    /// Batch capacity of the buffers.
+    cap: usize,
+    /// Post-activation output per layer (`cap × out`); last = logits.
+    acts: Vec<Vec<f32>>,
+}
+
+impl InferEngine {
+    /// Scratch sized for `model` at `max_batch` rows.
+    pub fn new(model: &SparseModel, max_batch: usize) -> Self {
+        let mut e = InferEngine::default();
+        e.ensure(model, max_batch);
+        e
+    }
+
+    /// (Re)size the buffers if the model shape changed (hot reload may
+    /// swap in a differently-shaped artifact) or `batch` exceeds the
+    /// current capacity. No-op — and allocation-free — when the shape
+    /// matches and capacity suffices, which is every steady-state call.
+    pub fn ensure(&mut self, model: &SparseModel, batch: usize) {
+        let same_shape = self.dims.len() == model.layers.len()
+            && self
+                .dims
+                .iter()
+                .zip(&model.layers)
+                .all(|(&(i, o), l)| i == l.topo.rows && o == l.topo.cols);
+        if same_shape && batch <= self.cap {
+            return;
+        }
+        self.cap = batch.max(self.cap).max(1);
+        self.dims = model
+            .layers
+            .iter()
+            .map(|l| (l.topo.rows, l.topo.cols))
+            .collect();
+        self.acts.resize_with(model.layers.len(), Vec::new);
+        for (buf, &(_, out)) in self.acts.iter_mut().zip(&self.dims) {
+            buf.resize(self.cap * out, 0.0);
+        }
+    }
+
+    /// Run `batch` rows of `x` (`batch × in_dim`, row-major) through the
+    /// model; returns the logits slice (`batch × classes`). Panics if
+    /// the input length disagrees with the model — callers (the batcher
+    /// worker) validate request shapes before batching.
+    pub fn forward(&mut self, model: &SparseModel, x: &[f32], batch: usize) -> &[f32] {
+        self.ensure(model, batch);
+        assert_eq!(
+            x.len(),
+            batch * model.in_dim(),
+            "input of {} values is not batch {} × in_dim {}",
+            x.len(),
+            batch,
+            model.in_dim()
+        );
+        let n = model.layers.len();
+        for (l, layer) in model.layers.iter().enumerate() {
+            let out = layer.topo.cols;
+            let (prev, rest) = self.acts.split_at_mut(l);
+            let input: &[f32] = if l == 0 {
+                x
+            } else {
+                &prev[l - 1][..batch * model.layers[l - 1].topo.cols]
+            };
+            let y = &mut rest[0][..batch * out];
+            csr_spmm_bias_fwd(input, batch, &layer.topo, &layer.values, &layer.bias, y);
+            if l + 1 < n {
+                relu(y);
+            }
+        }
+        &self.acts[n - 1][..batch * model.classes()]
+    }
+}
+
+/// Reusable working buffers for [`top_k`] (allocation-free once warm).
+#[derive(Default)]
+pub struct TopKScratch {
+    idx: Vec<u32>,
+    sel: Vec<u32>,
+}
+
+/// The `k` highest logits of one row as `(class, logit)` pairs, best
+/// first, ties broken by class index (matching `jnp.argmax`'s
+/// first-index rule at k=1). `k` is clamped to `[1, classes]`; `out` is
+/// cleared and refilled in place.
+pub fn top_k(logits: &[f32], k: usize, s: &mut TopKScratch, out: &mut Vec<(u32, f32)>) {
+    let k = k.clamp(1, logits.len().max(1));
+    argselect_k_into(logits, k, true, &mut s.idx, &mut s.sel);
+    out.clear();
+    out.extend(s.sel.iter().map(|&i| (i, logits[i as usize])));
+}
+
+/// Index of the highest logit (first index on ties).
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut arg = 0usize;
+    for (j, &l) in logits.iter().enumerate() {
+        if l > logits[arg] {
+            arg = j;
+        }
+    }
+    arg as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{mlp_def, NativeBackend};
+    use crate::backend::{Backend, Session as _};
+    use crate::model::ParamSet;
+    use crate::sparsity::{layer_sparsities, random_masks, Distribution};
+    use crate::train::{Batch, TrainState};
+    use crate::util::Rng;
+
+    /// Served logits must be bit-identical to the native training
+    /// engine's eval forward on the same weights and inputs.
+    #[test]
+    fn forward_matches_training_engine_bitwise() {
+        let batch = 4;
+        let def = mlp_def("t", 10, &[8, 6], 3, batch);
+        let rng = Rng::new(0x5EED);
+        let mut params = ParamSet::init(&def, &mut rng.split(1));
+        let masks = random_masks(
+            &def,
+            &layer_sparsities(&def, 0.6, &Distribution::Uniform),
+            &mut rng.split(2),
+        );
+        params.mul_assign(&masks);
+        let state = TrainState {
+            params: params.clone(),
+            opt: vec![ParamSet::zeros(&def)],
+            adam_t: 0.0,
+            masks: masks.clone(),
+            step: 0,
+        };
+        let x: Vec<f32> = {
+            let mut r = rng.split(3);
+            (0..batch * 10).map(|_| r.next_f32() - 0.5).collect()
+        };
+
+        // Reference logits: the dense-backed structure-only kernels the
+        // training engine's forward is built from, layer by layer.
+        use crate::backend::native::csr::CsrTopo;
+        use crate::backend::native::kernels::{relu, spmm_bias_fwd};
+        let mut h1 = vec![0.0f32; batch * 8];
+        let t1 = CsrTopo::from_mask(&masks.tensors[0], 10, 8);
+        spmm_bias_fwd(&x, batch, &t1, &params.tensors[0], &params.tensors[1], &mut h1);
+        relu(&mut h1);
+        let mut h2 = vec![0.0f32; batch * 6];
+        let t2 = CsrTopo::from_mask(&masks.tensors[2], 8, 6);
+        spmm_bias_fwd(&h1, batch, &t2, &params.tensors[2], &params.tensors[3], &mut h2);
+        relu(&mut h2);
+        let mut want = vec![0.0f32; batch * 3];
+        let t3 = CsrTopo::from_mask(&masks.tensors[4], 6, 3);
+        spmm_bias_fwd(&h2, batch, &t3, &params.tensors[4], &params.tensors[5], &mut want);
+
+        let model = crate::serve::SparseModel::from_state(&def, &params, &masks).unwrap();
+        let mut eng = InferEngine::new(&model, batch);
+        let got = eng.forward(&model, &x, batch);
+        assert_eq!(got.len(), want.len());
+        for (a, e) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), e.to_bits());
+        }
+
+        // And the argmax head agrees with the training engine's eval.
+        let be = NativeBackend::new(&def).unwrap();
+        let mut sess = be.session(&state).unwrap();
+        let y: Vec<i32> = (0..batch)
+            .map(|b| argmax(&got[b * 3..(b + 1) * 3]) as i32)
+            .collect();
+        let (_, correct) = sess.eval_batch(&state, &Batch::F32(x.clone()), &y).unwrap();
+        assert_eq!(correct, batch as f64);
+    }
+
+    #[test]
+    fn batched_rows_equal_single_row_execution() {
+        let def = mlp_def("t", 6, &[5], 3, 1);
+        let model =
+            crate::serve::SparseModel::init_random(&def, 0.5, &Distribution::Uniform, 1).unwrap();
+        let mut r = Rng::new(2);
+        let batch = 7;
+        let x: Vec<f32> = (0..batch * 6).map(|_| r.next_f32() - 0.5).collect();
+        let mut eng = InferEngine::new(&model, batch);
+        let all: Vec<f32> = eng.forward(&model, &x, batch).to_vec();
+        let mut eng1 = InferEngine::new(&model, 1);
+        for b in 0..batch {
+            let one = eng1.forward(&model, &x[b * 6..(b + 1) * 6], 1);
+            for (a, e) in one.iter().zip(&all[b * 3..(b + 1) * 3]) {
+                assert_eq!(a.to_bits(), e.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn ensure_tracks_shape_changes_and_capacity() {
+        let def_a = mlp_def("a", 6, &[5], 3, 1);
+        let def_b = mlp_def("b", 4, &[8, 8], 2, 1);
+        let a = crate::serve::SparseModel::init_random(&def_a, 0.3, &Distribution::Uniform, 1)
+            .unwrap();
+        let b = crate::serve::SparseModel::init_random(&def_b, 0.3, &Distribution::Uniform, 1)
+            .unwrap();
+        let mut eng = InferEngine::new(&a, 2);
+        let mut r = Rng::new(5);
+        let xa: Vec<f32> = (0..2 * 6).map(|_| r.next_f32()).collect();
+        assert_eq!(eng.forward(&a, &xa, 2).len(), 2 * 3);
+        // Hot-swap to a different shape: scratch follows.
+        let xb: Vec<f32> = (0..4).map(|_| r.next_f32()).collect();
+        assert_eq!(eng.forward(&b, &xb, 1).len(), 2);
+        // Batch beyond capacity grows, then stays.
+        let xb8: Vec<f32> = (0..8 * 4).map(|_| r.next_f32()).collect();
+        assert_eq!(eng.forward(&b, &xb8, 8).len(), 8 * 2);
+    }
+
+    #[test]
+    fn top_k_orders_and_breaks_ties_by_index() {
+        let logits = [1.0f32, 5.0, 5.0, -2.0, 3.0];
+        let mut s = TopKScratch::default();
+        let mut out = Vec::new();
+        top_k(&logits, 3, &mut s, &mut out);
+        assert_eq!(out, vec![(1, 5.0), (2, 5.0), (4, 3.0)]);
+        // k clamps to the row length; k=0 means top-1.
+        top_k(&logits, 99, &mut s, &mut out);
+        assert_eq!(out.len(), 5);
+        top_k(&logits, 0, &mut s, &mut out);
+        assert_eq!(out, vec![(1, 5.0)]);
+        assert_eq!(argmax(&logits), 1);
+    }
+}

@@ -1,0 +1,53 @@
+//! Sparse inference serving: frozen CSR artifacts, a micro-batching
+//! engine, and a std-only TCP front end.
+//!
+//! The paper motivates sparse networks by "space or inference time
+//! restrictions"; this subsystem is where that claim becomes measurable
+//! end to end: a trained (or freshly initialized) FC model is frozen
+//! into a value-carrying CSR artifact whose storage AND serving cost are
+//! both ∝ nnz, then served over loopback/remote TCP with request
+//! micro-batching. Everything is std-only and works under
+//! `--no-default-features` — no XLA, no artifacts directory, no new
+//! crates.
+//!
+//! Four layers, bottom up:
+//!
+//! * [`artifact`] — the `RIGLSRVD` frozen [`SparseModel`] format:
+//!   per-layer `indptr`/`indices`/`values` + bias, exported from a
+//!   training [`Checkpoint`](crate::model::Checkpoint) + manifest (or
+//!   straight from in-memory params/masks) via `repro export`. No dense
+//!   weight storage, no optimizer state; writes are atomic
+//!   (tmp + rename) so the hot-reload watcher can never see a torn
+//!   file.
+//! * [`engine`] — a forward-only inference path over the frozen CSR,
+//!   reusing the native training kernels
+//!   (`backend::native::kernels::{csr_spmm_bias_fwd, relu}`) with
+//!   per-worker reusable scratch: zero heap allocations per request in
+//!   steady state (the same counting-allocator discipline as
+//!   `TopoScratch`; checked by `bench_serve`), plus argmax/top-k heads
+//!   built on `util::argselect_k_into`.
+//! * [`batcher`] — a bounded MPSC micro-batching queue: concurrent
+//!   requests coalesce into batches up to `max_batch` / `max_wait`,
+//!   fanned over a [`pool::WorkerPool`](crate::pool::WorkerPool).
+//!   Because every kernel's batch loop is outermost and rows never
+//!   interact, batched outputs are bit-identical to batch=1 execution
+//!   (property-tested in `tests/serve_roundtrip.rs`).
+//! * [`server`] — a thread-per-connection TCP front end speaking the
+//!   length-prefixed binary [`protocol`], with hot model reload via an
+//!   atomic `Arc<SparseModel>` swap when the artifact file changes
+//!   (`repro serve`), and [`client`] — the matching client + load
+//!   generator (`repro serve-bench`, `bench_serve` →
+//!   `BENCH_serve.json`).
+
+pub mod artifact;
+pub mod batcher;
+pub mod client;
+pub mod engine;
+pub mod protocol;
+pub mod server;
+
+pub use artifact::{ServeLayer, SparseModel};
+pub use batcher::{Batcher, BatcherConfig};
+pub use client::{run_load, Client, LoadStats};
+pub use engine::{top_k, InferEngine, TopKScratch};
+pub use server::{ModelHandle, ServeConfig, Server};

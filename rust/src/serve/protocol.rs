@@ -1,0 +1,321 @@
+//! The length-prefixed binary wire protocol between serve clients and
+//! the TCP front end.
+//!
+//! Every message is one frame: `u32 LE body length | body`. Bodies are
+//! capped at [`MAX_FRAME`] (a 16 MB input is three orders of magnitude
+//! past any model in the zoo — reject early rather than let a corrupt
+//! length allocate unbounded memory). Requests open with a one-byte
+//! opcode:
+//!
+//! ```text
+//! INFER (0x01): u8 op | u16 k | u32 n | n × f32 input
+//! INFO  (0x02): u8 op
+//! ```
+//!
+//! Responses open with a one-byte status:
+//!
+//! ```text
+//! OK+topk: u8 0 | u32 k | k × (u32 class, f32 logit)   — best first
+//! OK+info: u8 0 | u32 in_dim | u32 classes | u32 layers | u64 nnz
+//! ERROR:   u8 1 | u32 len | len utf-8 message
+//! ```
+//!
+//! A protocol error (bad opcode, wrong input length) is answered with
+//! an ERROR frame and the connection stays usable — clients shouldn't
+//! have to reconnect because one request was malformed.
+
+use anyhow::{bail, ensure, Result};
+
+/// Largest accepted frame body.
+pub const MAX_FRAME: usize = 16 << 20;
+
+pub const OP_INFER: u8 = 0x01;
+pub const OP_INFO: u8 = 0x02;
+
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_ERR: u8 = 1;
+
+/// A decoded client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Classify one input vector; reply with the `k` best classes.
+    Infer { k: usize, input: Vec<f32> },
+    /// Describe the currently served model.
+    Info,
+}
+
+/// A decoded server response.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// `(class, logit)` pairs, best first.
+    TopK(Vec<(u32, f32)>),
+    Info {
+        in_dim: usize,
+        classes: usize,
+        layers: usize,
+        nnz: u64,
+    },
+    Error(String),
+}
+
+/// Write one frame (length prefix + body). The caller flushes.
+pub fn write_frame(w: &mut impl std::io::Write, body: &[u8]) -> std::io::Result<()> {
+    debug_assert!(body.len() <= MAX_FRAME);
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)
+}
+
+/// Read one frame body into `buf` (reused across calls). Returns
+/// `Ok(false)` on clean EOF at a frame boundary — the peer hung up —
+/// and errors on truncation mid-frame or an oversized length prefix.
+pub fn read_frame(r: &mut impl std::io::Read, buf: &mut Vec<u8>) -> Result<bool> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(false),
+            Ok(0) => bail!("connection closed mid-frame-header"),
+            Ok(n) => got += n,
+            // Retry on signal interruption, like read_exact does for
+            // the body below — a stray SIGCHLD must not drop a healthy
+            // connection.
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds the {MAX_FRAME} cap");
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf)?;
+    Ok(true)
+}
+
+/// Encode an INFER request body into `buf` (cleared first).
+pub fn encode_infer(k: u16, input: &[f32], buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.push(OP_INFER);
+    buf.extend_from_slice(&k.to_le_bytes());
+    buf.extend_from_slice(&(input.len() as u32).to_le_bytes());
+    for v in input {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode an INFO request body into `buf` (cleared first).
+pub fn encode_info(buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.push(OP_INFO);
+}
+
+/// Decode a request body.
+pub fn decode_request(body: &[u8]) -> Result<Request> {
+    ensure!(!body.is_empty(), "empty request body");
+    match body[0] {
+        OP_INFO => {
+            ensure!(body.len() == 1, "INFO request carries a payload");
+            Ok(Request::Info)
+        }
+        OP_INFER => {
+            ensure!(body.len() >= 7, "truncated INFER header");
+            let k = u16::from_le_bytes([body[1], body[2]]) as usize;
+            let n = u32::from_le_bytes([body[3], body[4], body[5], body[6]]) as usize;
+            ensure!(
+                body.len() == 7 + n * 4,
+                "INFER declares {n} values but carries {} payload bytes",
+                body.len() - 7
+            );
+            let input = body[7..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Request::Infer { k, input })
+        }
+        op => bail!("unknown opcode {op:#04x}"),
+    }
+}
+
+/// Encode an OK+topk response body into `buf` (cleared first).
+pub fn encode_topk_response(pairs: &[(u32, f32)], buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.push(STATUS_OK);
+    buf.extend_from_slice(&(pairs.len() as u32).to_le_bytes());
+    for (c, l) in pairs {
+        buf.extend_from_slice(&c.to_le_bytes());
+        buf.extend_from_slice(&l.to_le_bytes());
+    }
+}
+
+/// Encode an OK+info response body into `buf` (cleared first).
+pub fn encode_info_response(
+    in_dim: usize,
+    classes: usize,
+    layers: usize,
+    nnz: u64,
+    buf: &mut Vec<u8>,
+) {
+    buf.clear();
+    buf.push(STATUS_OK);
+    buf.extend_from_slice(&(in_dim as u32).to_le_bytes());
+    buf.extend_from_slice(&(classes as u32).to_le_bytes());
+    buf.extend_from_slice(&(layers as u32).to_le_bytes());
+    buf.extend_from_slice(&nnz.to_le_bytes());
+}
+
+/// Encode an ERROR response body into `buf` (cleared first).
+pub fn encode_error_response(msg: &str, buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.push(STATUS_ERR);
+    buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    buf.extend_from_slice(msg.as_bytes());
+}
+
+/// Decode a topk response body. The two OK forms are not
+/// self-describing (a k=2 topk body and an info body are both 21
+/// bytes), so the caller states which form its request implies — topk
+/// for INFER, info for INFO.
+pub fn decode_topk_response(body: &[u8]) -> Result<Response> {
+    match split_status(body)? {
+        Ok(rest) => {
+            ensure!(rest.len() >= 4, "truncated topk response");
+            let k = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
+            ensure!(
+                rest.len() == 4 + k * 8,
+                "topk declares {k} pairs but carries {} bytes",
+                rest.len() - 4
+            );
+            let pairs = rest[4..]
+                .chunks_exact(8)
+                .map(|c| {
+                    (
+                        u32::from_le_bytes([c[0], c[1], c[2], c[3]]),
+                        f32::from_le_bytes([c[4], c[5], c[6], c[7]]),
+                    )
+                })
+                .collect();
+            Ok(Response::TopK(pairs))
+        }
+        Err(msg) => Ok(Response::Error(msg)),
+    }
+}
+
+/// Decode an info response body.
+pub fn decode_info_response(body: &[u8]) -> Result<Response> {
+    match split_status(body)? {
+        Ok(rest) => {
+            ensure!(rest.len() == 20, "info response of {} bytes", rest.len());
+            Ok(Response::Info {
+                in_dim: u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize,
+                classes: u32::from_le_bytes([rest[4], rest[5], rest[6], rest[7]]) as usize,
+                layers: u32::from_le_bytes([rest[8], rest[9], rest[10], rest[11]]) as usize,
+                nnz: u64::from_le_bytes([
+                    rest[12], rest[13], rest[14], rest[15], rest[16], rest[17], rest[18],
+                    rest[19],
+                ]),
+            })
+        }
+        Err(msg) => Ok(Response::Error(msg)),
+    }
+}
+
+/// Split a response body into `Ok(payload)` / `Err(error message)`.
+fn split_status(body: &[u8]) -> Result<std::result::Result<&[u8], String>> {
+    ensure!(!body.is_empty(), "empty response body");
+    match body[0] {
+        STATUS_OK => Ok(Ok(&body[1..])),
+        STATUS_ERR => {
+            let rest = &body[1..];
+            ensure!(rest.len() >= 4, "truncated error response");
+            let n = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
+            ensure!(rest.len() == 4 + n, "error length mismatch");
+            Ok(Err(String::from_utf8_lossy(&rest[4..]).into_owned()))
+        }
+        s => bail!("unknown response status {s:#04x}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_request_roundtrip() {
+        let input = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        let mut buf = Vec::new();
+        encode_infer(3, &input, &mut buf);
+        match decode_request(&buf).unwrap() {
+            Request::Infer { k, input: got } => {
+                assert_eq!(k, 3);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got), bits(&input));
+            }
+            other => panic!("{other:?}"),
+        }
+        encode_info(&mut buf);
+        assert_eq!(decode_request(&buf).unwrap(), Request::Info);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let mut buf = Vec::new();
+        encode_topk_response(&[(7, 0.5), (0, -1.5)], &mut buf);
+        assert_eq!(
+            decode_topk_response(&buf).unwrap(),
+            Response::TopK(vec![(7, 0.5), (0, -1.5)])
+        );
+        encode_info_response(784, 10, 3, 26_6200, &mut buf);
+        assert_eq!(
+            decode_info_response(&buf).unwrap(),
+            Response::Info {
+                in_dim: 784,
+                classes: 10,
+                layers: 3,
+                nnz: 26_6200
+            }
+        );
+        encode_error_response("bad input", &mut buf);
+        assert_eq!(
+            decode_topk_response(&buf).unwrap(),
+            Response::Error("bad input".into())
+        );
+        assert_eq!(
+            decode_info_response(&buf).unwrap(),
+            Response::Error("bad input".into())
+        );
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(&[0x7f]).is_err());
+        assert!(decode_request(&[OP_INFER, 0, 0]).is_err());
+        // Declared 2 floats, carries 1.
+        let mut buf = Vec::new();
+        encode_infer(1, &[1.0], &mut buf);
+        buf[3] = 2;
+        assert!(decode_request(&buf).is_err());
+        assert!(decode_topk_response(&[9]).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_eof() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        let mut r = std::io::Cursor::new(wire);
+        let mut buf = Vec::new();
+        assert!(read_frame(&mut r, &mut buf).unwrap());
+        assert_eq!(buf, b"hello");
+        assert!(read_frame(&mut r, &mut buf).unwrap());
+        assert_eq!(buf, b"");
+        assert!(!read_frame(&mut r, &mut buf).unwrap()); // clean EOF
+
+        // Truncated header and oversized length both error.
+        let mut r = std::io::Cursor::new(vec![1u8, 0]);
+        assert!(read_frame(&mut r, &mut buf).is_err());
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        let mut r = std::io::Cursor::new(huge);
+        assert!(read_frame(&mut r, &mut buf).is_err());
+    }
+}

@@ -1,0 +1,400 @@
+//! The TCP front end: thread-per-connection framing, the shared model
+//! handle, and the hot-reload watcher.
+//!
+//! A [`Server`] owns one loopback-bound `TcpListener` (port 0 = let the
+//! OS pick an ephemeral port; [`Server::addr`] reports the choice — the
+//! CI smoke test and in-process benches rely on it), a [`Batcher`], and
+//! optionally a watcher thread that polls the artifact file and swaps a
+//! freshly loaded model into the [`ModelHandle`] when it changes.
+//! Because exports go through `util::atomic_write`, the watcher can
+//! never load a torn file — it sees the old artifact or the new one.
+//!
+//! Connections get one thread each (requests on one connection are
+//! served in order; throughput scaling comes from many connections
+//! feeding the shared micro-batcher, not from pipelining within one).
+//! `max_requests > 0` turns the server into a self-terminating smoke
+//! target: after that many INFER replies the accept loop stops and
+//! [`Server::wait`] returns.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::artifact::SparseModel;
+use super::batcher::{Batcher, BatcherConfig};
+use super::protocol as proto;
+
+/// The currently served model, swappable atomically under a reader
+/// lock: request paths clone the inner `Arc` (nanoseconds) and execute
+/// against an immutable snapshot, so a hot reload never stalls or tears
+/// an in-flight batch.
+#[derive(Clone)]
+pub struct ModelHandle {
+    inner: Arc<RwLock<Arc<SparseModel>>>,
+}
+
+impl ModelHandle {
+    pub fn new(model: SparseModel) -> Self {
+        ModelHandle {
+            inner: Arc::new(RwLock::new(Arc::new(model))),
+        }
+    }
+
+    /// Snapshot the current model.
+    pub fn get(&self) -> Arc<SparseModel> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Atomically replace the served model (hot reload).
+    pub fn swap(&self, model: SparseModel) {
+        *self.inner.write().unwrap() = Arc::new(model);
+    }
+}
+
+/// Server knobs (`repro serve` flags map onto this).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// TCP port; 0 picks an ephemeral port.
+    pub port: u16,
+    /// Micro-batcher worker threads.
+    pub workers: usize,
+    /// Largest fused batch.
+    pub max_batch: usize,
+    /// Coalescing window in microseconds.
+    pub max_wait_us: u64,
+    /// Stop after this many INFER replies (0 = serve forever).
+    pub max_requests: usize,
+    /// Artifact-file poll cadence for hot reload, in milliseconds.
+    pub reload_poll_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            port: 0,
+            workers: crate::pool::default_jobs().min(4),
+            max_batch: 16,
+            max_wait_us: 200,
+            max_requests: 0,
+            reload_poll_ms: 200,
+        }
+    }
+}
+
+/// A running serve instance.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    watcher: Option<std::thread::JoinHandle<()>>,
+    /// Exposed so tests and embedding callers can hot-swap directly.
+    pub handle: ModelHandle,
+    batcher: Arc<Batcher>,
+}
+
+impl Server {
+    /// Serve the artifact at `path` with hot reload, race-free: the
+    /// file is stamped BEFORE it is loaded, so an export landing while
+    /// we load is seen as a change by the watcher's first poll rather
+    /// than silently leaving a stale model in service. This is what
+    /// `repro serve` uses; [`Server::start`] is for models the caller
+    /// already holds in memory.
+    pub fn start_watching(path: PathBuf, cfg: ServeConfig) -> Result<Server> {
+        let baseline = file_stamp(&path);
+        let model = SparseModel::load(&path)?;
+        Self::start_inner(model, Some((path, baseline)), cfg)
+    }
+
+    /// Bind, spawn the accept loop (+ watcher when `watch_path` is
+    /// given) and return immediately. The watcher baseline is stamped
+    /// here — if the model was loaded from `watch_path` some time
+    /// before this call, prefer [`Server::start_watching`], which
+    /// closes the load-vs-export race.
+    pub fn start(
+        model: SparseModel,
+        watch_path: Option<PathBuf>,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let watch = watch_path.map(|p| {
+            let stamp = file_stamp(&p);
+            (p, stamp)
+        });
+        Self::start_inner(model, watch, cfg)
+    }
+
+    fn start_inner(
+        model: SparseModel,
+        watch: Option<(PathBuf, FileStamp)>,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", cfg.port))
+            .with_context(|| format!("binding 127.0.0.1:{}", cfg.port))?;
+        let addr = listener.local_addr()?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener non-blocking")?;
+        let handle = ModelHandle::new(model);
+        let batcher = Arc::new(Batcher::new(
+            handle.clone(),
+            BatcherConfig {
+                workers: cfg.workers,
+                max_batch: cfg.max_batch,
+                max_wait: Duration::from_micros(cfg.max_wait_us),
+                queue_depth: (cfg.workers * cfg.max_batch * 4).max(64),
+            },
+        ));
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicUsize::new(0));
+
+        let accept = {
+            let (stop, served, handle, batcher) =
+                (stop.clone(), served.clone(), handle.clone(), batcher.clone());
+            let max_requests = cfg.max_requests;
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || {
+                    accept_loop(listener, stop, served, handle, batcher, max_requests)
+                })
+                .context("spawning the accept thread")?
+        };
+
+        let watcher = match watch {
+            Some((path, baseline)) => Some({
+                let (stop, handle) = (stop.clone(), handle.clone());
+                let poll = Duration::from_millis(cfg.reload_poll_ms.max(10));
+                std::thread::Builder::new()
+                    .name("serve-reload".into())
+                    .spawn(move || watch_loop(path, baseline, poll, stop, handle))
+                    .context("spawning the reload watcher")?
+            }),
+            None => None,
+        };
+
+        Ok(Server {
+            addr,
+            stop,
+            accept: Some(accept),
+            watcher,
+            handle,
+            batcher,
+        })
+    }
+
+    /// The bound address (real port even when configured with 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// `(requests, batches)` served so far by the micro-batcher.
+    pub fn stats(&self) -> (u64, u64) {
+        self.batcher.stats()
+    }
+
+    /// Block until the accept loop ends (`max_requests` reached or
+    /// [`Server::shutdown`] from another thread), then stop the watcher.
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // `drop(self)` finishes the teardown (watcher + batcher).
+    }
+
+    /// Ask the server to stop, then wait for teardown.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wait();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.watcher.take() {
+            let _ = h.join();
+        }
+        // Connection threads are detached: they hold their own
+        // `Arc<Batcher>` clones and exit when their peer hangs up.
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicUsize>,
+    handle: ModelHandle,
+    batcher: Arc<Batcher>,
+    max_requests: usize,
+) {
+    // Non-blocking accept + exponential backoff: ~1 ms reaction while
+    // traffic flows, decaying to 25 ms wakeups when idle, so a
+    // long-running idle server doesn't burn 1000 wakeups/s while the
+    // stop flag still gets checked every ≤ 25 ms.
+    let (idle_min, idle_max) = (Duration::from_millis(1), Duration::from_millis(25));
+    let mut idle = idle_min;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                idle = idle_min;
+                let _ = stream.set_nodelay(true);
+                let (stop, served, handle, batcher) =
+                    (stop.clone(), served.clone(), handle.clone(), batcher.clone());
+                let spawned = std::thread::Builder::new().name("serve-conn".into()).spawn(
+                    move || {
+                        if let Err(e) =
+                            handle_conn(stream, &handle, &batcher, &served, &stop, max_requests)
+                        {
+                            eprintln!("serve: connection error: {e:#}");
+                        }
+                    },
+                );
+                if let Err(e) = spawned {
+                    eprintln!("serve: could not spawn connection thread: {e}");
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(idle);
+                idle = (idle * 2).min(idle_max);
+            }
+            Err(e) => {
+                eprintln!("serve: accept error: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Serve one connection until the peer hangs up (or the request budget
+/// trips). Framing errors close the connection; protocol-level errors
+/// (bad opcode, wrong input size) are answered and the connection
+/// stays open.
+fn handle_conn(
+    stream: TcpStream,
+    handle: &ModelHandle,
+    batcher: &Batcher,
+    served: &AtomicUsize,
+    stop: &AtomicBool,
+    max_requests: usize,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone().context("cloning the stream")?);
+    let mut writer = BufWriter::new(stream);
+    let mut inbuf = Vec::new();
+    let mut outbuf = Vec::new();
+    while proto::read_frame(&mut reader, &mut inbuf)? {
+        let mut infer_done = false;
+        match proto::decode_request(&inbuf) {
+            Ok(proto::Request::Info) => {
+                let m = handle.get();
+                proto::encode_info_response(
+                    m.in_dim(),
+                    m.classes(),
+                    m.layers.len(),
+                    m.nnz() as u64,
+                    &mut outbuf,
+                );
+            }
+            Ok(proto::Request::Infer { k, input }) => {
+                match batcher.submit(input, k).recv() {
+                    Ok(Ok(pairs)) => proto::encode_topk_response(&pairs, &mut outbuf),
+                    Ok(Err(msg)) => proto::encode_error_response(&msg, &mut outbuf),
+                    Err(_) => proto::encode_error_response("batcher shut down", &mut outbuf),
+                }
+                infer_done = true;
+            }
+            Err(e) => proto::encode_error_response(&format!("{e:#}"), &mut outbuf),
+        }
+        proto::write_frame(&mut writer, &outbuf)?;
+        writer.flush()?;
+        if infer_done && max_requests > 0 {
+            // Count AFTER the reply is flushed, so the budget-tripping
+            // client always receives its answer before shutdown.
+            let n = served.fetch_add(1, Ordering::SeqCst) + 1;
+            if n >= max_requests {
+                stop.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `(mtime, size)` fingerprint used to detect artifact replacement.
+type FileStamp = Option<(Option<std::time::SystemTime>, u64)>;
+
+fn file_stamp(p: &std::path::Path) -> FileStamp {
+    std::fs::metadata(p)
+        .ok()
+        .map(|m| (m.modified().ok(), m.len()))
+}
+
+/// Poll the artifact file; on any (mtime, size) change, load and swap.
+/// Load failures are logged and the old model keeps serving — with
+/// atomic exports they indicate a genuinely bad artifact, not a race.
+fn watch_loop(
+    path: PathBuf,
+    baseline: FileStamp,
+    poll: Duration,
+    stop: Arc<AtomicBool>,
+    handle: ModelHandle,
+) {
+    let mut last = baseline;
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(poll);
+        let now = file_stamp(&path);
+        if now == last || now.is_none() {
+            continue;
+        }
+        last = now;
+        match SparseModel::load(&path) {
+            Ok(m) => {
+                eprintln!(
+                    "serve: reloaded {:?} ({} nnz, {} layers)",
+                    path,
+                    m.nnz(),
+                    m.layers.len()
+                );
+                handle.swap(m);
+            }
+            Err(e) => eprintln!("serve: reload of {path:?} failed, keeping old model: {e:#}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::mlp_def;
+    use crate::sparsity::Distribution;
+
+    #[test]
+    fn model_handle_swaps_atomically() {
+        let def = mlp_def("t", 4, &[3], 2, 1);
+        let a = SparseModel::init_random(&def, 0.0, &Distribution::Uniform, 1).unwrap();
+        let b = SparseModel::init_random(&def, 0.5, &Distribution::Uniform, 2).unwrap();
+        let b_nnz = b.nnz();
+        let h = ModelHandle::new(a.clone());
+        let snap = h.get(); // old snapshot survives the swap
+        h.swap(b);
+        assert_eq!(snap.nnz(), a.nnz());
+        assert_eq!(h.get().nnz(), b_nnz);
+    }
+
+    #[test]
+    fn server_binds_ephemeral_port_and_shuts_down() {
+        let def = mlp_def("t", 4, &[3], 2, 1);
+        let m = SparseModel::init_random(&def, 0.5, &Distribution::Uniform, 3).unwrap();
+        let srv = Server::start(m, None, ServeConfig::default()).unwrap();
+        assert_ne!(srv.addr().port(), 0);
+        srv.shutdown(); // must not hang
+    }
+}

@@ -265,10 +265,17 @@ impl BenchRecord {
 
 /// Append one record to `BENCH_<target>.json` (JSON-lines: one object per
 /// line, append-only so concurrent bench targets can't clobber history).
-/// Records land at the workspace root: cargo runs bench binaries with the
-/// package dir (`rust/`) as CWD, so the path is resolved via
-/// `CARGO_MANIFEST_DIR/..` when available.
 pub fn append_bench_record(target: &str, rec: &BenchRecord) -> std::io::Result<()> {
+    append_bench_json(target, &rec.to_json())
+}
+
+/// Append one raw JSON line to `BENCH_<target>.json` — for bench targets
+/// whose records carry fields beyond the time-based [`BenchRecord`]
+/// (e.g. bench_serve's throughput + latency percentiles). Records land
+/// at the workspace root: cargo runs bench binaries with the package dir
+/// (`rust/`) as CWD, so the path is resolved via `CARGO_MANIFEST_DIR/..`
+/// when available.
+pub fn append_bench_json(target: &str, json: &str) -> std::io::Result<()> {
     use std::io::Write;
     let dir = match std::env::var_os("CARGO_MANIFEST_DIR") {
         Some(d) => {
@@ -281,7 +288,40 @@ pub fn append_bench_record(target: &str, rec: &BenchRecord) -> std::io::Result<(
         .create(true)
         .append(true)
         .open(dir.join(format!("BENCH_{target}.json")))?;
-    writeln!(f, "{}", rec.to_json())
+    writeln!(f, "{json}")
+}
+
+/// Crash-safe file write: stream through the closure into a `.tmp`
+/// sibling (same directory, so the rename below cannot cross
+/// filesystems), fsync, then atomically rename over `path`. A reader —
+/// the checkpoint resume paths, the serve hot-reload watcher — can
+/// therefore never observe a torn file: it sees either the old complete
+/// file or the new complete file. On error the temporary is removed.
+pub fn atomic_write<F>(path: &std::path::Path, write: F) -> std::io::Result<()>
+where
+    F: FnOnce(&mut std::io::BufWriter<std::fs::File>) -> std::io::Result<()>,
+{
+    use std::io::Write;
+    let mut name = path
+        .file_name()
+        .ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("no file name in {path:?}"),
+            )
+        })?
+        .to_os_string();
+    name.push(format!(".{}.tmp", std::process::id()));
+    let tmp = path.with_file_name(name);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+    let result = write(&mut f)
+        .and_then(|()| f.flush())
+        .and_then(|()| f.get_ref().sync_all())
+        .and_then(|()| std::fs::rename(&tmp, path));
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
 }
 
 /// Short git revision of the working tree, or "unknown" outside a repo.
@@ -466,6 +506,31 @@ mod tests {
         assert_eq!(out, vec![0, 2]);
         assert_eq!(idx.capacity(), cap_idx);
         assert_eq!(out.capacity(), cap_out);
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("rigl_atomic_{}.bin", std::process::id()));
+        std::fs::write(&path, b"old contents").unwrap();
+        atomic_write(&path, |f| std::io::Write::write_all(f, b"new")).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"new");
+        // A failed write leaves the original intact and no .tmp behind.
+        let boom = atomic_write(&path, |_| {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))
+        });
+        assert!(boom.is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"new");
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name();
+            let name = name.to_string_lossy().into_owned();
+            assert!(
+                !(name.starts_with(&format!("rigl_atomic_{}", std::process::id()))
+                    && name.ends_with(".tmp")),
+                "stray temporary {name}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Serve-subsystem round-trip suite: frozen artifacts, the micro-
+//! batcher's bit-identity contract, loopback TCP serving, and hot
+//! reload. Everything here is hermetic — models are built in code via
+//! `backend::native::mlp_def`, servers bind ephemeral loopback ports —
+//! so the suite runs identically with and without the `pjrt` feature
+//! (the `--no-pjrt` CI path).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use rigl::backend::native::mlp_def;
+use rigl::serve::{
+    run_load, top_k, Batcher, BatcherConfig, Client, InferEngine, ModelHandle, ServeConfig,
+    Server, SparseModel, TopKScratch,
+};
+use rigl::sparsity::Distribution;
+use rigl::util::Rng;
+
+fn temp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("rigl_serve_it_{}_{name}", std::process::id()))
+}
+
+/// One request's `(class, logit)` reply.
+type Reply = Vec<(u32, f32)>;
+
+fn lenet(seed: u64, sparsity: f64) -> SparseModel {
+    // The paper's LeNet-300-100, as the builtin manifest serves it.
+    let def = mlp_def("mlp", 784, &[300, 100], 10, 1);
+    SparseModel::init_random(&def, sparsity, &Distribution::Uniform, seed).unwrap()
+}
+
+/// Export→load preserves every weight bit-exactly, on the real
+/// LeNet-300-100 shape, and the artifact carries no dense storage: its
+/// size must scale with nnz, not with the dense parameter count.
+#[test]
+fn export_load_roundtrip_bit_exact_and_nnz_sized() {
+    let m = lenet(1, 0.9);
+    let path = temp("rt.srvd");
+    m.save(&path).unwrap();
+    let back = SparseModel::load(&path).unwrap();
+    assert_eq!(back.name, m.name);
+    assert_eq!(back.layers.len(), m.layers.len());
+    for (a, b) in back.layers.iter().zip(&m.layers) {
+        assert_eq!(a.topo.row_ptr, b.topo.row_ptr);
+        assert_eq!(a.topo.col_idx, b.topo.col_idx);
+        assert_eq!(a.values.len(), b.values.len());
+        for (x, y) in a.values.iter().zip(&b.values) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in a.bias.iter().zip(&b.bias) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+    let sparse_bytes = std::fs::metadata(&path).unwrap().len();
+    let dense = lenet(1, 0.0);
+    let dense_path = temp("rt_dense.srvd");
+    dense.save(&dense_path).unwrap();
+    let dense_bytes = std::fs::metadata(&dense_path).unwrap().len();
+    // S=0.9 keeps ~10% of values+indices; the artifact must reflect
+    // that (generous 4× bound to absorb the indptr/bias floor).
+    assert!(
+        sparse_bytes * 4 < dense_bytes,
+        "S=0.9 artifact is {sparse_bytes} bytes vs dense {dense_bytes}"
+    );
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&dense_path).ok();
+}
+
+/// A loopback TCP request must return logits bit-identical to a direct
+/// in-process kernel call on the same frozen model.
+#[test]
+fn tcp_logits_bit_identical_to_direct_kernel_call() {
+    let model = lenet(2, 0.95);
+    let classes = model.classes();
+    let server = Server::start(model.clone(), None, ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    let info = client.info().unwrap();
+    assert_eq!(info.in_dim, 784);
+    assert_eq!(info.classes, classes);
+    assert_eq!(info.nnz as usize, model.nnz());
+
+    let mut eng = InferEngine::new(&model, 1);
+    let mut scratch = TopKScratch::default();
+    let mut want = Vec::new();
+    let mut rng = Rng::new(3);
+    for _ in 0..10 {
+        let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+        // k = classes ⇒ the reply is the full ranked logits row.
+        let got = client.infer(&x, classes).unwrap();
+        let logits = eng.forward(&model, &x, 1);
+        top_k(logits, classes, &mut scratch, &mut want);
+        assert_eq!(got.len(), classes);
+        for ((gc, gl), (wc, wl)) in got.iter().zip(&want) {
+            assert_eq!(gc, wc);
+            assert_eq!(gl.to_bits(), wl.to_bits(), "class {gc} logit differs");
+        }
+    }
+
+    // A malformed request is answered with an error and the connection
+    // stays usable.
+    let err = client.infer(&[1.0, 2.0], 1).unwrap_err().to_string();
+    assert!(err.contains("takes 784"), "{err}");
+    let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+    assert_eq!(client.infer(&x, 1).unwrap().len(), 1);
+
+    server.shutdown();
+}
+
+/// Micro-batcher property test: ANY interleaving of concurrent
+/// requests yields per-request outputs identical to batch=1 execution.
+/// Many submitter threads race tiny sleeps so requests land in
+/// adversarial orders and coalesce into varying batch shapes.
+#[test]
+fn batcher_interleavings_match_batch1_bitwise() {
+    let def = mlp_def("t", 24, &[16], 5, 1);
+    let model = SparseModel::init_random(&def, 0.6, &Distribution::Uniform, 4).unwrap();
+    for &(workers, max_batch, wait_us) in
+        &[(1usize, 1usize, 0u64), (2, 4, 150), (4, 8, 300), (3, 32, 50)]
+    {
+        let batcher = Arc::new(Batcher::new(
+            ModelHandle::new(model.clone()),
+            BatcherConfig {
+                workers,
+                max_batch,
+                max_wait: Duration::from_micros(wait_us),
+                queue_depth: 64,
+            },
+        ));
+        let threads = 6;
+        let per_thread = 12;
+        let results: Vec<Vec<Reply>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let batcher = batcher.clone();
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(0xBA7C4 ^ t as u64);
+                        let mut out = Vec::with_capacity(per_thread);
+                        for r in 0..per_thread {
+                            let x: Vec<f32> =
+                                (0..24).map(|_| rng.next_f32() - 0.5).collect();
+                            if r % 3 == 0 {
+                                std::thread::sleep(Duration::from_micros(
+                                    (rng.next_below(200)) as u64,
+                                ));
+                            }
+                            let k = 1 + rng.next_below(5);
+                            out.push(batcher.submit(x, k).recv().unwrap().unwrap());
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        // Recompute every request serially at batch=1 with the same
+        // deterministic input streams.
+        let mut eng = InferEngine::new(&model, 1);
+        let mut scratch = TopKScratch::default();
+        let mut want = Vec::new();
+        for (t, got_thread) in results.iter().enumerate() {
+            let mut rng = Rng::new(0xBA7C4 ^ t as u64);
+            for (r, got) in got_thread.iter().enumerate() {
+                let x: Vec<f32> = (0..24).map(|_| rng.next_f32() - 0.5).collect();
+                if r % 3 == 0 {
+                    let _ = rng.next_below(200); // keep the stream aligned
+                }
+                let k = 1 + rng.next_below(5);
+                let logits = eng.forward(&model, &x, 1);
+                top_k(logits, k, &mut scratch, &mut want);
+                assert_eq!(got.len(), want.len(), "w={workers} b={max_batch}");
+                for ((gc, gl), (wc, wl)) in got.iter().zip(&want) {
+                    assert_eq!(gc, wc, "w={workers} b={max_batch} t={t} r={r}");
+                    assert_eq!(gl.to_bits(), wl.to_bits());
+                }
+            }
+        }
+        let (reqs, batches) = batcher.stats();
+        assert_eq!(reqs as usize, threads * per_thread);
+        assert!(batches >= 1);
+    }
+}
+
+/// Fan many concurrent TCP connections at one server: every reply must
+/// still be bit-identical to batch=1, end to end through the protocol.
+#[test]
+fn concurrent_tcp_connections_all_get_exact_replies() {
+    let model = lenet(5, 0.98);
+    let server = Server::start(
+        model.clone(),
+        None,
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait_us: 200,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    let conns = 8;
+    let per_conn = 10;
+    let model = &model;
+    std::thread::scope(|scope| {
+        for c in 0..conns {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let mut eng = InferEngine::new(model, 1);
+                let mut scratch = TopKScratch::default();
+                let mut want = Vec::new();
+                let mut rng = Rng::new(0x7C9 ^ c as u64);
+                for _ in 0..per_conn {
+                    let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+                    let got = client.infer(&x, 3).unwrap();
+                    let logits = eng.forward(model, &x, 1);
+                    top_k(logits, 3, &mut scratch, &mut want);
+                    for ((gc, gl), (wc, wl)) in got.iter().zip(&want) {
+                        assert_eq!(gc, wc);
+                        assert_eq!(gl.to_bits(), wl.to_bits());
+                    }
+                }
+            });
+        }
+    });
+    let (reqs, _) = server.stats();
+    assert_eq!(reqs as usize, conns * per_conn);
+    server.shutdown();
+}
+
+/// Hot reload: overwrite the watched artifact (atomic rename, as
+/// `repro export` does) and poll until the server answers from the new
+/// weights.
+#[test]
+fn hot_reload_swaps_model_without_restart() {
+    let a = lenet(6, 0.9);
+    let b = lenet(7, 0.5); // different structure AND values
+    assert_ne!(a.nnz(), b.nnz());
+    let path = temp("reload.srvd");
+    a.save(&path).unwrap();
+    // start_watching stamps before loading — the race-free path
+    // `repro serve` uses.
+    let server = Server::start_watching(
+        path.clone(),
+        ServeConfig {
+            reload_poll_ms: 25,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    assert_eq!(client.info().unwrap().nnz as usize, a.nnz());
+
+    // Export the replacement over the same path (tmp + rename): the
+    // watcher must pick it up without a restart.
+    b.save(&path).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let nnz = client.info().unwrap().nnz as usize;
+        if nnz == b.nnz() {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "reload not observed within 10s (still {nnz} nnz)"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // And inference now matches the new model bit-exactly.
+    let mut rng = Rng::new(8);
+    let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+    let got = client.infer(&x, 10).unwrap();
+    let mut eng = InferEngine::new(&b, 1);
+    let mut scratch = TopKScratch::default();
+    let mut want = Vec::new();
+    top_k(eng.forward(&b, &x, 1), 10, &mut scratch, &mut want);
+    for ((gc, gl), (wc, wl)) in got.iter().zip(&want) {
+        assert_eq!(gc, wc);
+        assert_eq!(gl.to_bits(), wl.to_bits());
+    }
+    server.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+/// `max_requests` makes the server self-terminating — the CI smoke
+/// test's clean-shutdown mechanism — and the load generator sees every
+/// reply first.
+#[test]
+fn max_requests_terminates_cleanly_after_replies() {
+    let model = lenet(9, 0.9);
+    let server = Server::start(
+        model,
+        None,
+        ServeConfig {
+            max_requests: 5,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+    let stats = run_load(&addr, 1, 5, 1).unwrap();
+    assert_eq!(stats.requests, 5);
+    assert!(stats.rps > 0.0 && stats.p99_us >= stats.p50_us);
+    // The accept loop stops on its own; wait() must return.
+    server.wait();
+}
