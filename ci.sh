@@ -6,23 +6,46 @@
 # integration tests to actually execute rather than skip, `make
 # artifacts` beforehand).
 #
-# `./ci.sh --no-pjrt` builds and tests WITHOUT the `pjrt` cargo feature:
-# no xla crate, no XLA install, no artifacts — the native CSR backend's
-# hermetic suite (unit tests + backend_parity.rs + serve_roundtrip.rs +
-# bench_backend/bench_serve) must pass on a bare CPU, and the serve
-# smoke test below must export, serve and answer over loopback TCP.
-# Machines without an XLA toolchain should run this path; machines with
-# one should run both.
+# Flags (composable):
+#   --no-pjrt       build and test WITHOUT the `pjrt` cargo feature: no
+#                   xla crate, no XLA install, no artifacts — the native
+#                   CSR backend's hermetic suite (unit tests +
+#                   backend_parity.rs + serve_roundtrip.rs +
+#                   threads_determinism.rs) must pass on a bare CPU, and
+#                   the serve smoke test below must export, serve and
+#                   answer over loopback TCP. Machines without an XLA
+#                   toolchain should run this path; machines with one
+#                   should run both.
+#   --smoke-bench   additionally run every hermetic bench in --smoke
+#                   mode (tiny shapes, 1 rep). This executes the
+#                   counting-allocator zero-alloc gates and the
+#                   threads-vs-serial bit-identity gates in
+#                   bench_topology/bench_backend/bench_serve, which exit
+#                   non-zero on regression — benches gate PRs instead of
+#                   rotting. Always hermetic (--no-default-features):
+#                   the pjrt benches need AOT artifacts and stay manual.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 FLAGS=()
 NO_PJRT=0
-if [[ "${1:-}" == "--no-pjrt" ]]; then
-  FLAGS=(--no-default-features)
-  NO_PJRT=1
-  echo "== no-pjrt mode: building without the xla dependency =="
-fi
+SMOKE_BENCH=0
+for arg in "$@"; do
+  case "$arg" in
+    --no-pjrt)
+      FLAGS=(--no-default-features)
+      NO_PJRT=1
+      echo "== no-pjrt mode: building without the xla dependency =="
+      ;;
+    --smoke-bench)
+      SMOKE_BENCH=1
+      ;;
+    *)
+      echo "usage: ./ci.sh [--no-pjrt] [--smoke-bench]" >&2
+      exit 2
+      ;;
+  esac
+done
 
 echo "== cargo build --release =="
 cargo build --release "${FLAGS[@]+"${FLAGS[@]}"}"
@@ -45,23 +68,55 @@ if [[ "$NO_PJRT" == 1 ]]; then
     rm -rf "$SMOKE"
   }
   trap cleanup EXIT
+  # Time-bound every client step so a hung server fails the job instead
+  # of wedging CI until the runner's global timeout.
+  TIMEOUT=()
+  if command -v timeout > /dev/null 2>&1; then
+    TIMEOUT=(timeout 120)
+  fi
   "$BIN" export --model mlp --sparsity 0.9 --out "$SMOKE/mlp.srvd"
   : > "$SMOKE/serve.log"
-  "$BIN" serve --model "$SMOKE/mlp.srvd" --port 0 --workers 2 --max-requests 1 \
-    >> "$SMOKE/serve.log" 2>&1 &
+  "$BIN" serve --model "$SMOKE/mlp.srvd" --port 0 --workers 2 --threads 2 \
+    --max-requests 1 >> "$SMOKE/serve.log" 2>&1 &
   SERVE_PID=$!
+  # The address has no spaces, so capture the first field after the
+  # prefix — portable across BRE dialects (no char-class surprises).
   ADDR=""
   for _ in $(seq 1 100); do
-    ADDR=$(sed -n 's/^serve: listening on \([0-9.:]*\).*/\1/p' "$SMOKE/serve.log")
+    ADDR=$(sed -n 's/^serve: listening on \([^ ]*\) .*/\1/p' "$SMOKE/serve.log")
     [[ -n "$ADDR" ]] && break
-    kill -0 "$SERVE_PID" 2>/dev/null || { cat "$SMOKE/serve.log"; exit 1; }
+    kill -0 "$SERVE_PID" 2>/dev/null || {
+      echo "server exited before reporting its address; log follows:" >&2
+      cat "$SMOKE/serve.log" >&2
+      exit 1
+    }
     sleep 0.1
   done
-  [[ -n "$ADDR" ]] || { echo "server never reported its address"; cat "$SMOKE/serve.log"; exit 1; }
-  "$BIN" serve-bench --addr "$ADDR" --concurrency 1 --requests 1
-  wait "$SERVE_PID"   # --max-requests 1 ⇒ exits 0 after the reply
+  if [[ -z "$ADDR" ]]; then
+    echo "server never reported its address; log follows:" >&2
+    cat "$SMOKE/serve.log" >&2
+    exit 1
+  fi
+  "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" serve-bench --addr "$ADDR" --concurrency 1 --requests 1
+  # --max-requests 1 ⇒ the server exits 0 after the reply; any other
+  # status (crash, kill, hang-then-signal) fails CI with the log.
+  status=0
+  wait "$SERVE_PID" || status=$?
+  if [[ "$status" -ne 0 ]]; then
+    echo "server exited with status $status; log follows:" >&2
+    cat "$SMOKE/serve.log" >&2
+    exit 1
+  fi
   SERVE_PID=""
   echo "serve smoke OK"
+fi
+
+# Smoke benches: hermetic (no xla, no artifacts), tiny shapes. The
+# zero-alloc and bit-identity regression gates inside the benches exit
+# non-zero on failure.
+if [[ "$SMOKE_BENCH" == 1 ]]; then
+  echo "== cargo bench --benches -- --smoke (hermetic) =="
+  cargo bench --no-default-features --benches -- --smoke
 fi
 
 echo "== cargo fmt --check =="

@@ -1,21 +1,29 @@
 //! Native-backend step-time scaling → `BENCH_backend.json`.
 //!
 //! The point of the native CSR engine is that measured wall-clock — not
-//! just the Appendix-H FLOPs accounting — scales with (1 − sparsity).
-//! This bench times one masked train step (forward + backward + SGDM)
-//! and one dense-gradient call on the LeNet-300-100-scale MLP at several
-//! sparsity levels, plus a short end-to-end RigL run, and appends JSON
-//! lines so the trajectory is tracked commit over commit.
+//! just the Appendix-H FLOPs accounting — scales with (1 − sparsity),
+//! and (since the blocked-kernel engine) with `--threads`. This bench
+//! times one masked train step (forward + backward + SGDM) over the
+//! full threads × sparsity grid on the LeNet-300-100-scale MLP, one
+//! dense-gradient call per thread count, and a short end-to-end RigL
+//! run, appending JSON lines so the trajectory is tracked commit over
+//! commit.
+//!
+//! Every threaded cell is also verified BIT-identical to `threads=1`
+//! (the kernels' determinism contract): a fixed number of train steps
+//! from an identical init must leave identical state, or the bench
+//! exits non-zero — making the contract a CI gate, not just a test.
 //!
 //! Runs hermetically: no artifacts, no PJRT, no feature flags needed
-//! (`cargo bench --bench bench_backend`).
+//! (`cargo bench --bench bench_backend`; `-- --smoke` for the tiny CI
+//! variant).
 
 use rigl::backend::native::{mlp_def, NativeBackend};
 use rigl::backend::{Backend, Session as _};
 use rigl::model::ParamSet;
 use rigl::sparsity::{layer_sparsities, random_masks, Distribution};
 use rigl::train::{Batch, TrainState};
-use rigl::util::{bench_to, Rng};
+use rigl::util::{bench_to, smoke_mode, Rng};
 
 fn state_at_sparsity(def: &rigl::ModelDef, sparsity: f64, rng: &mut Rng) -> TrainState {
     let mut params = ParamSet::init(def, &mut rng.split(1));
@@ -35,50 +43,112 @@ fn state_at_sparsity(def: &rigl::ModelDef, sparsity: f64, rng: &mut Rng) -> Trai
     }
 }
 
+/// `check_steps` train steps from a fixed init: the resulting params as
+/// bit patterns (the cross-thread identity probe).
+fn probe_state(
+    def: &rigl::ModelDef,
+    threads: usize,
+    sparsity: f64,
+    x: &Batch,
+    y: &[i32],
+    check_steps: usize,
+) -> Vec<u32> {
+    let be = NativeBackend::with_threads(def, threads).unwrap();
+    let mut rng = Rng::new(0xB17);
+    let mut state = state_at_sparsity(def, sparsity, &mut rng);
+    let mut sess = be.session(&state).unwrap();
+    for _ in 0..check_steps {
+        sess.train_step(&mut state, x, y, 0.01).unwrap();
+    }
+    drop(sess);
+    state
+        .params
+        .tensors
+        .iter()
+        .flat_map(|t| t.iter().map(|v| v.to_bits()))
+        .collect()
+}
+
 fn main() -> anyhow::Result<()> {
-    println!("== bench_backend: native CSR engine step-time vs sparsity ==");
+    let smoke = smoke_mode();
+    println!(
+        "== bench_backend: native CSR engine step-time vs sparsity × threads{} ==",
+        if smoke { " [SMOKE]" } else { "" }
+    );
     let batch = 32;
     let def = mlp_def("bench_mlp", 784, &[512, 256], 10, batch);
-    let be = NativeBackend::new(&def)?;
     let mut rng = Rng::new(0xBE);
     let x = Batch::F32((0..batch * 784).map(|_| rng.next_f32()).collect());
     let y: Vec<i32> = (0..batch).map(|_| rng.next_below(10) as i32).collect();
 
-    // Per-step cost at increasing density: mean step time should grow
-    // roughly linearly with nnz (the dense output layer is a constant
-    // floor shared by all levels).
+    let sparsities: &[f64] = if smoke { &[0.9] } else { &[0.98, 0.9, 0.5, 0.0] };
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let iters = if smoke { 3 } else { 50 };
+    let check_steps = if smoke { 2 } else { 5 };
+
+    // Per-step cost over the full grid. At fixed threads, mean step time
+    // should grow roughly linearly with nnz; at fixed sparsity it should
+    // shrink with threads (until the autotune floor keeps tiny layers
+    // serial).
     let mut means = Vec::new();
-    for &s in &[0.98f64, 0.9, 0.5, 0.0] {
-        let mut state = state_at_sparsity(&def, s, &mut rng);
-        let mut sess = be.session(&state)?;
-        let mean = bench_to(
-            "backend",
-            &format!("native/train_step/b={batch}/S={s}"),
-            50,
-            || {
-                sess.train_step(&mut state, &x, &y, 0.01).unwrap();
-            },
-        );
-        means.push((s, mean));
+    let mut identical = true;
+    for &s in sparsities {
+        let baseline = probe_state(&def, 1, s, &x, &y, check_steps);
+        for &t in thread_counts {
+            let be = NativeBackend::with_threads(&def, t)?;
+            let mut state = state_at_sparsity(&def, s, &mut rng);
+            let mut sess = be.session(&state)?;
+            let mean = bench_to(
+                "backend",
+                &format!("native/train_step/b={batch}/S={s}/t={t}"),
+                iters,
+                || {
+                    sess.train_step(&mut state, &x, &y, 0.01).unwrap();
+                },
+            );
+            means.push((s, t, mean));
+            drop(sess);
+
+            // The determinism gate: every cell bit-identical to t=1.
+            if t > 1 && probe_state(&def, t, s, &x, &y, check_steps) != baseline {
+                identical = false;
+                eprintln!("REGRESSION: S={s} t={t} diverged from the serial path");
+            }
+        }
     }
-    if let (Some(sparse), Some(dense)) =
-        (means.iter().find(|m| m.0 == 0.9), means.iter().find(|m| m.0 == 0.0))
-    {
+    if let (Some(sp), Some(dn)) = (
+        means.iter().find(|m| m.0 == 0.9 && m.1 == 1),
+        means.iter().find(|m| m.0 == 0.0 && m.1 == 1),
+    ) {
         println!(
-            "step-time ratio dense/S=0.9: {:.2}x (ideal ≈ {:.1}x on the sparsifiable share)",
-            dense.1 / sparse.1,
+            "step-time ratio dense/S=0.9 (serial): {:.2}x (ideal ≈ {:.1}x on the sparsifiable share)",
+            dn.2 / sp.2,
             1.0 / 0.1
         );
     }
+    if let (Some(t1), Some(t4)) = (
+        means.iter().find(|m| m.0 == 0.9 && m.1 == 1),
+        means.iter().find(|m| m.0 == 0.9 && m.1 == 4),
+    ) {
+        println!("step-time speedup S=0.9 t=4 vs t=1: {:.2}x", t1.2 / t4.2);
+    }
 
     // The RigL grow signal stays an O(dense) outer product — measured
-    // here so the ΔT amortization argument has both terms on record.
-    {
+    // per thread count so the ΔT amortization argument has both terms
+    // on record (dense grads parallelize best: uniform chunks).
+    for &t in thread_counts {
+        let be = NativeBackend::with_threads(&def, t)?;
         let mut state = state_at_sparsity(&def, 0.9, &mut rng);
         let mut sess = be.session(&state)?;
-        bench_to("backend", &format!("native/dense_grads/b={batch}/S=0.9"), 20, || {
-            sess.dense_grads(&state, &x, &y).unwrap();
-        });
+        bench_to(
+            "backend",
+            &format!("native/dense_grads/b={batch}/S=0.9/t={t}"),
+            if smoke { 2 } else { 20 },
+            || {
+                sess.dense_grads(&state, &x, &y).unwrap();
+            },
+        );
+        drop(sess);
     }
 
     // End-to-end: a tiny RigL run through the Trainer (data pipeline,
@@ -89,16 +159,25 @@ fn main() -> anyhow::Result<()> {
         let def = mlp_def("bench_mlp_e2e", 784, &[128, 64], 10, 16);
         let mut cfg = TrainConfig::new("bench_mlp_e2e", Method::Rigl);
         cfg.sparsity = 0.9;
-        cfg.steps = 100;
-        cfg.delta_t = 25;
+        cfg.steps = if smoke { 20 } else { 100 };
+        cfg.delta_t = if smoke { 5 } else { 25 };
         cfg.augment = false;
         cfg.data_train = 512;
         cfg.data_val = 256;
         let backend = std::sync::Arc::new(NativeBackend::new(&def)?);
         let trainer = Trainer::from_parts(def, backend, &cfg)?;
-        bench_to("backend", "native/rigl_run/100steps/S=0.9", 3, || {
-            trainer.run(&cfg).unwrap();
-        });
+        bench_to(
+            "backend",
+            &format!("native/rigl_run/{}steps/S=0.9", cfg.steps),
+            if smoke { 1 } else { 3 },
+            || {
+                trainer.run(&cfg).unwrap();
+            },
+        );
+    }
+
+    if !identical {
+        std::process::exit(1);
     }
     Ok(())
 }

@@ -14,7 +14,7 @@
 
 use rigl::model::{ElemType, Kind, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
 use rigl::topology::{update_masks, update_masks_scratch, Grow, Method, TopoScratch, UpdateStats};
-use rigl::util::{append_bench_record, bench_to, git_rev, BenchRecord, Rng};
+use rigl::util::{append_bench_record, bench_to, git_rev, smoke_mode, BenchRecord, Rng};
 
 fn synth_def(n: usize) -> ModelDef {
     ModelDef {
@@ -39,10 +39,15 @@ fn synth_def(n: usize) -> ModelDef {
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("== bench_coordinator: hot-path + fan-out wall-clock ==");
+    let smoke = smoke_mode();
+    println!(
+        "== bench_coordinator: hot-path + fan-out wall-clock{} ==",
+        if smoke { " [SMOKE]" } else { "" }
+    );
+    let reps = if smoke { 2 } else { 10 };
 
     // ---------------- topology before/after (always runs) ------------
-    let n = 1_000_000usize;
+    let n = if smoke { 10_000usize } else { 1_000_000 };
     let def = synth_def(n);
     let mut rng = Rng::new(0);
     let mut params = ParamSet::init(&def, &mut rng);
@@ -52,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     }
     let grads = ParamSet::init(&def, &mut rng);
     let mut mom = ParamSet::zeros(&def);
-    bench_to("coordinator", &format!("update_masks/fresh_scratch/n={n}"), 10, || {
+    bench_to("coordinator", &format!("update_masks/fresh_scratch/n={n}"), reps, || {
         update_masks(
             &def,
             &mut params,
@@ -64,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     });
     let mut scratch = TopoScratch::default();
     let mut stats = UpdateStats::default();
-    bench_to("coordinator", &format!("update_masks/reused_scratch/n={n}"), 10, || {
+    bench_to("coordinator", &format!("update_masks/reused_scratch/n={n}"), reps, || {
         update_masks_scratch(
             &def,
             &mut params,
@@ -89,7 +94,7 @@ fn main() -> anyhow::Result<()> {
         ctx.verbose = false;
         let mut cfg = ctx.base("mlp", Method::Rigl);
         cfg.sparsity = 0.9;
-        cfg.steps = 100;
+        cfg.steps = if smoke { 20 } else { 100 };
         cfg.delta_t = 25;
         cfg.augment = false;
         cfg.data_train = 512;

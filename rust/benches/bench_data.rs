@@ -1,34 +1,43 @@
 //! Synthetic data pipeline throughput: generation, batching, augmentation.
 
 use rigl::data::{augment_batch, BatchIter, CharDataset, DigitDataset, ImageDataset};
-use rigl::util::{bench, Rng};
+use rigl::util::{bench, smoke_mode, Rng};
 
 fn main() {
-    println!("== bench_data: generation + batch + augment ==");
-    bench("gen/images 1024x32x32x3", 3, || {
-        let _ = ImageDataset::synth(1024, 32, 10, 0.35, 7);
+    let smoke = smoke_mode();
+    println!(
+        "== bench_data: generation + batch + augment{} ==",
+        if smoke { " [SMOKE]" } else { "" }
+    );
+    // Smoke mode (CI): tiny datasets, 1 rep — exercises every code path
+    // without measurement-grade run time.
+    let (n_img, n_dig, n_chr) = if smoke { (64, 128, 5_000) } else { (1024, 2048, 100_000) };
+    let gen_reps = if smoke { 1 } else { 3 };
+    let loop_reps = if smoke { 5 } else { 200 };
+    bench(&format!("gen/images {n_img}x32x32x3"), gen_reps, || {
+        let _ = ImageDataset::synth(n_img, 32, 10, 0.35, 7);
     });
-    bench("gen/digits 2048x784", 3, || {
-        let _ = DigitDataset::synth(2048, 10, 0.6, 7);
+    bench(&format!("gen/digits {n_dig}x784"), gen_reps, || {
+        let _ = DigitDataset::synth(n_dig, 10, 0.6, 7);
     });
-    bench("gen/chars 100k", 3, || {
-        let _ = CharDataset::synth(100_000, 64, 2.0, 7);
+    bench(&format!("gen/chars {n_chr}"), gen_reps, || {
+        let _ = CharDataset::synth(n_chr, 64, 2.0, 7);
     });
 
-    let img = ImageDataset::synth(1024, 32, 10, 0.35, 7);
-    let mut it = BatchIter::new(1024, 32, 0);
-    bench("gather/images b32", 200, || {
+    let img = ImageDataset::synth(n_img, 32, 10, 0.35, 7);
+    let mut it = BatchIter::new(n_img, 32, 0);
+    bench("gather/images b32", loop_reps, || {
         let idx = it.next_indices().to_vec();
         let _ = img.gather(&idx);
     });
     let (mut x, _) = img.gather(&(0..32).collect::<Vec<_>>());
     let mut rng = Rng::new(1);
-    bench("augment/images b32", 200, || {
+    bench("augment/images b32", loop_reps, || {
         augment_batch(&mut x, 32, 32, 32, 3, &mut rng);
     });
-    let chars = CharDataset::synth(100_000, 64, 2.0, 7);
+    let chars = CharDataset::synth(n_chr, 64, 2.0, 7);
     let mut rng2 = Rng::new(2);
-    bench("batch/chars b16xT48", 500, || {
+    bench("batch/chars b16xT48", if smoke { 10 } else { 500 }, || {
         let _ = chars.batch(16, 48, &mut rng2);
     });
 }

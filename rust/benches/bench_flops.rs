@@ -1,25 +1,37 @@
 //! Appendix-H accounting engine latency (it runs inside every table cell).
+//!
+//! Hermetic: uses the artifacts manifest when present, else the builtin
+//! native model zoo (models absent from the active manifest are skipped
+//! with a note, so `cargo bench --benches` passes on a bare CPU).
 
+use rigl::backend::{manifest_for, BackendKind};
 use rigl::flops::{train_flops_per_sample, train_flops_ratio};
-use rigl::model::load_manifest;
 use rigl::prune::PruneSchedule;
 use rigl::sparsity::{layer_sparsities, Distribution};
 use rigl::topology::Method;
-use rigl::util::bench;
+use rigl::util::{bench, smoke_mode};
 
 fn main() -> anyhow::Result<()> {
-    let manifest = load_manifest(&rigl::artifacts_dir())?;
-    println!("== bench_flops: per-method accounting ==");
-    for model in ["cnn", "wrn"] {
-        let def = manifest.get(model)?;
+    let smoke = smoke_mode();
+    let manifest = manifest_for(BackendKind::Native)?;
+    println!(
+        "== bench_flops: per-method accounting{} ==",
+        if smoke { " [SMOKE]" } else { "" }
+    );
+    let reps = if smoke { 5 } else { 100 };
+    for model in ["cnn", "wrn", "mlp"] {
+        let Ok(def) = manifest.get(model) else {
+            println!("(skipping {model}: not in the active manifest)");
+            continue;
+        };
         let s = layer_sparsities(def, 0.9, &Distribution::Erk);
         let sched = PruneSchedule::paper_default(32_000, s.clone());
         for m in [Method::Rigl, Method::Snfs, Method::Pruning] {
-            bench(&format!("flops/{model}/{}", m.label()), 100, || {
+            bench(&format!("flops/{model}/{}", m.label()), reps, || {
                 let _ = train_flops_per_sample(def, m, &s, 100, Some(&sched), 32_000);
             });
         }
-        bench(&format!("flops_ratio/{model}"), 100, || {
+        bench(&format!("flops_ratio/{model}"), reps, || {
             let _ = train_flops_ratio(def, Method::Rigl, &s, 100, None, 32_000, 5.0);
         });
     }

@@ -1,34 +1,38 @@
 //! Serving performance → `BENCH_serve.json`: inference latency vs
-//! sparsity (cost ∝ nnz, the paper's motivating claim, measured at the
-//! serving layer) and micro-batched throughput vs batch=1 at the same
-//! worker count.
+//! sparsity × threads (cost ∝ nnz, the paper's motivating claim,
+//! measured at the serving layer) and micro-batched throughput vs
+//! batch=1 at the same worker count.
 //!
-//! Three record families land in `BENCH_serve.json`:
+//! Record families in `BENCH_serve.json`:
 //!
-//! * `engine/forward/b=1/S=*` — in-process single-row latency through
-//!   the frozen CSR engine ([`util::BenchRecord`] shape). Mean time
-//!   must DECREASE as sparsity increases.
-//! * `engine/steady_state_allocs/S=*` — heap allocations per request on
-//!   a warm engine, counted by the global allocator; any nonzero value
-//!   is a regression and the binary exits 1 (same discipline as
-//!   bench_topology).
-//! * `tcp/*` — end-to-end loopback numbers from the load generator
-//!   (`{requests, wall_s, rps, mean_us, p50_us, p99_us}`):
+//! * `engine/forward/b=1/S=*/t=*` — in-process single-row latency
+//!   through the frozen CSR engine ([`util::BenchRecord`] shape), over
+//!   the full sparsity × kernel-thread grid. Mean time must DECREASE as
+//!   sparsity rises; logits of every t>1 cell are verified BIT-identical
+//!   to t=1 (exit 1 on divergence).
+//! * `engine/steady_state_allocs/S=*/t=*` — heap allocations per
+//!   request on a warm engine, counted by the global allocator WITH the
+//!   kernel pool engaged; any nonzero value is a regression and the
+//!   binary exits 1 (same discipline as bench_topology).
+//! * `tcp/*` — end-to-end loopback numbers from the load generator:
 //!   `tcp/single/S=*` for per-request latency vs sparsity and
 //!   `tcp/batched-vs-serial/*` for the coalescing win — micro-batched
 //!   throughput (`max_batch` 32) must exceed batch=1 throughput at the
 //!   SAME worker count under concurrent load.
 //!
 //! Hermetic: no artifacts, no PJRT, models are built in code
-//! (`cargo bench --bench bench_serve`).
+//! (`cargo bench --bench bench_serve`; `-- --smoke` for the CI
+//! variant).
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use rigl::backend::native::mlp_def;
+use rigl::pool::KernelPool;
 use rigl::serve::{run_load, top_k, InferEngine, ServeConfig, Server, SparseModel, TopKScratch};
 use rigl::sparsity::Distribution;
-use rigl::util::{append_bench_json, bench_to, Rng};
+use rigl::util::{append_bench_json, bench_to, smoke_mode, Rng};
 
 /// Forwarding allocator that counts allocation events (alloc + realloc).
 struct CountingAlloc;
@@ -60,45 +64,79 @@ fn model_at(sparsity: f64) -> SparseModel {
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("== bench_serve: frozen-CSR inference latency + micro-batch throughput ==");
-    let sparsities = [0.98f64, 0.9, 0.5, 0.0];
+    let smoke = smoke_mode();
+    println!(
+        "== bench_serve: frozen-CSR inference latency + micro-batch throughput{} ==",
+        if smoke { " [SMOKE]" } else { "" }
+    );
+    let sparsities: &[f64] = if smoke { &[0.9] } else { &[0.98, 0.9, 0.5, 0.0] };
+    let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let fwd_iters = if smoke { 20 } else { 300 };
+    let mut failed = false;
 
-    // ---- engine-only: single-row latency vs sparsity + zero-alloc ----
+    // ---- engine-only: latency vs sparsity × threads, bit-identity,
+    // ---- and the zero-alloc gate with the pool engaged --------------
     let mut engine_means = Vec::new();
-    for &s in &sparsities {
+    for &s in sparsities {
         let model = model_at(s);
-        let mut eng = InferEngine::new(&model, 1);
-        let mut scratch = TopKScratch::default();
-        let mut pairs = Vec::new();
         let mut rng = Rng::new(1);
         let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
-        let mean = bench_to("serve", &format!("engine/forward/b=1/S={s}"), 300, || {
-            let logits = eng.forward(&model, &x, 1);
-            top_k(logits, 1, &mut scratch, &mut pairs);
-        });
-        engine_means.push((s, mean));
+        let mut baseline: Vec<u32> = Vec::new();
+        for &t in thread_counts {
+            // Pool + engine built BEFORE the warm window: their setup
+            // allocations are not steady-state.
+            let pool = (t > 1).then(|| Arc::new(KernelPool::new(t)));
+            let mut eng = InferEngine::new(&model, 1);
+            eng.set_pool(pool);
+            let mut scratch = TopKScratch::default();
+            let mut pairs = Vec::new();
+            let mean = bench_to(
+                "serve",
+                &format!("engine/forward/b=1/S={s}/t={t}"),
+                fwd_iters,
+                || {
+                    let logits = eng.forward(&model, &x, 1);
+                    top_k(logits, 1, &mut scratch, &mut pairs);
+                },
+            );
+            if t == 1 {
+                engine_means.push((s, mean));
+                baseline = eng.forward(&model, &x, 1).iter().map(|v| v.to_bits()).collect();
+            } else {
+                let got: Vec<u32> =
+                    eng.forward(&model, &x, 1).iter().map(|v| v.to_bits()).collect();
+                if got != baseline {
+                    failed = true;
+                    eprintln!("REGRESSION: S={s} t={t} logits diverged from t=1");
+                }
+            }
 
-        // Warm from the bench above: further requests must not allocate.
-        let iters = 100u64;
-        let before = ALLOC_EVENTS.load(Ordering::Relaxed);
-        for _ in 0..iters {
-            let logits = eng.forward(&model, &x, 1);
-            top_k(logits, 1, &mut scratch, &mut pairs);
-        }
-        let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
-        let per_req = allocs as f64 / iters as f64;
-        println!("engine/steady_state_allocs/S={s}             {per_req:.2} allocs/request");
-        append_bench_json(
-            "serve",
-            &format!(
-                "{{\"name\":\"engine/steady_state_allocs/S={s}\",\"iters\":{iters},\
-                 \"mean_s\":{per_req:.9},\"min_s\":{per_req:.9},\"git_rev\":\"{}\"}}",
-                rigl::util::git_rev()
-            ),
-        )?;
-        if allocs != 0 {
-            eprintln!("REGRESSION: {allocs} heap allocations over {iters} warm requests (S={s})");
-            std::process::exit(1);
+            // Warm from the bench above: further requests must not
+            // allocate — including every fork-join dispatch when the
+            // pool is engaged.
+            let iters = if smoke { 20u64 } else { 100 };
+            let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+            for _ in 0..iters {
+                let logits = eng.forward(&model, &x, 1);
+                top_k(logits, 1, &mut scratch, &mut pairs);
+            }
+            let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+            let per_req = allocs as f64 / iters as f64;
+            println!("engine/steady_state_allocs/S={s}/t={t}        {per_req:.2} allocs/request");
+            append_bench_json(
+                "serve",
+                &format!(
+                    "{{\"name\":\"engine/steady_state_allocs/S={s}/t={t}\",\"iters\":{iters},\
+                     \"mean_s\":{per_req:.9},\"min_s\":{per_req:.9},\"git_rev\":\"{}\"}}",
+                    rigl::util::git_rev()
+                ),
+            )?;
+            if allocs != 0 {
+                failed = true;
+                eprintln!(
+                    "REGRESSION: {allocs} heap allocations over {iters} warm requests (S={s} t={t})"
+                );
+            }
         }
     }
     if let (Some(sparse), Some(dense)) = (
@@ -106,14 +144,15 @@ fn main() -> anyhow::Result<()> {
         engine_means.iter().find(|m| m.0 == 0.0),
     ) {
         println!(
-            "engine latency ratio dense/S=0.9: {:.2}x (cost ∝ nnz ⇒ should approach the \
+            "engine latency ratio dense/S=0.9 (t=1): {:.2}x (cost ∝ nnz ⇒ should approach the \
              sparsifiable share)",
             dense.1 / sparse.1
         );
     }
 
     // ---- TCP end to end: single-request latency vs sparsity ----------
-    for &s in &sparsities {
+    let tcp_requests = if smoke { 20 } else { 300 };
+    for &s in sparsities {
         let server = Server::start(
             model_at(s),
             None,
@@ -124,15 +163,15 @@ fn main() -> anyhow::Result<()> {
                 ..ServeConfig::default()
             },
         )?;
-        let stats = run_load(&server.addr().to_string(), 1, 300, 1)?;
+        let stats = run_load(&server.addr().to_string(), 1, tcp_requests, 1)?;
         println!("tcp/single/S={s}: {}", stats.render());
         append_bench_json("serve", &stats.to_json(&format!("tcp/single/S={s}")))?;
         server.shutdown();
     }
 
     // ---- micro-batching: throughput at fixed worker count ------------
-    let concurrency = 16;
-    let requests = 200;
+    let concurrency = if smoke { 4 } else { 16 };
+    let requests = if smoke { 20 } else { 200 };
     let mut rps = Vec::new();
     for &(label, max_batch, max_wait_us) in
         &[("serial/b=1", 1usize, 0u64), ("batched/b=32", 32, 300)]
@@ -165,6 +204,10 @@ fn main() -> anyhow::Result<()> {
             "micro-batch throughput gain at 2 workers, c={concurrency}: {:.2}x",
             rps[1] / rps[0]
         );
+    }
+
+    if failed {
+        std::process::exit(1);
     }
     Ok(())
 }

@@ -18,7 +18,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use rigl::model::{ElemType, Kind, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
 use rigl::topology::{update_masks, update_masks_scratch, Grow, TopoScratch, UpdateStats};
-use rigl::util::{append_bench_record, bench_to, git_rev, BenchRecord, Rng};
+use rigl::util::{append_bench_record, bench_to, git_rev, smoke_mode, BenchRecord, Rng};
 
 /// Forwarding allocator that counts allocation events (alloc + realloc).
 struct CountingAlloc;
@@ -80,12 +80,24 @@ fn setup(n: usize) -> (ModelDef, ParamSet, ParamSet, ParamSet, ParamSet) {
 }
 
 fn main() {
-    println!("== bench_topology: one Algorithm-1 mask update ==");
+    let smoke = smoke_mode();
+    println!(
+        "== bench_topology: one Algorithm-1 mask update{} ==",
+        if smoke { " [SMOKE]" } else { "" }
+    );
+    // Smoke mode (CI): one small size, minimal reps — still exercises
+    // the counting-allocator zero-alloc gate below.
+    let sizes: &[usize] = if smoke {
+        &[10_000]
+    } else {
+        &[10_000, 100_000, 1_000_000, 4_000_000]
+    };
+    let reps = if smoke { 2 } else { 10 };
     let mut steady_state_ok = true;
-    for n in [10_000usize, 100_000, 1_000_000, 4_000_000] {
+    for n in sizes.iter().copied() {
         // ------- fresh scratch (the seed's allocation pattern) -------
         let (def, mut params, mut masks, grads, mut mom) = setup(n);
-        bench_to("topology", &format!("rigl_update/fresh_scratch/n={n}"), 10, || {
+        bench_to("topology", &format!("rigl_update/fresh_scratch/n={n}"), reps, || {
             update_masks(
                 &def,
                 &mut params,
@@ -100,7 +112,7 @@ fn main() {
         let (def, mut params, mut masks, grads, mut mom) = setup(n);
         let mut scratch = TopoScratch::default();
         let mut stats = UpdateStats::default();
-        bench_to("topology", &format!("rigl_update/reused_scratch/n={n}"), 10, || {
+        bench_to("topology", &format!("rigl_update/reused_scratch/n={n}"), reps, || {
             update_masks_scratch(
                 &def,
                 &mut params,
@@ -153,7 +165,7 @@ fn main() {
         // ------- SET random grow, reused scratch ---------------------
         let (def, mut params, mut masks, _, mut mom) = setup(n);
         let mut rng2 = Rng::new(7);
-        bench_to("topology", &format!("set_update/reused_scratch/n={n}"), 10, || {
+        bench_to("topology", &format!("set_update/reused_scratch/n={n}"), reps, || {
             update_masks_scratch(
                 &def,
                 &mut params,

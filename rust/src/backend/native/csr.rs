@@ -13,6 +13,40 @@
 //! per layer instead of an O(rows·cols) dense rescan — with all working
 //! storage in a caller-owned [`CsrScratch`] (allocation-free once warm,
 //! same discipline as `TopoScratch`).
+//!
+//! ## Block decomposition
+//!
+//! For multi-threaded kernels a topology can additionally carry a
+//! [`CsrBlocks`] decomposition ([`CsrTopo::build_blocks`]):
+//!
+//! * **row blocks** — nnz-balanced ranges of input rows; the work units
+//!   for the backward products and the sparse optimizer step (their
+//!   outputs partition by input row, so blocks never share an output).
+//! * **column blocks** — uniform ranges of output columns, with a
+//!   per-`(row, col-block)` sub-range index (`cb_end`) into `col_idx`;
+//!   the work units for the forward kernels (whose `y[c] +=`
+//!   accumulations partition by output column).
+//!
+//! `apply_swap` keeps the decomposition alive across topology updates:
+//! per-row-block nnz counts are patched incrementally from the drop/grow
+//! lists in O(k·log k) (binary search per index) and the column
+//! sub-range index is rebuilt in the same O(nnz + rows·ncb) pass class
+//! as the structural merge itself, so the PR-2 incremental-update
+//! invariant survives. The patched counts double as an integrity check:
+//! they must always equal a from-scratch recount over `row_ptr`
+//! (property-tested in `tests/threads_determinism.rs`), which catches
+//! drift bugs in the merge. When drift in the *distribution* (not the
+//! count) leaves one row block with >4× the mean nnz, boundaries are
+//! re-balanced deterministically from the structure alone.
+
+/// Default per-block nnz target: ~4K entries keep a block's indices +
+/// values + touched activation columns within L1/L2 while still
+/// yielding ≥`MAX_BLOCKS` blocks on every layer big enough to be worth
+/// threading.
+pub const TARGET_BLOCK_NNZ: usize = 4096;
+/// Cap on blocks per axis — a few work units per lane at the 8-thread
+/// design point; more just adds dispatch overhead.
+pub const MAX_BLOCKS: usize = 16;
 
 /// Sparse structure of one `(rows × cols)` row-major FC weight tensor.
 #[derive(Clone, Debug, Default)]
@@ -23,6 +57,52 @@ pub struct CsrTopo {
     pub row_ptr: Vec<u32>,
     /// Column indices, sorted within each row.
     pub col_idx: Vec<u32>,
+    /// Optional block decomposition for the parallel kernels (empty
+    /// until [`CsrTopo::build_blocks`]; serial paths ignore it).
+    pub blocks: CsrBlocks,
+}
+
+/// Block decomposition of a [`CsrTopo`] (see the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct CsrBlocks {
+    /// Row-block boundaries in row space: `nrb + 1` entries spanning
+    /// `[0, rows]`; block `t` covers rows `row_blk[t]..row_blk[t+1]`.
+    pub row_blk: Vec<u32>,
+    /// Per-row-block nnz, maintained incrementally by `apply_swap`.
+    pub rb_nnz: Vec<u32>,
+    /// Column-block boundaries in column space: `ncb + 1` entries
+    /// spanning `[0, cols]`.
+    pub col_blk: Vec<u32>,
+    /// Per-`(row, col-block)` END offsets into `col_idx`, row-major
+    /// (`rows × ncb`); populated only when `ncb > 1`. Block `j` of row
+    /// `r` spans `cb_end[r·ncb + j - 1]..cb_end[r·ncb + j]` (the `j=0`
+    /// start is `row_ptr[r]`).
+    pub cb_end: Vec<u32>,
+    /// Parameters the decomposition was built with (for deterministic
+    /// re-balancing).
+    pub target_nnz: usize,
+    pub max_blocks: usize,
+}
+
+impl CsrBlocks {
+    /// Whether a decomposition has been built.
+    pub fn is_built(&self) -> bool {
+        !self.row_blk.is_empty()
+    }
+
+    pub fn n_row_blocks(&self) -> usize {
+        self.row_blk.len().saturating_sub(1)
+    }
+
+    pub fn n_col_blocks(&self) -> usize {
+        self.col_blk.len().saturating_sub(1)
+    }
+
+    /// Row block containing `row`.
+    pub fn block_of_row(&self, row: usize) -> usize {
+        debug_assert!(self.is_built());
+        self.row_blk.partition_point(|&b| b <= row as u32) - 1
+    }
 }
 
 /// Reusable working storage for [`CsrTopo::apply_swap`] /
@@ -45,6 +125,7 @@ impl CsrTopo {
             cols,
             row_ptr: Vec::with_capacity(rows + 1),
             col_idx: Vec::new(),
+            blocks: CsrBlocks::default(),
         };
         topo.fill_from_mask(mask);
         topo
@@ -52,10 +133,98 @@ impl CsrTopo {
 
     /// Recompute structure from the mask in place (buffers keep
     /// capacity). Used by `Session::resync` after wholesale mask
-    /// replacement.
+    /// replacement. A built block decomposition is re-derived (this is
+    /// the wholesale O(rows·cols) path; balance from scratch).
     pub fn rebuild_from_mask(&mut self, mask: &[f32]) {
         debug_assert_eq!(mask.len(), self.rows * self.cols);
         self.fill_from_mask(mask);
+        if self.blocks.is_built() {
+            self.build_blocks_with(self.blocks.target_nnz, self.blocks.max_blocks);
+        }
+    }
+
+    /// Build the block decomposition with the default sizing
+    /// ([`TARGET_BLOCK_NNZ`], [`MAX_BLOCKS`]). Deterministic: depends
+    /// only on the structure, never on thread count or timing.
+    pub fn build_blocks(&mut self) {
+        self.build_blocks_with(TARGET_BLOCK_NNZ, MAX_BLOCKS);
+    }
+
+    /// Build the block decomposition with explicit sizing (tests sweep
+    /// block sizes to prove results are layout-independent).
+    pub fn build_blocks_with(&mut self, target_nnz: usize, max_blocks: usize) {
+        let nnz = self.col_idx.len();
+        let target_nnz = target_nnz.max(1);
+        let max_blocks = max_blocks.max(1);
+        let want = (nnz / target_nnz).clamp(1, max_blocks);
+
+        // Row blocks: greedy nnz-balanced cut points.
+        let nrb = want.min(self.rows.max(1));
+        let per = nnz.div_ceil(nrb).max(1);
+        let b = &mut self.blocks;
+        b.target_nnz = target_nnz;
+        b.max_blocks = max_blocks;
+        b.row_blk.clear();
+        b.rb_nnz.clear();
+        b.row_blk.push(0);
+        let mut acc = 0u32;
+        for r in 0..self.rows {
+            acc += self.row_ptr[r + 1] - self.row_ptr[r];
+            // Cut when the block is full — but never into more than nrb
+            // blocks total (the final block absorbs any remainder).
+            if acc as usize >= per && r + 1 < self.rows && b.rb_nnz.len() + 1 < nrb {
+                b.row_blk.push(r as u32 + 1);
+                b.rb_nnz.push(acc);
+                acc = 0;
+            }
+        }
+        b.row_blk.push(self.rows as u32);
+        b.rb_nnz.push(acc);
+        debug_assert_eq!(b.rb_nnz.iter().map(|&n| n as usize).sum::<usize>(), nnz);
+
+        // Column blocks: uniform boundaries (masks are column-uniform in
+        // expectation, and uniformity keeps `cb_end` lookups trivial).
+        let ncb = want.min(self.cols.max(1));
+        b.col_blk.clear();
+        for j in 0..=ncb {
+            b.col_blk.push((j * self.cols / ncb) as u32);
+        }
+        self.rebuild_cb_end();
+    }
+
+    /// Recompute the per-`(row, col-block)` sub-range index from the
+    /// current structure: one O(nnz + rows·ncb) merge walk.
+    fn rebuild_cb_end(&mut self) {
+        let ncb = self.blocks.n_col_blocks();
+        self.blocks.cb_end.clear();
+        if ncb <= 1 {
+            return; // a single column block is just row_ptr
+        }
+        self.blocks.cb_end.reserve(self.rows * ncb);
+        for r in 0..self.rows {
+            let mut k = self.row_ptr[r] as usize;
+            let end = self.row_ptr[r + 1] as usize;
+            for j in 0..ncb {
+                let limit = self.blocks.col_blk[j + 1];
+                while k < end && self.col_idx[k] < limit {
+                    k += 1;
+                }
+                self.blocks.cb_end.push(k as u32);
+            }
+        }
+    }
+
+    /// Entry range of column block `j` within row `r` (requires a built
+    /// decomposition with `ncb > 1`).
+    #[inline]
+    pub fn cb_range(&self, r: usize, j: usize) -> (usize, usize) {
+        let ncb = self.blocks.n_col_blocks();
+        let start = if j == 0 {
+            self.row_ptr[r] as usize
+        } else {
+            self.blocks.cb_end[r * ncb + j - 1] as usize
+        };
+        (start, self.blocks.cb_end[r * ncb + j] as usize)
     }
 
     fn fill_from_mask(&mut self, mask: &[f32]) {
@@ -155,6 +324,43 @@ impl CsrTopo {
         debug_assert_eq!(gi, s.grow_sorted.len(), "grown index out of range");
         std::mem::swap(&mut self.row_ptr, &mut s.new_ptr);
         std::mem::swap(&mut self.col_idx, &mut s.new_cols);
+        if self.blocks.is_built() {
+            self.patch_blocks(&s.drop_sorted, &s.grow_sorted);
+        }
+    }
+
+    /// Keep the block decomposition current after a swap: patch per-
+    /// row-block nnz from the exact drop/grow lists (O(k·log nrb); an
+    /// index in both lists cancels, matching the regrow semantics),
+    /// re-balance boundaries only if a block drifted past 4× the mean,
+    /// and refresh the column sub-range index.
+    fn patch_blocks(&mut self, dropped: &[u32], grown: &[u32]) {
+        let cols = self.cols as u32;
+        {
+            let b = &mut self.blocks;
+            for &f in dropped {
+                let t = b.block_of_row((f / cols) as usize);
+                b.rb_nnz[t] -= 1;
+            }
+            for &f in grown {
+                let t = b.block_of_row((f / cols) as usize);
+                b.rb_nnz[t] += 1;
+            }
+        }
+        debug_assert_eq!(
+            self.blocks.rb_nnz.iter().map(|&n| n as usize).sum::<usize>(),
+            self.nnz(),
+            "patched per-block nnz drifted from the structure"
+        );
+        let nrb = self.blocks.n_row_blocks();
+        let mean = (self.nnz() / nrb.max(1)).max(1);
+        let max = self.blocks.rb_nnz.iter().copied().max().unwrap_or(0) as usize;
+        if nrb > 1 && max > 4 * mean {
+            // Deterministic re-balance from the structure alone.
+            self.build_blocks_with(self.blocks.target_nnz, self.blocks.max_blocks);
+        } else {
+            self.rebuild_cb_end();
+        }
     }
 }
 
@@ -286,5 +492,140 @@ mod tests {
             assert_eq!(topo.row_ptr, want.row_ptr);
             assert_eq!(topo.col_idx, want.col_idx);
         }
+    }
+
+    /// The decomposition invariants a built topology must uphold at all
+    /// times: boundaries partition both axes, per-block nnz matches a
+    /// recount over `row_ptr`, and `cb_end` brackets exactly the
+    /// entries whose columns fall in each block.
+    fn check_blocks(t: &CsrTopo) {
+        let b = &t.blocks;
+        assert!(b.is_built());
+        assert_eq!(b.row_blk[0], 0);
+        assert_eq!(*b.row_blk.last().unwrap() as usize, t.rows);
+        assert_eq!(b.col_blk[0], 0);
+        assert_eq!(*b.col_blk.last().unwrap() as usize, t.cols);
+        assert!(b.row_blk.windows(2).all(|w| w[0] <= w[1]));
+        assert!(b.col_blk.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(b.rb_nnz.len(), b.n_row_blocks());
+        for (bi, (r0, r1)) in b.row_blk.windows(2).map(|w| (w[0], w[1])).enumerate() {
+            let want = t.row_ptr[r1 as usize] - t.row_ptr[r0 as usize];
+            assert_eq!(b.rb_nnz[bi], want, "rb_nnz[{bi}] drifted");
+        }
+        let ncb = b.n_col_blocks();
+        if ncb > 1 {
+            assert_eq!(b.cb_end.len(), t.rows * ncb);
+            for r in 0..t.rows {
+                for j in 0..ncb {
+                    let (s, e) = t.cb_range(r, j);
+                    assert!(s <= e && e <= t.row_ptr[r + 1] as usize);
+                    for &c in &t.col_idx[s..e] {
+                        assert!(c >= b.col_blk[j] && c < b.col_blk[j + 1]);
+                    }
+                }
+                // Block ranges tile the whole row.
+                assert_eq!(t.cb_range(r, 0).0, t.row_ptr[r] as usize);
+                assert_eq!(t.cb_range(r, ncb - 1).1, t.row_ptr[r + 1] as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn build_blocks_partitions_both_axes() {
+        let mut rng = Rng::new(0xB10C);
+        for &(rows, cols, density) in &[(20usize, 30usize, 0.3), (1, 5, 1.0), (40, 3, 0.1)] {
+            let mask = random_mask(&mut rng, rows, cols, density);
+            let mut t = CsrTopo::from_mask(&mask, rows, cols);
+            t.build_blocks_with(8, 4); // force multiple blocks
+            check_blocks(&t);
+            assert!(t.blocks.n_row_blocks() <= 4);
+            assert!(t.blocks.n_col_blocks() <= 4);
+        }
+    }
+
+    #[test]
+    fn tiny_layers_get_one_block() {
+        let mask = [1.0f32; 12];
+        let mut t = CsrTopo::from_mask(&mask, 3, 4);
+        t.build_blocks(); // 12 nnz ≪ TARGET_BLOCK_NNZ
+        assert_eq!(t.blocks.n_row_blocks(), 1);
+        assert_eq!(t.blocks.n_col_blocks(), 1);
+        assert!(t.blocks.cb_end.is_empty());
+        check_blocks(&t);
+    }
+
+    #[test]
+    fn apply_swap_patches_block_counts_incrementally() {
+        let mut rng = Rng::new(0xB10C2);
+        let (rows, cols) = (24usize, 18usize);
+        let mut mask = random_mask(&mut rng, rows, cols, 0.4);
+        let mut topo = CsrTopo::from_mask(&mask, rows, cols);
+        topo.build_blocks_with(16, 6);
+        let mut s = CsrScratch::default();
+        for _ in 0..30 {
+            let active: Vec<u32> = (0..mask.len())
+                .filter(|&i| mask[i] != 0.0)
+                .map(|i| i as u32)
+                .collect();
+            let mut dropped = active.clone();
+            rng.shuffle(&mut dropped);
+            dropped.truncate(active.len() / 4);
+            for &i in &dropped {
+                mask[i as usize] = 0.0;
+            }
+            let mut grown: Vec<u32> = (0..mask.len())
+                .filter(|&i| mask[i] == 0.0)
+                .map(|i| i as u32)
+                .collect();
+            rng.shuffle(&mut grown);
+            grown.truncate(dropped.len());
+            for &i in &grown {
+                mask[i as usize] = 1.0;
+            }
+            topo.apply_swap(&dropped, &grown, &mut s);
+            check_blocks(&topo);
+            let want = CsrTopo::from_mask(&mask, rows, cols);
+            assert_eq!(topo.row_ptr, want.row_ptr);
+            assert_eq!(topo.col_idx, want.col_idx);
+        }
+    }
+
+    #[test]
+    fn skewed_updates_trigger_deterministic_rebalance() {
+        // Start uniform, then move ALL nnz into the first rows: the
+        // 4×-mean trigger must eventually re-cut the boundaries, and two
+        // topologies fed the same swaps must agree exactly.
+        let (rows, cols) = (32usize, 8usize);
+        let mask: Vec<f32> = vec![1.0; rows * cols / 2]
+            .into_iter()
+            .chain(vec![0.0; rows * cols / 2])
+            .collect();
+        let mut a = CsrTopo::from_mask(&mask, rows, cols);
+        a.build_blocks_with(8, 8);
+        let mut b = a.clone();
+        let mut s = CsrScratch::default();
+        // Drop rows 4..16 entirely and regrow the same count into rows
+        // 16..28: one trailing block ends up with 6× the mean nnz.
+        let dropped: Vec<u32> = (4 * cols as u32..16 * cols as u32).collect();
+        let grown: Vec<u32> = (16 * cols as u32..16 * cols as u32 + dropped.len() as u32).collect();
+        a.apply_swap(&dropped, &grown, &mut s);
+        let mut s2 = CsrScratch::default();
+        b.apply_swap(&dropped, &grown, &mut s2);
+        check_blocks(&a);
+        assert_eq!(a.blocks.row_blk, b.blocks.row_blk, "rebalance not deterministic");
+        assert_eq!(a.blocks.rb_nnz, b.blocks.rb_nnz);
+        assert_eq!(a.blocks.cb_end, b.blocks.cb_end);
+    }
+
+    #[test]
+    fn rebuild_from_mask_rebuilds_blocks() {
+        let mut rng = Rng::new(0xB10C3);
+        let mask = random_mask(&mut rng, 10, 10, 0.5);
+        let mut t = CsrTopo::from_mask(&mask, 10, 10);
+        t.build_blocks_with(8, 4);
+        let mask2 = random_mask(&mut rng, 10, 10, 0.2);
+        t.rebuild_from_mask(&mask2);
+        check_blocks(&t);
+        assert_eq!(t.nnz(), mask2.iter().filter(|&&v| v != 0.0).count());
     }
 }

@@ -15,11 +15,126 @@
 //! structure once while its activation row stays cache-resident. Zero
 //! input activations (common after ReLU) short-circuit the forward and
 //! the weight-gradient accumulation.
+//!
+//! ## Parallel execution and the determinism contract
+//!
+//! Every hot kernel takes an [`Exec`]: `Exec::Serial` runs the flat
+//! scalar loop, `Exec::Pool` dispatches block work units onto a shared
+//! [`KernelPool`]. Results are **bit-identical** between the two — and
+//! across any thread count or block layout — because the decomposition
+//! never reorders a floating-point reduction:
+//!
+//! * work units partition the OUTPUT (column blocks for the forwards,
+//!   row blocks for the backward products and the optimizer step, batch
+//!   rows for softmax), so no two units touch the same element;
+//! * within a unit, each output element's accumulation runs in exactly
+//!   the flat loop's order (increasing input row for `y[c] +=`,
+//!   increasing batch row for `dw[k] +=`);
+//! * the one cross-unit reduction — the scalar loss — is a serial sum
+//!   of per-row losses in batch order, the same sequence the flat loop
+//!   produces.
+//!
+//! Tiny layers fall back to the flat path (`PAR_MIN_OPS`): a fork-join
+//! round costs ~µs, so LeNet-scale heads and small batches never pay
+//! it. The fallback is free to differ per call — flat and blocked are
+//! bitwise interchangeable. See `backend/native/README.md`.
+
+use crate::pool::KernelPool;
 
 use super::csr::CsrTopo;
 
-/// Forward: `y = x·W + bias` with `W` sparse. `y` is fully overwritten.
+/// Execution context for the kernels: serial, or fork-join work-unit
+/// dispatch on a shared [`KernelPool`].
+#[derive(Clone, Copy)]
+pub enum Exec<'p> {
+    Serial,
+    Pool(&'p KernelPool),
+}
+
+impl<'p> Exec<'p> {
+    /// Threads this context can bring to bear (1 for serial).
+    pub fn threads(&self) -> usize {
+        match self {
+            Exec::Serial => 1,
+            Exec::Pool(p) => p.threads(),
+        }
+    }
+
+    /// The pool, if parallel execution is worthwhile for a kernel doing
+    /// `ops` inner-loop operations — the autotune gate that keeps tiny
+    /// layers on the flat path.
+    fn pool_for(&self, ops: usize) -> Option<&'p KernelPool> {
+        match *self {
+            Exec::Pool(p) if p.threads() > 1 && ops >= PAR_MIN_OPS => Some(p),
+            _ => None,
+        }
+    }
+}
+
+/// Below this many fused multiply-adds a kernel runs flat. A fork-join
+/// round costs on the order of a few microseconds — around 16K MACs on
+/// any recent core — so smaller dispatches would regress, not help.
+const PAR_MIN_OPS: usize = 16 * 1024;
+
+/// Run `task(t)` for `t in 0..n_tasks` across the pool's lanes, load-
+/// balanced by an atomic cursor. Tasks must write disjoint output
+/// regions; since every per-element accumulation keeps the serial
+/// order, ANY task-to-lane assignment is bit-identical, so dynamic
+/// balancing costs nothing determinism-wise.
+fn dispatch(pool: &KernelPool, n_tasks: usize, task: &(dyn Fn(usize) + Sync)) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let cursor = AtomicUsize::new(0);
+    pool.fork_join(&|_lane| loop {
+        let t = cursor.fetch_add(1, Ordering::Relaxed);
+        if t >= n_tasks {
+            break;
+        }
+        task(t);
+    });
+}
+
+/// Raw mutable base pointer shared across tasks that write DISJOINT
+/// regions of one output slice.
+///
+/// SAFETY contract (upheld by every use in this module): each task
+/// derives a sub-slice no other task overlaps, and `dispatch` joins all
+/// lanes before the kernel returns, so no derived reference outlives
+/// the `&mut` borrow that produced the pointer and no two regions
+/// alias.
+#[derive(Clone, Copy)]
+struct MutPtr<T>(*mut T);
+unsafe impl<T> Send for MutPtr<T> {}
+unsafe impl<T> Sync for MutPtr<T> {}
+
+/// Where a forward kernel reads its weight values: the dense tensor
+/// (training, structure-only CSR) or the packed value array (serving,
+/// value-carrying CSR). Monomorphized, so both forwards compile to the
+/// same loop with only the load differing — which is what makes their
+/// outputs bit-identical on equal weights.
+trait WSource: Sync {
+    fn val(&self, k: usize, wrow: usize, c: usize) -> f32;
+}
+
+struct DenseW<'a>(&'a [f32]);
+impl WSource for DenseW<'_> {
+    #[inline(always)]
+    fn val(&self, _k: usize, wrow: usize, c: usize) -> f32 {
+        self.0[wrow + c]
+    }
+}
+
+struct CsrVals<'a>(&'a [f32]);
+impl WSource for CsrVals<'_> {
+    #[inline(always)]
+    fn val(&self, k: usize, _wrow: usize, _c: usize) -> f32 {
+        self.0[k]
+    }
+}
+
+/// Forward: `y = x·W + bias` with `W` sparse (values read from the
+/// dense tensor). `y` is fully overwritten.
 pub fn spmm_bias_fwd(
+    exec: Exec,
     x: &[f32],
     batch: usize,
     topo: &CsrTopo,
@@ -27,35 +142,19 @@ pub fn spmm_bias_fwd(
     bias: &[f32],
     y: &mut [f32],
 ) {
-    let (ind, outd) = (topo.rows, topo.cols);
-    debug_assert_eq!(x.len(), batch * ind);
-    debug_assert_eq!(y.len(), batch * outd);
-    debug_assert_eq!(bias.len(), outd);
-    for b in 0..batch {
-        let xrow = &x[b * ind..(b + 1) * ind];
-        let yrow = &mut y[b * outd..(b + 1) * outd];
-        yrow.copy_from_slice(bias);
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = i * outd;
-            for &c in topo.row(i) {
-                yrow[c as usize] += xv * w[wrow + c as usize];
-            }
-        }
-    }
+    spmm_fwd_impl(exec, x, batch, topo, &DenseW(w), bias, y);
 }
 
 /// Forward `y = x·W + bias` with `W` as a value-carrying CSR: `vals` is
 /// positionally parallel to `topo.col_idx`, so no dense weight tensor
 /// exists at all — the frozen serve artifact format (`serve::artifact`).
-/// Iteration order (batch → input row → structural entry) is identical
-/// to [`spmm_bias_fwd`], so logits are bit-identical to the training
-/// engine's forward on the same weights, and each batch row's
-/// accumulation is independent — batched execution is bit-identical to
-/// batch=1 (the micro-batcher's correctness contract).
+/// Iteration order is identical to [`spmm_bias_fwd`], so logits are
+/// bit-identical to the training engine's forward on the same weights,
+/// and each batch row's accumulation is independent — batched execution
+/// is bit-identical to batch=1 (the micro-batcher's correctness
+/// contract).
 pub fn csr_spmm_bias_fwd(
+    exec: Exec,
     x: &[f32],
     batch: usize,
     topo: &CsrTopo,
@@ -63,63 +162,190 @@ pub fn csr_spmm_bias_fwd(
     bias: &[f32],
     y: &mut [f32],
 ) {
+    debug_assert_eq!(vals.len(), topo.nnz());
+    spmm_fwd_impl(exec, x, batch, topo, &CsrVals(vals), bias, y);
+}
+
+/// Shared forward body. Parallel decomposition: COLUMN blocks — each
+/// task owns output columns `[c0, c1)` of every batch row, so `y[c] +=`
+/// accumulations stay within one task and run in increasing input-row
+/// order exactly like the flat loop.
+fn spmm_fwd_impl<S: WSource>(
+    exec: Exec,
+    x: &[f32],
+    batch: usize,
+    topo: &CsrTopo,
+    src: &S,
+    bias: &[f32],
+    y: &mut [f32],
+) {
     let (ind, outd) = (topo.rows, topo.cols);
     debug_assert_eq!(x.len(), batch * ind);
     debug_assert_eq!(y.len(), batch * outd);
     debug_assert_eq!(bias.len(), outd);
-    debug_assert_eq!(vals.len(), topo.nnz());
-    for b in 0..batch {
-        let xrow = &x[b * ind..(b + 1) * ind];
-        let yrow = &mut y[b * outd..(b + 1) * outd];
-        yrow.copy_from_slice(bias);
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let (start, end) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
-            for k in start..end {
-                yrow[topo.col_idx[k] as usize] += xv * vals[k];
+    let ncb = topo.blocks.n_col_blocks();
+    match exec.pool_for(batch * topo.nnz().max(outd)) {
+        Some(pool) if ncb > 1 => {
+            let yp = MutPtr(y.as_mut_ptr());
+            dispatch(pool, ncb, &|j| {
+                let c0 = topo.blocks.col_blk[j] as usize;
+                let c1 = topo.blocks.col_blk[j + 1] as usize;
+                for b in 0..batch {
+                    let xrow = &x[b * ind..(b + 1) * ind];
+                    // SAFETY: columns [c0, c1) of batch row b — a region
+                    // owned by task j alone (MutPtr contract).
+                    let yreg = unsafe {
+                        std::slice::from_raw_parts_mut(yp.0.add(b * outd + c0), c1 - c0)
+                    };
+                    yreg.copy_from_slice(&bias[c0..c1]);
+                    for (i, &xv) in xrow.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let wrow = i * outd;
+                        let (ks, ke) = topo.cb_range(i, j);
+                        for k in ks..ke {
+                            let c = topo.col_idx[k] as usize;
+                            yreg[c - c0] += xv * src.val(k, wrow, c);
+                        }
+                    }
+                }
+            });
+        }
+        _ => {
+            for b in 0..batch {
+                let xrow = &x[b * ind..(b + 1) * ind];
+                let yrow = &mut y[b * outd..(b + 1) * outd];
+                yrow.copy_from_slice(bias);
+                for (i, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let wrow = i * outd;
+                    let (ks, ke) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
+                    for k in ks..ke {
+                        let c = topo.col_idx[k] as usize;
+                        yrow[c] += xv * src.val(k, wrow, c);
+                    }
+                }
             }
         }
     }
 }
 
 /// Backward data product: `dx = dy·Wᵀ` with `W` sparse. `dx` is fully
-/// overwritten.
-pub fn spmm_back_dx(dy: &[f32], batch: usize, topo: &CsrTopo, w: &[f32], dx: &mut [f32]) {
+/// overwritten. Parallel decomposition: ROW blocks — `dx[b, i]` depends
+/// only on row `i`'s structure, so blocks own disjoint `dx` columns.
+pub fn spmm_back_dx(
+    exec: Exec,
+    dy: &[f32],
+    batch: usize,
+    topo: &CsrTopo,
+    w: &[f32],
+    dx: &mut [f32],
+) {
     let (ind, outd) = (topo.rows, topo.cols);
     debug_assert_eq!(dy.len(), batch * outd);
     debug_assert_eq!(dx.len(), batch * ind);
-    for b in 0..batch {
-        let dyrow = &dy[b * outd..(b + 1) * outd];
-        let dxrow = &mut dx[b * ind..(b + 1) * ind];
-        for (i, slot) in dxrow.iter_mut().enumerate() {
-            let wrow = i * outd;
-            let mut acc = 0.0f32;
-            for &c in topo.row(i) {
-                acc += w[wrow + c as usize] * dyrow[c as usize];
+    let nrb = topo.blocks.n_row_blocks();
+    match exec.pool_for(batch * topo.nnz().max(ind)) {
+        Some(pool) if nrb > 1 => {
+            let dxp = MutPtr(dx.as_mut_ptr());
+            dispatch(pool, nrb, &|t| {
+                let r0 = topo.blocks.row_blk[t] as usize;
+                let r1 = topo.blocks.row_blk[t + 1] as usize;
+                for b in 0..batch {
+                    let dyrow = &dy[b * outd..(b + 1) * outd];
+                    // SAFETY: elements [r0, r1) of batch row b — owned
+                    // by task t alone (MutPtr contract).
+                    let dreg = unsafe {
+                        std::slice::from_raw_parts_mut(dxp.0.add(b * ind + r0), r1 - r0)
+                    };
+                    for i in r0..r1 {
+                        let wrow = i * outd;
+                        let mut acc = 0.0f32;
+                        for &c in topo.row(i) {
+                            acc += w[wrow + c as usize] * dyrow[c as usize];
+                        }
+                        dreg[i - r0] = acc;
+                    }
+                }
+            });
+        }
+        _ => {
+            for b in 0..batch {
+                let dyrow = &dy[b * outd..(b + 1) * outd];
+                let dxrow = &mut dx[b * ind..(b + 1) * ind];
+                for (i, slot) in dxrow.iter_mut().enumerate() {
+                    let wrow = i * outd;
+                    let mut acc = 0.0f32;
+                    for &c in topo.row(i) {
+                        acc += w[wrow + c as usize] * dyrow[c as usize];
+                    }
+                    *slot = acc;
+                }
             }
-            *slot = acc;
         }
     }
 }
 
 /// Backward weight product at the active positions only:
 /// `dw_vals[k] += Σ_b x[b,i]·dy[b,o]` for the k-th structural entry
-/// `(i,o)`. `dw_vals` is parallel to `topo.col_idx`; the caller zeroes it.
-pub fn spmm_back_dw(x: &[f32], dy: &[f32], batch: usize, topo: &CsrTopo, dw_vals: &mut [f32]) {
+/// `(i,o)`. `dw_vals` is parallel to `topo.col_idx`; the caller zeroes
+/// it. Parallel decomposition: ROW blocks — entry `k` lives in exactly
+/// one row block's contiguous `k` range, and its per-`k` accumulation
+/// keeps the flat loop's increasing-batch order.
+pub fn spmm_back_dw(
+    exec: Exec,
+    x: &[f32],
+    dy: &[f32],
+    batch: usize,
+    topo: &CsrTopo,
+    dw_vals: &mut [f32],
+) {
     let (ind, outd) = (topo.rows, topo.cols);
     debug_assert_eq!(dw_vals.len(), topo.nnz());
-    for b in 0..batch {
-        let xrow = &x[b * ind..(b + 1) * ind];
-        let dyrow = &dy[b * outd..(b + 1) * outd];
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let (start, end) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
-            for k in start..end {
-                dw_vals[k] += xv * dyrow[topo.col_idx[k] as usize];
+    let nrb = topo.blocks.n_row_blocks();
+    match exec.pool_for(batch * topo.nnz()) {
+        Some(pool) if nrb > 1 => {
+            let dwp = MutPtr(dw_vals.as_mut_ptr());
+            dispatch(pool, nrb, &|t| {
+                let r0 = topo.blocks.row_blk[t] as usize;
+                let r1 = topo.blocks.row_blk[t + 1] as usize;
+                let k0 = topo.row_ptr[r0] as usize;
+                let k1 = topo.row_ptr[r1] as usize;
+                // SAFETY: entries [k0, k1) — the block's rows — owned by
+                // task t alone (MutPtr contract).
+                let dwreg = unsafe { std::slice::from_raw_parts_mut(dwp.0.add(k0), k1 - k0) };
+                for b in 0..batch {
+                    let xrow = &x[b * ind..(b + 1) * ind];
+                    let dyrow = &dy[b * outd..(b + 1) * outd];
+                    for i in r0..r1 {
+                        let xv = xrow[i];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let (ks, ke) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
+                        for k in ks..ke {
+                            dwreg[k - k0] += xv * dyrow[topo.col_idx[k] as usize];
+                        }
+                    }
+                }
+            });
+        }
+        _ => {
+            for b in 0..batch {
+                let xrow = &x[b * ind..(b + 1) * ind];
+                let dyrow = &dy[b * outd..(b + 1) * outd];
+                for (i, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let (ks, ke) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
+                    for k in ks..ke {
+                        dw_vals[k] += xv * dyrow[topo.col_idx[k] as usize];
+                    }
+                }
             }
         }
     }
@@ -127,8 +353,11 @@ pub fn spmm_back_dw(x: &[f32], dy: &[f32], batch: usize, topo: &CsrTopo, dw_vals
 
 /// Full dense weight gradient `dw[i,o] += Σ_b x[b,i]·dy[b,o]` — the RigL
 /// grow signal (∇ w.r.t. *every* connection, active or not). The caller
-/// zeroes `dw`. O(in·out·batch): paid only on mask-update steps.
+/// zeroes `dw`. O(in·out·batch): paid only on mask-update steps, and the
+/// heaviest single kernel in a RigL step — parallelized over uniform
+/// input-row chunks (dense work needs no nnz balancing).
 pub fn dense_back_dw(
+    exec: Exec,
     x: &[f32],
     dy: &[f32],
     batch: usize,
@@ -137,22 +366,59 @@ pub fn dense_back_dw(
     dw: &mut [f32],
 ) {
     debug_assert_eq!(dw.len(), in_dim * out_dim);
-    for b in 0..batch {
-        let xrow = &x[b * in_dim..(b + 1) * in_dim];
-        let dyrow = &dy[b * out_dim..(b + 1) * out_dim];
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let dwrow = &mut dw[i * out_dim..(i + 1) * out_dim];
-            for (slot, &d) in dwrow.iter_mut().zip(dyrow) {
-                *slot += xv * d;
+    match exec.pool_for(batch * in_dim * out_dim) {
+        Some(pool) => {
+            let n_tasks = (pool.threads() * 2).clamp(1, in_dim);
+            let chunk = in_dim.div_ceil(n_tasks);
+            let dwp = MutPtr(dw.as_mut_ptr());
+            dispatch(pool, n_tasks, &|t| {
+                let i0 = t * chunk;
+                let i1 = ((t + 1) * chunk).min(in_dim);
+                if i0 >= i1 {
+                    return;
+                }
+                // SAFETY: dense rows [i0, i1) — owned by task t alone
+                // (MutPtr contract).
+                let dreg = unsafe {
+                    std::slice::from_raw_parts_mut(dwp.0.add(i0 * out_dim), (i1 - i0) * out_dim)
+                };
+                for b in 0..batch {
+                    let xrow = &x[b * in_dim..(b + 1) * in_dim];
+                    let dyrow = &dy[b * out_dim..(b + 1) * out_dim];
+                    for i in i0..i1 {
+                        let xv = xrow[i];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        let drow = &mut dreg[(i - i0) * out_dim..(i - i0 + 1) * out_dim];
+                        for (slot, &d) in drow.iter_mut().zip(dyrow) {
+                            *slot += xv * d;
+                        }
+                    }
+                }
+            });
+        }
+        _ => {
+            for b in 0..batch {
+                let xrow = &x[b * in_dim..(b + 1) * in_dim];
+                let dyrow = &dy[b * out_dim..(b + 1) * out_dim];
+                for (i, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let dwrow = &mut dw[i * out_dim..(i + 1) * out_dim];
+                    for (slot, &d) in dwrow.iter_mut().zip(dyrow) {
+                        *slot += xv * d;
+                    }
+                }
             }
         }
     }
 }
 
-/// Bias gradient `db[o] = Σ_b dy[b,o]` (overwritten).
+/// Bias gradient `db[o] = Σ_b dy[b,o]` (overwritten). Always serial:
+/// O(batch·out) streaming adds are memory-bound and smaller than one
+/// fork-join round for every model in the zoo.
 pub fn bias_grad(dy: &[f32], batch: usize, out_dim: usize, db: &mut [f32]) {
     debug_assert_eq!(db.len(), out_dim);
     db.fill(0.0);
@@ -164,7 +430,7 @@ pub fn bias_grad(dy: &[f32], batch: usize, out_dim: usize, db: &mut [f32]) {
     }
 }
 
-/// In-place ReLU.
+/// In-place ReLU. Serial: memory-bound.
 pub fn relu(h: &mut [f32]) {
     for v in h {
         if *v < 0.0 {
@@ -174,7 +440,7 @@ pub fn relu(h: &mut [f32]) {
 }
 
 /// ReLU backward: zero `dh` wherever the post-activation `act` is ≤ 0
-/// (matches `jax.nn.relu`'s zero subgradient at 0).
+/// (matches `jax.nn.relu`'s zero subgradient at 0). Serial: memory-bound.
 pub fn relu_bwd(dh: &mut [f32], act: &[f32]) {
     for (d, &a) in dh.iter_mut().zip(act) {
         if a <= 0.0 {
@@ -183,10 +449,46 @@ pub fn relu_bwd(dh: &mut [f32], act: &[f32]) {
     }
 }
 
+/// One row of label-smoothed softmax cross-entropy: writes the logit
+/// gradient into `drow` and returns the row's loss contribution. Both
+/// the serial and parallel entry points run exactly this sequence of
+/// operations per row, which is what keeps them bit-identical.
+#[inline]
+fn xent_row(
+    row: &[f32],
+    drow: &mut [f32],
+    target: usize,
+    smoothing: f32,
+    uniform: f32,
+    inv_b: f32,
+) -> f64 {
+    debug_assert!(target < row.len());
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f32;
+    for &l in row {
+        z += (l - m).exp();
+    }
+    let lse = m + z.ln();
+    let nll = (lse - row[target]) as f64;
+    let loss = if smoothing > 0.0 {
+        let mean_nll: f64 = row.iter().map(|&l| (lse - l) as f64).sum::<f64>() / row.len() as f64;
+        (1.0 - smoothing as f64) * nll + smoothing as f64 * mean_nll
+    } else {
+        nll
+    };
+    for (j, (slot, &l)) in drow.iter_mut().zip(row).enumerate() {
+        let p = (l - lse).exp();
+        let hard = if j == target { 1.0 - smoothing } else { 0.0 };
+        *slot = (p - hard - uniform) * inv_b;
+    }
+    loss
+}
+
 /// Label-smoothed softmax cross-entropy, mean over the batch (nats), and
 /// its gradient w.r.t. the logits (already scaled by 1/batch) written to
 /// `dlogits`. Mirrors `smoothed_xent` + `jax.value_and_grad` on the
-/// python side: `d/dl_j = p_j − ((1−s)·1{j=y} + s/K)`.
+/// python side: `d/dl_j = p_j − ((1−s)·1{j=y} + s/K)`. Serial reference;
+/// the training session uses [`softmax_xent_grad_par`].
 pub fn softmax_xent_grad(
     logits: &[f32],
     batch: usize,
@@ -204,34 +506,71 @@ pub fn softmax_xent_grad(
     for b in 0..batch {
         let row = &logits[b * classes..(b + 1) * classes];
         let drow = &mut dlogits[b * classes..(b + 1) * classes];
-        let target = y[b] as usize;
-        debug_assert!(target < classes);
-        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut z = 0.0f32;
-        for &l in row {
-            z += (l - m).exp();
-        }
-        let lse = m + z.ln();
-        let nll = (lse - row[target]) as f64;
-        if smoothing > 0.0 {
-            let mean_nll: f64 =
-                row.iter().map(|&l| (lse - l) as f64).sum::<f64>() / classes as f64;
-            loss_sum += (1.0 - smoothing as f64) * nll + smoothing as f64 * mean_nll;
-        } else {
-            loss_sum += nll;
-        }
-        for (j, (slot, &l)) in drow.iter_mut().zip(row).enumerate() {
-            let p = (l - lse).exp();
-            let hard = if j == target { 1.0 - smoothing } else { 0.0 };
-            *slot = (p - hard - uniform) * inv_b;
-        }
+        loss_sum += xent_row(row, drow, y[b] as usize, smoothing, uniform, inv_b);
     }
     loss_sum / batch as f64
 }
 
+/// [`softmax_xent_grad`] with batch rows fanned over the pool.
+/// `row_loss` (caller-owned, length `batch`) holds per-row losses so
+/// the final reduction is a serial sum in batch order — the same f64
+/// sequence as the flat loop, hence bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_xent_grad_par(
+    exec: Exec,
+    logits: &[f32],
+    batch: usize,
+    classes: usize,
+    y: &[i32],
+    smoothing: f32,
+    dlogits: &mut [f32],
+    row_loss: &mut [f64],
+) -> f64 {
+    debug_assert_eq!(row_loss.len(), batch);
+    // exp/ln make softmax rows ~an order heavier than a MAC; weigh that
+    // into the autotune gate.
+    match exec.pool_for(batch * classes * 8) {
+        Some(pool) if batch > 1 => {
+            debug_assert_eq!(logits.len(), batch * classes);
+            debug_assert_eq!(dlogits.len(), batch * classes);
+            debug_assert_eq!(y.len(), batch);
+            let inv_b = 1.0f32 / batch as f32;
+            let uniform = smoothing / classes as f32;
+            let n_tasks = pool.threads().clamp(1, batch);
+            let chunk = batch.div_ceil(n_tasks);
+            let dlp = MutPtr(dlogits.as_mut_ptr());
+            let rlp = MutPtr(row_loss.as_mut_ptr());
+            dispatch(pool, n_tasks, &|t| {
+                let b0 = t * chunk;
+                let b1 = ((t + 1) * chunk).min(batch);
+                if b0 >= b1 {
+                    return;
+                }
+                // SAFETY: batch rows [b0, b1) of dlogits and row_loss —
+                // owned by task t alone (MutPtr contract).
+                let dreg = unsafe {
+                    std::slice::from_raw_parts_mut(dlp.0.add(b0 * classes), (b1 - b0) * classes)
+                };
+                let lreg = unsafe { std::slice::from_raw_parts_mut(rlp.0.add(b0), b1 - b0) };
+                for b in b0..b1 {
+                    let row = &logits[b * classes..(b + 1) * classes];
+                    let drow = &mut dreg[(b - b0) * classes..(b - b0 + 1) * classes];
+                    lreg[b - b0] = xent_row(row, drow, y[b] as usize, smoothing, uniform, inv_b);
+                }
+            });
+            let mut loss_sum = 0.0f64;
+            for &l in row_loss.iter() {
+                loss_sum += l;
+            }
+            loss_sum / batch as f64
+        }
+        _ => softmax_xent_grad(logits, batch, classes, y, smoothing, dlogits),
+    }
+}
+
 /// Eval metrics for classification: `(Σ plain cross-entropy, Σ correct)`,
 /// mirroring `classify_metrics` (argmax ties break to the first index,
-/// like `jnp.argmax`).
+/// like `jnp.argmax`). Serial: eval is off the hot path.
 pub fn xent_metrics(logits: &[f32], batch: usize, classes: usize, y: &[i32]) -> (f64, f64) {
     let (mut nll_sum, mut correct) = (0.0f64, 0.0f64);
     for b in 0..batch {
@@ -261,9 +600,12 @@ pub fn xent_metrics(logits: &[f32], batch: usize, classes: usize, y: &[i32]) -> 
 /// mirroring the sgdm train artifact exactly:
 /// `g = dw + wd·q; v ← µ·v + g; q ← q − lr·v` (off-mask entries are zero
 /// in `w`, `v` AND `dw`, so skipping them reproduces the artifact's
-/// `(·)·m` re-masking for free).
+/// `(·)·m` re-masking for free). Parallel decomposition: ROW blocks —
+/// the update is elementwise over entries, and a block's flat positions
+/// `i·cols + c` with `i ∈ [r0, r1)` never leave its region.
 #[allow(clippy::too_many_arguments)]
 pub fn sgdm_update_sparse(
+    exec: Exec,
     topo: &CsrTopo,
     w: &mut [f32],
     v: &mut [f32],
@@ -273,20 +615,54 @@ pub fn sgdm_update_sparse(
     weight_decay: f32,
 ) {
     debug_assert_eq!(dw_vals.len(), topo.nnz());
-    for i in 0..topo.rows {
-        let wrow = i * topo.cols;
-        let (start, end) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
-        for k in start..end {
-            let f = wrow + topo.col_idx[k] as usize;
-            let g = dw_vals[k] + weight_decay * w[f];
-            let v2 = momentum * v[f] + g;
-            v[f] = v2;
-            w[f] -= lr * v2;
+    let nrb = topo.blocks.n_row_blocks();
+    match exec.pool_for(topo.nnz() * 4) {
+        Some(pool) if nrb > 1 => {
+            let cols = topo.cols;
+            let wp = MutPtr(w.as_mut_ptr());
+            let vp = MutPtr(v.as_mut_ptr());
+            dispatch(pool, nrb, &|t| {
+                let r0 = topo.blocks.row_blk[t] as usize;
+                let r1 = topo.blocks.row_blk[t + 1] as usize;
+                // SAFETY: flat positions [r0·cols, r1·cols) of w and v —
+                // owned by task t alone (MutPtr contract).
+                let wreg = unsafe {
+                    std::slice::from_raw_parts_mut(wp.0.add(r0 * cols), (r1 - r0) * cols)
+                };
+                let vreg = unsafe {
+                    std::slice::from_raw_parts_mut(vp.0.add(r0 * cols), (r1 - r0) * cols)
+                };
+                for i in r0..r1 {
+                    let wrow = (i - r0) * cols;
+                    let (ks, ke) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
+                    for k in ks..ke {
+                        let f = wrow + topo.col_idx[k] as usize;
+                        let g = dw_vals[k] + weight_decay * wreg[f];
+                        let v2 = momentum * vreg[f] + g;
+                        vreg[f] = v2;
+                        wreg[f] -= lr * v2;
+                    }
+                }
+            });
+        }
+        _ => {
+            for i in 0..topo.rows {
+                let wrow = i * topo.cols;
+                let (ks, ke) = (topo.row_ptr[i] as usize, topo.row_ptr[i + 1] as usize);
+                for k in ks..ke {
+                    let f = wrow + topo.col_idx[k] as usize;
+                    let g = dw_vals[k] + weight_decay * w[f];
+                    let v2 = momentum * v[f] + g;
+                    v[f] = v2;
+                    w[f] -= lr * v2;
+                }
+            }
         }
     }
 }
 
-/// SGD-with-momentum over a dense 1-D tensor (biases).
+/// SGD-with-momentum over a dense 1-D tensor (biases). Serial: biases
+/// are tiny.
 pub fn sgdm_update_dense(
     w: &mut [f32],
     v: &mut [f32],
@@ -320,7 +696,7 @@ mod tests {
         y
     }
 
-    /// Random masked layer: returns (mask, masked weights, topo).
+    /// Random masked layer: returns (masked weights, topo).
     fn setup(rng: &mut Rng, ind: usize, outd: usize, density: f64) -> (Vec<f32>, CsrTopo) {
         let mut w = vec![0.0f32; ind * outd];
         let mut mask = vec![0.0f32; ind * outd];
@@ -344,7 +720,7 @@ mod tests {
             let x: Vec<f32> = (0..b * ind).map(|_| rng.next_f32() - 0.3).collect();
             let bias: Vec<f32> = (0..outd).map(|_| rng.next_f32()).collect();
             let mut y = vec![0.0f32; b * outd];
-            spmm_bias_fwd(&x, b, &topo, &w, &bias, &mut y);
+            spmm_bias_fwd(Exec::Serial, &x, b, &topo, &w, &bias, &mut y);
             let mut want = dense_mm(&x, &w, b, ind, outd);
             for bi in 0..b {
                 for o in 0..outd {
@@ -375,16 +751,24 @@ mod tests {
             let x: Vec<f32> = (0..b * ind).map(|_| rng.next_f32() - 0.3).collect();
             let bias: Vec<f32> = (0..outd).map(|_| rng.next_f32()).collect();
             let mut y_dense = vec![0.0f32; b * outd];
-            spmm_bias_fwd(&x, b, &topo, &w, &bias, &mut y_dense);
+            spmm_bias_fwd(Exec::Serial, &x, b, &topo, &w, &bias, &mut y_dense);
             let mut y_csr = vec![0.0f32; b * outd];
-            csr_spmm_bias_fwd(&x, b, &topo, &vals, &bias, &mut y_csr);
+            csr_spmm_bias_fwd(Exec::Serial, &x, b, &topo, &vals, &bias, &mut y_csr);
             for (a, e) in y_csr.iter().zip(&y_dense) {
                 assert_eq!(a.to_bits(), e.to_bits());
             }
             // Row independence: batch=1 execution per row, bit-identical.
             for bi in 0..b {
                 let mut y1 = vec![0.0f32; outd];
-                csr_spmm_bias_fwd(&x[bi * ind..(bi + 1) * ind], 1, &topo, &vals, &bias, &mut y1);
+                csr_spmm_bias_fwd(
+                    Exec::Serial,
+                    &x[bi * ind..(bi + 1) * ind],
+                    1,
+                    &topo,
+                    &vals,
+                    &bias,
+                    &mut y1,
+                );
                 for (a, e) in y1.iter().zip(&y_csr[bi * outd..(bi + 1) * outd]) {
                     assert_eq!(a.to_bits(), e.to_bits());
                 }
@@ -399,7 +783,7 @@ mod tests {
         let (w, topo) = setup(&mut rng, ind, outd, 0.5);
         let dy: Vec<f32> = (0..b * outd).map(|_| rng.next_f32() - 0.5).collect();
         let mut dx = vec![9.0f32; b * ind];
-        spmm_back_dx(&dy, b, &topo, &w, &mut dx);
+        spmm_back_dx(Exec::Serial, &dy, b, &topo, &w, &mut dx);
         // dx = dy · Wᵀ
         let mut want = vec![0.0f32; b * ind];
         for bi in 0..b {
@@ -422,9 +806,9 @@ mod tests {
         let x: Vec<f32> = (0..b * ind).map(|_| rng.next_f32() - 0.5).collect();
         let dy: Vec<f32> = (0..b * outd).map(|_| rng.next_f32() - 0.5).collect();
         let mut dw_vals = vec![0.0f32; topo.nnz()];
-        spmm_back_dw(&x, &dy, b, &topo, &mut dw_vals);
+        spmm_back_dw(Exec::Serial, &x, &dy, b, &topo, &mut dw_vals);
         let mut dense = vec![0.0f32; ind * outd];
-        dense_back_dw(&x, &dy, b, ind, outd, &mut dense);
+        dense_back_dw(Exec::Serial, &x, &dy, b, ind, outd, &mut dense);
         for i in 0..ind {
             for (k, &c) in topo.row(i).iter().enumerate() {
                 let kk = topo.row_ptr[i] as usize + k;
@@ -481,7 +865,7 @@ mod tests {
         let mut v = [0.1f32, 0.0, 0.0, -0.2];
         let dw_vals = [0.3f32, 0.4, 0.5]; // entries (0,0) (1,0) (1,1)
         let (lr, mu, wd) = (0.1f32, 0.9f32, 0.01f32);
-        sgdm_update_sparse(&topo, &mut w, &mut v, &dw_vals, lr, mu, wd);
+        sgdm_update_sparse(Exec::Serial, &topo, &mut w, &mut v, &dw_vals, lr, mu, wd);
         // (0,0): g=0.3+0.01·1=0.31, v=0.09+0.31=0.4, w=1−0.04=0.96
         assert!((v[0] - 0.4).abs() < 1e-6);
         assert!((w[0] - 0.96).abs() < 1e-6);
@@ -501,5 +885,150 @@ mod tests {
         let mut dh = [5.0f32, 5.0, 5.0, 5.0];
         relu_bwd(&mut dh, &h);
         assert_eq!(dh, [5.0, 0.0, 0.0, 5.0]);
+    }
+
+    // ---------------------------------------------------------------
+    // Parallel vs serial bit-identity. Layers here are sized past the
+    // PAR_MIN_OPS autotune floor so the pool paths genuinely engage,
+    // and blocks are built with small targets to force many work units.
+    // ---------------------------------------------------------------
+
+    /// A layer big enough that every kernel's pool path engages.
+    fn big_setup(rng: &mut Rng, density: f64) -> (usize, usize, Vec<f32>, CsrTopo) {
+        let (ind, outd) = (96usize, 80usize);
+        let (w, mut topo) = setup(rng, ind, outd, density);
+        topo.build_blocks_with(256, 8); // force multi-block decomposition
+        (ind, outd, w, topo)
+    }
+
+    #[test]
+    fn parallel_forward_bit_identical_to_serial_any_threads() {
+        let mut rng = Rng::new(0xF00);
+        for &density in &[0.1f64, 0.6, 1.0] {
+            let (ind, outd, w, topo) = big_setup(&mut rng, density);
+            let batch = 8;
+            let x: Vec<f32> = (0..batch * ind).map(|_| rng.next_f32() - 0.4).collect();
+            let bias: Vec<f32> = (0..outd).map(|_| rng.next_f32()).collect();
+            let mut vals = Vec::with_capacity(topo.nnz());
+            for i in 0..ind {
+                for &c in topo.row(i) {
+                    vals.push(w[i * outd + c as usize]);
+                }
+            }
+            let mut y_ser = vec![0.0f32; batch * outd];
+            spmm_bias_fwd(Exec::Serial, &x, batch, &topo, &w, &bias, &mut y_ser);
+            for threads in [2usize, 3, 8] {
+                let pool = KernelPool::new(threads);
+                let mut y_par = vec![7.0f32; batch * outd];
+                spmm_bias_fwd(Exec::Pool(&pool), &x, batch, &topo, &w, &bias, &mut y_par);
+                for (a, e) in y_par.iter().zip(&y_ser) {
+                    assert_eq!(a.to_bits(), e.to_bits(), "t={threads} S={density}");
+                }
+                let mut y_csr = vec![-3.0f32; batch * outd];
+                csr_spmm_bias_fwd(Exec::Pool(&pool), &x, batch, &topo, &vals, &bias, &mut y_csr);
+                for (a, e) in y_csr.iter().zip(&y_ser) {
+                    assert_eq!(a.to_bits(), e.to_bits(), "csr t={threads} S={density}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_backwards_bit_identical_to_serial() {
+        let mut rng = Rng::new(0xF01);
+        let (ind, outd, w, topo) = big_setup(&mut rng, 0.5);
+        let batch = 8;
+        let x: Vec<f32> = (0..batch * ind)
+            .map(|_| if rng.next_f64() < 0.3 { 0.0 } else { rng.next_f32() })
+            .collect();
+        let dy: Vec<f32> = (0..batch * outd).map(|_| rng.next_f32() - 0.5).collect();
+
+        let mut dx_ser = vec![0.0f32; batch * ind];
+        spmm_back_dx(Exec::Serial, &dy, batch, &topo, &w, &mut dx_ser);
+        let mut dw_ser = vec![0.0f32; topo.nnz()];
+        spmm_back_dw(Exec::Serial, &x, &dy, batch, &topo, &mut dw_ser);
+        let mut dd_ser = vec![0.0f32; ind * outd];
+        dense_back_dw(Exec::Serial, &x, &dy, batch, ind, outd, &mut dd_ser);
+
+        for threads in [2usize, 8] {
+            let pool = KernelPool::new(threads);
+            let exec = Exec::Pool(&pool);
+            let mut dx = vec![1.0f32; batch * ind];
+            spmm_back_dx(exec, &dy, batch, &topo, &w, &mut dx);
+            let mut dw = vec![0.0f32; topo.nnz()];
+            spmm_back_dw(exec, &x, &dy, batch, &topo, &mut dw);
+            let mut dd = vec![0.0f32; ind * outd];
+            dense_back_dw(exec, &x, &dy, batch, ind, outd, &mut dd);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&dx), bits(&dx_ser), "dx t={threads}");
+            assert_eq!(bits(&dw), bits(&dw_ser), "dw t={threads}");
+            assert_eq!(bits(&dd), bits(&dd_ser), "dense t={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_sgdm_and_softmax_bit_identical_to_serial() {
+        let mut rng = Rng::new(0xF02);
+        let (ind, outd, w0, topo) = big_setup(&mut rng, 0.6);
+        let v0: Vec<f32> = (0..ind * outd).map(|_| rng.next_f32() * 0.1).collect();
+        let dw: Vec<f32> = (0..topo.nnz()).map(|_| rng.next_f32() - 0.5).collect();
+        let (mut w_ser, mut v_ser) = (w0.clone(), v0.clone());
+        sgdm_update_sparse(Exec::Serial, &topo, &mut w_ser, &mut v_ser, &dw, 0.1, 0.9, 1e-4);
+        for threads in [2usize, 8] {
+            let pool = KernelPool::new(threads);
+            let (mut w, mut v) = (w0.clone(), v0.clone());
+            sgdm_update_sparse(Exec::Pool(&pool), &topo, &mut w, &mut v, &dw, 0.1, 0.9, 1e-4);
+            let bits = |s: &[f32]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&w), bits(&w_ser), "w t={threads}");
+            assert_eq!(bits(&v), bits(&v_ser), "v t={threads}");
+        }
+
+        // Softmax: batch × classes large enough to engage the pool.
+        let (batch, classes) = (64usize, 40usize);
+        let logits: Vec<f32> = (0..batch * classes).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let y: Vec<i32> = (0..batch).map(|_| rng.next_below(classes) as i32).collect();
+        for &s in &[0.0f32, 0.1] {
+            let mut d_ser = vec![0.0f32; batch * classes];
+            let l_ser = softmax_xent_grad(&logits, batch, classes, &y, s, &mut d_ser);
+            for threads in [2usize, 8] {
+                let pool = KernelPool::new(threads);
+                let mut d = vec![5.0f32; batch * classes];
+                let mut row_loss = vec![0.0f64; batch];
+                let l = softmax_xent_grad_par(
+                    Exec::Pool(&pool),
+                    &logits,
+                    batch,
+                    classes,
+                    &y,
+                    s,
+                    &mut d,
+                    &mut row_loss,
+                );
+                assert_eq!(l.to_bits(), l_ser.to_bits(), "loss t={threads} s={s}");
+                for (a, e) in d.iter().zip(&d_ser) {
+                    assert_eq!(a.to_bits(), e.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_exec_without_blocks_falls_back_to_flat() {
+        // A topology that never had build_blocks called still executes
+        // correctly (flat) under a pool exec.
+        let mut rng = Rng::new(0xF03);
+        let (w, topo) = setup(&mut rng, 96, 80, 0.5);
+        assert!(!topo.blocks.is_built());
+        let batch = 8;
+        let x: Vec<f32> = (0..batch * 96).map(|_| rng.next_f32()).collect();
+        let bias = vec![0.1f32; 80];
+        let mut y_ser = vec![0.0f32; batch * 80];
+        spmm_bias_fwd(Exec::Serial, &x, batch, &topo, &w, &bias, &mut y_ser);
+        let pool = KernelPool::new(4);
+        let mut y_par = vec![0.0f32; batch * 80];
+        spmm_bias_fwd(Exec::Pool(&pool), &x, batch, &topo, &w, &bias, &mut y_par);
+        for (a, e) in y_par.iter().zip(&y_ser) {
+            assert_eq!(a.to_bits(), e.to_bits());
+        }
     }
 }

@@ -36,16 +36,33 @@
 //! Mask updates arrive as exact drop/grow lists via
 //! [`Session::masks_updated`] (wired from `topology::update_masks_visit`
 //! through the trainer), and each CSR view is patched incrementally in
-//! O(nnz + k·log k); nnz is conserved by construction because the view
-//! mirrors the mask the topology engine maintains.
+//! O(nnz + k·log k) — including its block decomposition — so nnz is
+//! conserved by construction because the view mirrors the mask the
+//! topology engine maintains.
+//!
+//! ## Intra-step threading
+//!
+//! [`NativeBackend::with_threads`] attaches a shared
+//! [`pool::KernelPool`](crate::pool::KernelPool); every session opened
+//! on the backend dispatches row/column-block work units onto it (see
+//! `kernels` and `backend/native/README.md`). Results are bit-identical
+//! to `threads = 1` at any thread count — the determinism tests in
+//! `tests/threads_determinism.rs` assert whole-run equality — so
+//! `--threads` is purely a wall-clock knob, composing with the
+//! coordinator's inter-run `--jobs` fan-out (sessions sharing one pool
+//! serialize their fork-join rounds).
 
 pub mod csr;
 pub mod kernels;
 
+use std::sync::Arc;
+
 use anyhow::{bail, ensure, Result};
 
 use self::csr::{CsrScratch, CsrTopo};
+use self::kernels::Exec;
 use crate::model::{ElemType, Kind, Manifest, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
+use crate::pool::KernelPool;
 use crate::train::{Batch, TrainState};
 
 use super::{Backend, BackendKind, Session};
@@ -122,13 +139,23 @@ pub struct NativeBackend {
     momentum: f32,
     weight_decay: f32,
     label_smoothing: f32,
+    /// Shared fork-join pool for intra-step parallelism (None = serial).
+    pool: Option<Arc<KernelPool>>,
 }
 
 impl NativeBackend {
-    /// Validate a model for native execution. Accepted: classification,
-    /// SGD+momentum, rank-2 f32 input, specs forming an `[fc, bias]`
-    /// chain whose dimensions connect input → classes.
+    /// Validate a model for serial native execution. Accepted:
+    /// classification, SGD+momentum, rank-2 f32 input, specs forming an
+    /// `[fc, bias]` chain whose dimensions connect input → classes.
     pub fn new(def: &ModelDef) -> Result<Self> {
+        Self::with_threads(def, 1)
+    }
+
+    /// Like [`NativeBackend::new`] with `threads` kernel lanes: every
+    /// session dispatches block work units onto one shared pool.
+    /// `threads <= 1` is the strictly serial path (no pool exists);
+    /// results are bit-identical either way.
+    pub fn with_threads(def: &ModelDef, threads: usize) -> Result<Self> {
         ensure!(
             def.optimizer == Optimizer::SgdMomentum,
             "native backend: model {:?} uses {:?}; only SGD+momentum is supported",
@@ -146,7 +173,17 @@ impl NativeBackend {
             momentum,
             weight_decay: def.hyper("weight_decay").unwrap_or(0.0) as f32,
             label_smoothing: def.hyper("label_smoothing").unwrap_or(0.0) as f32,
+            pool: (threads > 1).then(|| Arc::new(KernelPool::new(threads))),
         })
+    }
+
+    /// Kernel lanes this backend executes with.
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.threads())
+    }
+
+    fn exec(&self) -> Exec<'_> {
+        self.pool.as_deref().map_or(Exec::Serial, Exec::Pool)
     }
 
     fn classes(&self) -> usize {
@@ -182,6 +219,9 @@ struct NativeSession<'a> {
     dw_vals: Vec<Vec<f32>>,
     /// Bias gradients.
     db: Vec<Vec<f32>>,
+    /// Per-row loss scratch for the parallel softmax (batch-ordered
+    /// reduction keeps the loss bit-identical to serial).
+    row_loss: Vec<f64>,
 }
 
 impl<'a> NativeSession<'a> {
@@ -191,11 +231,17 @@ impl<'a> NativeSession<'a> {
         let mut topos = Vec::with_capacity(be.layers.len());
         for (l, lay) in be.layers.iter().enumerate() {
             spec_layer[lay.w] = Some(l);
-            topos.push(CsrTopo::from_mask(
+            let mut topo = CsrTopo::from_mask(
                 &state.masks.tensors[lay.w],
                 lay.in_dim,
                 lay.out_dim,
-            ));
+            );
+            // Block decomposition for the parallel kernels; maintained
+            // incrementally across mask updates by apply_swap. Built
+            // even in serial mode (cheap, and keeps the structures the
+            // determinism tests compare identical across thread counts).
+            topo.build_blocks();
+            topos.push(topo);
         }
         let dw_vals = topos.iter().map(|t| vec![0.0; t.nnz()]).collect();
         NativeSession {
@@ -208,6 +254,7 @@ impl<'a> NativeSession<'a> {
             dw_vals,
             db: be.layers.iter().map(|l| vec![0.0; l.out_dim]).collect(),
             topos,
+            row_loss: vec![0.0; batch],
         }
     }
 
@@ -229,12 +276,14 @@ impl<'a> NativeSession<'a> {
 
     /// Forward through every layer; logits land in `acts.last()`.
     fn forward(&mut self, state: &TrainState, x: &[f32]) {
+        let exec = self.be.exec();
         for l in 0..self.be.layers.len() {
             let lay = self.be.layers[l];
             let (prev, rest) = self.acts.split_at_mut(l);
             let input: &[f32] = if l == 0 { x } else { &prev[l - 1] };
             let y = &mut rest[0];
             kernels::spmm_bias_fwd(
+                exec,
                 input,
                 self.batch,
                 &self.topos[l],
@@ -254,6 +303,7 @@ impl<'a> NativeSession<'a> {
     /// bias grads, then the data gradient chained down with the ReLU
     /// mask.
     fn backward(&mut self, state: &TrainState, x: &[f32], mut dense_dw: Option<&mut ParamSet>) {
+        let exec = self.be.exec();
         for l in (0..self.be.layers.len()).rev() {
             let lay = self.be.layers[l];
             let (dprev, dcur) = self.dbuf.split_at_mut(l);
@@ -263,6 +313,7 @@ impl<'a> NativeSession<'a> {
                 Some(grads) if self.be.def.specs[lay.w].sparsifiable => {
                     // Grow signal: ∇ w.r.t. every connection.
                     kernels::dense_back_dw(
+                        exec,
                         input,
                         dy,
                         self.batch,
@@ -274,12 +325,20 @@ impl<'a> NativeSession<'a> {
                 Some(_) => {}
                 None => {
                     self.dw_vals[l].fill(0.0);
-                    kernels::spmm_back_dw(input, dy, self.batch, &self.topos[l], &mut self.dw_vals[l]);
+                    kernels::spmm_back_dw(
+                        exec,
+                        input,
+                        dy,
+                        self.batch,
+                        &self.topos[l],
+                        &mut self.dw_vals[l],
+                    );
                     kernels::bias_grad(dy, self.batch, lay.out_dim, &mut self.db[l]);
                 }
             }
             if l > 0 {
                 kernels::spmm_back_dx(
+                    exec,
                     dy,
                     self.batch,
                     &self.topos[l],
@@ -304,19 +363,22 @@ impl Session for NativeSession<'_> {
         self.forward(state, xs);
         let classes = self.be.classes();
         let last = self.be.layers.len() - 1;
-        let loss = kernels::softmax_xent_grad(
+        let loss = kernels::softmax_xent_grad_par(
+            self.be.exec(),
             &self.acts[last],
             self.batch,
             classes,
             y,
             self.be.label_smoothing,
             &mut self.dbuf[last],
+            &mut self.row_loss,
         );
         self.backward(state, xs, None);
         for l in 0..self.be.layers.len() {
             let lay = self.be.layers[l];
             let (mu, wd) = (self.be.momentum, self.be.weight_decay);
             kernels::sgdm_update_sparse(
+                self.be.exec(),
                 &self.topos[l],
                 &mut state.params.tensors[lay.w],
                 &mut state.opt[0].tensors[lay.w],
@@ -347,13 +409,15 @@ impl Session for NativeSession<'_> {
         self.forward(state, xs);
         let classes = self.be.classes();
         let last = self.be.layers.len() - 1;
-        let loss = kernels::softmax_xent_grad(
+        let loss = kernels::softmax_xent_grad_par(
+            self.be.exec(),
             &self.acts[last],
             self.batch,
             classes,
             y,
             self.be.label_smoothing,
             &mut self.dbuf[last],
+            &mut self.row_loss,
         );
         let mut grads = ParamSet::zeros(&self.be.def);
         self.backward(state, xs, Some(&mut grads));
@@ -591,6 +655,63 @@ mod tests {
                 assert_eq!(p, 0.0, "masked weight {i} resurrected");
                 assert_eq!(state.opt[0].tensors[0][i], 0.0, "masked moment {i} nonzero");
             }
+        }
+    }
+
+    /// Train steps through a pooled backend must leave params, moments
+    /// and losses bit-identical to the serial backend — the session-
+    /// level statement of the kernel determinism contract. The layer is
+    /// sized past the autotune floor so the pool genuinely engages.
+    #[test]
+    fn threaded_train_steps_bit_identical_to_serial() {
+        let def = mlp_def("t", 784, &[96], 10, 32);
+        let mut rng = Rng::new(42);
+        let mut base = TrainState {
+            params: ParamSet::init(&def, &mut rng),
+            opt: vec![ParamSet::zeros(&def)],
+            adam_t: 0.0,
+            masks: ParamSet::ones(&def),
+            step: 0,
+        };
+        for i in 0..base.masks.tensors[0].len() {
+            if i % 2 == 0 {
+                base.masks.tensors[0][i] = 0.0;
+            }
+        }
+        base.params.mul_assign(&base.masks);
+        let x = Batch::F32((0..32 * 784).map(|_| rng.next_f32() - 0.4).collect::<Vec<_>>());
+        let y: Vec<i32> = (0..32).map(|_| rng.next_below(10) as i32).collect();
+
+        let run = |threads: usize| {
+            let be = NativeBackend::with_threads(&def, threads).unwrap();
+            assert_eq!(be.threads(), threads.max(1));
+            let mut st = base.clone();
+            let mut sess = be.session(&st).unwrap();
+            let mut losses = Vec::new();
+            for _ in 0..4 {
+                losses.push(sess.train_step(&mut st, &x, &y, 0.05).unwrap());
+            }
+            let (g, gl) = sess.dense_grads(&st, &x, &y).unwrap();
+            drop(sess);
+            (st, losses, g, gl)
+        };
+        let (st1, l1, g1, gl1) = run(1);
+        for threads in [2usize, 8] {
+            let (st, l, g, gl) = run(threads);
+            assert_eq!(
+                l.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                l1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "losses differ at threads={threads}"
+            );
+            for ti in 0..def.specs.len() {
+                let bits = |s: &ParamSet| {
+                    s.tensors[ti].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                };
+                assert_eq!(bits(&st.params), bits(&st1.params), "params[{ti}] t={threads}");
+                assert_eq!(bits(&st.opt[0]), bits(&st1.opt[0]), "opt[{ti}] t={threads}");
+                assert_eq!(bits(&g), bits(&g1), "grads[{ti}] t={threads}");
+            }
+            assert_eq!(gl.to_bits(), gl1.to_bits());
         }
     }
 }

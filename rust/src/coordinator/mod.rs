@@ -56,6 +56,13 @@ pub struct ExpContext {
     pub scale: f64,
     /// Worker-thread bound for cell/seed fan-out (1 = serial).
     pub jobs: usize,
+    /// Intra-step kernel threads per trainer (`--threads`, native
+    /// backend only; 1 = serial). Orthogonal to `jobs`: `jobs`
+    /// parallelizes ACROSS runs, `threads` WITHIN a step — runs sharing
+    /// a trainer share one kernel pool and serialize their fork-join
+    /// rounds, so `jobs × threads` never oversubscribes by more than
+    /// the pool width. Bit-identical results at any setting of either.
+    pub threads: usize,
     pub out_dir: PathBuf,
     trainers: Mutex<HashMap<String, Arc<Trainer>>>,
     pub verbose: bool,
@@ -96,10 +103,19 @@ impl ExpContext {
             seeds: seeds.max(1),
             scale,
             jobs: jobs.max(1),
+            threads: 1,
             out_dir,
             trainers: Mutex::new(HashMap::new()),
             verbose: true,
         })
+    }
+
+    /// Set the intra-step kernel thread count (builder-style, applied
+    /// to every config this context derives). Call before any trainer
+    /// is built — the pool is sized at trainer construction.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
     }
 
     /// Nominal (scale=1) step counts per model family, tuned so each track
@@ -118,6 +134,7 @@ impl ExpContext {
     /// Base config with paper-default hypers and scaled steps.
     pub fn base(&self, model: &str, method: Method) -> TrainConfig {
         let mut cfg = TrainConfig::new(model, method);
+        cfg.threads = self.threads;
         cfg.steps = ((Self::nominal_steps(model) as f64) * self.scale).round() as usize;
         // ΔT scales with run length. Calibrated on this testbed (see
         // EXPERIMENTS.md): each mask update needs roughly an epoch of

@@ -14,9 +14,11 @@
 //! Shared flags: --seeds N (default 1), --scale F (step multiplier,
 //! default 1.0), --jobs N (worker threads for cell/seed fan-out,
 //! default = available cores; results are bit-identical at any value),
-//! --backend pjrt|native (execution engine, default pjrt; native is the
-//! pure-Rust CSR engine — FC tracks only, no artifacts needed),
-//! --out DIR (CSV output, default results/).
+//! --threads N (intra-step kernel threads for the native backend,
+//! default 1; bit-identical at any value — jobs parallelizes ACROSS
+//! runs, threads WITHIN one step), --backend pjrt|native (execution
+//! engine, default pjrt; native is the pure-Rust CSR engine — FC tracks
+//! only, no artifacts needed), --out DIR (CSV output, default results/).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -133,21 +135,23 @@ fn default_backend() -> &'static str {
 }
 
 fn context(args: &Args) -> Result<ExpContext> {
-    ExpContext::with_backend(
+    Ok(ExpContext::with_backend(
         args.usize("seeds", 1)?,
         args.f64("scale", 1.0)?,
         args.usize("jobs", rigl::pool::default_jobs())?,
         PathBuf::from(args.get("out").unwrap_or("results")),
         backend_kind(args)?,
-    )
+    )?
+    .with_threads(args.usize("threads", 1)?))
 }
 
 fn emit_tables(ctx: &ExpContext, id: &str) -> Result<()> {
     eprintln!(
-        "=== running {id} (seeds={}, scale={}, jobs={}, backend={}) ===",
+        "=== running {id} (seeds={}, scale={}, jobs={}, threads={}, backend={}) ===",
         ctx.seeds,
         ctx.scale,
         ctx.jobs,
+        ctx.threads,
         ctx.backend.label()
     );
     let t0 = std::time::Instant::now();
@@ -208,6 +212,7 @@ fn train_cmd(args: &Args) -> Result<()> {
     cfg.t_end_frac = args.f64("t-end-frac", 0.75)?;
     cfg.decay = Decay::parse(args.get("decay").unwrap_or("cosine"))?;
     cfg.eval_every = args.usize("eval-every", (cfg.steps / 10).max(1))?;
+    cfg.threads = args.usize("threads", 1)?;
 
     let kind = backend_kind(args)?;
     // One-cell context: reuses the coordinator's backend dispatch +
@@ -314,6 +319,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         max_wait_us: args.usize("max-wait-us", 200)? as u64,
         max_requests: args.usize("max-requests", 0)?,
         reload_poll_ms: args.usize("reload-poll-ms", 200)? as u64,
+        threads: args.usize("threads", 1)?,
     };
     // start_watching stamps the artifact before loading it, so an
     // export racing this startup is caught by the watcher's first poll.
@@ -331,10 +337,11 @@ fn serve_cmd(args: &Args) -> Result<()> {
         let mut so = std::io::stdout();
         writeln!(
             so,
-            "serve: listening on {} | model {name} ({desc}) | workers={} max_batch={} \
-             max_wait={}µs{}",
+            "serve: listening on {} | model {name} ({desc}) | workers={} threads={} \
+             max_batch={} max_wait={}µs{}",
             server.addr(),
             cfg.workers,
+            cfg.threads,
             cfg.max_batch,
             cfg.max_wait_us,
             if cfg.max_requests > 0 {
@@ -366,6 +373,7 @@ fn serve_bench_cmd(args: &Args) -> Result<()> {
                     workers: args.usize("workers", rigl::pool::default_jobs().min(4))?,
                     max_batch: args.usize("max-batch", 16)?,
                     max_wait_us: args.usize("max-wait-us", 200)? as u64,
+                    threads: args.usize("threads", 1)?,
                     ..ServeConfig::default()
                 },
             )?;
@@ -427,19 +435,23 @@ fn print_usage() {
         "repro — RigL (ICML 2020) reproduction\n\
          usage: repro <list|info|table|all-tables|train|flops|export|serve|serve-bench> [--flags]\n\
          \n\
-         repro table --id fig2-left [--seeds 3] [--scale 1.0] [--jobs 4] [--out results]\n\
+         repro table --id fig2-left [--seeds 3] [--scale 1.0] [--jobs 4] [--threads 1] [--out results]\n\
+         \x20          (--jobs fans runs out; --threads parallelizes INSIDE a native\n\
+         \x20           train step — results bit-identical at any value of either)\n\
          repro train --model cnn --method rigl --sparsity 0.9 --dist erk\n\
          repro train --model mlp --method rigl --backend native   (no XLA needed)\n\
+         repro train --model mlp --method rigl --backend native --threads 4\n\
          repro train --model mlp --method rigl --backend native --export mlp.srvd\n\
          \x20          [--save-ckpt ckpt.bin]   (full state: params, masks, opt)\n\
          repro flops --model wrn --sparsity 0.95 --dist erk\n\
          \n\
          serving (std-only, hermetic — no XLA, no artifacts dir):\n\
          repro export --model mlp --out mlp.srvd [--ckpt ckpt.bin | --sparsity 0.9 --dist uniform --seed 0]\n\
-         repro serve --model mlp.srvd [--port 0] [--workers 4] [--max-batch 16]\n\
+         repro serve --model mlp.srvd [--port 0] [--workers 4] [--threads 1] [--max-batch 16]\n\
          \x20          [--max-wait-us 200] [--max-requests 0] [--reload-poll-ms 200]\n\
          \x20          (port 0 = ephemeral, printed on stdout; the artifact file is\n\
-         \x20           watched and hot-reloaded on change)\n\
+         \x20           watched and hot-reloaded on change; --threads shares one\n\
+         \x20           kernel pool across workers for per-request latency)\n\
          repro serve-bench --addr 127.0.0.1:PORT [--concurrency 4] [--requests 100] [--k 1]\n\
          \x20          (--requests is PER CONNECTION: total load = concurrency × requests)\n\
          repro serve-bench --model mlp.srvd      (self-host over loopback and bench)"

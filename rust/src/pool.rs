@@ -1,9 +1,20 @@
-//! Scoped thread-pool helpers for the experiment coordinator.
+//! Scoped thread-pool helpers: the coordinator's parallel map, the serve
+//! batcher's long-lived workers, and the kernel engine's fork-join pool.
 //!
 //! No external thread-pool crate is reachable offline, so this module
-//! implements the one primitive the coordinator needs: a bounded,
-//! order-preserving parallel map over a work list (`par_map`), built on
-//! `std::thread::scope`.
+//! implements the three primitives the crate needs itself:
+//!
+//! * [`par_map`] — a bounded, order-preserving parallel map over a work
+//!   list, built on `std::thread::scope` (one spawn per call; right for
+//!   coarse work like whole training runs);
+//! * [`WorkerPool`] — long-lived named workers draining an open-ended
+//!   stream (the serve micro-batcher);
+//! * [`KernelPool`] — a reusable fork-join pool for **intra-kernel**
+//!   parallelism: the native CSR engine dispatches row/column-block work
+//!   units onto it many times per training step, so workers must be
+//!   long-lived (spawning per kernel call would dominate the kernels
+//!   themselves) and a round must cost only a mutex hand-off plus two
+//!   condvar signals.
 //!
 //! ## Determinism contract
 //!
@@ -118,6 +129,200 @@ impl Drop for WorkerPool {
     }
 }
 
+/// A reusable fork-join pool for intra-kernel parallelism.
+///
+/// `KernelPool::new(threads)` spawns `threads - 1` long-lived workers;
+/// the caller of [`fork_join`](KernelPool::fork_join) acts as worker 0,
+/// so all `threads` lanes compute and no core idles while the caller
+/// blocks. One fork-join "round" runs the given closure once per lane
+/// (with the lane index) and returns only after every lane finished —
+/// the closure may therefore borrow the caller's stack freely.
+///
+/// ## Determinism
+///
+/// The pool imposes NO ordering of its own: callers (the blocked CSR
+/// kernels) partition work into disjoint output regions and keep every
+/// per-element accumulation in the serial order, so results are
+/// bit-identical to single-threaded execution no matter how lanes are
+/// scheduled. See `backend/native/README.md` for the contract.
+///
+/// ## Sharing
+///
+/// Concurrent `fork_join` calls (e.g. two serve workers sharing one
+/// pool, or coordinator jobs sharing a backend) are serialized by an
+/// internal turn lock: rounds never interleave, callers queue. A round
+/// performs zero heap allocations — the job is published as a raw
+/// `(data, call)` pair — so the serve engine's steady-state zero-alloc
+/// guarantee survives with the pool engaged.
+pub struct KernelPool {
+    shared: std::sync::Arc<FjShared>,
+    /// Serializes rounds from concurrent callers.
+    turn: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+/// A published round: a type-erased closure. `call` rebuilds the
+/// concrete type; `data` points at the caller's closure, which outlives
+/// the round because `fork_join` blocks until every lane finishes.
+#[derive(Clone, Copy)]
+struct FjJob {
+    data: *const (),
+    call: fn(*const (), usize),
+}
+
+// SAFETY: `data` crosses threads only inside one fork-join round, while
+// the `fork_join` caller is blocked keeping the pointee alive.
+unsafe impl Send for FjJob {}
+
+struct FjShared {
+    state: Mutex<FjState>,
+    /// Workers wait here for a new round (epoch bump) or shutdown.
+    work: std::sync::Condvar,
+    /// The caller waits here for `active` to reach zero.
+    done: std::sync::Condvar,
+}
+
+struct FjState {
+    epoch: u64,
+    job: Option<FjJob>,
+    /// Workers still running the current round.
+    active: usize,
+    shutdown: bool,
+}
+
+impl KernelPool {
+    /// Pool with `threads` compute lanes (min 1). `threads - 1` OS
+    /// threads are spawned; lane 0 is the `fork_join` caller itself.
+    pub fn new(threads: usize) -> KernelPool {
+        let threads = threads.max(1);
+        let shared = std::sync::Arc::new(FjShared {
+            state: Mutex::new(FjState {
+                epoch: 0,
+                job: None,
+                active: 0,
+                shutdown: false,
+            }),
+            work: std::sync::Condvar::new(),
+            done: std::sync::Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|lane| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("kernel-{lane}"))
+                    .spawn(move || fj_worker(&shared, lane))
+                    .expect("spawning kernel-pool worker")
+            })
+            .collect();
+        KernelPool {
+            shared,
+            turn: Mutex::new(()),
+            handles,
+            threads,
+        }
+    }
+
+    /// Number of compute lanes (including the caller's).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(lane)` once on every lane (0..threads) and return when all
+    /// lanes finished. Allocation-free on the success path. Panics in
+    /// `f` on the caller lane are caught, held until every worker lane
+    /// finished the round (their borrows of `f` must outlive them),
+    /// then resumed; a panic on a worker lane ABORTS the process (a
+    /// kernel panic is a bug, and aborting loudly beats deadlocking the
+    /// caller on a join that can never complete).
+    pub fn fork_join<F: Fn(usize) + Sync>(&self, f: &F) {
+        if self.threads <= 1 {
+            f(0);
+            return;
+        }
+        fn call_impl<F: Fn(usize) + Sync>(data: *const (), lane: usize) {
+            // SAFETY: `data` was created from `&F` by the publishing
+            // `fork_join`, which is still blocked in this round.
+            let f = unsafe { &*(data as *const F) };
+            f(lane)
+        }
+        let _turn = self.turn.lock().unwrap();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(FjJob {
+                data: f as *const F as *const (),
+                call: call_impl::<F>,
+            });
+            st.active = self.threads - 1;
+            st.epoch += 1;
+            self.shared.work.notify_all();
+        }
+        // The caller is lane 0. A panic here must NOT unwind past the
+        // join: workers are still executing the borrowed closure, and
+        // unwinding would free the very stack frames (`f`, the
+        // dispatch cursor) they are dereferencing. Catch, finish the
+        // round with every frame intact, then resume the unwind.
+        let lane0 = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)));
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None; // drop the borrowed pointer before returning
+        drop(st);
+        if let Err(payload) = lane0 {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn fj_worker(shared: &FjShared, lane: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("round published with its job");
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // A panicking work unit would leave `active` stuck above zero
+        // and deadlock the fork_join caller — abort instead, with the
+        // panic already printed by the default hook.
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            (job.call)(job.data, lane)
+        }))
+        .is_err()
+        {
+            eprintln!("kernel-pool lane {lane}: work unit panicked; aborting");
+            std::process::abort();
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +401,97 @@ mod tests {
         drop(tx); // closes the stream; workers exit
         pool.join();
         assert_eq!(sum.load(std::sync::atomic::Ordering::SeqCst), 5050);
+    }
+
+    #[test]
+    fn kernel_pool_runs_every_lane_exactly_once_per_round() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let pool = KernelPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for _ in 0..50 {
+            let lanes = AtomicU64::new(0);
+            pool.fork_join(&|lane| {
+                // Each lane sets its bit; a double-run would be visible
+                // as a racing re-set (checked via fetch_or return).
+                let prev = lanes.fetch_or(1 << lane, Ordering::SeqCst);
+                assert_eq!(prev & (1 << lane), 0, "lane {lane} ran twice");
+            });
+            assert_eq!(lanes.load(Ordering::SeqCst), 0b1111);
+        }
+    }
+
+    #[test]
+    fn kernel_pool_single_thread_runs_inline() {
+        let pool = KernelPool::new(1);
+        let hit = std::sync::atomic::AtomicBool::new(false);
+        pool.fork_join(&|lane| {
+            assert_eq!(lane, 0);
+            hit.store(true, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert!(hit.load(std::sync::atomic::Ordering::SeqCst));
+    }
+
+    #[test]
+    fn kernel_pool_rounds_see_fresh_closures() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = KernelPool::new(3);
+        let mut totals = Vec::new();
+        for round in 1..=10usize {
+            let sum = AtomicUsize::new(0);
+            pool.fork_join(&|_| {
+                sum.fetch_add(round, Ordering::SeqCst);
+            });
+            totals.push(sum.load(Ordering::SeqCst));
+        }
+        let want: Vec<usize> = (1..=10).map(|r| r * 3).collect();
+        assert_eq!(totals, want);
+    }
+
+    #[test]
+    fn kernel_pool_disjoint_writes_reach_every_slot() {
+        let pool = KernelPool::new(4);
+        let n = 1013usize;
+        let mut out = vec![0u32; n];
+        let ptr = out.as_mut_ptr() as usize;
+        pool.fork_join(&|lane| {
+            // Strided disjoint writes through the raw pointer, the same
+            // discipline the blocked kernels use.
+            let p = ptr as *mut u32;
+            let mut i = lane;
+            while i < n {
+                unsafe { *p.add(i) = i as u32 + 1 };
+                i += 4;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn kernel_pool_shared_by_concurrent_callers() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = std::sync::Arc::new(KernelPool::new(2));
+        let total = std::sync::Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let (pool, total) = (pool.clone(), total.clone());
+                scope.spawn(move || {
+                    for _ in 0..25 {
+                        pool.fork_join(&|_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        // 4 callers × 25 rounds × 2 lanes.
+        assert_eq!(total.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn kernel_pool_drops_cleanly_without_rounds() {
+        let pool = KernelPool::new(8);
+        drop(pool); // must join workers, not hang
     }
 }

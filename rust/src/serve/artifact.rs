@@ -116,7 +116,10 @@ impl SparseModel {
                 lay.in_dim,
                 lay.out_dim
             );
-            let topo = CsrTopo::from_mask(mask, lay.in_dim, lay.out_dim);
+            let mut topo = CsrTopo::from_mask(mask, lay.in_dim, lay.out_dim);
+            // Block decomposition for the parallel serving kernels
+            // (derived, never serialized; deterministic from structure).
+            topo.build_blocks();
             let mut values = Vec::with_capacity(topo.nnz());
             for i in 0..lay.in_dim {
                 let wrow = i * lay.out_dim;
@@ -265,16 +268,17 @@ impl SparseModel {
                     );
                 }
             }
-            layers.push(ServeLayer {
-                topo: CsrTopo {
-                    rows,
-                    cols,
-                    row_ptr,
-                    col_idx,
-                },
-                values,
-                bias,
-            });
+            let mut topo = CsrTopo {
+                rows,
+                cols,
+                row_ptr,
+                col_idx,
+                blocks: Default::default(),
+            };
+            // Rebuilt from structure — the decomposition is derived
+            // state, deliberately not part of the on-disk format.
+            topo.build_blocks();
+            layers.push(ServeLayer { topo, values, bias });
         }
         // The format is self-describing; anything after the last layer
         // is corruption (e.g. a concatenated or truncated-then-appended

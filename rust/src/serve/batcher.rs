@@ -27,7 +27,7 @@ use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::pool::WorkerPool;
+use crate::pool::{KernelPool, WorkerPool};
 
 use super::engine::{top_k, InferEngine, TopKScratch};
 use super::server::ModelHandle;
@@ -85,12 +85,25 @@ pub struct Batcher {
 
 impl Batcher {
     pub fn new(handle: ModelHandle, cfg: BatcherConfig) -> Batcher {
+        Self::with_pool(handle, cfg, None)
+    }
+
+    /// Like [`Batcher::new`] with a shared intra-request kernel pool:
+    /// every worker's [`InferEngine`] dispatches block work units onto
+    /// the ONE pool (`--threads`), so total compute threads stay
+    /// `workers + threads - 1` rather than `workers × threads`.
+    /// Replies are bit-identical with or without the pool.
+    pub fn with_pool(
+        handle: ModelHandle,
+        cfg: BatcherConfig,
+        kernel_pool: Option<Arc<KernelPool>>,
+    ) -> Batcher {
         let (tx, rx) = std::sync::mpsc::sync_channel::<Job>(cfg.queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(Stats::default());
         let stats_w = stats.clone();
         let pool = WorkerPool::spawn(cfg.workers, "serve-worker", move |_| {
-            worker_loop(&rx, &handle, &cfg, &stats_w);
+            worker_loop(&rx, &handle, &cfg, &stats_w, &kernel_pool);
         });
         Batcher {
             tx: Some(tx),
@@ -142,8 +155,10 @@ fn worker_loop(
     handle: &ModelHandle,
     cfg: &BatcherConfig,
     stats: &Stats,
+    kernel_pool: &Option<Arc<KernelPool>>,
 ) {
     let mut engine = InferEngine::default();
+    engine.set_pool(kernel_pool.clone());
     let mut topk = TopKScratch::default();
     let mut pending: Vec<Job> = Vec::with_capacity(cfg.max_batch);
     let mut accepted: Vec<Job> = Vec::with_capacity(cfg.max_batch);
@@ -288,6 +303,42 @@ mod tests {
         let mut eng = InferEngine::new(&model, 1);
         let logits = eng.forward(&model, &x, 1);
         assert_eq!(reply[0].0, crate::serve::engine::argmax(logits));
+    }
+
+    /// Workers sharing one kernel pool answer bit-identically to a
+    /// serial direct engine call — the threading knob cannot change
+    /// replies.
+    #[test]
+    fn pooled_workers_match_direct_engine_call() {
+        let def = crate::backend::native::mlp_def("t", 784, &[128], 10, 1);
+        let model =
+            SparseModel::init_random(&def, 0.7, &crate::sparsity::Distribution::Uniform, 3)
+                .unwrap();
+        let kpool = Some(Arc::new(crate::pool::KernelPool::new(4)));
+        let batcher = Batcher::with_pool(
+            ModelHandle::new(model.clone()),
+            BatcherConfig {
+                workers: 2,
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                queue_depth: 64,
+            },
+            kpool,
+        );
+        let mut rng = Rng::new(9);
+        let mut eng = InferEngine::new(&model, 1); // serial reference
+        let mut scratch = TopKScratch::default();
+        for _ in 0..10 {
+            let x: Vec<f32> = (0..784).map(|_| rng.next_f32() - 0.5).collect();
+            let got = batcher.submit(x.clone(), 2).recv().unwrap().unwrap();
+            let logits = eng.forward(&model, &x, 1);
+            let mut want = Vec::new();
+            top_k(logits, 2, &mut scratch, &mut want);
+            for ((gc, gl), (wc, wl)) in got.iter().zip(&want) {
+                assert_eq!(gc, wc);
+                assert_eq!(gl.to_bits(), wl.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -15,7 +15,10 @@
 //! selection with ties broken by class index, so results are
 //! deterministic and (for k = classes) a total ranking.
 
-use crate::backend::native::kernels::{csr_spmm_bias_fwd, relu};
+use std::sync::Arc;
+
+use crate::backend::native::kernels::{csr_spmm_bias_fwd, relu, Exec};
+use crate::pool::KernelPool;
 use crate::util::argselect_k_into;
 
 use super::artifact::SparseModel;
@@ -29,6 +32,11 @@ pub struct InferEngine {
     cap: usize,
     /// Post-activation output per layer (`cap × out`); last = logits.
     acts: Vec<Vec<f32>>,
+    /// Shared intra-request kernel pool (None = serial). All of a
+    /// server's worker engines share ONE pool (`--threads`), so
+    /// intra-request parallelism never multiplies across workers;
+    /// concurrent forwards serialize their fork-join rounds.
+    pool: Option<Arc<KernelPool>>,
 }
 
 impl InferEngine {
@@ -37,6 +45,13 @@ impl InferEngine {
         let mut e = InferEngine::default();
         e.ensure(model, max_batch);
         e
+    }
+
+    /// Attach (or detach) a shared kernel pool. Logits are bit-identical
+    /// with and without it — the blocked kernels' determinism contract —
+    /// so this is purely a latency knob.
+    pub fn set_pool(&mut self, pool: Option<Arc<KernelPool>>) {
+        self.pool = pool;
     }
 
     /// (Re)size the buffers if the model shape changed (hot reload may
@@ -80,6 +95,7 @@ impl InferEngine {
             model.in_dim()
         );
         let n = model.layers.len();
+        let exec = self.pool.as_deref().map_or(Exec::Serial, Exec::Pool);
         for (l, layer) in model.layers.iter().enumerate() {
             let out = layer.topo.cols;
             let (prev, rest) = self.acts.split_at_mut(l);
@@ -89,7 +105,7 @@ impl InferEngine {
                 &prev[l - 1][..batch * model.layers[l - 1].topo.cols]
             };
             let y = &mut rest[0][..batch * out];
-            csr_spmm_bias_fwd(input, batch, &layer.topo, &layer.values, &layer.bias, y);
+            csr_spmm_bias_fwd(exec, input, batch, &layer.topo, &layer.values, &layer.bias, y);
             if l + 1 < n {
                 relu(y);
             }
@@ -167,17 +183,18 @@ mod tests {
         // training engine's forward is built from, layer by layer.
         use crate::backend::native::csr::CsrTopo;
         use crate::backend::native::kernels::{relu, spmm_bias_fwd};
+        let ser = Exec::Serial;
         let mut h1 = vec![0.0f32; batch * 8];
         let t1 = CsrTopo::from_mask(&masks.tensors[0], 10, 8);
-        spmm_bias_fwd(&x, batch, &t1, &params.tensors[0], &params.tensors[1], &mut h1);
+        spmm_bias_fwd(ser, &x, batch, &t1, &params.tensors[0], &params.tensors[1], &mut h1);
         relu(&mut h1);
         let mut h2 = vec![0.0f32; batch * 6];
         let t2 = CsrTopo::from_mask(&masks.tensors[2], 8, 6);
-        spmm_bias_fwd(&h1, batch, &t2, &params.tensors[2], &params.tensors[3], &mut h2);
+        spmm_bias_fwd(ser, &h1, batch, &t2, &params.tensors[2], &params.tensors[3], &mut h2);
         relu(&mut h2);
         let mut want = vec![0.0f32; batch * 3];
         let t3 = CsrTopo::from_mask(&masks.tensors[4], 6, 3);
-        spmm_bias_fwd(&h2, batch, &t3, &params.tensors[4], &params.tensors[5], &mut want);
+        spmm_bias_fwd(ser, &h2, batch, &t3, &params.tensors[4], &params.tensors[5], &mut want);
 
         let model = crate::serve::SparseModel::from_state(&def, &params, &masks).unwrap();
         let mut eng = InferEngine::new(&model, batch);
@@ -234,6 +251,37 @@ mod tests {
         // Batch beyond capacity grows, then stays.
         let xb8: Vec<f32> = (0..8 * 4).map(|_| r.next_f32()).collect();
         assert_eq!(eng.forward(&b, &xb8, 8).len(), 8 * 2);
+    }
+
+    /// A pooled engine must return logits bit-identical to a serial
+    /// engine on the same frozen model — at LeNet-300-100 scale the
+    /// first layer is past the autotune floor, so the pool genuinely
+    /// runs blocked work units.
+    #[test]
+    fn pooled_engine_logits_bit_identical_to_serial() {
+        let def = mlp_def("mlp", 784, &[300, 100], 10, 1);
+        let model = SparseModel::init_random(&def, 0.8, &Distribution::Uniform, 11).unwrap();
+        let mut r = Rng::new(12);
+        for batch in [1usize, 4] {
+            let x: Vec<f32> = (0..batch * 784).map(|_| r.next_f32()).collect();
+            let mut ser = InferEngine::new(&model, batch);
+            let want: Vec<u32> = ser
+                .forward(&model, &x, batch)
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            for threads in [2usize, 8] {
+                let pool = std::sync::Arc::new(crate::pool::KernelPool::new(threads));
+                let mut eng = InferEngine::new(&model, batch);
+                eng.set_pool(Some(pool));
+                let got: Vec<u32> = eng
+                    .forward(&model, &x, batch)
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(got, want, "batch={batch} threads={threads}");
+            }
+        }
     }
 
     #[test]

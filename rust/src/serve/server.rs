@@ -71,6 +71,12 @@ pub struct ServeConfig {
     pub max_requests: usize,
     /// Artifact-file poll cadence for hot reload, in milliseconds.
     pub reload_poll_ms: u64,
+    /// Intra-request kernel threads (`--threads`): one fork-join pool
+    /// shared by ALL batcher workers, cutting single-request latency on
+    /// big layers. 1 = serial. Replies are bit-identical at any value —
+    /// `workers` scales throughput, `threads` scales per-request
+    /// latency.
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +88,7 @@ impl Default for ServeConfig {
             max_wait_us: 200,
             max_requests: 0,
             reload_poll_ms: 200,
+            threads: 1,
         }
     }
 }
@@ -139,7 +146,9 @@ impl Server {
             .set_nonblocking(true)
             .context("setting the listener non-blocking")?;
         let handle = ModelHandle::new(model);
-        let batcher = Arc::new(Batcher::new(
+        let kernel_pool = (cfg.threads > 1)
+            .then(|| Arc::new(crate::pool::KernelPool::new(cfg.threads)));
+        let batcher = Arc::new(Batcher::with_pool(
             handle.clone(),
             BatcherConfig {
                 workers: cfg.workers,
@@ -147,6 +156,7 @@ impl Server {
                 max_wait: Duration::from_micros(cfg.max_wait_us),
                 queue_depth: (cfg.workers * cfg.max_batch * 4).max(64),
             },
+            kernel_pool,
         ));
         let stop = Arc::new(AtomicBool::new(false));
         let served = Arc::new(AtomicUsize::new(0));

@@ -80,6 +80,13 @@ pub struct TrainConfig {
     /// Dataset sizes (train, val) for image/digit tasks; token count for LM.
     pub data_train: usize,
     pub data_val: usize,
+    /// Intra-step kernel threads for the native backend (`--threads`).
+    /// 1 = strictly serial; any value yields bit-identical results (the
+    /// blocked kernels' determinism contract). Ignored by PJRT, which
+    /// parallelizes internally. Composes with the coordinator's
+    /// inter-run `--jobs`: concurrent runs on one trainer share one
+    /// kernel pool and serialize their fork-join rounds.
+    pub threads: usize,
 }
 
 impl TrainConfig {
@@ -102,6 +109,7 @@ impl TrainConfig {
             augment: true,
             data_train: 2048,
             data_val: 512,
+            threads: 1,
         }
     }
 
@@ -189,10 +197,12 @@ impl Trainer {
 
     /// Native-backed trainer: validate the model for the pure-Rust CSR
     /// engine (FC classify stacks under SGD+momentum). Needs no runtime
-    /// and no artifacts directory.
+    /// and no artifacts directory. `cfg.threads` sizes the shared
+    /// intra-step kernel pool (1 = serial; results identical at any
+    /// value).
     pub fn native(manifest: &Manifest, cfg: &TrainConfig) -> Result<Self> {
         let def = manifest.get(&cfg.model)?.clone();
-        let backend = Arc::new(NativeBackend::new(&def)?);
+        let backend = Arc::new(NativeBackend::with_threads(&def, cfg.threads.max(1))?);
         Trainer::from_parts(def, backend, cfg)
     }
 

@@ -190,6 +190,15 @@ pub fn argselect_k_into(
     out.extend_from_slice(idx);
 }
 
+/// Whether a bench binary was invoked with `--smoke` (`cargo bench
+/// --benches -- --smoke`): tiny shapes, minimal reps — enough to
+/// exercise every bench code path (including the counting-allocator
+/// zero-alloc gates) inside CI without paying measurement-grade run
+/// time. Numbers from smoke runs are NOT comparable across commits.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
 /// Minimal bench harness (criterion is unreachable offline): warm up,
 /// time `iters` calls, print mean/min per iteration. Used by the
 /// `rust/benches/*` targets under `cargo bench`. Returns the mean.
