@@ -19,15 +19,23 @@
 #   --smoke-bench   additionally run every hermetic bench in --smoke
 #                   mode (tiny shapes, 1 rep). This executes the
 #                   counting-allocator zero-alloc gates and the
-#                   threads-vs-serial bit-identity gates in
+#                   threads/lanes-vs-serial bit-identity gates in
 #                   bench_topology/bench_backend/bench_serve, which exit
 #                   non-zero on regression — benches gate PRs instead of
 #                   rotting. Always hermetic (--no-default-features):
-#                   the pjrt benches need AOT artifacts and stay manual.
+#                   the pjrt benches need AOT artifacts and stay manual
+#                   (they skip cleanly under --smoke without artifacts).
+#   --simd-intrinsics
+#                   build with the `simd-intrinsics` cargo feature (the
+#                   runtime-detected AVX2 lane ops). Pair with
+#                   RUSTFLAGS=-Ctarget-cpu=x86-64-v3 so the intrinsics
+#                   inline; the determinism suite then proves the AVX2
+#                   path bit-identical to the portable one.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 FLAGS=()
+SIMD=()
 NO_PJRT=0
 SMOKE_BENCH=0
 for arg in "$@"; do
@@ -40,18 +48,22 @@ for arg in "$@"; do
     --smoke-bench)
       SMOKE_BENCH=1
       ;;
+    --simd-intrinsics)
+      SIMD=(--features simd-intrinsics)
+      echo "== simd-intrinsics mode: explicit AVX2 lane ops enabled =="
+      ;;
     *)
-      echo "usage: ./ci.sh [--no-pjrt] [--smoke-bench]" >&2
+      echo "usage: ./ci.sh [--no-pjrt] [--smoke-bench] [--simd-intrinsics]" >&2
       exit 2
       ;;
   esac
 done
 
 echo "== cargo build --release =="
-cargo build --release "${FLAGS[@]+"${FLAGS[@]}"}"
+cargo build --release "${FLAGS[@]+"${FLAGS[@]}"}" "${SIMD[@]+"${SIMD[@]}"}"
 
 echo "== cargo test -q =="
-cargo test -q "${FLAGS[@]+"${FLAGS[@]}"}"
+cargo test -q "${FLAGS[@]+"${FLAGS[@]}"}" "${SIMD[@]+"${SIMD[@]}"}"
 
 # Hermetic serve smoke test (no-pjrt path: no XLA, no artifacts dir —
 # the builtin LeNet-300-100 is exported, served on an ephemeral
@@ -116,13 +128,13 @@ fi
 # non-zero on failure.
 if [[ "$SMOKE_BENCH" == 1 ]]; then
   echo "== cargo bench --benches -- --smoke (hermetic) =="
-  cargo bench --no-default-features --benches -- --smoke
+  cargo bench --no-default-features "${SIMD[@]+"${SIMD[@]}"}" --benches -- --smoke
 fi
 
 echo "== cargo fmt --check =="
 cargo fmt --check
 
 echo "== cargo clippy -- -D warnings =="
-cargo clippy --all-targets "${FLAGS[@]+"${FLAGS[@]}"}" -- -D warnings
+cargo clippy --all-targets "${FLAGS[@]+"${FLAGS[@]}"}" "${SIMD[@]+"${SIMD[@]}"}" -- -D warnings
 
 echo "CI OK"

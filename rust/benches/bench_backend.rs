@@ -2,28 +2,41 @@
 //!
 //! The point of the native CSR engine is that measured wall-clock — not
 //! just the Appendix-H FLOPs accounting — scales with (1 − sparsity),
-//! and (since the blocked-kernel engine) with `--threads`. This bench
-//! times one masked train step (forward + backward + SGDM) over the
-//! full threads × sparsity grid on the LeNet-300-100-scale MLP, one
-//! dense-gradient call per thread count, and a short end-to-end RigL
-//! run, appending JSON lines so the trajectory is tracked commit over
-//! commit.
+//! with `--threads` (blocked kernels), and with SIMD lane width (the
+//! batch-panel kernels). This bench times one masked train step
+//! (forward + backward + SGDM) over the full sparsity × threads ×
+//! lanes grid on the LeNet-300-100-scale MLP — `lanes=8` is the
+//! batch-panel path, `lanes=1` forces the scalar loops via
+//! `kernels::set_panel_kernels` — plus one dense-gradient grid and a
+//! short end-to-end RigL run, appending JSON lines so the trajectory is
+//! tracked commit over commit. Step cells carry an effective-GFLOP/s
+//! field (useful sparse FLOPs retired per second: ~6·nnz·batch per
+//! step, counting forward + both backward products, NOT the dense
+//! equivalent).
 //!
-//! Every threaded cell is also verified BIT-identical to `threads=1`
-//! (the kernels' determinism contract): a fixed number of train steps
-//! from an identical init must leave identical state, or the bench
-//! exits non-zero — making the contract a CI gate, not just a test.
+//! Every cell is also verified BIT-identical to `t=1, lanes=1` (the
+//! kernels' determinism contract now includes the lane axis): a fixed
+//! number of train steps from an identical init must leave identical
+//! state, or the bench exits non-zero — making the contract a CI gate,
+//! not just a test. The acceptance target from the panel rewrite —
+//! `lanes=8` beating `lanes=1` by ≥2× on the S=0.9 step at batch ≥ 8 —
+//! is printed (and loudly flagged when missed in full mode; smoke-mode
+//! shapes are too small to judge).
 //!
 //! Runs hermetically: no artifacts, no PJRT, no feature flags needed
 //! (`cargo bench --bench bench_backend`; `-- --smoke` for the tiny CI
 //! variant).
 
+use std::sync::Arc;
+
+use rigl::backend::native::kernels::set_panel_kernels;
 use rigl::backend::native::{mlp_def, NativeBackend};
 use rigl::backend::{Backend, Session as _};
 use rigl::model::ParamSet;
+use rigl::pool::KernelPool;
 use rigl::sparsity::{layer_sparsities, random_masks, Distribution};
 use rigl::train::{Batch, TrainState};
-use rigl::util::{bench_to, smoke_mode, Rng};
+use rigl::util::{bench_to, bench_to_flops, smoke_mode, Rng};
 
 fn state_at_sparsity(def: &rigl::ModelDef, sparsity: f64, rng: &mut Rng) -> TrainState {
     let mut params = ParamSet::init(def, &mut rng.split(1));
@@ -43,17 +56,40 @@ fn state_at_sparsity(def: &rigl::ModelDef, sparsity: f64, rng: &mut Rng) -> Trai
     }
 }
 
-/// `check_steps` train steps from a fixed init: the resulting params as
-/// bit patterns (the cross-thread identity probe).
+/// Useful FLOPs in one masked train step: forward + data-backward +
+/// weight-backward are each one 2·nnz multiply-add stream per batch
+/// row (the first layer has no data-backward).
+fn step_flops(def: &rigl::ModelDef, state: &TrainState, batch: usize) -> f64 {
+    let nnz: Vec<f64> = def
+        .specs
+        .iter()
+        .zip(&state.masks.tensors)
+        .filter(|(spec, _)| spec.shape.len() == 2)
+        .map(|(_, m)| m.iter().filter(|&&v| v != 0.0).count() as f64)
+        .collect();
+    let total: f64 = nnz.iter().sum();
+    let first = nnz.first().copied().unwrap_or(0.0);
+    batch as f64 * (6.0 * total - 2.0 * first)
+}
+
+/// `check_steps` train steps from a fixed init at the given lane
+/// setting: the resulting params as bit patterns (the cross-thread,
+/// cross-lane identity probe).
 fn probe_state(
     def: &rigl::ModelDef,
     threads: usize,
+    lanes: usize,
     sparsity: f64,
     x: &Batch,
     y: &[i32],
     check_steps: usize,
 ) -> Vec<u32> {
-    let be = NativeBackend::with_threads(def, threads).unwrap();
+    let was = set_panel_kernels(lanes > 1);
+    // Pin the pool's autotune floor to 1: the probe exists to verify the
+    // POOLED paths bit-identical, and a slow runner's measured floor
+    // could otherwise silently keep every cell on the flat path.
+    let pool = (threads > 1).then(|| Arc::new(KernelPool::with_par_min_ops(threads, 1)));
+    let be = NativeBackend::with_pool(def, pool).unwrap();
     let mut rng = Rng::new(0xB17);
     let mut state = state_at_sparsity(def, sparsity, &mut rng);
     let mut sess = be.session(&state).unwrap();
@@ -61,6 +97,7 @@ fn probe_state(
         sess.train_step(&mut state, x, y, 0.01).unwrap();
     }
     drop(sess);
+    set_panel_kernels(was);
     state
         .params
         .tensors
@@ -72,7 +109,7 @@ fn probe_state(
 fn main() -> anyhow::Result<()> {
     let smoke = smoke_mode();
     println!(
-        "== bench_backend: native CSR engine step-time vs sparsity × threads{} ==",
+        "== bench_backend: native CSR engine step-time vs sparsity × threads × lanes{} ==",
         if smoke { " [SMOKE]" } else { "" }
     );
     let batch = 32;
@@ -83,76 +120,104 @@ fn main() -> anyhow::Result<()> {
 
     let sparsities: &[f64] = if smoke { &[0.9] } else { &[0.98, 0.9, 0.5, 0.0] };
     let thread_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let lane_widths: &[usize] = &[1, 8];
     let iters = if smoke { 3 } else { 50 };
     let check_steps = if smoke { 2 } else { 5 };
 
-    // Per-step cost over the full grid. At fixed threads, mean step time
-    // should grow roughly linearly with nnz; at fixed sparsity it should
-    // shrink with threads (until the autotune floor keeps tiny layers
-    // serial).
+    // Per-step cost over the full grid. At fixed (t, lanes), mean step
+    // time should grow roughly linearly with nnz; at fixed S it should
+    // shrink with threads (until the measured autotune floor keeps tiny
+    // layers serial) and with lanes (the panel rewrite's headline).
     let mut means = Vec::new();
     let mut identical = true;
     for &s in sparsities {
-        let baseline = probe_state(&def, 1, s, &x, &y, check_steps);
+        let baseline = probe_state(&def, 1, 1, s, &x, &y, check_steps);
+        let flops = {
+            let st = state_at_sparsity(&def, s, &mut Rng::new(0xB17));
+            step_flops(&def, &st, batch)
+        };
         for &t in thread_counts {
-            let be = NativeBackend::with_threads(&def, t)?;
-            let mut state = state_at_sparsity(&def, s, &mut rng);
-            let mut sess = be.session(&state)?;
-            let mean = bench_to(
-                "backend",
-                &format!("native/train_step/b={batch}/S={s}/t={t}"),
-                iters,
-                || {
-                    sess.train_step(&mut state, &x, &y, 0.01).unwrap();
-                },
-            );
-            means.push((s, t, mean));
-            drop(sess);
+            for &lanes in lane_widths {
+                let was = set_panel_kernels(lanes > 1);
+                let be = NativeBackend::with_threads(&def, t)?;
+                let mut state = state_at_sparsity(&def, s, &mut rng);
+                let mut sess = be.session(&state)?;
+                let mean = bench_to_flops(
+                    "backend",
+                    &format!("native/train_step/b={batch}/S={s}/t={t}/lanes={lanes}"),
+                    iters,
+                    Some(flops),
+                    || {
+                        sess.train_step(&mut state, &x, &y, 0.01).unwrap();
+                    },
+                );
+                means.push((s, t, lanes, mean));
+                drop(sess);
+                set_panel_kernels(was);
 
-            // The determinism gate: every cell bit-identical to t=1.
-            if t > 1 && probe_state(&def, t, s, &x, &y, check_steps) != baseline {
-                identical = false;
-                eprintln!("REGRESSION: S={s} t={t} diverged from the serial path");
+                // The determinism gate: every cell bit-identical to
+                // t=1, lanes=1.
+                if (t > 1 || lanes > 1)
+                    && probe_state(&def, t, lanes, s, &x, &y, check_steps) != baseline
+                {
+                    identical = false;
+                    eprintln!("REGRESSION: S={s} t={t} lanes={lanes} diverged from serial/scalar");
+                }
             }
         }
     }
-    if let (Some(sp), Some(dn)) = (
-        means.iter().find(|m| m.0 == 0.9 && m.1 == 1),
-        means.iter().find(|m| m.0 == 0.0 && m.1 == 1),
-    ) {
+    let cell = |s: f64, t: usize, l: usize| {
+        means.iter().find(|m| m.0 == s && m.1 == t && m.2 == l).map(|m| m.3)
+    };
+    if let (Some(sp), Some(dn)) = (cell(0.9, 1, 8), cell(0.0, 1, 8)) {
         println!(
-            "step-time ratio dense/S=0.9 (serial): {:.2}x (ideal ≈ {:.1}x on the sparsifiable share)",
-            dn.2 / sp.2,
+            "step-time ratio dense/S=0.9 (serial, lanes=8): {:.2}x (ideal ≈ {:.1}x on the \
+             sparsifiable share)",
+            dn / sp,
             1.0 / 0.1
         );
     }
-    if let (Some(t1), Some(t4)) = (
-        means.iter().find(|m| m.0 == 0.9 && m.1 == 1),
-        means.iter().find(|m| m.0 == 0.9 && m.1 == 4),
-    ) {
-        println!("step-time speedup S=0.9 t=4 vs t=1: {:.2}x", t1.2 / t4.2);
+    if let (Some(t1), Some(t4)) = (cell(0.9, 1, 8), cell(0.9, 4, 8)) {
+        println!("step-time speedup S=0.9 t=4 vs t=1 (lanes=8): {:.2}x", t1 / t4);
+    }
+    if let (Some(scalar), Some(panel)) = (cell(0.9, 1, 1), cell(0.9, 1, 8)) {
+        let speedup = scalar / panel;
+        println!("panel speedup S=0.9 t=1, lanes=8 vs lanes=1: {speedup:.2}x (target ≥ 2x)");
+        if !smoke && speedup < 2.0 {
+            // Not an exit-1 gate (machine dependent), but loud: the
+            // acceptance criteria say a miss must be investigated.
+            eprintln!(
+                "PANEL SPEEDUP BELOW TARGET: {speedup:.2}x < 2x on the S=0.9 step — check \
+                 autovectorization (RUSTFLAGS=-Ctarget-cpu=x86-64-v3, or enable simd-intrinsics)"
+            );
+        }
     }
 
     // The RigL grow signal stays an O(dense) outer product — measured
-    // per thread count so the ΔT amortization argument has both terms
-    // on record (dense grads parallelize best: uniform chunks).
+    // per thread count and lane width so the ΔT amortization argument
+    // has all terms on record (dense grads parallelize best: uniform
+    // chunks and contiguous panel FMAs).
     for &t in thread_counts {
-        let be = NativeBackend::with_threads(&def, t)?;
-        let mut state = state_at_sparsity(&def, 0.9, &mut rng);
-        let mut sess = be.session(&state)?;
-        bench_to(
-            "backend",
-            &format!("native/dense_grads/b={batch}/S=0.9/t={t}"),
-            if smoke { 2 } else { 20 },
-            || {
-                sess.dense_grads(&state, &x, &y).unwrap();
-            },
-        );
-        drop(sess);
+        for &lanes in lane_widths {
+            let was = set_panel_kernels(lanes > 1);
+            let be = NativeBackend::with_threads(&def, t)?;
+            let mut state = state_at_sparsity(&def, 0.9, &mut rng);
+            let mut sess = be.session(&state)?;
+            bench_to(
+                "backend",
+                &format!("native/dense_grads/b={batch}/S=0.9/t={t}/lanes={lanes}"),
+                if smoke { 2 } else { 20 },
+                || {
+                    sess.dense_grads(&state, &x, &y).unwrap();
+                },
+            );
+            drop(sess);
+            set_panel_kernels(was);
+        }
     }
 
     // End-to-end: a tiny RigL run through the Trainer (data pipeline,
-    // topology updates, evals included).
+    // topology updates, evals included) with panels at the default (on).
     {
         use rigl::topology::Method;
         use rigl::train::{TrainConfig, Trainer};

@@ -112,6 +112,7 @@ fn main() -> anyhow::Result<()> {
                 iters: 1,
                 mean_s: wall,
                 min_s: wall,
+                gflops: None,
                 git_rev: git_rev(),
             },
         )?;

@@ -2,20 +2,52 @@
 //!
 //! Separates literal construction, execution, and result read-back so the
 //! §Perf pass can attribute the per-step cost (EXPERIMENTS.md §Perf).
+//!
+//! Artifact-gated (PJRT): without a runtime or an AOT artifacts dir the
+//! bench SKIPS cleanly (exit 0 with a note) instead of erroring, so
+//! `cargo bench --benches -- --smoke` exercises every target on any
+//! machine. `--smoke` shrinks the model list and rep counts.
 
 use rigl::model::{load_manifest, ParamSet};
 use rigl::runtime::{lit_f32, lit_i32};
-use rigl::util::{bench, Rng};
+use rigl::util::{bench, smoke_mode, Rng};
 use rigl::Runtime;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::cpu()?;
-    let manifest = load_manifest(&rigl::artifacts_dir())?;
-    println!("== bench_runtime: PJRT marshalling vs execution ==");
+    let smoke = smoke_mode();
+    println!(
+        "== bench_runtime: PJRT marshalling vs execution{} ==",
+        if smoke { " [SMOKE]" } else { "" }
+    );
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("(skipping bench_runtime: no PJRT runtime: {e})");
+            return Ok(());
+        }
+    };
+    let manifest = match load_manifest(&rigl::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("(skipping bench_runtime: no artifacts manifest: {e})");
+            return Ok(());
+        }
+    };
+    let models: &[&str] = if smoke { &["mlp"] } else { &["mlp", "cnn"] };
+    let (marshal_iters, exec_iters) = if smoke { (3, 2) } else { (50, 30) };
 
-    for model in ["mlp", "cnn"] {
-        let def = manifest.get(model)?;
-        let exe = rt.load(&manifest.artifact_path(model, "eval")?)?;
+    for &model in models {
+        // Per-model artifacts may be missing: skip that model cleanly.
+        let (def, exe) = match manifest.get(model).and_then(|def| {
+            let path = manifest.artifact_path(model, "eval")?;
+            Ok((def, rt.load(&path)?))
+        }) {
+            Ok(pair) => pair,
+            Err(e) => {
+                println!("(skipping {model}: {e})");
+                continue;
+            }
+        };
         let mut rng = Rng::new(0);
         let params = ParamSet::init(def, &mut rng);
         let masks = ParamSet::ones(def);
@@ -25,7 +57,7 @@ fn main() -> anyhow::Result<()> {
         let xdims: Vec<i64> = def.input_shape.iter().map(|&d| d as i64).collect();
 
         // 1. Literal construction alone (host→device copies).
-        bench(&format!("marshal_inputs/{model}"), 50, || {
+        bench(&format!("marshal_inputs/{model}"), marshal_iters, || {
             let mut inputs = Vec::new();
             for (t, s) in params.tensors.iter().zip(&def.specs) {
                 inputs.push(lit_f32(t, &s.dims_i64()).unwrap());
@@ -48,7 +80,7 @@ fn main() -> anyhow::Result<()> {
         }
         inputs.push(lit_f32(&x, &xdims).unwrap());
         inputs.push(lit_i32(&y, &[b as i64]).unwrap());
-        bench(&format!("execute_eval/{model}"), 30, || {
+        bench(&format!("execute_eval/{model}"), exec_iters, || {
             let _ = exe.run_f32(&inputs).unwrap();
         });
     }

@@ -5,15 +5,22 @@
 //!
 //! Record families in `BENCH_serve.json`:
 //!
-//! * `engine/forward/b=1/S=*/t=*` — in-process single-row latency
-//!   through the frozen CSR engine ([`util::BenchRecord`] shape), over
-//!   the full sparsity × kernel-thread grid. Mean time must DECREASE as
-//!   sparsity rises; logits of every t>1 cell are verified BIT-identical
-//!   to t=1 (exit 1 on divergence).
-//! * `engine/steady_state_allocs/S=*/t=*` — heap allocations per
-//!   request on a warm engine, counted by the global allocator WITH the
-//!   kernel pool engaged; any nonzero value is a regression and the
-//!   binary exits 1 (same discipline as bench_topology).
+//! * `engine/forward/b=*/S=*/t=*/lanes=*` — in-process latency through
+//!   the frozen CSR engine ([`util::BenchRecord`] shape, plus an
+//!   effective-GFLOP/s field: 2·nnz·batch useful FLOPs per forward),
+//!   over batch {1, 8} × sparsity × kernel threads × lane width
+//!   (lanes sweep {1, 8} at b=8 only — a one-row batch has no panel,
+//!   so b=1 records a single truthful `lanes=1` leg). `b=8, lanes=8`
+//!   is the batch-panel SIMD path (one CSR walk feeding all eight rows
+//!   — the micro-batcher's fused-forward shape); `lanes=1` forces the
+//!   scalar loops. Mean time must DECREASE as
+//!   sparsity rises; logits of every cell are verified BIT-identical to
+//!   `t=1, lanes=1` (exit 1 on divergence).
+//! * `engine/steady_state_allocs/b=*/S=*/t=*/lanes=*` — heap
+//!   allocations per request on a warm engine, counted by the global
+//!   allocator WITH the kernel pool and the panel scratch engaged; any
+//!   nonzero value is a regression and the binary exits 1 (same
+//!   discipline as bench_topology).
 //! * `tcp/*` — end-to-end loopback numbers from the load generator:
 //!   `tcp/single/S=*` for per-request latency vs sparsity and
 //!   `tcp/batched-vs-serial/*` for the coalescing win — micro-batched
@@ -28,11 +35,12 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use rigl::backend::native::kernels::set_panel_kernels;
 use rigl::backend::native::mlp_def;
 use rigl::pool::KernelPool;
 use rigl::serve::{run_load, top_k, InferEngine, ServeConfig, Server, SparseModel, TopKScratch};
 use rigl::sparsity::Distribution;
-use rigl::util::{append_bench_json, bench_to, smoke_mode, Rng};
+use rigl::util::{append_bench_json, bench_to_flops, smoke_mode, Rng};
 
 /// Forwarding allocator that counts allocation events (alloc + realloc).
 struct CountingAlloc;
@@ -74,68 +82,92 @@ fn main() -> anyhow::Result<()> {
     let fwd_iters = if smoke { 20 } else { 300 };
     let mut failed = false;
 
-    // ---- engine-only: latency vs sparsity × threads, bit-identity,
-    // ---- and the zero-alloc gate with the pool engaged --------------
+    // ---- engine-only: latency vs batch × sparsity × threads × lanes,
+    // ---- bit-identity, and the zero-alloc gate with the pool and the
+    // ---- panel scratch engaged ---------------------------------------
+    let batches: &[usize] = &[1, 8];
     let mut engine_means = Vec::new();
     for &s in sparsities {
         let model = model_at(s);
+        let nnz: usize = model.layers.iter().map(|l| l.topo.nnz()).sum();
         let mut rng = Rng::new(1);
-        let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
-        let mut baseline: Vec<u32> = Vec::new();
-        for &t in thread_counts {
-            // Pool + engine built BEFORE the warm window: their setup
-            // allocations are not steady-state.
-            let pool = (t > 1).then(|| Arc::new(KernelPool::new(t)));
-            let mut eng = InferEngine::new(&model, 1);
-            eng.set_pool(pool);
-            let mut scratch = TopKScratch::default();
-            let mut pairs = Vec::new();
-            let mean = bench_to(
-                "serve",
-                &format!("engine/forward/b=1/S={s}/t={t}"),
-                fwd_iters,
-                || {
-                    let logits = eng.forward(&model, &x, 1);
-                    top_k(logits, 1, &mut scratch, &mut pairs);
-                },
-            );
-            if t == 1 {
-                engine_means.push((s, mean));
-                baseline = eng.forward(&model, &x, 1).iter().map(|v| v.to_bits()).collect();
-            } else {
-                let got: Vec<u32> =
-                    eng.forward(&model, &x, 1).iter().map(|v| v.to_bits()).collect();
-                if got != baseline {
-                    failed = true;
-                    eprintln!("REGRESSION: S={s} t={t} logits diverged from t=1");
-                }
-            }
+        for &b in batches {
+            // Panels need a full 8-row batch; at b=1 a lanes=8 leg would
+            // re-measure the scalar path under a misleading label.
+            let lane_widths: &[usize] = if b >= 8 { &[1, 8] } else { &[1] };
+            let x: Vec<f32> = (0..b * 784).map(|_| rng.next_f32()).collect();
+            let mut baseline: Vec<u32> = Vec::new();
+            for &t in thread_counts {
+                for &lanes in lane_widths {
+                    let was = set_panel_kernels(lanes > 1);
+                    // Pool + engine built BEFORE the warm window: their
+                    // setup allocations are not steady-state. The floor
+                    // is pinned to 1 so the bit-identity and zero-alloc
+                    // gates genuinely exercise the pooled paths even on
+                    // a runner whose measured floor exceeds the layers.
+                    let pool = (t > 1).then(|| Arc::new(KernelPool::with_par_min_ops(t, 1)));
+                    let mut eng = InferEngine::new(&model, b);
+                    eng.set_pool(pool);
+                    let mut scratch = TopKScratch::default();
+                    let mut pairs = Vec::new();
+                    let flops = 2.0 * nnz as f64 * b as f64;
+                    let mean = bench_to_flops(
+                        "serve",
+                        &format!("engine/forward/b={b}/S={s}/t={t}/lanes={lanes}"),
+                        fwd_iters,
+                        Some(flops),
+                        || {
+                            let logits = eng.forward(&model, &x, b);
+                            top_k(&logits[..model.classes()], 1, &mut scratch, &mut pairs);
+                        },
+                    );
+                    if t == 1 && lanes == 1 && b == 1 {
+                        engine_means.push((s, mean));
+                    }
+                    let got: Vec<u32> =
+                        eng.forward(&model, &x, b).iter().map(|v| v.to_bits()).collect();
+                    if t == 1 && lanes == 1 {
+                        baseline = got;
+                    } else if got != baseline {
+                        failed = true;
+                        eprintln!(
+                            "REGRESSION: b={b} S={s} t={t} lanes={lanes} logits diverged \
+                             from t=1 lanes=1"
+                        );
+                    }
 
-            // Warm from the bench above: further requests must not
-            // allocate — including every fork-join dispatch when the
-            // pool is engaged.
-            let iters = if smoke { 20u64 } else { 100 };
-            let before = ALLOC_EVENTS.load(Ordering::Relaxed);
-            for _ in 0..iters {
-                let logits = eng.forward(&model, &x, 1);
-                top_k(logits, 1, &mut scratch, &mut pairs);
-            }
-            let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
-            let per_req = allocs as f64 / iters as f64;
-            println!("engine/steady_state_allocs/S={s}/t={t}        {per_req:.2} allocs/request");
-            append_bench_json(
-                "serve",
-                &format!(
-                    "{{\"name\":\"engine/steady_state_allocs/S={s}/t={t}\",\"iters\":{iters},\
-                     \"mean_s\":{per_req:.9},\"min_s\":{per_req:.9},\"git_rev\":\"{}\"}}",
-                    rigl::util::git_rev()
-                ),
-            )?;
-            if allocs != 0 {
-                failed = true;
-                eprintln!(
-                    "REGRESSION: {allocs} heap allocations over {iters} warm requests (S={s} t={t})"
-                );
+                    // Warm from the bench above: further requests must
+                    // not allocate — including every fork-join dispatch
+                    // and every panel transpose.
+                    let iters = if smoke { 20u64 } else { 100 };
+                    let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+                    for _ in 0..iters {
+                        let logits = eng.forward(&model, &x, b);
+                        top_k(&logits[..model.classes()], 1, &mut scratch, &mut pairs);
+                    }
+                    let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+                    let per_req = allocs as f64 / iters as f64;
+                    println!(
+                        "engine/steady_state_allocs/b={b}/S={s}/t={t}/lanes={lanes}  \
+                         {per_req:.2} allocs/request"
+                    );
+                    append_bench_json(
+                        "serve",
+                        &format!(
+                            "{{\"name\":\"engine/steady_state_allocs/b={b}/S={s}/t={t}/lanes={lanes}\",\"iters\":{iters},\
+                             \"mean_s\":{per_req:.9},\"min_s\":{per_req:.9},\"git_rev\":\"{}\"}}",
+                            rigl::util::git_rev()
+                        ),
+                    )?;
+                    if allocs != 0 {
+                        failed = true;
+                        eprintln!(
+                            "REGRESSION: {allocs} heap allocations over {iters} warm \
+                             requests (b={b} S={s} t={t} lanes={lanes})"
+                        );
+                    }
+                    set_panel_kernels(was);
+                }
             }
         }
     }
@@ -144,8 +176,8 @@ fn main() -> anyhow::Result<()> {
         engine_means.iter().find(|m| m.0 == 0.0),
     ) {
         println!(
-            "engine latency ratio dense/S=0.9 (t=1): {:.2}x (cost ∝ nnz ⇒ should approach the \
-             sparsifiable share)",
+            "engine latency ratio dense/S=0.9 (b=1 t=1): {:.2}x (cost ∝ nnz ⇒ should \
+             approach the sparsifiable share)",
             dense.1 / sparse.1
         );
     }

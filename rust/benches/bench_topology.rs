@@ -154,6 +154,7 @@ fn main() {
                 iters: updates as usize,
                 mean_s: per_update,
                 min_s: per_update,
+                gflops: None,
                 git_rev: git_rev(),
             },
         );

@@ -27,6 +27,13 @@
 //!   the work units for the forward kernels (whose `y[c] +=`
 //!   accumulations partition by output column).
 //!
+//! Blocks are orthogonal to the kernels' batch-panel SIMD axis (`simd`
+//! module): blocks partition the *structure* (rows/columns) across
+//! threads, panels partition the *batch* across lanes, and a work unit
+//! is one (block, panel) pair. Both partitions are derived from data
+//! shape alone — never timing — so the decomposition stays a pure
+//! schedule.
+//!
 //! `apply_swap` keeps the decomposition alive across topology updates:
 //! per-row-block nnz counts are patched incrementally from the drop/grow
 //! lists in O(k·log k) (binary search per index) and the column

@@ -54,6 +54,7 @@
 
 pub mod csr;
 pub mod kernels;
+pub mod simd;
 
 use std::sync::Arc;
 
@@ -61,6 +62,7 @@ use anyhow::{bail, ensure, Result};
 
 use self::csr::{CsrScratch, CsrTopo};
 use self::kernels::Exec;
+use self::simd::{PanelScratch, LANES};
 use crate::model::{ElemType, Kind, Manifest, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
 use crate::pool::KernelPool;
 use crate::train::{Batch, TrainState};
@@ -154,8 +156,19 @@ impl NativeBackend {
     /// Like [`NativeBackend::new`] with `threads` kernel lanes: every
     /// session dispatches block work units onto one shared pool.
     /// `threads <= 1` is the strictly serial path (no pool exists);
-    /// results are bit-identical either way.
+    /// results are bit-identical either way. The pool measures its own
+    /// fork-join round cost at construction and derives the per-layer
+    /// parallelize-or-stay-flat floor from it
+    /// ([`KernelPool::par_min_ops`]).
     pub fn with_threads(def: &ModelDef, threads: usize) -> Result<Self> {
+        Self::with_pool(def, (threads > 1).then(|| Arc::new(KernelPool::new(threads))))
+    }
+
+    /// Like [`NativeBackend::with_threads`] with a caller-supplied pool
+    /// (`None` = serial) — the determinism suites use it to pin the
+    /// pool's autotune floor so engagement never depends on machine
+    /// speed, and embedding callers can share one pool across backends.
+    pub fn with_pool(def: &ModelDef, pool: Option<Arc<KernelPool>>) -> Result<Self> {
         ensure!(
             def.optimizer == Optimizer::SgdMomentum,
             "native backend: model {:?} uses {:?}; only SGD+momentum is supported",
@@ -173,7 +186,7 @@ impl NativeBackend {
             momentum,
             weight_decay: def.hyper("weight_decay").unwrap_or(0.0) as f32,
             label_smoothing: def.hyper("label_smoothing").unwrap_or(0.0) as f32,
-            pool: (threads > 1).then(|| Arc::new(KernelPool::new(threads))),
+            pool: pool.filter(|p| p.threads() > 1),
         })
     }
 
@@ -222,6 +235,10 @@ struct NativeSession<'a> {
     /// Per-row loss scratch for the parallel softmax (batch-ordered
     /// reduction keeps the loss bit-identical to serial).
     row_loss: Vec<f64>,
+    /// Batch-panel transpose + accumulator storage for the SIMD
+    /// kernels; shared across layers (one kernel runs at a time) and
+    /// allocation-free once warm.
+    panels: PanelScratch,
 }
 
 impl<'a> NativeSession<'a> {
@@ -244,6 +261,17 @@ impl<'a> NativeSession<'a> {
             topos.push(topo);
         }
         let dw_vals = topos.iter().map(|t| vec![0.0; t.nnz()]).collect();
+        // Pre-size the panel scratch for the worst layer (the x-side
+        // transpose also carries dy/logits during backward, hence max
+        // over BOTH dims — the forward-only InferEngine sizes max_in
+        // only), keeping "all storage is allocated once here" true.
+        let mut panels = PanelScratch::default();
+        let npanels = batch / LANES;
+        if npanels > 0 {
+            let max_in = be.layers.iter().map(|l| l.in_dim).max().unwrap_or(0);
+            let max_out = be.layers.iter().map(|l| l.out_dim).max().unwrap_or(0);
+            let _ = panels.xy_bufs(npanels * max_in.max(max_out), npanels * max_out);
+        }
         NativeSession {
             be,
             batch,
@@ -255,6 +283,7 @@ impl<'a> NativeSession<'a> {
             db: be.layers.iter().map(|l| vec![0.0; l.out_dim]).collect(),
             topos,
             row_loss: vec![0.0; batch],
+            panels,
         }
     }
 
@@ -290,6 +319,7 @@ impl<'a> NativeSession<'a> {
                 &state.params.tensors[lay.w],
                 &state.params.tensors[lay.b],
                 y,
+                &mut self.panels,
             );
             if l + 1 < self.be.layers.len() {
                 kernels::relu(y);
@@ -320,6 +350,7 @@ impl<'a> NativeSession<'a> {
                         lay.in_dim,
                         lay.out_dim,
                         &mut grads.tensors[lay.w],
+                        &mut self.panels,
                     );
                 }
                 Some(_) => {}
@@ -332,6 +363,7 @@ impl<'a> NativeSession<'a> {
                         self.batch,
                         &self.topos[l],
                         &mut self.dw_vals[l],
+                        &mut self.panels,
                     );
                     kernels::bias_grad(dy, self.batch, lay.out_dim, &mut self.db[l]);
                 }
@@ -344,6 +376,7 @@ impl<'a> NativeSession<'a> {
                     &self.topos[l],
                     &state.params.tensors[lay.w],
                     &mut dprev[l - 1],
+                    &mut self.panels,
                 );
                 kernels::relu_bwd(&mut dprev[l - 1], &self.acts[l - 1]);
             }
@@ -372,6 +405,7 @@ impl Session for NativeSession<'_> {
             self.be.label_smoothing,
             &mut self.dbuf[last],
             &mut self.row_loss,
+            &mut self.panels,
         );
         self.backward(state, xs, None);
         for l in 0..self.be.layers.len() {
@@ -418,6 +452,7 @@ impl Session for NativeSession<'_> {
             self.be.label_smoothing,
             &mut self.dbuf[last],
             &mut self.row_loss,
+            &mut self.panels,
         );
         let mut grads = ParamSet::zeros(&self.be.def);
         self.backward(state, xs, Some(&mut grads));
@@ -683,7 +718,10 @@ mod tests {
         let y: Vec<i32> = (0..32).map(|_| rng.next_below(10) as i32).collect();
 
         let run = |threads: usize| {
-            let be = NativeBackend::with_threads(&def, threads).unwrap();
+            // Pin the autotune floor to 1 so the pooled paths engage on
+            // any machine, however slow its measured round cost.
+            let pool = (threads > 1).then(|| Arc::new(KernelPool::with_par_min_ops(threads, 1)));
+            let be = NativeBackend::with_pool(&def, pool).unwrap();
             assert_eq!(be.threads(), threads.max(1));
             let mut st = base.clone();
             let mut sess = be.session(&st).unwrap();

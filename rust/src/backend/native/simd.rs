@@ -1,0 +1,429 @@
+//! Portable fixed-width SIMD lanes and the batch-panel layout for the
+//! blocked CSR kernels.
+//!
+//! The kernel engine's unit of data parallelism is an [`F32Lanes`]: a
+//! 32-byte-aligned `[f32; 8]` newtype whose elementwise ops are written
+//! so stable rustc (LLVM) reliably autovectorizes them — straight-line
+//! fixed-trip-count loops over aligned arrays, no reductions, selects
+//! instead of branches. One lane vector holds the same scalar for
+//! **eight different batch elements** (a *batch panel*), so a single
+//! walk of a CSR row's index/value stream feeds eight accumulations at
+//! once instead of re-walking the topology per batch element.
+//!
+//! ## Bitwise contract
+//!
+//! Every op here is a lane-wise copy of the scalar kernels' arithmetic:
+//!
+//! * [`F32Lanes::fma`] is `a + x·s` per lane as **two** rounded ops
+//!   (mul, then add) — never a fused multiply-add, which rounds once
+//!   and would diverge from the scalar loops;
+//! * [`F32Lanes::fma_nz`] applies the same `a + x·s` but keeps the old
+//!   `a` bits wherever `x == 0.0` — a branch-free *select* that exactly
+//!   reproduces the scalar loops' `if xv == 0.0 { continue }`
+//!   short-circuit per lane (including `-0.0`, which compares equal to
+//!   zero and is therefore skipped on both paths, and NaN/∞ operands,
+//!   which are processed on both paths);
+//! * [`F32Lanes::max`] is `f32::max` per lane in fold order.
+//!
+//! Because each lane belongs to a distinct output element and every op
+//! maps 1:1 onto a scalar op, panel execution is bit-identical to the
+//! flat loops by construction — the property `tests/simd_determinism.rs`
+//! re-proves over the full batch/sparsity/threads grid.
+//!
+//! ## The `simd-intrinsics` feature
+//!
+//! The portable path is the product: with `opt-level` ≥ 2 LLVM compiles
+//! these loops to packed SSE/AVX on any x86-64 (and NEON on aarch64).
+//! The optional `simd-intrinsics` cargo feature adds a runtime-detected
+//! AVX2 path for the two hot ops (`fma`, `fma_nz`) using explicit
+//! `_mm256_mul_ps` + `_mm256_add_ps` (+ `blendv` for the mask) — NOT
+//! `_mm256_fmadd_ps`, for the bitwise reason above — as insurance
+//! against autovectorization regressions. Build with
+//! `RUSTFLAGS=-Ctarget-cpu=x86-64-v3` so the detected calls can inline;
+//! outputs are bit-identical to the portable path either way (asserted
+//! by `tests/simd_determinism.rs` when the feature is on).
+
+/// Panel width: batch elements per lane vector. Eight f32 lanes = one
+/// 256-bit AVX register; on 128-bit ISAs LLVM splits each op in two,
+/// which still beats the scalar walk 4:1.
+pub const LANES: usize = 8;
+
+/// Eight f32 lanes, 32-byte aligned so packed loads/stores never split
+/// a cache line and the AVX2 path can use aligned moves.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C, align(32))]
+pub struct F32Lanes(pub [f32; LANES]);
+
+impl F32Lanes {
+    #[inline(always)]
+    pub fn zero() -> F32Lanes {
+        F32Lanes([0.0; LANES])
+    }
+
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f32) -> F32Lanes {
+        F32Lanes([v; LANES])
+    }
+
+    /// First `LANES` values of `s` (panics if shorter).
+    #[inline(always)]
+    pub fn from_slice(s: &[f32]) -> F32Lanes {
+        let mut o = [0.0f32; LANES];
+        o.copy_from_slice(&s[..LANES]);
+        F32Lanes(o)
+    }
+
+    /// Write the lanes to the first `LANES` slots of `out`.
+    #[inline(always)]
+    pub fn write(&self, out: &mut [f32]) {
+        out[..LANES].copy_from_slice(&self.0);
+    }
+
+    /// `vals[idx[l]]` per lane — the index stream of one CSR row chunk.
+    #[inline(always)]
+    pub fn gather(vals: &[f32], idx: &[u32]) -> F32Lanes {
+        let mut o = [0.0f32; LANES];
+        for l in 0..LANES {
+            o[l] = vals[idx[l] as usize];
+        }
+        F32Lanes(o)
+    }
+
+    /// `vals[idx[l]] = self[l]` per lane. Indices must be distinct
+    /// (CSR columns within a row are), or later lanes win.
+    #[inline(always)]
+    pub fn scatter(&self, vals: &mut [f32], idx: &[u32]) {
+        for l in 0..LANES {
+            vals[idx[l] as usize] = self.0[l];
+        }
+    }
+
+    /// `self + x·s` per lane, as two rounded ops (see module docs).
+    #[inline(always)]
+    pub fn fma(self, x: F32Lanes, s: f32) -> F32Lanes {
+        #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+        if detect::intrinsics_on() {
+            // SAFETY: guarded by runtime AVX2 detection.
+            return unsafe { avx2::fma(self, x, s) };
+        }
+        let mut o = self;
+        for l in 0..LANES {
+            o.0[l] += x.0[l] * s;
+        }
+        o
+    }
+
+    /// `self + x·s` per lane where `x != 0.0`, the old `self` bits
+    /// elsewhere — the branch-free form of the scalar kernels'
+    /// zero-activation skip (see module docs).
+    #[inline(always)]
+    pub fn fma_nz(self, x: F32Lanes, s: f32) -> F32Lanes {
+        #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+        if detect::intrinsics_on() {
+            // SAFETY: guarded by runtime AVX2 detection.
+            return unsafe { avx2::fma_nz(self, x, s) };
+        }
+        let mut o = self;
+        for l in 0..LANES {
+            let t = o.0[l] + x.0[l] * s;
+            o.0[l] = if x.0[l] != 0.0 { t } else { o.0[l] };
+        }
+        o
+    }
+
+    /// `f32::max` per lane (NaN-ignoring, matching the scalar softmax's
+    /// `fold(NEG_INFINITY, f32::max)` — deliberately NOT `vmaxps`,
+    /// whose NaN semantics differ).
+    #[inline(always)]
+    pub fn max(self, other: F32Lanes) -> F32Lanes {
+        let mut o = self;
+        for l in 0..LANES {
+            o.0[l] = o.0[l].max(other.0[l]);
+        }
+        o
+    }
+
+    /// Whether any lane is nonzero (NaN counts as nonzero, like the
+    /// scalar `!= 0.0` tests). Gates whole-row skips: a row may be
+    /// skipped only when EVERY lane would have skipped it.
+    #[inline(always)]
+    pub fn any_nonzero(&self) -> bool {
+        self.0.iter().any(|&v| v != 0.0)
+    }
+}
+
+/// Transpose `npanels` panels of [`LANES`] batch rows each from the
+/// row-major `(batch × dim)` matrix `src` into panel-major lane
+/// vectors: `out[p·dim + i][l] = src[(p·LANES + l)·dim + i]`. Rows past
+/// `npanels·LANES` (the ragged batch tail) are untouched — they run on
+/// the scalar path.
+pub(crate) fn pack_panels(src: &[f32], dim: usize, npanels: usize, out: &mut [F32Lanes]) {
+    debug_assert!(src.len() >= npanels * LANES * dim);
+    debug_assert!(out.len() >= npanels * dim);
+    for p in 0..npanels {
+        let rows = &src[p * LANES * dim..];
+        let dst = &mut out[p * dim..(p + 1) * dim];
+        for (i, lanes) in dst.iter_mut().enumerate() {
+            for l in 0..LANES {
+                lanes.0[l] = rows[l * dim + i];
+            }
+        }
+    }
+}
+
+/// Reusable panel-transpose + panel-accumulator storage, owned by a
+/// session / inference engine so the kernels' warm path performs zero
+/// heap allocations (buffers only ever grow; `Vec<F32Lanes>` storage is
+/// 32-byte aligned by the element type). The `x` buffer holds the
+/// input-side transpose (activations, upstream gradients, or logits —
+/// one kernel at a time), `y` the forward's per-task column
+/// accumulators.
+#[derive(Default)]
+pub struct PanelScratch {
+    pub(crate) x: Vec<F32Lanes>,
+    pub(crate) y: Vec<F32Lanes>,
+}
+
+impl PanelScratch {
+    /// The input-transpose buffer, grown to at least `n` lane vectors.
+    pub(crate) fn x_buf(&mut self, n: usize) -> &mut [F32Lanes] {
+        if self.x.len() < n {
+            self.x.resize(n, F32Lanes::zero());
+        }
+        &mut self.x[..n]
+    }
+
+    /// Both buffers at once (the forward needs the transpose and the
+    /// accumulators simultaneously).
+    pub(crate) fn xy_bufs(&mut self, nx: usize, ny: usize) -> (&mut [F32Lanes], &mut [F32Lanes]) {
+        if self.x.len() < nx {
+            self.x.resize(nx, F32Lanes::zero());
+        }
+        if self.y.len() < ny {
+            self.y.resize(ny, F32Lanes::zero());
+        }
+        (&mut self.x[..nx], &mut self.y[..ny])
+    }
+}
+
+#[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+mod detect {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Test hook: force the portable path even where AVX2 is available,
+    /// so the intrinsics-vs-portable bit-identity suite can compare
+    /// both inside one process.
+    static FORCE_PORTABLE: AtomicBool = AtomicBool::new(false);
+
+    #[inline(always)]
+    pub fn intrinsics_on() -> bool {
+        !FORCE_PORTABLE.load(Ordering::Relaxed) && std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    pub fn set_force_portable(on: bool) -> bool {
+        FORCE_PORTABLE.swap(on, Ordering::Relaxed)
+    }
+}
+
+/// Force the portable lane ops even where AVX2 was detected (returns
+/// the previous setting). Only meaningful under `simd-intrinsics`; the
+/// determinism tests flip it to prove both paths produce identical
+/// bits.
+#[cfg(feature = "simd-intrinsics")]
+pub fn set_force_portable(on: bool) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        detect::set_force_portable(on)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = on;
+        false
+    }
+}
+
+/// Whether the AVX2 intrinsics path is compiled in AND active on this
+/// CPU (always false without the `simd-intrinsics` feature).
+pub fn intrinsics_active() -> bool {
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    {
+        detect::intrinsics_on()
+    }
+    #[cfg(not(all(feature = "simd-intrinsics", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+#[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+mod avx2 {
+    use super::{F32Lanes, LANES};
+    use std::arch::x86_64::*;
+
+    /// `a + x·s` per lane. `_mm256_mul_ps` + `_mm256_add_ps`, NOT
+    /// `_mm256_fmadd_ps`: the fused op rounds once where the scalar
+    /// reference rounds twice, and the whole engine's contract is
+    /// bitwise equality with the scalar loops.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fma(a: F32Lanes, x: F32Lanes, s: f32) -> F32Lanes {
+        let av = _mm256_load_ps(a.0.as_ptr());
+        let xv = _mm256_load_ps(x.0.as_ptr());
+        let r = _mm256_add_ps(av, _mm256_mul_ps(xv, _mm256_set1_ps(s)));
+        let mut out = F32Lanes([0.0; LANES]);
+        _mm256_store_ps(out.0.as_mut_ptr(), r);
+        out
+    }
+
+    /// Masked form: lanes where `x == 0.0` keep `a`'s bits. `NEQ_UQ`
+    /// (unordered, non-signaling) makes NaN lanes "nonzero" exactly
+    /// like the scalar `!= 0.0` test.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fma_nz(a: F32Lanes, x: F32Lanes, s: f32) -> F32Lanes {
+        let av = _mm256_load_ps(a.0.as_ptr());
+        let xv = _mm256_load_ps(x.0.as_ptr());
+        let sum = _mm256_add_ps(av, _mm256_mul_ps(xv, _mm256_set1_ps(s)));
+        let mask = _mm256_cmp_ps(xv, _mm256_setzero_ps(), _CMP_NEQ_UQ);
+        let r = _mm256_blendv_ps(av, sum, mask);
+        let mut out = F32Lanes([0.0; LANES]);
+        _mm256_store_ps(out.0.as_mut_ptr(), r);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fma_matches_scalar_two_step_rounding() {
+        let a = F32Lanes([1.0, -2.5, 0.0, 1e-8, 3.0e7, -0.0, 0.25, 9.0]);
+        let x = F32Lanes([0.5, 1.5, -2.0, 1e8, 1.0, 4.0, 0.0, -1.0]);
+        let s = 1.7f32;
+        let got = a.fma(x, s);
+        for l in 0..LANES {
+            let want = a.0[l] + x.0[l] * s;
+            assert_eq!(got.0[l].to_bits(), want.to_bits(), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn fma_nz_skips_exactly_like_the_scalar_branch() {
+        // Zero lanes (both signs) keep their ORIGINAL bits, including a
+        // negative-zero accumulator that a blanket `+ 0.0` would flip.
+        let a = F32Lanes([-0.0, 1.0, -0.0, 2.0, 0.5, -3.0, 0.0, 7.0]);
+        let x = F32Lanes([0.0, 0.0, -0.0, 2.0, f32::NAN, -1.0, 0.0, 0.5]);
+        let s = -2.5f32;
+        let got = a.fma_nz(x, s);
+        for l in 0..LANES {
+            let want = if x.0[l] != 0.0 {
+                a.0[l] + x.0[l] * s
+            } else {
+                a.0[l]
+            };
+            assert_eq!(got.0[l].to_bits(), want.to_bits(), "lane {l}");
+        }
+        // NaN input lane was processed (NaN != 0.0), producing NaN.
+        assert!(got.0[4].is_nan());
+    }
+
+    #[test]
+    fn max_matches_f32_max_fold() {
+        let a = F32Lanes([1.0, f32::NEG_INFINITY, f32::NAN, -0.0, 2.0, 5.0, -7.0, 0.0]);
+        let b = F32Lanes([0.5, 3.0, 1.0, 0.0, f32::NAN, 5.0, -8.0, -1.0]);
+        let got = a.max(b);
+        for l in 0..LANES {
+            assert_eq!(got.0[l].to_bits(), a.0[l].max(b.0[l]).to_bits(), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let vals = [10.0f32, 11.0, 12.0, 13.0, 14.0, 15.0, 16.0, 17.0, 18.0];
+        let idx = [8u32, 0, 3, 1, 7, 2, 5, 6];
+        let g = F32Lanes::gather(&vals, &idx);
+        assert_eq!(g.0, [18.0, 10.0, 13.0, 11.0, 17.0, 12.0, 15.0, 16.0]);
+        let mut out = [0.0f32; 9];
+        g.scatter(&mut out, &idx);
+        for (l, &i) in idx.iter().enumerate() {
+            assert_eq!(out[i as usize], g.0[l]);
+        }
+    }
+
+    #[test]
+    fn pack_panels_is_the_batch_transpose() {
+        // 2 panels of 8 rows × dim 3, plus one ragged tail row.
+        let dim = 3;
+        let batch = 2 * LANES + 1;
+        let src: Vec<f32> = (0..batch * dim).map(|v| v as f32).collect();
+        let mut out = vec![F32Lanes::zero(); 2 * dim];
+        pack_panels(&src, dim, 2, &mut out);
+        for p in 0..2 {
+            for i in 0..dim {
+                for l in 0..LANES {
+                    assert_eq!(out[p * dim + i].0[l], src[(p * LANES + l) * dim + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn any_nonzero_counts_nan_and_signed_zero_correctly() {
+        assert!(!F32Lanes([0.0, -0.0, 0.0, -0.0, 0.0, 0.0, -0.0, 0.0]).any_nonzero());
+        assert!(F32Lanes([0.0; 8]).0.iter().all(|&v| v == 0.0));
+        let mut nan = F32Lanes::zero();
+        nan.0[3] = f32::NAN;
+        assert!(nan.any_nonzero());
+        let mut tiny = F32Lanes::zero();
+        tiny.0[7] = f32::MIN_POSITIVE;
+        assert!(tiny.any_nonzero());
+    }
+
+    #[test]
+    fn scratch_buffers_only_grow() {
+        let mut s = PanelScratch::default();
+        let (x, y) = s.xy_bufs(16, 8);
+        assert_eq!((x.len(), y.len()), (16, 8));
+        let cap = (s.x.capacity(), s.y.capacity());
+        let (x, y) = s.xy_bufs(10, 4); // smaller request: no shrink, no realloc
+        assert_eq!((x.len(), y.len()), (10, 4));
+        assert_eq!((s.x.capacity(), s.y.capacity()), cap);
+    }
+
+    #[test]
+    fn lane_storage_is_32_byte_aligned() {
+        assert_eq!(std::mem::align_of::<F32Lanes>(), 32);
+        assert_eq!(std::mem::size_of::<F32Lanes>(), 32);
+        let v = vec![F32Lanes::zero(); 4];
+        assert_eq!(v.as_ptr() as usize % 32, 0);
+    }
+
+    /// With the feature on and AVX2 present, the intrinsics and
+    /// portable implementations must agree bitwise on awkward inputs.
+    #[cfg(feature = "simd-intrinsics")]
+    #[test]
+    fn intrinsics_agree_with_portable_bitwise() {
+        let cases = [
+            (
+                F32Lanes([1.0, -0.0, 0.0, 1e-38, 3.4e38, -1e-30, 0.5, -9.0]),
+                F32Lanes([0.0, 2.0, -0.0, 1e38, -1.0, f32::NAN, 3.0, 0.125]),
+                std::f32::consts::PI,
+            ),
+            (
+                F32Lanes([-0.0; 8]),
+                F32Lanes([0.0, -0.0, 1.0, -1.0, 0.0, 2.0, -0.0, 4.0]),
+                -0.0,
+            ),
+        ];
+        for (a, x, s) in cases {
+            let fast = (a.fma(x, s), a.fma_nz(x, s));
+            let was = set_force_portable(true);
+            let slow = (a.fma(x, s), a.fma_nz(x, s));
+            set_force_portable(was);
+            for l in 0..LANES {
+                assert_eq!(fast.0 .0[l].to_bits(), slow.0 .0[l].to_bits(), "fma lane {l}");
+                assert_eq!(fast.1 .0[l].to_bits(), slow.1 .0[l].to_bits(), "fma_nz lane {l}");
+            }
+        }
+    }
+}

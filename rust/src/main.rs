@@ -451,7 +451,9 @@ fn print_usage() {
          \x20          [--max-wait-us 200] [--max-requests 0] [--reload-poll-ms 200]\n\
          \x20          (port 0 = ephemeral, printed on stdout; the artifact file is\n\
          \x20           watched and hot-reloaded on change; --threads shares one\n\
-         \x20           kernel pool across workers for per-request latency)\n\
+         \x20           kernel pool across workers for per-request latency;\n\
+         \x20           keep --max-batch a multiple of 8 — fused forwards run in\n\
+         \x20           SIMD batch-panels of 8, ragged rows fall to the scalar tail)\n\
          repro serve-bench --addr 127.0.0.1:PORT [--concurrency 4] [--requests 100] [--k 1]\n\
          \x20          (--requests is PER CONNECTION: total load = concurrency × requests)\n\
          repro serve-bench --model mlp.srvd      (self-host over loopback and bench)"

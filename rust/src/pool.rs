@@ -160,7 +160,19 @@ pub struct KernelPool {
     turn: Mutex<()>,
     handles: Vec<std::thread::JoinHandle<()>>,
     threads: usize,
+    /// Autotune floor: minimum inner-loop op count a kernel must bring
+    /// before a fork-join round pays for itself. Measured once at
+    /// construction (see [`KernelPool::new`]); pinnable for tests via
+    /// [`KernelPool::with_par_min_ops`].
+    par_min_ops: usize,
 }
+
+/// Fixed fallback for the autotune floor when the round cost cannot be
+/// measured (single-threaded pools, zero-resolution clocks) and the
+/// anchor the measured value is clamped around: ~16K fused
+/// multiply-adds ≈ a couple of microseconds on any recent core, the
+/// historical hard-coded floor.
+pub const PAR_MIN_OPS_FALLBACK: usize = 16 * 1024;
 
 /// A published round: a type-erased closure. `call` rebuilds the
 /// concrete type; `data` points at the caller's closure, which outlives
@@ -194,7 +206,29 @@ struct FjState {
 impl KernelPool {
     /// Pool with `threads` compute lanes (min 1). `threads - 1` OS
     /// threads are spawned; lane 0 is the `fork_join` caller itself.
+    ///
+    /// Construction runs a one-shot calibration: a handful of empty
+    /// fork-join rounds are timed and the measured round-trip cost is
+    /// converted into the pool's [`par_min_ops`](KernelPool::par_min_ops)
+    /// autotune floor (clamped around [`PAR_MIN_OPS_FALLBACK`]), so the
+    /// "is this layer worth forking for?" threshold reflects THIS
+    /// machine's wake-up latency instead of a hard-coded guess. The
+    /// floor only selects between two bitwise-identical execution paths
+    /// (the determinism contract), so the timing dependence can never
+    /// change results — tests that must not depend on timing at all pin
+    /// the floor with [`KernelPool::with_par_min_ops`].
     pub fn new(threads: usize) -> KernelPool {
+        let mut pool = Self::with_par_min_ops(threads, PAR_MIN_OPS_FALLBACK);
+        if pool.threads > 1 {
+            pool.par_min_ops = pool.measure_min_ops();
+        }
+        pool
+    }
+
+    /// Like [`KernelPool::new`] with the autotune floor pinned instead
+    /// of measured — determinism tests and benches use `ops = 1` to
+    /// force the blocked paths to engage regardless of machine speed.
+    pub fn with_par_min_ops(threads: usize, ops: usize) -> KernelPool {
         let threads = threads.max(1);
         let shared = std::sync::Arc::new(FjShared {
             state: Mutex::new(FjState {
@@ -220,12 +254,39 @@ impl KernelPool {
             turn: Mutex::new(()),
             handles,
             threads,
+            par_min_ops: ops.max(1),
         }
+    }
+
+    /// Time empty fork-join rounds and derive the op floor: a kernel
+    /// should bring at least ~2× the round cost in work (at ~8 f32 MACs
+    /// per ns on a recent core) before forking beats staying flat.
+    fn measure_min_ops(&self) -> usize {
+        for _ in 0..4 {
+            self.fork_join(&|_| {}); // warm the wake/sleep path
+        }
+        const ROUNDS: u32 = 32;
+        let t0 = std::time::Instant::now();
+        for _ in 0..ROUNDS {
+            self.fork_join(&|_| {});
+        }
+        let ns_per_round = (t0.elapsed().as_nanos() / ROUNDS as u128) as usize;
+        if ns_per_round == 0 {
+            return PAR_MIN_OPS_FALLBACK;
+        }
+        (ns_per_round * 8 * 2).clamp(PAR_MIN_OPS_FALLBACK / 4, PAR_MIN_OPS_FALLBACK * 64)
     }
 
     /// Number of compute lanes (including the caller's).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The autotune floor: kernels dispatch onto the pool only when
+    /// their inner-loop op count is at least this (below it, a fork-join
+    /// round would cost more than the work saves).
+    pub fn par_min_ops(&self) -> usize {
+        self.par_min_ops
     }
 
     /// Run `f(lane)` once on every lane (0..threads) and return when all
@@ -493,5 +554,18 @@ mod tests {
     fn kernel_pool_drops_cleanly_without_rounds() {
         let pool = KernelPool::new(8);
         drop(pool); // must join workers, not hang
+    }
+
+    #[test]
+    fn measured_floor_is_clamped_and_pinnable() {
+        // Measured: somewhere inside the clamp envelope.
+        let measured = KernelPool::new(4);
+        assert!(measured.par_min_ops() >= PAR_MIN_OPS_FALLBACK / 4);
+        assert!(measured.par_min_ops() <= PAR_MIN_OPS_FALLBACK * 64);
+        // Serial pools never measure: the fallback, unchanged.
+        assert_eq!(KernelPool::new(1).par_min_ops(), PAR_MIN_OPS_FALLBACK);
+        // Pinned: exactly what the caller asked for (min 1).
+        assert_eq!(KernelPool::with_par_min_ops(4, 1).par_min_ops(), 1);
+        assert_eq!(KernelPool::with_par_min_ops(2, 0).par_min_ops(), 1);
     }
 }

@@ -47,7 +47,10 @@ struct Job {
 pub struct BatcherConfig {
     /// Worker threads (each owns one [`InferEngine`] scratch).
     pub workers: usize,
-    /// Largest fused batch.
+    /// Largest fused batch. Keep it a multiple of 8: the fused forward
+    /// runs in batch-panels of 8 rows (`backend::native::simd`), and a
+    /// full batch of whole panels leaves no ragged rows on the scalar
+    /// tail. The default (16) is two panels.
     pub max_batch: usize,
     /// How long the collecting worker waits for more requests after the
     /// first one arrives. Zero still drains whatever is already queued.

@@ -18,6 +18,7 @@
 use std::sync::Arc;
 
 use crate::backend::native::kernels::{csr_spmm_bias_fwd, relu, Exec};
+use crate::backend::native::simd::{PanelScratch, LANES};
 use crate::pool::KernelPool;
 use crate::util::argselect_k_into;
 
@@ -37,6 +38,11 @@ pub struct InferEngine {
     /// intra-request parallelism never multiplies across workers;
     /// concurrent forwards serialize their fork-join rounds.
     pool: Option<Arc<KernelPool>>,
+    /// Batch-panel transposes for the SIMD forward (engaged at batch ≥
+    /// 8 — size `--max-batch` as a multiple of 8 to keep whole batches
+    /// on the panel path). Per-engine, so concurrent workers never
+    /// share it; allocation-free once warm like the activation scratch.
+    panels: PanelScratch,
 }
 
 impl InferEngine {
@@ -78,6 +84,18 @@ impl InferEngine {
         for (buf, &(_, out)) in self.acts.iter_mut().zip(&self.dims) {
             buf.resize(self.cap * out, 0.0);
         }
+        // Pre-size the panel-transpose scratch for the worst layer at
+        // this capacity, so the FIRST full-panel batch doesn't pay its
+        // growth inside the latency-critical fused forward. Forward-
+        // only engine ⇒ the x-side packs INPUT dims only (max_in);
+        // NativeSession::new sizes max(in, out) because training also
+        // packs dy/logits — keep the two in sync with kernel needs.
+        let npanels = self.cap / LANES;
+        if npanels > 0 {
+            let max_in = self.dims.iter().map(|&(i, _)| i).max().unwrap_or(0);
+            let max_out = self.dims.iter().map(|&(_, o)| o).max().unwrap_or(0);
+            let _ = self.panels.xy_bufs(npanels * max_in, npanels * max_out);
+        }
     }
 
     /// Run `batch` rows of `x` (`batch × in_dim`, row-major) through the
@@ -105,7 +123,16 @@ impl InferEngine {
                 &prev[l - 1][..batch * model.layers[l - 1].topo.cols]
             };
             let y = &mut rest[0][..batch * out];
-            csr_spmm_bias_fwd(exec, input, batch, &layer.topo, &layer.values, &layer.bias, y);
+            csr_spmm_bias_fwd(
+                exec,
+                input,
+                batch,
+                &layer.topo,
+                &layer.values,
+                &layer.bias,
+                y,
+                &mut self.panels,
+            );
             if l + 1 < n {
                 relu(y);
             }
@@ -184,17 +211,21 @@ mod tests {
         use crate::backend::native::csr::CsrTopo;
         use crate::backend::native::kernels::{relu, spmm_bias_fwd};
         let ser = Exec::Serial;
+        let mut ps = PanelScratch::default();
         let mut h1 = vec![0.0f32; batch * 8];
         let t1 = CsrTopo::from_mask(&masks.tensors[0], 10, 8);
-        spmm_bias_fwd(ser, &x, batch, &t1, &params.tensors[0], &params.tensors[1], &mut h1);
+        let (wt, bt) = (&params.tensors[0], &params.tensors[1]);
+        spmm_bias_fwd(ser, &x, batch, &t1, wt, bt, &mut h1, &mut ps);
         relu(&mut h1);
         let mut h2 = vec![0.0f32; batch * 6];
         let t2 = CsrTopo::from_mask(&masks.tensors[2], 8, 6);
-        spmm_bias_fwd(ser, &h1, batch, &t2, &params.tensors[2], &params.tensors[3], &mut h2);
+        let (wt, bt) = (&params.tensors[2], &params.tensors[3]);
+        spmm_bias_fwd(ser, &h1, batch, &t2, wt, bt, &mut h2, &mut ps);
         relu(&mut h2);
         let mut want = vec![0.0f32; batch * 3];
         let t3 = CsrTopo::from_mask(&masks.tensors[4], 6, 3);
-        spmm_bias_fwd(ser, &h2, batch, &t3, &params.tensors[4], &params.tensors[5], &mut want);
+        let (wt, bt) = (&params.tensors[4], &params.tensors[5]);
+        spmm_bias_fwd(ser, &h2, batch, &t3, wt, bt, &mut want, &mut ps);
 
         let model = crate::serve::SparseModel::from_state(&def, &params, &masks).unwrap();
         let mut eng = InferEngine::new(&model, batch);
@@ -271,7 +302,9 @@ mod tests {
                 .map(|v| v.to_bits())
                 .collect();
             for threads in [2usize, 8] {
-                let pool = std::sync::Arc::new(crate::pool::KernelPool::new(threads));
+                // Floor pinned to 1 so the pooled path engages on any machine.
+                let pool =
+                    std::sync::Arc::new(crate::pool::KernelPool::with_par_min_ops(threads, 1));
                 let mut eng = InferEngine::new(&model, batch);
                 eng.set_pool(Some(pool));
                 let got: Vec<u32> = eng

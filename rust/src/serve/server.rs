@@ -63,7 +63,9 @@ pub struct ServeConfig {
     pub port: u16,
     /// Micro-batcher worker threads.
     pub workers: usize,
-    /// Largest fused batch.
+    /// Largest fused batch (`--max-batch`). Prefer multiples of 8 so
+    /// coalesced batches split into whole SIMD batch-panels; ragged
+    /// remainders run the scalar tail (bit-identical, just slower).
     pub max_batch: usize,
     /// Coalescing window in microseconds.
     pub max_wait_us: u64,

@@ -82,10 +82,13 @@ pub struct TrainConfig {
     pub data_val: usize,
     /// Intra-step kernel threads for the native backend (`--threads`).
     /// 1 = strictly serial; any value yields bit-identical results (the
-    /// blocked kernels' determinism contract). Ignored by PJRT, which
+    /// blocked kernels' determinism contract, which since the batch-
+    /// panel SIMD rewrite also covers lane width: threads × blocks ×
+    /// panels are all pure wall-clock knobs). Ignored by PJRT, which
     /// parallelizes internally. Composes with the coordinator's
     /// inter-run `--jobs`: concurrent runs on one trainer share one
-    /// kernel pool and serialize their fork-join rounds.
+    /// kernel pool and serialize their fork-join rounds. Batch sizes
+    /// that are multiples of 8 keep whole steps on the panel path.
     pub threads: usize,
 }
 

@@ -210,12 +210,32 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, f: F) -> f64 {
 /// at the workspace root, so the perf trajectory is tracked commit over
 /// commit.
 pub fn bench_to<F: FnMut()>(target: &str, name: &str, iters: usize, f: F) -> f64 {
+    bench_to_flops(target, name, iters, None, f)
+}
+
+/// Like [`bench_to`], additionally recording effective throughput: when
+/// `flops_per_iter` is given, the record (and stdout) carries
+/// `gflops = flops_per_iter / mean_s / 1e9` — the "effective GFLOP/s"
+/// column of the kernel grids, i.e. useful FLOPs actually retired per
+/// second (sparse kernels count 2·nnz·batch, NOT the dense equivalent).
+pub fn bench_to_flops<F: FnMut()>(
+    target: &str,
+    name: &str,
+    iters: usize,
+    flops_per_iter: Option<f64>,
+    f: F,
+) -> f64 {
     let (mean_s, min_s) = bench_stats(name, iters, f);
+    let gflops = flops_per_iter.map(|fl| fl / mean_s / 1e9);
+    if let Some(g) = gflops {
+        println!("{name:<44}      effective {g:.2} GFLOP/s");
+    }
     let rec = BenchRecord {
         name: name.to_string(),
         iters,
         mean_s,
         min_s,
+        gflops,
         git_rev: git_rev(),
     };
     if let Err(e) = append_bench_record(target, &rec) {
@@ -253,6 +273,9 @@ pub struct BenchRecord {
     pub iters: usize,
     pub mean_s: f64,
     pub min_s: f64,
+    /// Effective useful-FLOP throughput (present for the kernel grids
+    /// recorded via [`bench_to_flops`]).
+    pub gflops: Option<f64>,
     pub git_rev: String,
 }
 
@@ -261,12 +284,18 @@ impl BenchRecord {
     /// are plain ASCII bench ids, escaped minimally).
     pub fn to_json(&self) -> String {
         let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let gflops = self
+            .gflops
+            .map(|g| format!(",\"gflops\":{g:.3}"))
+            .unwrap_or_default();
         format!(
-            "{{\"name\":\"{}\",\"iters\":{},\"mean_s\":{:.9},\"min_s\":{:.9},\"git_rev\":\"{}\"}}",
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_s\":{:.9},\"min_s\":{:.9}{},\
+             \"git_rev\":\"{}\"}}",
             esc(&self.name),
             self.iters,
             self.mean_s,
             self.min_s,
+            gflops,
             esc(&self.git_rev)
         )
     }
@@ -549,6 +578,7 @@ mod tests {
             iters: 10,
             mean_s: 0.001,
             min_s: 0.0005,
+            gflops: None,
             git_rev: "abc123".into(),
         };
         let j = rec.to_json();
@@ -556,6 +586,10 @@ mod tests {
         for key in ["\"name\"", "\"iters\"", "\"mean_s\"", "\"min_s\"", "\"git_rev\""] {
             assert!(j.contains(key), "{j}");
         }
+        assert!(!j.contains("gflops"), "absent gflops must not serialize: {j}");
+        let with = BenchRecord { gflops: Some(12.5), ..rec };
+        let j = with.to_json();
+        assert!(j.contains("\"gflops\":12.500"), "{j}");
     }
 
     #[test]

@@ -1,0 +1,337 @@
+//! Batch-panel SIMD determinism suite: the panel kernels must be a pure
+//! wall-clock knob, like threads and block layout before them.
+//!
+//! For EVERY vectorized kernel the panel path is asserted BIT-identical
+//! to the scalar reference (`kernels::reference`) across batch sizes
+//! {1..9, 16, 33} (full panels, ragged tails, no panels at all),
+//! sparsities {0.98, 0.5, 0.0}, and threads {1, 8}; a whole RigL
+//! training run is asserted bit-identical with panels on vs off; and —
+//! when the `simd-intrinsics` feature is compiled in — the AVX2 ops are
+//! asserted bit-identical to the portable ops on the same grid.
+//!
+//! Hermetic: models built in code, synthetic data, no artifacts, no
+//! PJRT — runs on the `--no-pjrt` CI path. Pools pin their autotune
+//! floor to 1 so the pooled paths genuinely engage on any machine.
+//!
+//! Tests serialize on a process-local mutex: several of them flip the
+//! global panel switch (`set_panel_kernels`) or, under the feature, the
+//! force-portable override, and interleaving would make a neighbouring
+//! comparison vacuous (never wrong — both sides always agree — just
+//! weaker than intended).
+
+use std::sync::{Mutex, MutexGuard};
+
+use rigl::backend::native::csr::CsrTopo;
+use rigl::backend::native::kernels::{self, reference, set_panel_kernels, Exec};
+use rigl::backend::native::simd::PanelScratch;
+use rigl::pool::KernelPool;
+use rigl::util::Rng;
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+const BATCHES: &[usize] = &[1, 2, 3, 4, 5, 6, 7, 8, 9, 16, 33];
+const SPARSITIES: &[f64] = &[0.98, 0.5, 0.0];
+
+/// One random masked layer with a forced multi-block decomposition and
+/// zero-heavy activations (the post-ReLU regime the skip paths serve).
+struct Layer {
+    ind: usize,
+    outd: usize,
+    topo: CsrTopo,
+    w: Vec<f32>,
+    vals: Vec<f32>,
+    bias: Vec<f32>,
+}
+
+fn layer(rng: &mut Rng, sparsity: f64) -> Layer {
+    let (ind, outd) = (40usize, 28usize);
+    let mut w = vec![0.0f32; ind * outd];
+    let mut mask = vec![0.0f32; ind * outd];
+    for (wi, mi) in w.iter_mut().zip(mask.iter_mut()) {
+        if rng.next_f64() >= sparsity {
+            *mi = 1.0;
+            *wi = rng.next_f32() - 0.5;
+        }
+    }
+    let mut topo = CsrTopo::from_mask(&mask, ind, outd);
+    topo.build_blocks_with(16, 6); // force several row AND column blocks
+    let mut vals = Vec::with_capacity(topo.nnz());
+    for i in 0..ind {
+        for &c in topo.row(i) {
+            vals.push(w[i * outd + c as usize]);
+        }
+    }
+    let bias: Vec<f32> = (0..outd).map(|_| rng.next_f32() - 0.5).collect();
+    Layer { ind, outd, topo, w, vals, bias }
+}
+
+/// Zero-heavy input: ~40% exact zeros, some whole-batch-zero columns
+/// (panel-level skip), an occasional negative zero.
+fn zero_heavy(rng: &mut Rng, batch: usize, dim: usize) -> Vec<f32> {
+    let mut x: Vec<f32> = (0..batch * dim)
+        .map(|_| if rng.next_f64() < 0.4 { 0.0 } else { rng.next_f32() - 0.4 })
+        .collect();
+    for i in 0..dim {
+        if i % 9 == 0 {
+            for b in 0..batch {
+                x[b * dim + i] = 0.0;
+            }
+        }
+    }
+    if dim > 1 {
+        x[1] = -0.0;
+    }
+    x
+}
+
+/// Execution contexts for the sweep: serial, plus an 8-lane pool with
+/// the autotune floor pinned so blocked paths always engage.
+fn with_execs(f: impl Fn(Exec, &str)) {
+    f(Exec::Serial, "threads=1");
+    let pool = KernelPool::with_par_min_ops(8, 1);
+    f(Exec::Pool(&pool), "threads=8");
+}
+
+#[test]
+fn forward_panel_bitwise_equals_scalar_reference() {
+    let _g = lock();
+    let mut rng = Rng::new(0x51D0);
+    for &s in SPARSITIES {
+        let l = layer(&mut rng, s);
+        for &batch in BATCHES {
+            let x = zero_heavy(&mut rng, batch, l.ind);
+            let mut want = vec![0.0f32; batch * l.outd];
+            reference::spmm_bias_fwd(&x, batch, &l.topo, &l.w, &l.bias, &mut want);
+            let mut want_csr = vec![0.0f32; batch * l.outd];
+            reference::csr_spmm_bias_fwd(&x, batch, &l.topo, &l.vals, &l.bias, &mut want_csr);
+            assert_eq!(bits(&want), bits(&want_csr), "reference dense vs csr S={s} b={batch}");
+            with_execs(|exec, tag| {
+                let mut scratch = PanelScratch::default();
+                let mut y = vec![7.0f32; batch * l.outd];
+                kernels::spmm_bias_fwd(
+                    exec, &x, batch, &l.topo, &l.w, &l.bias, &mut y, &mut scratch,
+                );
+                assert_eq!(bits(&y), bits(&want), "fwd S={s} b={batch} {tag}");
+                let mut yc = vec![-3.0f32; batch * l.outd];
+                kernels::csr_spmm_bias_fwd(
+                    exec, &x, batch, &l.topo, &l.vals, &l.bias, &mut yc, &mut scratch,
+                );
+                assert_eq!(bits(&yc), bits(&want), "csr fwd S={s} b={batch} {tag}");
+            });
+        }
+    }
+}
+
+#[test]
+fn backward_dx_panel_bitwise_equals_scalar_reference() {
+    let _g = lock();
+    let mut rng = Rng::new(0x51D1);
+    for &s in SPARSITIES {
+        let l = layer(&mut rng, s);
+        for &batch in BATCHES {
+            let dy: Vec<f32> = (0..batch * l.outd).map(|_| rng.next_f32() - 0.5).collect();
+            let mut want = vec![0.0f32; batch * l.ind];
+            reference::spmm_back_dx(&dy, batch, &l.topo, &l.w, &mut want);
+            with_execs(|exec, tag| {
+                let mut scratch = PanelScratch::default();
+                let mut dx = vec![1.0f32; batch * l.ind];
+                kernels::spmm_back_dx(exec, &dy, batch, &l.topo, &l.w, &mut dx, &mut scratch);
+                assert_eq!(bits(&dx), bits(&want), "dx S={s} b={batch} {tag}");
+            });
+        }
+    }
+}
+
+#[test]
+fn backward_dw_panels_bitwise_equal_scalar_reference() {
+    let _g = lock();
+    let mut rng = Rng::new(0x51D2);
+    for &s in SPARSITIES {
+        let l = layer(&mut rng, s);
+        for &batch in BATCHES {
+            let x = zero_heavy(&mut rng, batch, l.ind);
+            let dy: Vec<f32> = (0..batch * l.outd).map(|_| rng.next_f32() - 0.5).collect();
+            let mut want = vec![0.0f32; l.topo.nnz()];
+            reference::spmm_back_dw(&x, &dy, batch, &l.topo, &mut want);
+            let mut want_dense = vec![0.0f32; l.ind * l.outd];
+            reference::dense_back_dw(&x, &dy, batch, l.ind, l.outd, &mut want_dense);
+            with_execs(|exec, tag| {
+                let mut scratch = PanelScratch::default();
+                let mut dw = vec![0.0f32; l.topo.nnz()];
+                kernels::spmm_back_dw(exec, &x, &dy, batch, &l.topo, &mut dw, &mut scratch);
+                assert_eq!(bits(&dw), bits(&want), "dw S={s} b={batch} {tag}");
+                let mut dd = vec![0.0f32; l.ind * l.outd];
+                kernels::dense_back_dw(
+                    exec, &x, &dy, batch, l.ind, l.outd, &mut dd, &mut scratch,
+                );
+                assert_eq!(bits(&dd), bits(&want_dense), "dense dw S={s} b={batch} {tag}");
+            });
+        }
+    }
+}
+
+#[test]
+fn sgdm_lane_chunks_bitwise_equal_scalar_reference() {
+    let _g = lock();
+    let mut rng = Rng::new(0x51D3);
+    for &s in SPARSITIES {
+        let l = layer(&mut rng, s);
+        let w0 = l.w.clone();
+        let v0: Vec<f32> = (0..l.ind * l.outd).map(|_| rng.next_f32() * 0.1 - 0.05).collect();
+        let dw: Vec<f32> = (0..l.topo.nnz()).map(|_| rng.next_f32() - 0.5).collect();
+        let (lr, mu, wd) = (0.07f32, 0.9f32, 1e-4f32);
+        let (mut w_ref, mut v_ref) = (w0.clone(), v0.clone());
+        reference::sgdm_update_sparse(&l.topo, &mut w_ref, &mut v_ref, &dw, lr, mu, wd);
+        with_execs(|exec, tag| {
+            let (mut w, mut v) = (w0.clone(), v0.clone());
+            kernels::sgdm_update_sparse(exec, &l.topo, &mut w, &mut v, &dw, lr, mu, wd);
+            assert_eq!(bits(&w), bits(&w_ref), "sgdm w S={s} {tag}");
+            assert_eq!(bits(&v), bits(&v_ref), "sgdm v S={s} {tag}");
+        });
+        // Dense (bias-shaped) update, ragged lengths around the lane width.
+        for n in [1usize, 7, 8, 9, 16, 33] {
+            let b0: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let m0: Vec<f32> = (0..n).map(|_| rng.next_f32() * 0.1).collect();
+            let g: Vec<f32> = (0..n).map(|_| rng.next_f32() - 0.5).collect();
+            let (mut b_ref, mut m_ref) = (b0.clone(), m0.clone());
+            reference::sgdm_update_dense(&mut b_ref, &mut m_ref, &g, lr, mu, wd);
+            let (mut b, mut m) = (b0.clone(), m0.clone());
+            kernels::sgdm_update_dense(&mut b, &mut m, &g, lr, mu, wd);
+            assert_eq!(bits(&b), bits(&b_ref), "sgdm dense n={n}");
+            assert_eq!(bits(&m), bits(&m_ref), "sgdm dense moments n={n}");
+        }
+    }
+}
+
+#[test]
+fn softmax_panel_bitwise_equals_scalar_reference() {
+    let _g = lock();
+    let mut rng = Rng::new(0x51D4);
+    let classes = 13; // deliberately not a multiple of the lane width
+    for &batch in BATCHES {
+        let logits: Vec<f32> = (0..batch * classes).map(|_| rng.next_f32() * 6.0 - 3.0).collect();
+        let y: Vec<i32> = (0..batch).map(|_| rng.next_below(classes) as i32).collect();
+        for &sm in &[0.0f32, 0.1] {
+            let mut d_ref = vec![0.0f32; batch * classes];
+            let l_ref = reference::softmax_xent_grad(&logits, batch, classes, &y, sm, &mut d_ref);
+            with_execs(|exec, tag| {
+                let mut scratch = PanelScratch::default();
+                let mut d = vec![5.0f32; batch * classes];
+                let mut row_loss = vec![0.0f64; batch];
+                let l = kernels::softmax_xent_grad_par(
+                    exec, &logits, batch, classes, &y, sm, &mut d, &mut row_loss, &mut scratch,
+                );
+                assert_eq!(l.to_bits(), l_ref.to_bits(), "loss b={batch} sm={sm} {tag}");
+                assert_eq!(bits(&d), bits(&d_ref), "dlogits b={batch} sm={sm} {tag}");
+            });
+        }
+    }
+}
+
+/// One full RigL run (mask updates, CSR patching, evals included) with
+/// the panel kernels forced on or off: final state and loss history as
+/// bits.
+fn run_rigl(panels: bool, threads: usize) -> (Vec<Vec<u32>>, Vec<u64>, u64, usize) {
+    use std::sync::Arc;
+
+    use rigl::backend::native::{mlp_def, NativeBackend};
+    use rigl::topology::Method;
+    use rigl::train::{TrainConfig, Trainer};
+
+    let was = set_panel_kernels(panels);
+    let mut cfg = TrainConfig::new("simd_mlp", Method::Rigl);
+    cfg.sparsity = 0.9;
+    cfg.steps = 60;
+    cfg.delta_t = 20;
+    cfg.augment = false;
+    cfg.data_train = 512;
+    cfg.data_val = 256;
+    cfg.threads = threads;
+    // Batch 32 = four full panels; hidden sizes chosen so one layer has
+    // a ragged out_dim and per-row nnz straddles the lane width.
+    let def = mlp_def(&cfg.model, 784, &[84, 44], 10, 32);
+    let pool = (threads > 1).then(|| Arc::new(KernelPool::with_par_min_ops(threads, 1)));
+    let backend = Arc::new(NativeBackend::with_pool(&def, pool).unwrap());
+    let trainer = Trainer::from_parts(def, backend, &cfg).unwrap();
+    let mut state = trainer.init_state(&cfg);
+    let r = trainer.run_from(&cfg, &mut state).unwrap();
+    set_panel_kernels(was);
+    let tensors: Vec<Vec<u32>> = state
+        .params
+        .tensors
+        .iter()
+        .chain(state.opt[0].tensors.iter())
+        .chain(state.masks.tensors.iter())
+        .map(|t| bits(t))
+        .collect();
+    let losses: Vec<u64> = r.loss_history.iter().map(|(_, l)| l.to_bits()).collect();
+    (tensors, losses, r.final_train_loss.to_bits(), r.total_swapped)
+}
+
+/// The headline property: an entire RigL training run — forward,
+/// backward, optimizer, topology updates, CSR patching — is
+/// bit-identical with the panel kernels on and off, serial and pooled.
+#[test]
+fn rigl_run_bit_identical_with_panels_on_or_off() {
+    let _g = lock();
+    let (t_off, l_off, fl_off, sw_off) = run_rigl(false, 1);
+    for (panels, threads) in [(true, 1), (true, 2)] {
+        let (t, l, fl, sw) = run_rigl(panels, threads);
+        let tag = format!("panels={panels} threads={threads}");
+        assert_eq!(sw, sw_off, "topology diverged ({tag})");
+        assert_eq!(l, l_off, "loss history diverged ({tag})");
+        assert_eq!(fl, fl_off, "final train loss diverged ({tag})");
+        for (i, (a, b)) in t.iter().zip(&t_off).enumerate() {
+            assert_eq!(a, b, "tensor {i} diverged ({tag})");
+        }
+    }
+}
+
+/// With the AVX2 feature compiled in, every kernel must produce the
+/// same bits whether the intrinsics or the portable lane ops execute
+/// (on machines without AVX2 both sides are portable — vacuous but
+/// correct).
+#[cfg(feature = "simd-intrinsics")]
+#[test]
+fn intrinsics_bitwise_equal_portable_for_every_kernel() {
+    use rigl::backend::native::simd::set_force_portable;
+    let _g = lock();
+    let mut rng = Rng::new(0x51D5);
+    for &s in &[0.5f64, 0.0] {
+        let l = layer(&mut rng, s);
+        let batch = 16;
+        let x = zero_heavy(&mut rng, batch, l.ind);
+        let dy: Vec<f32> = (0..batch * l.outd).map(|_| rng.next_f32() - 0.5).collect();
+        let run_all = || {
+            let mut scratch = PanelScratch::default();
+            let mut y = vec![0.0f32; batch * l.outd];
+            kernels::spmm_bias_fwd(
+                Exec::Serial, &x, batch, &l.topo, &l.w, &l.bias, &mut y, &mut scratch,
+            );
+            let mut dx = vec![0.0f32; batch * l.ind];
+            kernels::spmm_back_dx(Exec::Serial, &dy, batch, &l.topo, &l.w, &mut dx, &mut scratch);
+            let mut dw = vec![0.0f32; l.topo.nnz()];
+            kernels::spmm_back_dw(Exec::Serial, &x, &dy, batch, &l.topo, &mut dw, &mut scratch);
+            let mut dd = vec![0.0f32; l.ind * l.outd];
+            kernels::dense_back_dw(
+                Exec::Serial, &x, &dy, batch, l.ind, l.outd, &mut dd, &mut scratch,
+            );
+            let (mut w, mut v) = (l.w.clone(), vec![0.01f32; l.ind * l.outd]);
+            kernels::sgdm_update_sparse(Exec::Serial, &l.topo, &mut w, &mut v, &dw, 0.1, 0.9, 1e-4);
+            (bits(&y), bits(&dx), bits(&dw), bits(&dd), bits(&w), bits(&v))
+        };
+        let fast = run_all();
+        let was = set_force_portable(true);
+        let slow = run_all();
+        set_force_portable(was);
+        assert_eq!(fast, slow, "intrinsics vs portable diverged at S={s}");
+    }
+}

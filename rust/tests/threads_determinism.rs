@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use rigl::backend::native::csr::{CsrScratch, CsrTopo};
 use rigl::backend::native::kernels::{spmm_bias_fwd, Exec};
+use rigl::backend::native::simd::PanelScratch;
 use rigl::backend::native::{mlp_def, NativeBackend};
 use rigl::pool::KernelPool;
 use rigl::serve::{InferEngine, SparseModel};
@@ -91,7 +92,7 @@ fn serve_forward_bit_identical_across_threads_and_block_sizes() {
             for layer in &mut model.layers {
                 layer.topo.build_blocks_with(target, maxb);
             }
-            let pool = Arc::new(KernelPool::new(threads));
+            let pool = Arc::new(KernelPool::with_par_min_ops(threads, 1));
             let mut eng = InferEngine::new(&model, batch);
             eng.set_pool(Some(pool));
             let got = bits32(eng.forward(&model, &x, batch));
@@ -111,7 +112,8 @@ fn serve_forward_bit_identical_across_threads_and_block_sizes() {
 #[test]
 fn patched_block_counts_match_rebuild_under_random_swaps() {
     let mut rng = Rng::new(0xB10C);
-    let pool = KernelPool::new(4);
+    // Floor pinned to 1 so the pooled path engages on any machine.
+    let pool = KernelPool::with_par_min_ops(4, 1);
     for case in 0..6 {
         // Sized so batch·nnz clears the kernels' autotune floor and the
         // pooled forward below truly runs the patched blocked path.
@@ -186,9 +188,19 @@ fn patched_block_counts_match_rebuild_under_random_swaps() {
                 let xin: Vec<f32> = (0..batch * rows).map(|_| rng.next_f32()).collect();
                 let bias: Vec<f32> = (0..cols).map(|_| rng.next_f32()).collect();
                 let mut y_ser = vec![0.0f32; batch * cols];
-                spmm_bias_fwd(Exec::Serial, &xin, batch, &topo, &w, &bias, &mut y_ser);
+                let mut panels = PanelScratch::default();
+                spmm_bias_fwd(Exec::Serial, &xin, batch, &topo, &w, &bias, &mut y_ser, &mut panels);
                 let mut y_par = vec![1.0f32; batch * cols];
-                spmm_bias_fwd(Exec::Pool(&pool), &xin, batch, &topo, &w, &bias, &mut y_par);
+                spmm_bias_fwd(
+                    Exec::Pool(&pool),
+                    &xin,
+                    batch,
+                    &topo,
+                    &w,
+                    &bias,
+                    &mut y_par,
+                    &mut panels,
+                );
                 assert_eq!(bits32(&y_par), bits32(&y_ser), "case {case} step {step}");
             }
         }
