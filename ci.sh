@@ -31,6 +31,16 @@
 #                   RUSTFLAGS=-Ctarget-cpu=x86-64-v3 so the intrinsics
 #                   inline; the determinism suite then proves the AVX2
 #                   path bit-identical to the portable one.
+#   --chaos-smoke   additionally run the seeded fault-injection soak:
+#                   the serve_chaos suite rebuilt with the
+#                   `fault-inject` cargo feature, which arms in-process
+#                   failure points (artifact load, batcher enqueue,
+#                   socket read/write) on top of the chaos-proxy tests.
+#                   Single-threaded (`--test-threads=1`) because the
+#                   fault registry is process-global, and time-bounded
+#                   so a wedged server fails the job rather than the
+#                   runner. The plain suite already runs in `cargo
+#                   test`; this leg proves the armed paths.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -38,6 +48,7 @@ FLAGS=()
 SIMD=()
 NO_PJRT=0
 SMOKE_BENCH=0
+CHAOS_SMOKE=0
 for arg in "$@"; do
   case "$arg" in
     --no-pjrt)
@@ -52,8 +63,11 @@ for arg in "$@"; do
       SIMD=(--features simd-intrinsics)
       echo "== simd-intrinsics mode: explicit AVX2 lane ops enabled =="
       ;;
+    --chaos-smoke)
+      CHAOS_SMOKE=1
+      ;;
     *)
-      echo "usage: ./ci.sh [--no-pjrt] [--smoke-bench] [--simd-intrinsics]" >&2
+      echo "usage: ./ci.sh [--no-pjrt] [--smoke-bench] [--simd-intrinsics] [--chaos-smoke]" >&2
       exit 2
       ;;
   esac
@@ -121,6 +135,22 @@ if [[ "$NO_PJRT" == 1 ]]; then
   fi
   SERVE_PID=""
   echo "serve smoke OK"
+fi
+
+# Fault-injection soak: the serve_chaos suite with the in-process
+# failure points armed. Hermetic (--no-default-features) and serial —
+# the fault registry is process-global, so parallel tests would
+# contaminate each other's armed rates. Time-bounded: the suite's whole
+# point is that nothing hangs, so a hang must fail the job.
+if [[ "$CHAOS_SMOKE" == 1 ]]; then
+  echo "== chaos smoke: cargo test --features fault-inject --test serve_chaos =="
+  CHAOS_TIMEOUT=()
+  if command -v timeout > /dev/null 2>&1; then
+    CHAOS_TIMEOUT=(timeout 600)
+  fi
+  "${CHAOS_TIMEOUT[@]+"${CHAOS_TIMEOUT[@]}"}" \
+    cargo test -q --no-default-features --features fault-inject \
+    "${SIMD[@]+"${SIMD[@]}"}" --test serve_chaos -- --test-threads=1
 fi
 
 # Smoke benches: hermetic (no xla, no artifacts), tiny shapes. The

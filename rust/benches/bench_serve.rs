@@ -22,10 +22,14 @@
 //!   nonzero value is a regression and the binary exits 1 (same
 //!   discipline as bench_topology).
 //! * `tcp/*` — end-to-end loopback numbers from the load generator:
-//!   `tcp/single/S=*` for per-request latency vs sparsity and
+//!   `tcp/single/S=*` for per-request latency vs sparsity,
 //!   `tcp/batched-vs-serial/*` for the coalescing win — micro-batched
 //!   throughput (`max_batch` 32) must exceed batch=1 throughput at the
-//!   SAME worker count under concurrent load.
+//!   SAME worker count under concurrent load — and `tcp/overload/*`
+//!   for admission-control behavior: a starved 1-worker/1-deep-queue
+//!   server under a wide flood, once with a bare client (raw shed
+//!   rate, `busy` field) and once with seeded retry/backoff (sheds
+//!   converted into bounded-latency completions).
 //!
 //! Hermetic: no artifacts, no PJRT, models are built in code
 //! (`cargo bench --bench bench_serve`; `-- --smoke` for the CI
@@ -38,7 +42,10 @@ use std::sync::Arc;
 use rigl::backend::native::kernels::set_panel_kernels;
 use rigl::backend::native::mlp_def;
 use rigl::pool::KernelPool;
-use rigl::serve::{run_load, top_k, InferEngine, ServeConfig, Server, SparseModel, TopKScratch};
+use rigl::serve::{
+    run_load, run_load_opts, top_k, InferEngine, LoadOpts, RetryPolicy, ServeConfig, Server,
+    SparseModel, TopKScratch,
+};
 use rigl::sparsity::Distribution;
 use rigl::util::{append_bench_json, bench_to_flops, smoke_mode, Rng};
 
@@ -236,6 +243,57 @@ fn main() -> anyhow::Result<()> {
             "micro-batch throughput gain at 2 workers, c={concurrency}: {:.2}x",
             rps[1] / rps[0]
         );
+    }
+
+    // ---- overload: a deliberately starved server (1 worker, 1-deep
+    // ---- queue) under a wide flood. `raw` measures the shed rate a
+    // ---- retry-less client sees; `retry` shows seeded backoff
+    // ---- converting sheds into bounded-latency completions. Sheds are
+    // ---- the server *working* — the gate is only that accepted
+    // ---- requests complete and the run never wedges.
+    let over_conc = if smoke { 8 } else { 32 };
+    let over_reqs = if smoke { 10 } else { 100 };
+    for &(label, retry) in &[
+        ("raw", None),
+        (
+            "retry",
+            Some(RetryPolicy {
+                attempts: 5,
+                base: std::time::Duration::from_millis(1),
+                max: std::time::Duration::from_millis(20),
+                seed: 0x0E11,
+            }),
+        ),
+    ] {
+        let server = Server::start(
+            model_at(0.9),
+            None,
+            ServeConfig {
+                workers: 1,
+                max_batch: 4,
+                max_wait_us: 0,
+                queue_depth: 1,
+                ..ServeConfig::default()
+            },
+        )?;
+        let stats = run_load_opts(
+            &server.addr().to_string(),
+            over_conc,
+            over_reqs,
+            1,
+            LoadOpts {
+                deadline_ms: 2_000,
+                retry,
+                timeout: Some(std::time::Duration::from_secs(30)),
+            },
+        )?;
+        let shed_total = server.info_stats().shed;
+        println!(
+            "tcp/overload/{label}/c={over_conc}: {} (server shed {shed_total} total)",
+            stats.render()
+        );
+        append_bench_json("serve", &stats.to_json(&format!("tcp/overload/{label}/c={over_conc}")))?;
+        server.shutdown();
     }
 
     if failed {

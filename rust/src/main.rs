@@ -320,6 +320,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
         max_requests: args.usize("max-requests", 0)?,
         reload_poll_ms: args.usize("reload-poll-ms", 200)? as u64,
         threads: args.usize("threads", 1)?,
+        max_conns: args.usize("max-conns", 256)?,
+        idle_timeout_ms: args.usize("idle-timeout-ms", 10_000)? as u64,
+        queue_depth: args.usize("queue-depth", 0)?,
+        drain_timeout_ms: args.usize("drain-timeout-ms", 2_000)? as u64,
     };
     // start_watching stamps the artifact before loading it, so an
     // export racing this startup is caught by the watcher's first poll.
@@ -338,12 +342,14 @@ fn serve_cmd(args: &Args) -> Result<()> {
         writeln!(
             so,
             "serve: listening on {} | model {name} ({desc}) | workers={} threads={} \
-             max_batch={} max_wait={}µs{}",
+             max_batch={} max_wait={}µs | max_conns={} idle_timeout={}ms{}",
             server.addr(),
             cfg.workers,
             cfg.threads,
             cfg.max_batch,
             cfg.max_wait_us,
+            cfg.max_conns,
+            cfg.idle_timeout_ms,
             if cfg.max_requests > 0 {
                 format!(" | exiting after {} requests", cfg.max_requests)
             } else {
@@ -352,7 +358,13 @@ fn serve_cmd(args: &Args) -> Result<()> {
         )?;
         so.flush()?;
     }
-    server.wait();
+    let (drained, stats) = server.wait_drain();
+    eprintln!(
+        "serve: drained{} (shed={} reload_failures={})",
+        if drained { "" } else { " with connections still open at the deadline" },
+        stats.shed,
+        stats.reload_failures
+    );
     Ok(())
 }
 
@@ -449,11 +461,18 @@ fn print_usage() {
          repro export --model mlp --out mlp.srvd [--ckpt ckpt.bin | --sparsity 0.9 --dist uniform --seed 0]\n\
          repro serve --model mlp.srvd [--port 0] [--workers 4] [--threads 1] [--max-batch 16]\n\
          \x20          [--max-wait-us 200] [--max-requests 0] [--reload-poll-ms 200]\n\
+         \x20          [--max-conns 256] [--idle-timeout-ms 10000] [--queue-depth 0]\n\
+         \x20          [--drain-timeout-ms 2000]\n\
          \x20          (port 0 = ephemeral, printed on stdout; the artifact file is\n\
          \x20           watched and hot-reloaded on change; --threads shares one\n\
          \x20           kernel pool across workers for per-request latency;\n\
          \x20           keep --max-batch a multiple of 8 — fused forwards run in\n\
-         \x20           SIMD batch-panels of 8, ragged rows fall to the scalar tail)\n\
+         \x20           SIMD batch-panels of 8, ragged rows fall to the scalar tail.\n\
+         \x20           Admission: connections past --max-conns and requests past the\n\
+         \x20           batcher queue bound (--queue-depth, 0 = derived) get a typed\n\
+         \x20           BUSY frame; idle/slowloris peers are closed after\n\
+         \x20           --idle-timeout-ms (0 = never); shutdown finishes in-flight\n\
+         \x20           work within --drain-timeout-ms — see rust/src/serve/README.md)\n\
          repro serve-bench --addr 127.0.0.1:PORT [--concurrency 4] [--requests 100] [--k 1]\n\
          \x20          (--requests is PER CONNECTION: total load = concurrency × requests)\n\
          repro serve-bench --model mlp.srvd      (self-host over loopback and bench)"

@@ -116,6 +116,27 @@ impl WorkerPool {
         self.join_all();
     }
 
+    /// Deadline-bounded join for graceful drain: wait up to `timeout`
+    /// for every worker's closure to return. Workers still running at
+    /// the deadline are **detached** (dropping a `JoinHandle` detaches
+    /// its thread) instead of blocked on — a drain has decided the
+    /// process is moving on, and one stuck worker must not hang it.
+    /// Returns whether every worker exited inside the bound.
+    pub fn join_timeout(mut self, timeout: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if self.handles.iter().all(|h| h.is_finished()) {
+                self.join_all();
+                return true;
+            }
+            if std::time::Instant::now() >= deadline {
+                self.handles.clear(); // detach the stragglers
+                return false;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
     fn join_all(&mut self) {
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -462,6 +483,29 @@ mod tests {
         drop(tx); // closes the stream; workers exit
         pool.join();
         assert_eq!(sum.load(std::sync::atomic::Ordering::SeqCst), 5050);
+    }
+
+    #[test]
+    fn worker_pool_join_timeout_reports_fast_and_stuck_workers() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        use std::time::Duration;
+        // Fast workers: the bounded join succeeds well inside the cap.
+        let pool = WorkerPool::spawn(3, "fast", |_| {});
+        assert!(pool.join_timeout(Duration::from_secs(10)));
+        // A worker that outlives the deadline is detached, not waited
+        // on: join_timeout must return false promptly.
+        let release = Arc::new(AtomicBool::new(false));
+        let r = release.clone();
+        let pool = WorkerPool::spawn(1, "stuck", move |_| {
+            while !r.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        let t0 = std::time::Instant::now();
+        assert!(!pool.join_timeout(Duration::from_millis(50)));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        release.store(true, Ordering::SeqCst); // let the detached thread exit
     }
 
     #[test]

@@ -197,6 +197,12 @@ impl SparseModel {
 
     /// Load and fully validate an artifact.
     pub fn load(path: &Path) -> Result<Self> {
+        // Chaos-testing probe: with `fault-inject` armed this load can
+        // be told to die exactly as a corrupt file would, exercising
+        // the watcher's keep-the-old-model path deterministically.
+        if super::faults::hit(super::faults::Site::ArtifactLoad) {
+            bail!("{path:?}: fault-inject: artifact load failure");
+        }
         let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
         // Every declared size is checked against the real file length
         // BEFORE being allocated: a corrupt header must produce an Err

@@ -18,27 +18,71 @@
 //! cache-resident activation rows). `tests/serve_roundtrip.rs` property-
 //! tests this across adversarial interleavings.
 //!
-//! The queue is bounded (`queue_depth`): when the workers fall behind,
-//! `submit` blocks the connection thread — backpressure flows to the
-//! TCP socket instead of growing an unbounded heap.
+//! Admission: the queue is bounded (`queue_depth`). The legacy
+//! [`submit`](Batcher::submit) blocks when it is full (backpressure to
+//! the TCP socket); the serving path uses
+//! [`submit_with`](Batcher::submit_with), which **sheds** instead — a
+//! full queue answers [`RejectKind::Busy`] immediately, so accepted
+//! requests keep bounded latency and the overload signal reaches the
+//! client as a typed BUSY frame rather than as an unbounded stall.
+//! Requests carrying a deadline that expires while queued are dropped
+//! with [`RejectKind::Expired`] before any compute is spent on them.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::pool::{KernelPool, WorkerPool};
 
 use super::engine::{top_k, InferEngine, TopKScratch};
+use super::faults::{self, Site};
 use super::server::ModelHandle;
 
-/// A request's reply: `(class, logit)` pairs best-first, or a
-/// human-readable rejection.
-pub type InferResult = Result<Vec<(u32, f32)>, String>;
+/// Why a request was refused or failed, mapped onto the wire statuses:
+/// `Busy` becomes a BUSY frame (retryable), everything else an ERROR
+/// frame (retrying the same request cannot succeed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectKind {
+    /// Load shed: queue at high water (or an injected admission fault).
+    Busy,
+    /// The request's deadline passed while it waited in the queue.
+    Expired,
+    /// The request itself is unacceptable (wrong input width).
+    Invalid,
+    /// The batcher is shutting down.
+    Shutdown,
+}
+
+/// A typed rejection: the kind drives the wire status, the message the
+/// human-readable payload.
+#[derive(Clone, Debug)]
+pub struct Reject {
+    pub kind: RejectKind,
+    pub msg: String,
+}
+
+impl Reject {
+    fn new(kind: RejectKind, msg: impl Into<String>) -> Reject {
+        Reject { kind, msg: msg.into() }
+    }
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+/// A request's reply: `(class, logit)` pairs best-first, or a typed
+/// rejection.
+pub type InferResult = Result<Vec<(u32, f32)>, Reject>;
 
 struct Job {
     input: Vec<f32>,
     k: usize,
+    /// Drop (with `Expired`) rather than compute past this instant.
+    deadline: Option<Instant>,
     resp: SyncSender<InferResult>,
 }
 
@@ -55,7 +99,8 @@ pub struct BatcherConfig {
     /// How long the collecting worker waits for more requests after the
     /// first one arrives. Zero still drains whatever is already queued.
     pub max_wait: Duration,
-    /// Bound on queued (accepted, not yet batched) requests.
+    /// Bound on queued (accepted, not yet batched) requests — the
+    /// high-water mark [`Batcher::submit_with`] sheds against.
     pub queue_depth: usize,
 }
 
@@ -71,11 +116,18 @@ impl Default for BatcherConfig {
 }
 
 /// Shared counters for observability (`repro serve` prints them on
-/// shutdown; `bench_serve` uses them to prove coalescing happened).
+/// shutdown; `bench_serve` uses them to prove coalescing happened;
+/// the INFO frame's STATS block samples the admission gauges).
 #[derive(Default)]
 struct Stats {
     requests: AtomicU64,
     batches: AtomicU64,
+    /// Requests refused with `Busy` at enqueue.
+    shed: AtomicU64,
+    /// Requests dropped with `Expired` after queueing.
+    expired: AtomicU64,
+    /// Requests enqueued but not yet picked up by a worker.
+    depth: AtomicUsize,
 }
 
 /// The queue + worker pool. Dropping the batcher closes the queue and
@@ -84,6 +136,7 @@ pub struct Batcher {
     tx: Option<SyncSender<Job>>,
     pool: Option<WorkerPool>,
     stats: Arc<Stats>,
+    queue_cap: usize,
 }
 
 impl Batcher {
@@ -101,7 +154,8 @@ impl Batcher {
         cfg: BatcherConfig,
         kernel_pool: Option<Arc<KernelPool>>,
     ) -> Batcher {
-        let (tx, rx) = std::sync::mpsc::sync_channel::<Job>(cfg.queue_depth.max(1));
+        let queue_cap = cfg.queue_depth.max(1);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<Job>(queue_cap);
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(Stats::default());
         let stats_w = stats.clone();
@@ -112,22 +166,70 @@ impl Batcher {
             tx: Some(tx),
             pool: Some(pool),
             stats,
+            queue_cap,
         }
     }
 
     /// Enqueue one request; returns the channel its reply arrives on.
     /// Blocks while the queue is full (backpressure). After the batcher
-    /// has shut down the reply is an error.
+    /// has shut down the reply is a [`RejectKind::Shutdown`] error.
     pub fn submit(&self, input: Vec<f32>, k: usize) -> Receiver<InferResult> {
         let (resp, rx) = std::sync::mpsc::sync_channel(1);
-        let job = Job { input, k, resp };
+        let job = Job { input, k, deadline: None, resp };
         if let Some(tx) = &self.tx {
             match tx.send(job) {
                 Ok(()) => {
                     self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    self.stats.depth.fetch_add(1, Ordering::Relaxed);
                 }
                 Err(std::sync::mpsc::SendError(job)) => {
-                    let _ = job.resp.try_send(Err("batcher shut down".into()));
+                    let _ = job
+                        .resp
+                        .try_send(Err(Reject::new(RejectKind::Shutdown, "batcher shut down")));
+                }
+            }
+        }
+        rx
+    }
+
+    /// The serving path: enqueue one request with an optional deadline,
+    /// shedding instead of blocking. A full queue (or an armed
+    /// [`Site::Enqueue`] fault) answers [`RejectKind::Busy`]
+    /// immediately — the caller turns that into a typed BUSY frame.
+    pub fn submit_with(
+        &self,
+        input: Vec<f32>,
+        k: usize,
+        deadline: Option<Instant>,
+    ) -> Receiver<InferResult> {
+        let (resp, rx) = std::sync::mpsc::sync_channel(1);
+        if faults::hit(Site::Enqueue) {
+            self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            let _ = resp.try_send(Err(Reject::new(
+                RejectKind::Busy,
+                "server busy (fault-inject: enqueue)",
+            )));
+            return rx;
+        }
+        let job = Job { input, k, deadline, resp };
+        if let Some(tx) = &self.tx {
+            match tx.try_send(job) {
+                Ok(()) => {
+                    self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    self.stats.depth.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(TrySendError::Full(job)) => {
+                    self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                    let depth = self.stats.depth.load(Ordering::Relaxed);
+                    let _ = job.resp.try_send(Err(Reject::new(
+                        RejectKind::Busy,
+                        format!("server busy: queue at {depth}/{} requests", self.queue_cap),
+                    )));
+                }
+                Err(TrySendError::Disconnected(job)) => {
+                    let _ = job
+                        .resp
+                        .try_send(Err(Reject::new(RejectKind::Shutdown, "batcher shut down")));
                 }
             }
         }
@@ -141,6 +243,33 @@ impl Batcher {
             self.stats.requests.load(Ordering::Relaxed),
             self.stats.batches.load(Ordering::Relaxed),
         )
+    }
+
+    /// Requests queued right now (admitted, not yet picked up).
+    pub fn depth(&self) -> usize {
+        self.stats.depth.load(Ordering::Relaxed)
+    }
+
+    /// The bound [`Batcher::submit_with`] sheds against.
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    /// Requests refused with BUSY at enqueue so far.
+    pub fn shed(&self) -> u64 {
+        self.stats.shed.load(Ordering::Relaxed)
+    }
+
+    /// Requests dropped because their deadline passed while queued.
+    pub fn expired(&self) -> u64 {
+        self.stats.expired.load(Ordering::Relaxed)
+    }
+
+    /// Count a shed that happened upstream of the queue (the server's
+    /// connection gate), so INFO's `shed` is the one total the operator
+    /// watches.
+    pub(crate) fn count_external_shed(&self) {
+        self.stats.shed.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -175,14 +304,20 @@ fn worker_loop(
         {
             let rx = rx.lock().unwrap();
             match rx.recv() {
-                Ok(job) => pending.push(job),
+                Ok(job) => {
+                    stats.depth.fetch_sub(1, Ordering::Relaxed);
+                    pending.push(job);
+                }
                 Err(_) => return, // queue closed: shut down
             }
             let deadline = Instant::now() + cfg.max_wait;
             while pending.len() < cfg.max_batch {
                 let left = deadline.saturating_duration_since(Instant::now());
                 match rx.recv_timeout(left) {
-                    Ok(job) => pending.push(job),
+                    Ok(job) => {
+                        stats.depth.fetch_sub(1, Ordering::Relaxed);
+                        pending.push(job);
+                    }
                     Err(_) => break, // timeout, or closed with this batch in hand
                 }
             }
@@ -195,6 +330,7 @@ fn worker_loop(
             &mut topk,
             &mut xbuf,
             &mut pairs,
+            stats,
         ) {
             stats.batches.fetch_add(1, Ordering::Relaxed);
         }
@@ -213,13 +349,21 @@ fn run_batch(
     topk: &mut TopKScratch,
     xbuf: &mut Vec<f32>,
     pairs: &mut Vec<(u32, f32)>,
+    stats: &Stats,
 ) -> bool {
     let model = handle.get();
     let in_dim = model.in_dim();
+    let now = Instant::now();
     accepted.clear();
     xbuf.clear();
     for job in pending.drain(..) {
-        if job.input.len() == in_dim {
+        if job.deadline.is_some_and(|d| d < now) {
+            stats.expired.fetch_add(1, Ordering::Relaxed);
+            let _ = job.resp.try_send(Err(Reject::new(
+                RejectKind::Expired,
+                "deadline expired while queued",
+            )));
+        } else if job.input.len() == in_dim {
             xbuf.extend_from_slice(&job.input);
             accepted.push(job);
         } else {
@@ -228,7 +372,7 @@ fn run_batch(
                 job.input.len(),
                 model.name
             );
-            let _ = job.resp.try_send(Err(msg));
+            let _ = job.resp.try_send(Err(Reject::new(RejectKind::Invalid, msg)));
         }
     }
     let batch = accepted.len();
@@ -290,6 +434,8 @@ mod tests {
         let (reqs, batches) = batcher.stats();
         assert_eq!(reqs, 20);
         assert!((1..=20).contains(&batches));
+        assert_eq!(batcher.depth(), 0);
+        assert_eq!(batcher.shed(), 0);
     }
 
     #[test]
@@ -301,7 +447,8 @@ mod tests {
         let x: Vec<f32> = (0..8).map(|_| rng.next_f32()).collect();
         let good = batcher.submit(x.clone(), 1);
         let err = bad.recv().unwrap().unwrap_err();
-        assert!(err.contains("takes 8"), "{err}");
+        assert_eq!(err.kind, RejectKind::Invalid);
+        assert!(err.msg.contains("takes 8"), "{err}");
         let reply = good.recv().unwrap().unwrap();
         let mut eng = InferEngine::new(&model, 1);
         let logits = eng.forward(&model, &x, 1);
@@ -364,6 +511,76 @@ mod tests {
             // Every submitted request got SOME reply before the worker
             // exited (jobs already queued are processed on drain).
             assert!(rx.recv().is_ok());
+        }
+    }
+
+    /// An already-expired deadline is answered `Expired` without
+    /// spending a forward on it, while fresh requests keep flowing.
+    #[test]
+    fn expired_deadline_is_dropped_not_computed() {
+        let (handle, _) = tiny_handle();
+        let batcher = Batcher::new(
+            handle,
+            BatcherConfig {
+                workers: 1,
+                max_batch: 4,
+                max_wait: Duration::ZERO,
+                queue_depth: 8,
+            },
+        );
+        let past = Instant::now() - Duration::from_millis(5);
+        let dead = batcher.submit_with(vec![0.5; 8], 1, Some(past));
+        let err = dead.recv().unwrap().unwrap_err();
+        assert_eq!(err.kind, RejectKind::Expired);
+        assert_eq!(batcher.expired(), 1);
+        let future = Instant::now() + Duration::from_secs(30);
+        let alive = batcher.submit_with(vec![0.5; 8], 1, Some(future));
+        assert!(alive.recv().unwrap().is_ok());
+    }
+
+    /// With no worker draining the queue, `submit_with` sheds `Busy`
+    /// once `queue_depth` requests are waiting — it must never block.
+    #[test]
+    fn full_queue_sheds_busy_instead_of_blocking() {
+        let (handle, _) = tiny_handle();
+        // One worker with a long collect window: it keeps pulling jobs
+        // into its in-hand batch, so flooding the 1-slot queue must
+        // eventually catch try_send with the slot occupied.
+        let batcher = Batcher::new(
+            handle,
+            BatcherConfig {
+                workers: 1,
+                max_batch: 64,
+                max_wait: Duration::from_secs(2),
+                queue_depth: 1,
+            },
+        );
+        // The worker takes jobs into its collect window as fast as we
+        // enqueue them, so keep pushing until one try_send actually
+        // finds the 1-slot queue full; the 2 s collect window bounds
+        // the loop far below the iteration cap.
+        let mut rxs = Vec::new();
+        let mut busy = None;
+        for _ in 0..10_000 {
+            let rx = batcher.submit_with(vec![0.5; 8], 1, None);
+            match rx.try_recv() {
+                // Sheds are answered synchronously inside submit_with.
+                Ok(Err(rej)) => {
+                    busy = Some(rej);
+                    break;
+                }
+                // Admitted and already answered: reply consumed here.
+                Ok(Ok(_)) => {}
+                // Admitted, still in flight: await it at the end.
+                Err(_) => rxs.push(rx),
+            }
+        }
+        let rej = busy.expect("no Busy shed observed while flooding a 1-slot queue");
+        assert_eq!(rej.kind, RejectKind::Busy);
+        assert!(batcher.shed() >= 1);
+        // Every admitted request still gets a real answer.
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
         }
     }
 }

@@ -1,0 +1,267 @@
+//! A seeded in-process chaos TCP proxy for soak-testing the serve
+//! stack against hostile networks.
+//!
+//! [`ChaosProxy`] sits between a [`Client`](super::Client) and a
+//! [`Server`](super::Server) on loopback and mangles the byte streams
+//! the way a bad network would: it **delays** chunks, **fragments**
+//! them into byte-dribbles (a cooperative slowloris), and **drops**
+//! connections mid-stream (truncating whatever frame was in flight).
+//! Every decision comes from one seeded [`Rng`](crate::util::Rng)
+//! stream per pump direction, so a failing soak replays from its seed.
+//!
+//! Deliberately absent: silent byte corruption or mid-stream byte
+//! *removal* while the connection lives. TCP guarantees an intact,
+//! ordered stream — a proxy that broke that would be testing a
+//! transport the serve stack does not run on. The consequence is the
+//! soak test's strongest assertion: any OK reply that does arrive
+//! intact is **bit-identical** to the direct engine call, because the
+//! only faults in play (delay, fragmentation, truncation-by-close) are
+//! all detectable framing-level events, never payload mutations.
+//!
+//! The proxy is compiled unconditionally (it is ~200 lines of std) —
+//! the `fault-inject` feature gates only the in-process failure
+//! points ([`faults`](super::faults)), which simulate faults *inside*
+//! the server rather than on the wire.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::Rng;
+
+/// Chaos knobs: per-chunk probabilities, drawn once per pumped chunk.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Seed for every per-connection decision stream.
+    pub seed: u64,
+    /// P(chunk is held back for up to `max_delay_ms`).
+    pub delay_prob: f64,
+    /// Upper bound on an injected delay, in milliseconds.
+    pub max_delay_ms: u64,
+    /// P(chunk is dribbled out in small fragments with pauses) — a
+    /// cooperative slowloris on whichever direction it hits.
+    pub fragment_prob: f64,
+    /// P(connection is torn down before this chunk is forwarded),
+    /// truncating the in-flight frame on both sides.
+    pub drop_prob: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0xC4A05,
+            delay_prob: 0.10,
+            max_delay_ms: 20,
+            fragment_prob: 0.10,
+            drop_prob: 0.02,
+        }
+    }
+}
+
+/// A running chaos proxy. Dropping (or [`ChaosProxy::shutdown`]) stops
+/// the accept loop; pump threads die with their connections.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Listen on an ephemeral loopback port and relay every inbound
+    /// connection to `target` through the chaos pumps.
+    pub fn start(target: SocketAddr, cfg: ChaosConfig) -> Result<ChaosProxy> {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).context("binding the chaos proxy")?;
+        let addr = listener.local_addr()?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the proxy listener non-blocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("chaos-accept".into())
+                .spawn(move || accept_loop(listener, target, cfg, stop))
+                .context("spawning the chaos accept thread")?
+        };
+        Ok(ChaosProxy {
+            addr,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    /// The proxy's listening address — point the client here.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, target: SocketAddr, cfg: ChaosConfig, stop: Arc<AtomicBool>) {
+    let mut conn_idx: u64 = 0;
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((client, _peer)) => {
+                conn_idx += 1;
+                let upstream = match TcpStream::connect(target) {
+                    Ok(s) => s,
+                    Err(_) => continue, // target gone: refuse by closing
+                };
+                client.set_nodelay(true).ok();
+                upstream.set_nodelay(true).ok();
+                // Two pumps per connection, each with its own decision
+                // stream split off the seed and connection index.
+                spawn_pump(&client, &upstream, cfg, cfg.seed ^ (conn_idx * 2), &stop, "c2s");
+                spawn_pump(&upstream, &client, cfg, cfg.seed ^ (conn_idx * 2 + 1), &stop, "s2c");
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn spawn_pump(
+    src: &TcpStream,
+    dst: &TcpStream,
+    cfg: ChaosConfig,
+    seed: u64,
+    stop: &Arc<AtomicBool>,
+    dir: &'static str,
+) {
+    let (Ok(src), Ok(dst)) = (src.try_clone(), dst.try_clone()) else {
+        src.shutdown(Shutdown::Both).ok();
+        dst.shutdown(Shutdown::Both).ok();
+        return;
+    };
+    let stop = stop.clone();
+    // A failed spawn leaves this direction unpumped; the endpoints'
+    // own deadlines then clean the connection up.
+    let _ = std::thread::Builder::new()
+        .name(format!("chaos-{dir}"))
+        .spawn(move || pump(src, dst, cfg, seed, stop));
+}
+
+/// Relay `src` → `dst` chunk by chunk, rolling the chaos dice per
+/// chunk. Exits (and shuts both streams down, unblocking the sibling
+/// pump) on EOF, error, injected drop, or proxy stop.
+fn pump(src: TcpStream, dst: TcpStream, cfg: ChaosConfig, seed: u64, stop: Arc<AtomicBool>) {
+    // The poll timeout lets the pump notice `stop` while idle.
+    src.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    let mut rng = Rng::new(seed);
+    let mut src = src;
+    let mut dst = dst;
+    let mut buf = [0u8; 4096];
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let n = match src.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        };
+        if (rng.next_f32() as f64) < cfg.drop_prob {
+            break; // tear the connection down mid-stream
+        }
+        if (rng.next_f32() as f64) < cfg.delay_prob && cfg.max_delay_ms > 0 {
+            let ms = 1 + rng.next_below(cfg.max_delay_ms.max(1) as usize) as u64;
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        let ok = if (rng.next_f32() as f64) < cfg.fragment_prob {
+            write_fragmented(&mut dst, &buf[..n], &mut rng)
+        } else {
+            dst.write_all(&buf[..n]).is_ok()
+        };
+        if !ok {
+            break;
+        }
+    }
+    src.shutdown(Shutdown::Both).ok();
+    dst.shutdown(Shutdown::Both).ok();
+}
+
+/// Dribble `data` out in 1–16 byte fragments with sub-millisecond
+/// pauses — enough to shred frame boundaries without tripping sane
+/// endpoint deadlines on its own.
+fn write_fragmented(dst: &mut TcpStream, data: &[u8], rng: &mut Rng) -> bool {
+    let mut off = 0;
+    while off < data.len() {
+        let take = (1 + rng.next_below(16)).min(data.len() - off);
+        if dst.write_all(&data[off..off + take]).is_err() {
+            return false;
+        }
+        off += take;
+        std::thread::sleep(Duration::from_micros(200 + rng.next_below(800) as u64));
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A zero-chaos proxy is a transparent relay: bytes in, bytes out.
+    #[test]
+    fn transparent_relay_when_probabilities_are_zero() {
+        let echo = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let target = echo.local_addr().unwrap();
+        std::thread::spawn(move || {
+            if let Ok((mut s, _)) = echo.accept() {
+                let mut buf = [0u8; 64];
+                while let Ok(n) = s.read(&mut buf) {
+                    if n == 0 || s.write_all(&buf[..n]).is_err() {
+                        break;
+                    }
+                }
+            }
+        });
+        let proxy = ChaosProxy::start(
+            target,
+            ChaosConfig {
+                seed: 1,
+                delay_prob: 0.0,
+                max_delay_ms: 0,
+                fragment_prob: 0.0,
+                drop_prob: 0.0,
+            },
+        )
+        .unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        c.write_all(b"rigl").unwrap();
+        let mut back = [0u8; 4];
+        c.read_exact(&mut back).unwrap();
+        assert_eq!(&back, b"rigl");
+        proxy.shutdown();
+    }
+}

@@ -1,16 +1,21 @@
 //! Serve client + load generator.
 //!
 //! [`Client`] is the blocking counterpart of the wire [`protocol`]:
-//! one TCP connection, frame buffers reused across calls. [`run_load`]
-//! is the measurement half of the subsystem — `repro serve-bench` and
-//! `bench_serve` drive it to record throughput and latency percentiles
-//! against a live server (in-process or remote).
+//! one TCP connection, frame buffers reused across calls. Failures are
+//! typed: [`BusyError`] is the server shedding load (retryable —
+//! [`Client::infer_retry`] does so with seeded, jittered exponential
+//! backoff, reconnecting through [`TransportError`]s because INFER is
+//! idempotent), a plain error is the request being wrong (retrying the
+//! same bytes cannot help). [`run_load`] is the measurement half of
+//! the subsystem — `repro serve-bench` and `bench_serve` drive it to
+//! record throughput and latency percentiles against a live server
+//! (in-process or remote), counting sheds separately from failures.
 //!
 //! [`protocol`]: super::protocol
 
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{TcpStream, ToSocketAddrs};
-use std::time::Instant;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -25,39 +30,130 @@ pub struct ModelInfo {
     pub classes: usize,
     pub layers: usize,
     pub nnz: u64,
+    /// Admission/overload counters (zeros when talking to a pre-STATS
+    /// server).
+    pub stats: proto::InfoStats,
+}
+
+/// The server refused the request with a typed BUSY frame: load shed,
+/// not failure. Safe to retry with backoff.
+#[derive(Clone, Debug)]
+pub struct BusyError(pub String);
+
+impl std::fmt::Display for BusyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server busy: {}", self.0)
+    }
+}
+
+impl std::error::Error for BusyError {}
+
+/// The connection itself failed (socket error, peer hang-up, torn
+/// frame) — as opposed to the server answering with an error. The
+/// request may never have reached the server, or its reply was lost;
+/// idempotent requests may be retried on a fresh connection.
+#[derive(Clone, Debug)]
+pub struct TransportError(pub String);
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transport error: {}", self.0)
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Seeded retry schedule for idempotent requests: attempt `attempts`
+/// times, sleeping `min(max, base·2ⁱ)` scaled by a jitter factor in
+/// [0.5, 1.0) drawn from a [`Rng`] stream — deterministic per seed, so
+/// a failing soak replays exactly, while distinct seeds decorrelate
+/// clients enough to break retry stampedes.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    pub attempts: u32,
+    pub base: Duration,
+    pub max: Duration,
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 4,
+            base: Duration::from_millis(5),
+            max: Duration::from_millis(200),
+            seed: 0xB0FF,
+        }
+    }
 }
 
 /// One blocking connection to a serve front end.
 pub struct Client {
+    peer: SocketAddr,
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     inbuf: Vec<u8>,
     outbuf: Vec<u8>,
+    timeout: Option<Duration>,
 }
 
 impl Client {
     pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<Client> {
         let stream = TcpStream::connect(&addr).with_context(|| format!("connecting {addr:?}"))?;
+        let peer = stream.peer_addr().context("resolving the peer address")?;
         stream.set_nodelay(true).ok();
         let reader = BufReader::new(stream.try_clone().context("cloning the stream")?);
         Ok(Client {
+            peer,
             reader,
             writer: BufWriter::new(stream),
             inbuf: Vec::new(),
             outbuf: Vec::new(),
+            timeout: None,
         })
     }
 
-    fn roundtrip(&mut self) -> Result<()> {
-        proto::write_frame(&mut self.writer, &self.outbuf)?;
-        self.writer.flush()?;
-        if !proto::read_frame(&mut self.reader, &mut self.inbuf)? {
-            bail!("server closed the connection");
-        }
+    /// The address this client (re)connects to.
+    pub fn peer(&self) -> SocketAddr {
+        self.peer
+    }
+
+    /// Bound every socket read and write. A stalled or black-holed
+    /// server then surfaces as a [`TransportError`] instead of hanging
+    /// the caller forever. `None` removes the bounds.
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        let s = self.writer.get_ref();
+        s.set_read_timeout(timeout).context("setting the read timeout")?;
+        s.set_write_timeout(timeout).context("setting the write timeout")?;
+        self.timeout = timeout;
         Ok(())
     }
 
-    /// Describe the served model.
+    /// Drop the current connection and dial the same peer again
+    /// (buffers kept, timeout re-applied). The retry path uses this
+    /// after a [`TransportError`].
+    pub fn reconnect(&mut self) -> Result<()> {
+        let mut fresh = Client::connect(self.peer)?;
+        fresh.set_timeout(self.timeout)?;
+        self.reader = fresh.reader;
+        self.writer = fresh.writer;
+        Ok(())
+    }
+
+    fn roundtrip(&mut self) -> Result<()> {
+        let t = |e: std::io::Error| anyhow::Error::new(TransportError(e.to_string()));
+        proto::write_frame(&mut self.writer, &self.outbuf).map_err(t)?;
+        self.writer.flush().map_err(t)?;
+        match proto::read_frame(&mut self.reader, &mut self.inbuf) {
+            Ok(true) => Ok(()),
+            Ok(false) => Err(anyhow::Error::new(TransportError(
+                "server closed the connection".into(),
+            ))),
+            Err(e) => Err(anyhow::Error::new(TransportError(format!("{e:#}")))),
+        }
+    }
+
+    /// Describe the served model (including its STATS counters).
     pub fn info(&mut self) -> Result<ModelInfo> {
         proto::encode_info(&mut self.outbuf);
         self.roundtrip()?;
@@ -67,12 +163,15 @@ impl Client {
                 classes,
                 layers,
                 nnz,
+                stats,
             } => Ok(ModelInfo {
                 in_dim,
                 classes,
                 layers,
                 nnz,
+                stats,
             }),
+            proto::Response::Busy(msg) => Err(anyhow::Error::new(BusyError(msg))),
             proto::Response::Error(msg) => bail!("server error: {msg}"),
             other => bail!("unexpected response {other:?}"),
         }
@@ -80,13 +179,78 @@ impl Client {
 
     /// Classify one input; returns `(class, logit)` pairs, best first.
     pub fn infer(&mut self, input: &[f32], k: usize) -> Result<Vec<(u32, f32)>> {
-        proto::encode_infer(k.min(u16::MAX as usize) as u16, input, &mut self.outbuf);
+        self.infer_deadline(input, k, 0)
+    }
+
+    /// Like [`Client::infer`] with a per-request deadline (0 = none):
+    /// the server drops the request with a typed error rather than
+    /// answer after the caller has stopped waiting. A BUSY reply comes
+    /// back as a downcastable [`BusyError`].
+    pub fn infer_deadline(
+        &mut self,
+        input: &[f32],
+        k: usize,
+        deadline_ms: u32,
+    ) -> Result<Vec<(u32, f32)>> {
+        proto::encode_infer(
+            k.min(u16::MAX as usize) as u16,
+            deadline_ms,
+            input,
+            &mut self.outbuf,
+        );
         self.roundtrip()?;
         match proto::decode_topk_response(&self.inbuf)? {
             proto::Response::TopK(pairs) => Ok(pairs),
+            proto::Response::Busy(msg) => Err(anyhow::Error::new(BusyError(msg))),
             proto::Response::Error(msg) => bail!("server error: {msg}"),
             other => bail!("unexpected response {other:?}"),
         }
+    }
+
+    /// [`Client::infer_deadline`] with retries: INFER is idempotent
+    /// (same input ⇒ bit-identical reply), so BUSY sheds and transport
+    /// failures are retried up to `policy.attempts` times with seeded,
+    /// jittered exponential backoff — reconnecting first when the
+    /// transport died. A server-side ERROR (malformed request) is
+    /// returned immediately: retrying identical bytes cannot succeed.
+    pub fn infer_retry(
+        &mut self,
+        input: &[f32],
+        k: usize,
+        deadline_ms: u32,
+        policy: &RetryPolicy,
+    ) -> Result<Vec<(u32, f32)>> {
+        let mut rng = Rng::new(policy.seed);
+        let attempts = policy.attempts.max(1);
+        let mut last = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                let exp = policy
+                    .base
+                    .saturating_mul(1u32 << (attempt - 1).min(16))
+                    .min(policy.max);
+                let jitter = 0.5 + 0.5 * rng.next_f32() as f64;
+                std::thread::sleep(exp.mul_f64(jitter));
+            }
+            match self.infer_deadline(input, k, deadline_ms) {
+                Ok(pairs) => return Ok(pairs),
+                Err(e) => {
+                    let busy = e.downcast_ref::<BusyError>().is_some();
+                    let transport = e.downcast_ref::<TransportError>().is_some();
+                    if !busy && !transport {
+                        return Err(e);
+                    }
+                    if transport {
+                        // Best effort: a refused reconnect leaves the
+                        // dead stream in place and the next attempt
+                        // fails fast as transport again.
+                        let _ = self.reconnect();
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.expect("at least one attempt ran"))
     }
 }
 
@@ -95,6 +259,8 @@ impl Client {
 pub struct LoadStats {
     /// Completed requests (across all connections).
     pub requests: usize,
+    /// Requests the server refused with BUSY (after any retries).
+    pub busy: usize,
     pub wall_s: f64,
     /// Completed requests per wall-clock second.
     pub rps: f64,
@@ -109,10 +275,11 @@ impl LoadStats {
     pub fn to_json(&self, name: &str) -> String {
         let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
         format!(
-            "{{\"name\":\"{}\",\"requests\":{},\"wall_s\":{:.6},\"rps\":{:.3},\
+            "{{\"name\":\"{}\",\"requests\":{},\"busy\":{},\"wall_s\":{:.6},\"rps\":{:.3},\
              \"mean_us\":{:.3},\"p50_us\":{:.3},\"p99_us\":{:.3},\"git_rev\":\"{}\"}}",
             esc(name),
             self.requests,
+            self.busy,
             self.wall_s,
             self.rps,
             self.mean_us,
@@ -124,10 +291,23 @@ impl LoadStats {
 
     pub fn render(&self) -> String {
         format!(
-            "{} requests in {:.3}s → {:.1} req/s | latency mean {:.1}µs p50 {:.1}µs p99 {:.1}µs",
-            self.requests, self.wall_s, self.rps, self.mean_us, self.p50_us, self.p99_us
+            "{} requests ({} shed) in {:.3}s → {:.1} req/s | latency mean {:.1}µs p50 {:.1}µs p99 {:.1}µs",
+            self.requests, self.busy, self.wall_s, self.rps, self.mean_us, self.p50_us, self.p99_us
         )
     }
+}
+
+/// Knobs for [`run_load_opts`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadOpts {
+    /// Per-request deadline forwarded on the wire (0 = none).
+    pub deadline_ms: u32,
+    /// Retry sheds/transport failures with this policy (seed is split
+    /// per connection). `None` = one attempt; a BUSY reply then counts
+    /// as shed rather than failing the run.
+    pub retry: Option<RetryPolicy>,
+    /// Bound every socket op (surface a stalled server as an error).
+    pub timeout: Option<Duration>,
 }
 
 /// Drive `concurrency` connections of `requests` random inferences each
@@ -135,40 +315,82 @@ impl LoadStats {
 /// every request. The probe INFO request learns the input width, so
 /// the generator works against any served model.
 pub fn run_load(addr: &str, concurrency: usize, requests: usize, k: usize) -> Result<LoadStats> {
+    run_load_opts(addr, concurrency, requests, k, LoadOpts::default())
+}
+
+/// [`run_load`] with deadlines, retries and socket timeouts. BUSY
+/// replies that survive the retry budget are counted in
+/// [`LoadStats::busy`], not treated as failures — shedding under
+/// overload is the server behaving as specified.
+pub fn run_load_opts(
+    addr: &str,
+    concurrency: usize,
+    requests: usize,
+    k: usize,
+    opts: LoadOpts,
+) -> Result<LoadStats> {
     let info = Client::connect(addr)?.info()?;
     let conns: Vec<usize> = (0..concurrency.max(1)).collect();
     let t0 = Instant::now();
-    let per_conn = crate::pool::par_map(&conns, conns.len(), |_, &ci| -> Result<Vec<f64>> {
+    let per_conn = crate::pool::par_map(&conns, conns.len(), |_, &ci| -> Result<(Vec<f64>, usize)> {
         let mut client = Client::connect(addr)?;
+        client.set_timeout(opts.timeout)?;
         let mut rng = Rng::new(0x10AD ^ ci as u64);
         let mut input = vec![0.0f32; info.in_dim];
         let mut lat = Vec::with_capacity(requests);
-        for _ in 0..requests {
+        let mut busy = 0usize;
+        for r in 0..requests {
             for v in input.iter_mut() {
                 *v = rng.next_f32();
             }
             let t = Instant::now();
-            let pairs = client.infer(&input, k)?;
-            lat.push(t.elapsed().as_secs_f64() * 1e6);
-            anyhow::ensure!(!pairs.is_empty(), "empty reply");
+            let reply = match opts.retry {
+                Some(mut policy) => {
+                    policy.seed ^= ((ci as u64) << 32) | r as u64;
+                    client.infer_retry(&input, k, opts.deadline_ms, &policy)
+                }
+                None => client.infer_deadline(&input, k, opts.deadline_ms),
+            };
+            match reply {
+                Ok(pairs) => {
+                    lat.push(t.elapsed().as_secs_f64() * 1e6);
+                    anyhow::ensure!(!pairs.is_empty(), "empty reply");
+                }
+                Err(e) if e.downcast_ref::<BusyError>().is_some() => busy += 1,
+                Err(e) => return Err(e),
+            }
         }
-        Ok(lat)
+        Ok((lat, busy))
     });
     let wall_s = t0.elapsed().as_secs_f64();
     let mut lat: Vec<f64> = Vec::with_capacity(concurrency * requests);
+    let mut busy = 0usize;
     for r in per_conn {
-        lat.extend(r?);
+        let (l, b) = r?;
+        lat.extend(l);
+        busy += b;
     }
-    if lat.is_empty() {
+    if lat.is_empty() && busy == 0 {
         bail!("load run completed zero requests");
     }
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |q: f64| lat[((q * (lat.len() - 1) as f64).round() as usize).min(lat.len() - 1)];
+    let pct = |q: f64| {
+        if lat.is_empty() {
+            0.0
+        } else {
+            lat[((q * (lat.len() - 1) as f64).round() as usize).min(lat.len() - 1)]
+        }
+    };
     Ok(LoadStats {
         requests: lat.len(),
+        busy,
         wall_s,
         rps: lat.len() as f64 / wall_s.max(1e-12),
-        mean_us: lat.iter().sum::<f64>() / lat.len() as f64,
+        mean_us: if lat.is_empty() {
+            0.0
+        } else {
+            lat.iter().sum::<f64>() / lat.len() as f64
+        },
         p50_us: pct(0.50),
         p99_us: pct(0.99),
     })
@@ -182,6 +404,7 @@ mod tests {
     fn load_stats_json_shape() {
         let s = LoadStats {
             requests: 10,
+            busy: 3,
             wall_s: 0.5,
             rps: 20.0,
             mean_us: 100.0,
@@ -190,9 +413,28 @@ mod tests {
         };
         let j = s.to_json("tcp/b=1/S=0.9");
         assert!(j.starts_with('{') && j.ends_with('}'));
-        for key in ["\"name\"", "\"requests\"", "\"rps\"", "\"p50_us\"", "\"p99_us\"", "\"git_rev\""] {
+        for key in [
+            "\"name\"",
+            "\"requests\"",
+            "\"busy\"",
+            "\"rps\"",
+            "\"p50_us\"",
+            "\"p99_us\"",
+            "\"git_rev\"",
+        ] {
             assert!(j.contains(key), "{j}");
         }
         assert!(!s.render().is_empty());
+    }
+
+    /// Typed errors downcast the way the retry loop relies on.
+    #[test]
+    fn typed_errors_downcast() {
+        let busy: anyhow::Error = anyhow::Error::new(BusyError("queue full".into()));
+        assert!(busy.downcast_ref::<BusyError>().is_some());
+        assert!(busy.downcast_ref::<TransportError>().is_none());
+        let t: anyhow::Error = anyhow::Error::new(TransportError("broken pipe".into()));
+        assert!(t.downcast_ref::<TransportError>().is_some());
+        assert!(t.to_string().contains("broken pipe"));
     }
 }

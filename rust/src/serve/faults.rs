@@ -1,0 +1,174 @@
+//! Deterministic failure-point injection for the serve stack.
+//!
+//! Production code asks [`hit`] at a handful of named [`Site`]s ("would
+//! a fault fire here?"). With the `fault-inject` cargo feature OFF —
+//! the default, and the only configuration a serving build should ever
+//! ship — every probe is a `const false` that the optimizer deletes;
+//! there is no registry, no lock, no branch left behind.
+//!
+//! With the feature ON, tests [`arm`] the registry with a seed and a
+//! per-site firing rate. Decisions come from one seeded
+//! [`Rng`](crate::util::Rng) stream per site, so a failing soak run
+//! replays exactly from its seed — chaos, but reproducible chaos (the
+//! same discipline as every mask/data shuffle in the repo). [`counts`]
+//! reports how often each site actually fired, letting a soak test
+//! assert the faults it survived were real.
+
+/// A named failure point in the serve stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// `SparseModel::load` — a hot reload that dies mid-parse.
+    ArtifactLoad,
+    /// Batcher admission — a request refused at enqueue.
+    Enqueue,
+    /// Connection frame read — the socket erroring under a request.
+    SockRead,
+    /// Connection frame write — the socket erroring under a reply.
+    SockWrite,
+}
+
+pub const SITES: usize = 4;
+
+impl Site {
+    fn index(self) -> usize {
+        match self {
+            Site::ArtifactLoad => 0,
+            Site::Enqueue => 1,
+            Site::SockRead => 2,
+            Site::SockWrite => 3,
+        }
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+mod armed {
+    use super::{Site, SITES};
+    use crate::util::Rng;
+    use std::sync::{Mutex, OnceLock};
+
+    struct SiteState {
+        rate: f64,
+        rng: Rng,
+        fired: u64,
+    }
+
+    fn registry() -> &'static Mutex<Vec<SiteState>> {
+        static REG: OnceLock<Mutex<Vec<SiteState>>> = OnceLock::new();
+        REG.get_or_init(|| {
+            Mutex::new(
+                (0..SITES)
+                    .map(|i| SiteState { rate: 0.0, rng: Rng::new(i as u64), fired: 0 })
+                    .collect(),
+            )
+        })
+    }
+
+    /// Arm every site at `rate` (probability per probe) from `seed`.
+    /// Per-site streams are split off the seed so one site's draw count
+    /// never perturbs another's decisions.
+    pub fn arm(seed: u64, rate: f64) {
+        let mut reg = registry().lock().unwrap();
+        for (i, s) in reg.iter_mut().enumerate() {
+            s.rate = rate;
+            s.rng = Rng::new(seed ^ (0x5EED_F417 + i as u64));
+            s.fired = 0;
+        }
+    }
+
+    /// Arm one site at its own rate (after [`arm`] set the baseline).
+    pub fn arm_site(site: Site, seed: u64, rate: f64) {
+        let mut reg = registry().lock().unwrap();
+        let s = &mut reg[site.index()];
+        s.rate = rate;
+        s.rng = Rng::new(seed ^ (0x5EED_F417 + site.index() as u64));
+        s.fired = 0;
+    }
+
+    /// Disarm everything (rates back to 0; counters kept for reading).
+    pub fn disarm() {
+        let mut reg = registry().lock().unwrap();
+        for s in reg.iter_mut() {
+            s.rate = 0.0;
+        }
+    }
+
+    /// Should a fault fire at `site` for this probe?
+    pub fn hit(site: Site) -> bool {
+        let mut reg = registry().lock().unwrap();
+        let s = &mut reg[site.index()];
+        if s.rate <= 0.0 {
+            return false;
+        }
+        let fire = (s.rng.next_f32() as f64) < s.rate;
+        if fire {
+            s.fired += 1;
+        }
+        fire
+    }
+
+    /// Per-site fire counts, indexed like [`Site::index`].
+    pub fn counts() -> [u64; SITES] {
+        let reg = registry().lock().unwrap();
+        let mut out = [0u64; SITES];
+        for (i, s) in reg.iter().enumerate() {
+            out[i] = s.fired;
+        }
+        out
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+pub use armed::{arm, arm_site, counts, disarm, hit};
+
+/// Feature off: probes are constant `false`, arming is a no-op.
+#[cfg(not(feature = "fault-inject"))]
+mod disarmed {
+    use super::{Site, SITES};
+
+    #[inline(always)]
+    pub fn arm(_seed: u64, _rate: f64) {}
+
+    #[inline(always)]
+    pub fn arm_site(_site: Site, _seed: u64, _rate: f64) {}
+
+    #[inline(always)]
+    pub fn disarm() {}
+
+    #[inline(always)]
+    pub fn hit(_site: Site) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    pub fn counts() -> [u64; SITES] {
+        [0; SITES]
+    }
+}
+
+#[cfg(not(feature = "fault-inject"))]
+pub use disarmed::{arm, arm_site, counts, disarm, hit};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Without the feature, probes never fire; with it, the same seed
+    /// replays the same decision stream.
+    #[test]
+    fn probes_are_deterministic_or_inert() {
+        arm(42, 0.5);
+        let first: Vec<bool> = (0..64).map(|_| hit(Site::Enqueue)).collect();
+        arm(42, 0.5);
+        let second: Vec<bool> = (0..64).map(|_| hit(Site::Enqueue)).collect();
+        assert_eq!(first, second);
+        #[cfg(feature = "fault-inject")]
+        {
+            assert!(first.iter().any(|&b| b), "rate 0.5 never fired in 64 draws");
+            assert!(counts()[Site::Enqueue.index()] > 0);
+        }
+        #[cfg(not(feature = "fault-inject"))]
+        assert!(first.iter().all(|&b| !b));
+        disarm();
+        assert!(!hit(Site::ArtifactLoad));
+    }
+}

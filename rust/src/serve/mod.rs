@@ -1,5 +1,6 @@
 //! Sparse inference serving: frozen CSR artifacts, a micro-batching
-//! engine, and a std-only TCP front end.
+//! engine, and a std-only TCP front end hardened against hostile
+//! traffic.
 //!
 //! The paper motivates sparse networks by "space or inference time
 //! restrictions"; this subsystem is where that claim becomes measurable
@@ -10,7 +11,7 @@
 //! `--no-default-features` — no XLA, no artifacts directory, no new
 //! crates.
 //!
-//! Four layers, bottom up:
+//! Six layers, bottom up:
 //!
 //! * [`artifact`] — the `RIGLSRVD` frozen [`SparseModel`] format:
 //!   per-layer `indptr`/`indices`/`values` + bias, exported from a
@@ -31,23 +32,42 @@
 //!   fanned over a [`pool::WorkerPool`](crate::pool::WorkerPool).
 //!   Because every kernel's batch loop is outermost and rows never
 //!   interact, batched outputs are bit-identical to batch=1 execution
-//!   (property-tested in `tests/serve_roundtrip.rs`).
+//!   (property-tested in `tests/serve_roundtrip.rs`). At high water the
+//!   serving path **sheds** typed BUSY rejections instead of queueing
+//!   unboundedly, and requests whose deadline expired while queued are
+//!   dropped before any compute is spent.
 //! * [`server`] — a thread-per-connection TCP front end speaking the
-//!   length-prefixed binary [`protocol`], with hot model reload via an
-//!   atomic `Arc<SparseModel>` swap when the artifact file changes
-//!   (`repro serve`), and [`client`] — the matching client + load
-//!   generator (`repro serve-bench`, `bench_serve` →
-//!   `BENCH_serve.json`).
+//!   length-prefixed binary [`protocol`], with admission control
+//!   (`max_conns` gate + queue high-water), per-connection idle/frame
+//!   deadlines (slowloris peers are disconnected, not leaked), graceful
+//!   drain, and hot model reload via an atomic `Arc<SparseModel>` swap
+//!   when the artifact file changes (`repro serve`; failures keep the
+//!   old model and are counted into INFO). [`client`] is the matching
+//!   client + load generator (`repro serve-bench`, `bench_serve` →
+//!   `BENCH_serve.json`) with typed BUSY/transport errors and seeded,
+//!   jittered retry for idempotent INFER.
+//! * [`faults`] — the deterministic failure-point registry (compiled to
+//!   constant `false` unless the `fault-inject` cargo feature is on)
+//!   and [`chaos`] — a seeded in-process chaos TCP proxy that delays,
+//!   fragments and drops streams; together they drive the
+//!   `tests/serve_chaos.rs` soak suite. See `serve/README.md` for the
+//!   full admission/deadline/drain model.
 
 pub mod artifact;
 pub mod batcher;
+pub mod chaos;
 pub mod client;
 pub mod engine;
+pub mod faults;
 pub mod protocol;
 pub mod server;
 
 pub use artifact::{ServeLayer, SparseModel};
-pub use batcher::{Batcher, BatcherConfig};
-pub use client::{run_load, Client, LoadStats};
+pub use batcher::{Batcher, BatcherConfig, Reject, RejectKind};
+pub use chaos::{ChaosConfig, ChaosProxy};
+pub use client::{
+    run_load, run_load_opts, BusyError, Client, LoadOpts, LoadStats, RetryPolicy, TransportError,
+};
 pub use engine::{top_k, InferEngine, TopKScratch};
+pub use protocol::InfoStats;
 pub use server::{ModelHandle, ServeConfig, Server};

@@ -4,21 +4,40 @@
 //! Every message is one frame: `u32 LE body length | body`. Bodies are
 //! capped at [`MAX_FRAME`] (a 16 MB input is three orders of magnitude
 //! past any model in the zoo — reject early rather than let a corrupt
-//! length allocate unbounded memory). Requests open with a one-byte
-//! opcode:
+//! length allocate unbounded memory), and the body buffer grows in
+//! [`READ_CHUNK`] steps as bytes actually arrive, so even a hostile
+//! length prefix just under the cap cannot force a 16 MB up-front
+//! allocation from a peer that never sends the payload. Requests open
+//! with a one-byte opcode:
 //!
 //! ```text
-//! INFER (0x01): u8 op | u16 k | u32 n | n × f32 input
+//! INFER (0x01): u8 op | u16 k | u32 deadline_ms | u32 n | n × f32 input
 //! INFO  (0x02): u8 op
 //! ```
+//!
+//! `deadline_ms` is the client's per-request budget (0 = none): the
+//! batcher drops requests still queued past their deadline with a typed
+//! EXPIRED-class error instead of computing answers nobody is waiting
+//! for.
 //!
 //! Responses open with a one-byte status:
 //!
 //! ```text
 //! OK+topk: u8 0 | u32 k | k × (u32 class, f32 logit)   — best first
 //! OK+info: u8 0 | u32 in_dim | u32 classes | u32 layers | u64 nnz
+//!          | u32 queue_depth | u32 queue_cap | u64 shed
+//!          | u64 reload_failures | u32 active_conns | u8 draining
 //! ERROR:   u8 1 | u32 len | len utf-8 message
+//! BUSY:    u8 2 | u32 len | len utf-8 message
 //! ```
+//!
+//! BUSY is load shedding, not failure: the server is refusing work it
+//! could not complete within bounded latency (queue high-water or the
+//! connection gate), and the client may retry with backoff. ERROR means
+//! the request itself was unacceptable — retrying the same bytes cannot
+//! succeed. The INFO payload's trailing STATS block is what admission
+//! control exposes to operators; decoders also accept the 20-byte
+//! pre-STATS payload so a new client can interrogate an old server.
 //!
 //! A protocol error (bad opcode, wrong input length) is answered with
 //! an ERROR frame and the connection stays usable — clients shouldn't
@@ -29,19 +48,49 @@ use anyhow::{bail, ensure, Result};
 /// Largest accepted frame body.
 pub const MAX_FRAME: usize = 16 << 20;
 
+/// Frame bodies are read (and their buffer grown) in steps of this
+/// size, so allocation tracks bytes received instead of bytes claimed.
+pub const READ_CHUNK: usize = 64 << 10;
+
 pub const OP_INFER: u8 = 0x01;
 pub const OP_INFO: u8 = 0x02;
 
 pub const STATUS_OK: u8 = 0;
 pub const STATUS_ERR: u8 = 1;
+/// Typed load-shed status: the request was refused, not failed —
+/// idempotent requests may be retried with backoff.
+pub const STATUS_BUSY: u8 = 2;
 
 /// A decoded client request.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Classify one input vector; reply with the `k` best classes.
-    Infer { k: usize, input: Vec<f32> },
+    Infer {
+        k: usize,
+        /// Client budget in milliseconds (0 = unbounded): queue time
+        /// past this is a typed error, not a late answer.
+        deadline_ms: u32,
+        input: Vec<f32>,
+    },
     /// Describe the currently served model.
     Info,
+}
+
+/// The admission/overload counters riding in an INFO reply.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct InfoStats {
+    /// Requests queued in the batcher right now.
+    pub queue_depth: u32,
+    /// The bound that queue: depth sheds against.
+    pub queue_cap: u32,
+    /// Requests refused with BUSY so far (queue + connection gate).
+    pub shed: u64,
+    /// Hot-reload attempts that failed (old model kept serving).
+    pub reload_failures: u64,
+    /// Connections currently admitted.
+    pub active_conns: u32,
+    /// True once drain has begun: finishing in-flight, accepting no one.
+    pub draining: bool,
 }
 
 /// A decoded server response.
@@ -54,8 +103,11 @@ pub enum Response {
         classes: usize,
         layers: usize,
         nnz: u64,
+        stats: InfoStats,
     },
     Error(String),
+    /// Load shed — retryable, unlike [`Response::Error`].
+    Busy(String),
 }
 
 /// Write one frame (length prefix + body). The caller flushes.
@@ -65,37 +117,65 @@ pub fn write_frame(w: &mut impl std::io::Write, body: &[u8]) -> std::io::Result<
     w.write_all(body)
 }
 
-/// Read one frame body into `buf` (reused across calls). Returns
-/// `Ok(false)` on clean EOF at a frame boundary — the peer hung up —
-/// and errors on truncation mid-frame or an oversized length prefix.
-pub fn read_frame(r: &mut impl std::io::Read, buf: &mut Vec<u8>) -> Result<bool> {
+/// Read one frame's 4-byte length header. Returns `Ok(None)` on clean
+/// EOF at a frame boundary — the peer hung up — and errors on
+/// truncation mid-header or a length past [`MAX_FRAME`].
+pub fn read_frame_len(r: &mut impl std::io::Read) -> Result<Option<usize>> {
     let mut len4 = [0u8; 4];
     let mut got = 0;
     while got < 4 {
         match r.read(&mut len4[got..]) {
-            Ok(0) if got == 0 => return Ok(false),
+            Ok(0) if got == 0 => return Ok(None),
             Ok(0) => bail!("connection closed mid-frame-header"),
             Ok(n) => got += n,
-            // Retry on signal interruption, like read_exact does for
-            // the body below — a stray SIGCHLD must not drop a healthy
-            // connection.
+            // Retry on signal interruption, like the body loop below —
+            // a stray SIGCHLD must not drop a healthy connection.
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
             Err(e) => return Err(e.into()),
         }
     }
     let len = u32::from_le_bytes(len4) as usize;
     ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds the {MAX_FRAME} cap");
+    Ok(Some(len))
+}
+
+/// Read a `len`-byte frame body into `buf` (cleared first), growing the
+/// buffer in [`READ_CHUNK`] steps so a hostile length prefix cannot
+/// reserve memory the peer never fills.
+pub fn read_frame_body(r: &mut impl std::io::Read, len: usize, buf: &mut Vec<u8>) -> Result<()> {
+    ensure!(len <= MAX_FRAME, "frame of {len} bytes exceeds the {MAX_FRAME} cap");
     buf.clear();
-    buf.resize(len, 0);
-    r.read_exact(buf)?;
-    Ok(true)
+    while buf.len() < len {
+        let start = buf.len();
+        let take = (len - start).min(READ_CHUNK);
+        buf.resize(start + take, 0);
+        if let Err(e) = r.read_exact(&mut buf[start..]) {
+            buf.truncate(start);
+            return Err(e.into());
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame body into `buf` (reused across calls). Returns
+/// `Ok(false)` on clean EOF at a frame boundary and errors on
+/// truncation mid-frame or an oversized length prefix.
+pub fn read_frame(r: &mut impl std::io::Read, buf: &mut Vec<u8>) -> Result<bool> {
+    match read_frame_len(r)? {
+        None => Ok(false),
+        Some(len) => {
+            read_frame_body(r, len, buf)?;
+            Ok(true)
+        }
+    }
 }
 
 /// Encode an INFER request body into `buf` (cleared first).
-pub fn encode_infer(k: u16, input: &[f32], buf: &mut Vec<u8>) {
+pub fn encode_infer(k: u16, deadline_ms: u32, input: &[f32], buf: &mut Vec<u8>) {
     buf.clear();
     buf.push(OP_INFER);
     buf.extend_from_slice(&k.to_le_bytes());
+    buf.extend_from_slice(&deadline_ms.to_le_bytes());
     buf.extend_from_slice(&(input.len() as u32).to_le_bytes());
     for v in input {
         buf.extend_from_slice(&v.to_le_bytes());
@@ -117,19 +197,20 @@ pub fn decode_request(body: &[u8]) -> Result<Request> {
             Ok(Request::Info)
         }
         OP_INFER => {
-            ensure!(body.len() >= 7, "truncated INFER header");
+            ensure!(body.len() >= 11, "truncated INFER header");
             let k = u16::from_le_bytes([body[1], body[2]]) as usize;
-            let n = u32::from_le_bytes([body[3], body[4], body[5], body[6]]) as usize;
+            let deadline_ms = u32::from_le_bytes([body[3], body[4], body[5], body[6]]);
+            let n = u32::from_le_bytes([body[7], body[8], body[9], body[10]]) as usize;
             ensure!(
-                body.len() == 7 + n * 4,
+                body.len() == 11 + n * 4,
                 "INFER declares {n} values but carries {} payload bytes",
-                body.len() - 7
+                body.len() - 11
             );
-            let input = body[7..]
+            let input = body[11..]
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
-            Ok(Request::Infer { k, input })
+            Ok(Request::Infer { k, deadline_ms, input })
         }
         op => bail!("unknown opcode {op:#04x}"),
     }
@@ -152,6 +233,7 @@ pub fn encode_info_response(
     classes: usize,
     layers: usize,
     nnz: u64,
+    stats: &InfoStats,
     buf: &mut Vec<u8>,
 ) {
     buf.clear();
@@ -160,23 +242,38 @@ pub fn encode_info_response(
     buf.extend_from_slice(&(classes as u32).to_le_bytes());
     buf.extend_from_slice(&(layers as u32).to_le_bytes());
     buf.extend_from_slice(&nnz.to_le_bytes());
+    buf.extend_from_slice(&stats.queue_depth.to_le_bytes());
+    buf.extend_from_slice(&stats.queue_cap.to_le_bytes());
+    buf.extend_from_slice(&stats.shed.to_le_bytes());
+    buf.extend_from_slice(&stats.reload_failures.to_le_bytes());
+    buf.extend_from_slice(&stats.active_conns.to_le_bytes());
+    buf.push(stats.draining as u8);
 }
 
 /// Encode an ERROR response body into `buf` (cleared first).
 pub fn encode_error_response(msg: &str, buf: &mut Vec<u8>) {
+    encode_status_msg(STATUS_ERR, msg, buf);
+}
+
+/// Encode a BUSY (load shed) response body into `buf` (cleared first).
+pub fn encode_busy_response(msg: &str, buf: &mut Vec<u8>) {
+    encode_status_msg(STATUS_BUSY, msg, buf);
+}
+
+fn encode_status_msg(status: u8, msg: &str, buf: &mut Vec<u8>) {
     buf.clear();
-    buf.push(STATUS_ERR);
+    buf.push(status);
     buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
     buf.extend_from_slice(msg.as_bytes());
 }
 
 /// Decode a topk response body. The two OK forms are not
-/// self-describing (a k=2 topk body and an info body are both 21
-/// bytes), so the caller states which form its request implies — topk
-/// for INFER, info for INFO.
+/// self-describing (a k=2 topk body and a pre-STATS info body are both
+/// 21 bytes), so the caller states which form its request implies —
+/// topk for INFER, info for INFO.
 pub fn decode_topk_response(body: &[u8]) -> Result<Response> {
     match split_status(body)? {
-        Ok(rest) => {
+        Split::Ok(rest) => {
             ensure!(rest.len() >= 4, "truncated topk response");
             let k = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
             ensure!(
@@ -195,15 +292,39 @@ pub fn decode_topk_response(body: &[u8]) -> Result<Response> {
                 .collect();
             Ok(Response::TopK(pairs))
         }
-        Err(msg) => Ok(Response::Error(msg)),
+        Split::Err(msg) => Ok(Response::Error(msg)),
+        Split::Busy(msg) => Ok(Response::Busy(msg)),
     }
 }
 
-/// Decode an info response body.
+/// Decode an info response body. Accepts both the 20-byte pre-STATS
+/// payload (stats report as zeros) and the current 49-byte form.
 pub fn decode_info_response(body: &[u8]) -> Result<Response> {
     match split_status(body)? {
-        Ok(rest) => {
-            ensure!(rest.len() == 20, "info response of {} bytes", rest.len());
+        Split::Ok(rest) => {
+            ensure!(
+                rest.len() == 20 || rest.len() == 49,
+                "info response of {} bytes",
+                rest.len()
+            );
+            let stats = if rest.len() == 49 {
+                InfoStats {
+                    queue_depth: u32::from_le_bytes([rest[20], rest[21], rest[22], rest[23]]),
+                    queue_cap: u32::from_le_bytes([rest[24], rest[25], rest[26], rest[27]]),
+                    shed: u64::from_le_bytes([
+                        rest[28], rest[29], rest[30], rest[31], rest[32], rest[33], rest[34],
+                        rest[35],
+                    ]),
+                    reload_failures: u64::from_le_bytes([
+                        rest[36], rest[37], rest[38], rest[39], rest[40], rest[41], rest[42],
+                        rest[43],
+                    ]),
+                    active_conns: u32::from_le_bytes([rest[44], rest[45], rest[46], rest[47]]),
+                    draining: rest[48] != 0,
+                }
+            } else {
+                InfoStats::default()
+            };
             Ok(Response::Info {
                 in_dim: u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize,
                 classes: u32::from_le_bytes([rest[4], rest[5], rest[6], rest[7]]) as usize,
@@ -212,23 +333,32 @@ pub fn decode_info_response(body: &[u8]) -> Result<Response> {
                     rest[12], rest[13], rest[14], rest[15], rest[16], rest[17], rest[18],
                     rest[19],
                 ]),
+                stats,
             })
         }
-        Err(msg) => Ok(Response::Error(msg)),
+        Split::Err(msg) => Ok(Response::Error(msg)),
+        Split::Busy(msg) => Ok(Response::Busy(msg)),
     }
 }
 
-/// Split a response body into `Ok(payload)` / `Err(error message)`.
-fn split_status(body: &[u8]) -> Result<std::result::Result<&[u8], String>> {
+enum Split<'a> {
+    Ok(&'a [u8]),
+    Err(String),
+    Busy(String),
+}
+
+/// Split a response body by its status byte.
+fn split_status(body: &[u8]) -> Result<Split<'_>> {
     ensure!(!body.is_empty(), "empty response body");
     match body[0] {
-        STATUS_OK => Ok(Ok(&body[1..])),
-        STATUS_ERR => {
+        STATUS_OK => Ok(Split::Ok(&body[1..])),
+        s @ (STATUS_ERR | STATUS_BUSY) => {
             let rest = &body[1..];
             ensure!(rest.len() >= 4, "truncated error response");
             let n = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
             ensure!(rest.len() == 4 + n, "error length mismatch");
-            Ok(Err(String::from_utf8_lossy(&rest[4..]).into_owned()))
+            let msg = String::from_utf8_lossy(&rest[4..]).into_owned();
+            Ok(if s == STATUS_BUSY { Split::Busy(msg) } else { Split::Err(msg) })
         }
         s => bail!("unknown response status {s:#04x}"),
     }
@@ -242,10 +372,11 @@ mod tests {
     fn infer_request_roundtrip() {
         let input = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
         let mut buf = Vec::new();
-        encode_infer(3, &input, &mut buf);
+        encode_infer(3, 250, &input, &mut buf);
         match decode_request(&buf).unwrap() {
-            Request::Infer { k, input: got } => {
+            Request::Infer { k, deadline_ms, input: got } => {
                 assert_eq!(k, 3);
+                assert_eq!(deadline_ms, 250);
                 let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
                 assert_eq!(bits(&got), bits(&input));
             }
@@ -263,14 +394,23 @@ mod tests {
             decode_topk_response(&buf).unwrap(),
             Response::TopK(vec![(7, 0.5), (0, -1.5)])
         );
-        encode_info_response(784, 10, 3, 26_6200, &mut buf);
+        let stats = InfoStats {
+            queue_depth: 3,
+            queue_cap: 64,
+            shed: 17,
+            reload_failures: 2,
+            active_conns: 5,
+            draining: true,
+        };
+        encode_info_response(784, 10, 3, 266_200, &stats, &mut buf);
         assert_eq!(
             decode_info_response(&buf).unwrap(),
             Response::Info {
                 in_dim: 784,
                 classes: 10,
                 layers: 3,
-                nnz: 26_6200
+                nnz: 266_200,
+                stats,
             }
         );
         encode_error_response("bad input", &mut buf);
@@ -282,6 +422,34 @@ mod tests {
             decode_info_response(&buf).unwrap(),
             Response::Error("bad input".into())
         );
+        encode_busy_response("queue full", &mut buf);
+        assert_eq!(
+            decode_topk_response(&buf).unwrap(),
+            Response::Busy("queue full".into())
+        );
+        assert_eq!(
+            decode_info_response(&buf).unwrap(),
+            Response::Busy("queue full".into())
+        );
+    }
+
+    /// A new client must still understand a pre-STATS (20-byte payload)
+    /// info reply: stats read as zeros.
+    #[test]
+    fn legacy_info_payload_decodes_with_zero_stats() {
+        let mut buf = vec![STATUS_OK];
+        buf.extend_from_slice(&784u32.to_le_bytes());
+        buf.extend_from_slice(&10u32.to_le_bytes());
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&1234u64.to_le_bytes());
+        match decode_info_response(&buf).unwrap() {
+            Response::Info { in_dim, nnz, stats, .. } => {
+                assert_eq!(in_dim, 784);
+                assert_eq!(nnz, 1234);
+                assert_eq!(stats, InfoStats::default());
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -291,8 +459,8 @@ mod tests {
         assert!(decode_request(&[OP_INFER, 0, 0]).is_err());
         // Declared 2 floats, carries 1.
         let mut buf = Vec::new();
-        encode_infer(1, &[1.0], &mut buf);
-        buf[3] = 2;
+        encode_infer(1, 0, &[1.0], &mut buf);
+        buf[7] = 2;
         assert!(decode_request(&buf).is_err());
         assert!(decode_topk_response(&[9]).is_err());
     }
@@ -317,5 +485,25 @@ mod tests {
         huge.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
         let mut r = std::io::Cursor::new(huge);
         assert!(read_frame(&mut r, &mut buf).is_err());
+    }
+
+    /// An absurd length prefix (just under the cap) from a peer that
+    /// sends no payload must not balloon the buffer to the claimed
+    /// size: allocation is bounded by bytes actually received, rounded
+    /// up to one READ_CHUNK.
+    #[test]
+    fn absurd_length_prefix_does_not_preallocate() {
+        let claimed = MAX_FRAME as u32; // at the cap: passes the length check
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&claimed.to_le_bytes());
+        wire.extend_from_slice(&[0u8; 100]); // then the peer "hangs up"
+        let mut r = std::io::Cursor::new(wire);
+        let mut buf = Vec::new();
+        assert!(read_frame(&mut r, &mut buf).is_err()); // truncated mid-frame
+        assert!(
+            buf.capacity() <= 2 * READ_CHUNK,
+            "buffer ballooned to {} for a truncated frame",
+            buf.capacity()
+        );
     }
 }

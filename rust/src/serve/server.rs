@@ -1,5 +1,5 @@
 //! The TCP front end: thread-per-connection framing, the shared model
-//! handle, and the hot-reload watcher.
+//! handle, admission control, deadlines, and the hot-reload watcher.
 //!
 //! A [`Server`] owns one loopback-bound `TcpListener` (port 0 = let the
 //! OS pick an ephemeral port; [`Server::addr`] reports the choice — the
@@ -7,26 +7,47 @@
 //! optionally a watcher thread that polls the artifact file and swaps a
 //! freshly loaded model into the [`ModelHandle`] when it changes.
 //! Because exports go through `util::atomic_write`, the watcher can
-//! never load a torn file — it sees the old artifact or the new one.
+//! never load a torn file — it sees the old artifact or the new one; a
+//! load that fails anyway (truly corrupt file, or an injected fault)
+//! keeps the old model serving and bumps the `reload_failures` counter
+//! surfaced in INFO.
 //!
 //! Connections get one thread each (requests on one connection are
 //! served in order; throughput scaling comes from many connections
 //! feeding the shared micro-batcher, not from pipelining within one).
+//! The robustness model, end to end:
+//!
+//! * **Admission**: at most `max_conns` connections are admitted; the
+//!   excess peer gets one typed BUSY frame and is disconnected. Past
+//!   the gate, the batcher's bounded queue sheds BUSY at high water —
+//!   an accepted request is one the server expects to answer within
+//!   bounded latency.
+//! * **Deadlines**: `idle_timeout_ms` bounds both the wait for a new
+//!   request (an idle peer is closed cleanly) and the arrival of a
+//!   whole frame once its first byte shows up — a slowloris peer
+//!   trickling bytes is disconnected, not given a leaked thread.
+//!   Requests carrying a client deadline are dropped by the batcher
+//!   once it passes.
+//! * **Drain**: [`Server::drain`] stops accepting, lets every admitted
+//!   connection finish its current request, and bounds the whole
+//!   goodbye by `drain_timeout_ms`.
+//!
 //! `max_requests > 0` turns the server into a self-terminating smoke
 //! target: after that many INFER replies the accept loop stops and
 //! [`Server::wait`] returns.
 
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::artifact::SparseModel;
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{Batcher, BatcherConfig, RejectKind};
+use super::faults::{self, Site};
 use super::protocol as proto;
 
 /// The currently served model, swappable atomically under a reader
@@ -79,6 +100,20 @@ pub struct ServeConfig {
     /// `workers` scales throughput, `threads` scales per-request
     /// latency.
     pub threads: usize,
+    /// Admission gate (`--max-conns`): connections past this many get
+    /// one BUSY frame and are closed.
+    pub max_conns: usize,
+    /// Per-connection deadline in milliseconds (`--idle-timeout-ms`):
+    /// both the idle wait for the next request (clean close) and the
+    /// budget for one whole frame to arrive once started (slowloris
+    /// disconnect). 0 = no timeouts, the pre-robustness behavior.
+    pub idle_timeout_ms: u64,
+    /// Batcher queue bound (`--queue-depth`); 0 derives
+    /// `max(workers × max_batch × 4, 64)`.
+    pub queue_depth: usize,
+    /// Bound on [`Server::drain`]'s wait for in-flight connections, in
+    /// milliseconds (`--drain-timeout-ms`).
+    pub drain_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -91,7 +126,33 @@ impl Default for ServeConfig {
             max_requests: 0,
             reload_poll_ms: 200,
             threads: 1,
+            max_conns: 256,
+            idle_timeout_ms: 10_000,
+            queue_depth: 0,
+            drain_timeout_ms: 2_000,
         }
+    }
+}
+
+/// Shared robustness counters, sampled into the INFO frame's STATS
+/// block alongside the batcher's queue gauges.
+#[derive(Default)]
+pub(crate) struct ServeStats {
+    /// Hot-reload attempts that failed (old model kept serving).
+    pub reload_failures: AtomicU64,
+    /// Connections currently admitted.
+    pub active_conns: AtomicUsize,
+    /// Set once drain begins: finish in-flight, accept no one.
+    pub draining: AtomicBool,
+}
+
+/// Decrements `active_conns` when a connection thread exits on ANY
+/// path — error, timeout, drain, or clean EOF.
+struct ConnGuard(Arc<ServeStats>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.active_conns.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -104,6 +165,8 @@ pub struct Server {
     /// Exposed so tests and embedding callers can hot-swap directly.
     pub handle: ModelHandle,
     batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    drain_timeout: Duration,
 }
 
 impl Server {
@@ -150,38 +213,47 @@ impl Server {
         let handle = ModelHandle::new(model);
         let kernel_pool = (cfg.threads > 1)
             .then(|| Arc::new(crate::pool::KernelPool::new(cfg.threads)));
+        let queue_depth = if cfg.queue_depth > 0 {
+            cfg.queue_depth
+        } else {
+            (cfg.workers * cfg.max_batch * 4).max(64)
+        };
         let batcher = Arc::new(Batcher::with_pool(
             handle.clone(),
             BatcherConfig {
                 workers: cfg.workers,
                 max_batch: cfg.max_batch,
                 max_wait: Duration::from_micros(cfg.max_wait_us),
-                queue_depth: (cfg.workers * cfg.max_batch * 4).max(64),
+                queue_depth,
             },
             kernel_pool,
         ));
         let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServeStats::default());
         let served = Arc::new(AtomicUsize::new(0));
 
         let accept = {
-            let (stop, served, handle, batcher) =
-                (stop.clone(), served.clone(), handle.clone(), batcher.clone());
-            let max_requests = cfg.max_requests;
+            let (stop, served, handle, batcher, stats) = (
+                stop.clone(),
+                served.clone(),
+                handle.clone(),
+                batcher.clone(),
+                stats.clone(),
+            );
+            let cfg = cfg.clone();
             std::thread::Builder::new()
                 .name("serve-accept".into())
-                .spawn(move || {
-                    accept_loop(listener, stop, served, handle, batcher, max_requests)
-                })
+                .spawn(move || accept_loop(listener, stop, served, handle, batcher, stats, cfg))
                 .context("spawning the accept thread")?
         };
 
         let watcher = match watch {
             Some((path, baseline)) => Some({
-                let (stop, handle) = (stop.clone(), handle.clone());
+                let (stop, handle, stats) = (stop.clone(), handle.clone(), stats.clone());
                 let poll = Duration::from_millis(cfg.reload_poll_ms.max(10));
                 std::thread::Builder::new()
                     .name("serve-reload".into())
-                    .spawn(move || watch_loop(path, baseline, poll, stop, handle))
+                    .spawn(move || watch_loop(path, baseline, poll, stop, handle, stats))
                     .context("spawning the reload watcher")?
             }),
             None => None,
@@ -194,6 +266,8 @@ impl Server {
             watcher,
             handle,
             batcher,
+            stats,
+            drain_timeout: Duration::from_millis(cfg.drain_timeout_ms),
         })
     }
 
@@ -205,6 +279,12 @@ impl Server {
     /// `(requests, batches)` served so far by the micro-batcher.
     pub fn stats(&self) -> (u64, u64) {
         self.batcher.stats()
+    }
+
+    /// Sample the robustness counters INFO reports — queue gauges from
+    /// the batcher, connection/reload/drain state from the front end.
+    pub fn info_stats(&self) -> proto::InfoStats {
+        sample_stats(&self.batcher, &self.stats)
     }
 
     /// Block until the accept loop ends (`max_requests` reached or
@@ -221,11 +301,62 @@ impl Server {
         self.stop.store(true, Ordering::SeqCst);
         self.wait();
     }
+
+    /// Block until the accept loop ends on its own (`max_requests`
+    /// tripping, or another thread setting stop), THEN drain in-flight
+    /// connections under the configured bound — `repro serve`'s
+    /// shutdown path. Returns whether every connection exited inside
+    /// the drain window, plus a final sample of the robustness
+    /// counters (taken after the last reply, for the exit log).
+    pub fn wait_drain(mut self) -> (bool, proto::InfoStats) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        self.stats.draining.store(true, Ordering::SeqCst);
+        self.stop.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + self.drain_timeout;
+        let drained = loop {
+            if self.stats.active_conns.load(Ordering::SeqCst) == 0 {
+                break true;
+            }
+            if Instant::now() >= deadline {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        // `drop(self)` finishes the teardown (watcher + batcher).
+        (drained, sample_stats(&self.batcher, &self.stats))
+    }
+
+    /// Graceful drain: stop accepting, let every admitted connection
+    /// finish the request it is on (connections close after their next
+    /// reply; idle ones close at their idle timeout), and bound the
+    /// whole goodbye by the configured `drain_timeout_ms`. Returns
+    /// `true` if every connection exited inside the bound.
+    pub fn drain(self) -> bool {
+        self.stats.draining.store(true, Ordering::SeqCst);
+        self.stop.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + self.drain_timeout;
+        let drained = loop {
+            if self.stats.active_conns.load(Ordering::SeqCst) == 0 {
+                break true;
+            }
+            if Instant::now() >= deadline {
+                break false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        };
+        self.wait();
+        drained
+    }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
+        // Draining tells connection threads to wrap up after their
+        // current request instead of waiting for the peer to hang up.
+        self.stats.draining.store(true, Ordering::SeqCst);
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
@@ -233,17 +364,31 @@ impl Drop for Server {
             let _ = h.join();
         }
         // Connection threads are detached: they hold their own
-        // `Arc<Batcher>` clones and exit when their peer hangs up.
+        // `Arc<Batcher>` clones and exit when their peer hangs up, at
+        // their idle deadline, or at their next reply (draining).
     }
 }
 
+fn sample_stats(batcher: &Batcher, stats: &ServeStats) -> proto::InfoStats {
+    proto::InfoStats {
+        queue_depth: batcher.depth().min(u32::MAX as usize) as u32,
+        queue_cap: batcher.queue_cap().min(u32::MAX as usize) as u32,
+        shed: batcher.shed(),
+        reload_failures: stats.reload_failures.load(Ordering::Relaxed),
+        active_conns: stats.active_conns.load(Ordering::SeqCst).min(u32::MAX as usize) as u32,
+        draining: stats.draining.load(Ordering::SeqCst),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn accept_loop(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
     served: Arc<AtomicUsize>,
     handle: ModelHandle,
     batcher: Arc<Batcher>,
-    max_requests: usize,
+    stats: Arc<ServeStats>,
+    cfg: ServeConfig,
 ) {
     // Non-blocking accept + exponential backoff: ~1 ms reaction while
     // traffic flows, decaying to 25 ms wakeups when idle, so a
@@ -259,13 +404,39 @@ fn accept_loop(
             Ok((stream, _peer)) => {
                 idle = idle_min;
                 let _ = stream.set_nodelay(true);
-                let (stop, served, handle, batcher) =
-                    (stop.clone(), served.clone(), handle.clone(), batcher.clone());
+                // Admission gate: over capacity, the peer gets one
+                // typed BUSY frame (best effort, bounded write) and is
+                // closed — never a thread, never a queue slot.
+                let admitted =
+                    stats.active_conns.fetch_add(1, Ordering::SeqCst) < cfg.max_conns.max(1);
+                let guard = ConnGuard(stats.clone());
+                if !admitted {
+                    batcher.count_external_shed();
+                    refuse_busy(stream, cfg.max_conns);
+                    drop(guard);
+                    continue;
+                }
+                let (stop, served, handle, batcher, stats) = (
+                    stop.clone(),
+                    served.clone(),
+                    handle.clone(),
+                    batcher.clone(),
+                    stats.clone(),
+                );
+                let (max_requests, idle_ms) = (cfg.max_requests, cfg.idle_timeout_ms);
                 let spawned = std::thread::Builder::new().name("serve-conn".into()).spawn(
                     move || {
-                        if let Err(e) =
-                            handle_conn(stream, &handle, &batcher, &served, &stop, max_requests)
-                        {
+                        let _guard = guard;
+                        if let Err(e) = handle_conn(
+                            stream,
+                            &handle,
+                            &batcher,
+                            &stats,
+                            &served,
+                            &stop,
+                            max_requests,
+                            idle_ms,
+                        ) {
                             eprintln!("serve: connection error: {e:#}");
                         }
                     },
@@ -286,23 +457,158 @@ fn accept_loop(
     }
 }
 
-/// Serve one connection until the peer hangs up (or the request budget
-/// trips). Framing errors close the connection; protocol-level errors
-/// (bad opcode, wrong input size) are answered and the connection
-/// stays open.
+/// Best-effort one-frame BUSY refusal at the admission gate. The write
+/// is bounded so a peer that never reads cannot stall the accept loop.
+fn refuse_busy(mut stream: TcpStream, max_conns: usize) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(100)));
+    let mut body = Vec::with_capacity(64);
+    proto::encode_busy_response(
+        &format!("server busy: {max_conns} connections admitted"),
+        &mut body,
+    );
+    let _ = proto::write_frame(&mut stream, &body);
+    let _ = stream.flush();
+}
+
+/// What one bounded frame read produced.
+enum FrameRead {
+    /// A whole frame body is in `buf`.
+    Frame,
+    /// Clean EOF at a frame boundary — the peer hung up.
+    Eof,
+    /// No byte arrived within the idle window — close cleanly.
+    Idle,
+}
+
+fn timeout_kind(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Read one frame with the two-deadline discipline: up to `idle` for
+/// the FIRST byte (an idle peer is not an error), then the rest of the
+/// header and the whole body must land within `idle` of that first
+/// byte. `SO_RCVTIMEO` alone cannot bound the frame — a slowloris peer
+/// trickling one byte per timeout window would hold the thread forever
+/// — so the remaining budget is re-applied before every socket read.
+/// `timeout == None` preserves the untimed pre-robustness behavior.
+fn read_frame_bounded(
+    stream: &TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    timeout: Option<Duration>,
+) -> Result<FrameRead> {
+    let Some(idle) = timeout else {
+        return Ok(match proto::read_frame(reader, buf)? {
+            true => FrameRead::Frame,
+            false => FrameRead::Eof,
+        });
+    };
+    stream.set_read_timeout(Some(idle)).context("arming the idle timeout")?;
+    let mut head = [0u8; 4];
+    let mut got = 0;
+    // First byte: a timeout here is the idle path, not a fault.
+    loop {
+        match reader.read(&mut head[..1]) {
+            Ok(0) => return Ok(FrameRead::Eof),
+            Ok(_) => {
+                got = 1;
+                break;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if timeout_kind(&e) => return Ok(FrameRead::Idle),
+            Err(e) => return Err(e.into()),
+        }
+    }
+    // The frame has begun: everything else rides one deadline.
+    let deadline = Instant::now() + idle;
+    read_exact_deadline(stream, reader, &mut head[got..], deadline)?;
+    let len = u32::from_le_bytes(head) as usize;
+    anyhow::ensure!(
+        len <= proto::MAX_FRAME,
+        "frame of {len} bytes exceeds the {} cap",
+        proto::MAX_FRAME
+    );
+    buf.clear();
+    while buf.len() < len {
+        let start = buf.len();
+        let take = (len - start).min(proto::READ_CHUNK);
+        buf.resize(start + take, 0);
+        if let Err(e) = read_exact_deadline(stream, reader, &mut buf[start..], deadline) {
+            buf.truncate(start);
+            return Err(e);
+        }
+    }
+    Ok(FrameRead::Frame)
+}
+
+/// `read_exact` that re-arms `SO_RCVTIMEO` with the remaining budget
+/// before every read, so total wall time — not per-read stall — is
+/// what's bounded.
+fn read_exact_deadline(
+    stream: &TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    mut dst: &mut [u8],
+    deadline: Instant,
+) -> Result<()> {
+    while !dst.is_empty() {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            bail!("frame deadline exceeded (slowloris peer?)");
+        }
+        // set_read_timeout(Some(0)) is an error; clamp up to 1 ms.
+        stream
+            .set_read_timeout(Some(left.max(Duration::from_millis(1))))
+            .context("arming the frame deadline")?;
+        match reader.read(dst) {
+            Ok(0) => bail!("connection closed mid-frame"),
+            Ok(n) => dst = &mut dst[n..],
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if timeout_kind(&e) => bail!("frame deadline exceeded (slowloris peer?)"),
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Serve one connection until the peer hangs up, a deadline trips, the
+/// server drains, or the request budget trips. Framing errors close
+/// the connection; protocol-level errors (bad opcode, wrong input
+/// size) are answered and the connection stays open; overload is
+/// answered with a typed BUSY frame.
+#[allow(clippy::too_many_arguments)]
 fn handle_conn(
     stream: TcpStream,
     handle: &ModelHandle,
     batcher: &Batcher,
+    stats: &ServeStats,
     served: &AtomicUsize,
     stop: &AtomicBool,
     max_requests: usize,
+    idle_timeout_ms: u64,
 ) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone().context("cloning the stream")?);
+    let timeout = (idle_timeout_ms > 0).then(|| Duration::from_millis(idle_timeout_ms));
+    if let Some(t) = timeout {
+        // Writes share the same budget: a peer that stops reading its
+        // replies is disconnected by the kernel send buffer timeout.
+        stream.set_write_timeout(Some(t)).context("arming the write timeout")?;
+    }
+    let rstream = stream.try_clone().context("cloning the stream")?;
+    let mut reader = BufReader::new(rstream);
     let mut writer = BufWriter::new(stream);
     let mut inbuf = Vec::new();
     let mut outbuf = Vec::new();
-    while proto::read_frame(&mut reader, &mut inbuf)? {
+    loop {
+        match read_frame_bounded(writer.get_ref(), &mut reader, &mut inbuf, timeout)? {
+            FrameRead::Frame => {}
+            FrameRead::Eof => return Ok(()),
+            FrameRead::Idle => return Ok(()), // close an idle peer cleanly
+        }
+        if faults::hit(Site::SockRead) {
+            bail!("fault-inject: socket read");
+        }
         let mut infer_done = false;
         match proto::decode_request(&inbuf) {
             Ok(proto::Request::Info) => {
@@ -312,18 +618,27 @@ fn handle_conn(
                     m.classes(),
                     m.layers.len(),
                     m.nnz() as u64,
+                    &sample_stats(batcher, stats),
                     &mut outbuf,
                 );
             }
-            Ok(proto::Request::Infer { k, input }) => {
-                match batcher.submit(input, k).recv() {
+            Ok(proto::Request::Infer { k, deadline_ms, input }) => {
+                let deadline =
+                    (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));
+                match batcher.submit_with(input, k, deadline).recv() {
                     Ok(Ok(pairs)) => proto::encode_topk_response(&pairs, &mut outbuf),
-                    Ok(Err(msg)) => proto::encode_error_response(&msg, &mut outbuf),
+                    Ok(Err(rej)) if rej.kind == RejectKind::Busy => {
+                        proto::encode_busy_response(&rej.msg, &mut outbuf)
+                    }
+                    Ok(Err(rej)) => proto::encode_error_response(&rej.msg, &mut outbuf),
                     Err(_) => proto::encode_error_response("batcher shut down", &mut outbuf),
                 }
                 infer_done = true;
             }
             Err(e) => proto::encode_error_response(&format!("{e:#}"), &mut outbuf),
+        }
+        if faults::hit(Site::SockWrite) {
+            bail!("fault-inject: socket write");
         }
         proto::write_frame(&mut writer, &outbuf)?;
         writer.flush()?;
@@ -336,8 +651,12 @@ fn handle_conn(
                 return Ok(());
             }
         }
+        // Draining: the reply above completed this connection's
+        // current request; close instead of waiting for another.
+        if stats.draining.load(Ordering::SeqCst) {
+            return Ok(());
+        }
     }
-    Ok(())
 }
 
 /// `(mtime, size)` fingerprint used to detect artifact replacement.
@@ -350,20 +669,32 @@ fn file_stamp(p: &std::path::Path) -> FileStamp {
 }
 
 /// Poll the artifact file; on any (mtime, size) change, load and swap.
-/// Load failures are logged and the old model keeps serving — with
-/// atomic exports they indicate a genuinely bad artifact, not a race.
+/// Load failures bump `reload_failures` and the old model keeps
+/// serving — with atomic exports they indicate a genuinely bad
+/// artifact, not a race. While the file is missing the poll cadence
+/// backs off (up to 16× the configured period, capped at 5 s) so a
+/// server whose artifact was deleted doesn't spin at full rate
+/// stat-ing a hole in the filesystem.
 fn watch_loop(
     path: PathBuf,
     baseline: FileStamp,
     poll: Duration,
     stop: Arc<AtomicBool>,
     handle: ModelHandle,
+    stats: Arc<ServeStats>,
 ) {
+    let poll_max = (poll * 16).min(Duration::from_secs(5)).max(poll);
+    let mut cur_poll = poll;
     let mut last = baseline;
     while !stop.load(Ordering::SeqCst) {
-        std::thread::sleep(poll);
+        std::thread::sleep(cur_poll);
         let now = file_stamp(&path);
-        if now == last || now.is_none() {
+        if now.is_none() {
+            cur_poll = (cur_poll * 2).min(poll_max);
+            continue;
+        }
+        cur_poll = poll;
+        if now == last {
             continue;
         }
         last = now;
@@ -377,7 +708,10 @@ fn watch_loop(
                 );
                 handle.swap(m);
             }
-            Err(e) => eprintln!("serve: reload of {path:?} failed, keeping old model: {e:#}"),
+            Err(e) => {
+                stats.reload_failures.fetch_add(1, Ordering::Relaxed);
+                eprintln!("serve: reload of {path:?} failed, keeping old model: {e:#}");
+            }
         }
     }
 }
@@ -407,6 +741,29 @@ mod tests {
         let m = SparseModel::init_random(&def, 0.5, &Distribution::Uniform, 3).unwrap();
         let srv = Server::start(m, None, ServeConfig::default()).unwrap();
         assert_ne!(srv.addr().port(), 0);
+        let stats = srv.info_stats();
+        assert_eq!(stats.active_conns, 0);
+        assert!(!stats.draining);
+        assert!(stats.queue_cap >= 64);
         srv.shutdown(); // must not hang
+    }
+
+    /// Drain with no connections returns promptly and reports success.
+    #[test]
+    fn drain_with_no_connections_is_immediate() {
+        let def = mlp_def("t", 4, &[3], 2, 1);
+        let m = SparseModel::init_random(&def, 0.5, &Distribution::Uniform, 4).unwrap();
+        let srv = Server::start(
+            m,
+            None,
+            ServeConfig {
+                drain_timeout_ms: 500,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        assert!(srv.drain());
+        assert!(t0.elapsed() < Duration::from_secs(5));
     }
 }
