@@ -31,6 +31,14 @@
 #                   RUSTFLAGS=-Ctarget-cpu=x86-64-v3 so the intrinsics
 #                   inline; the determinism suite then proves the AVX2
 #                   path bit-identical to the portable one.
+#   --obs-smoke     additionally exercise the observability subsystem
+#                   through the shipped binary: a tiny native train run
+#                   must print the live counter registry and write a
+#                   loadable Chrome trace-event JSON (--trace-out), the
+#                   same run under --no-obs must print none of it, and
+#                   the serving stats must round-trip over loopback TCP
+#                   via `repro stats --addr` and serve-bench's
+#                   server-side histogram report.
 #   --chaos-smoke   additionally run the seeded fault-injection soak:
 #                   the serve_chaos suite rebuilt with the
 #                   `fault-inject` cargo feature, which arms in-process
@@ -49,6 +57,7 @@ SIMD=()
 NO_PJRT=0
 SMOKE_BENCH=0
 CHAOS_SMOKE=0
+OBS_SMOKE=0
 for arg in "$@"; do
   case "$arg" in
     --no-pjrt)
@@ -66,8 +75,11 @@ for arg in "$@"; do
     --chaos-smoke)
       CHAOS_SMOKE=1
       ;;
+    --obs-smoke)
+      OBS_SMOKE=1
+      ;;
     *)
-      echo "usage: ./ci.sh [--no-pjrt] [--smoke-bench] [--simd-intrinsics] [--chaos-smoke]" >&2
+      echo "usage: ./ci.sh [--no-pjrt] [--smoke-bench] [--simd-intrinsics] [--chaos-smoke] [--obs-smoke]" >&2
       exit 2
       ;;
   esac
@@ -79,6 +91,27 @@ cargo build --release "${FLAGS[@]+"${FLAGS[@]}"}" "${SIMD[@]+"${SIMD[@]}"}"
 echo "== cargo test -q =="
 cargo test -q "${FLAGS[@]+"${FLAGS[@]}"}" "${SIMD[@]+"${SIMD[@]}"}"
 
+# Shared teardown + time-bounding for the smoke blocks below. The trap
+# is registered once; each block fills (and clears) its own slots, so
+# running any combination of smokes cleans up exactly what it started.
+SMOKE=""
+SERVE_PID=""
+OBS_TMP=""
+OBS_PID=""
+cleanup() {
+  [[ -n "$SERVE_PID" ]] && kill "$SERVE_PID" 2>/dev/null || true
+  [[ -n "$OBS_PID" ]] && kill "$OBS_PID" 2>/dev/null || true
+  [[ -n "$SMOKE" ]] && rm -rf "$SMOKE" || true
+  [[ -n "$OBS_TMP" ]] && rm -rf "$OBS_TMP" || true
+}
+trap cleanup EXIT
+# Time-bound every client step so a hung server fails the job instead
+# of wedging CI until the runner's global timeout.
+TIMEOUT=()
+if command -v timeout > /dev/null 2>&1; then
+  TIMEOUT=(timeout 120)
+fi
+
 # Hermetic serve smoke test (no-pjrt path: no XLA, no artifacts dir —
 # the builtin LeNet-300-100 is exported, served on an ephemeral
 # loopback port, answers one request, and exits on its own via
@@ -88,18 +121,6 @@ if [[ "$NO_PJRT" == 1 ]]; then
   echo "== serve smoke test (export → serve → one request → clean shutdown) =="
   BIN=target/release/repro
   SMOKE=$(mktemp -d)
-  SERVE_PID=""
-  cleanup() {
-    [[ -n "$SERVE_PID" ]] && kill "$SERVE_PID" 2>/dev/null || true
-    rm -rf "$SMOKE"
-  }
-  trap cleanup EXIT
-  # Time-bound every client step so a hung server fails the job instead
-  # of wedging CI until the runner's global timeout.
-  TIMEOUT=()
-  if command -v timeout > /dev/null 2>&1; then
-    TIMEOUT=(timeout 120)
-  fi
   "$BIN" export --model mlp --sparsity 0.9 --out "$SMOKE/mlp.srvd"
   : > "$SMOKE/serve.log"
   "$BIN" serve --model "$SMOKE/mlp.srvd" --port 0 --workers 2 --threads 2 \
@@ -135,6 +156,100 @@ if [[ "$NO_PJRT" == 1 ]]; then
   fi
   SERVE_PID=""
   echo "serve smoke OK"
+fi
+
+# Observability smoke: the obs subsystem end to end through the shipped
+# binary. Training must print the live counter registry and export a
+# loadable Chrome trace; --no-obs must silence all of it; the serving
+# histograms must round-trip over loopback TCP via both `repro stats`
+# and serve-bench's server-side report. Hermetic: native backend,
+# synthetic data, ephemeral ports.
+if [[ "$OBS_SMOKE" == 1 ]]; then
+  echo "== obs smoke: train counters + trace export + TCP stats =="
+  BIN=target/release/repro
+  OBS_TMP=$(mktemp -d)
+
+  # Train leg: counters and the phase readout reach stdout, and
+  # --trace-out writes valid trace-event JSON containing train spans.
+  "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" train --model mlp --backend native \
+    --steps 40 --sparsity 0.9 --threads 2 \
+    --trace-out "$OBS_TMP/trace.json" > "$OBS_TMP/train.log"
+  for needle in "obs/train.steps" "obs/kernels.spmm_bias_fwd" "obs/train.mask_updates"; do
+    grep -q "$needle" "$OBS_TMP/train.log" || {
+      echo "train output is missing $needle; log follows:" >&2
+      cat "$OBS_TMP/train.log" >&2
+      exit 1
+    }
+  done
+  if command -v python3 > /dev/null 2>&1; then
+    python3 -m json.tool "$OBS_TMP/trace.json" > /dev/null
+  else
+    grep -q '"traceEvents"' "$OBS_TMP/trace.json"
+  fi
+  grep -q '"name":"mask_update"' "$OBS_TMP/trace.json" || {
+    echo "trace export is missing mask_update spans" >&2
+    exit 1
+  }
+
+  # --no-obs: the readout and the registry dump must vanish entirely.
+  "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" train --model mlp --backend native \
+    --steps 20 --sparsity 0.9 --no-obs > "$OBS_TMP/train_off.log"
+  if grep -q "^obs" "$OBS_TMP/train_off.log"; then
+    echo "--no-obs still printed obs lines:" >&2
+    grep "^obs" "$OBS_TMP/train_off.log" >&2
+    exit 1
+  fi
+
+  # Serving leg: a 2-request budget with `repro stats` interleaved —
+  # INFO frames don't count against --max-requests, so the server stays
+  # up between the two serve-bench calls and still exits 0 on its own.
+  "$BIN" export --model mlp --sparsity 0.9 --out "$OBS_TMP/mlp.srvd"
+  : > "$OBS_TMP/serve.log"
+  "$BIN" serve --model "$OBS_TMP/mlp.srvd" --port 0 --workers 2 --threads 2 \
+    --max-requests 2 >> "$OBS_TMP/serve.log" 2>&1 &
+  OBS_PID=$!
+  ADDR=""
+  for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's/^serve: listening on \([^ ]*\) .*/\1/p' "$OBS_TMP/serve.log")
+    [[ -n "$ADDR" ]] && break
+    kill -0 "$OBS_PID" 2>/dev/null || {
+      echo "server exited before reporting its address; log follows:" >&2
+      cat "$OBS_TMP/serve.log" >&2
+      exit 1
+    }
+    sleep 0.1
+  done
+  if [[ -z "$ADDR" ]]; then
+    echo "server never reported its address; log follows:" >&2
+    cat "$OBS_TMP/serve.log" >&2
+    exit 1
+  fi
+  "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" serve-bench --addr "$ADDR" \
+    --concurrency 1 --requests 1 > "$OBS_TMP/bench.log"
+  grep -q "^server: queue_wait" "$OBS_TMP/bench.log" || {
+    echo "serve-bench did not report server-side histograms; log follows:" >&2
+    cat "$OBS_TMP/bench.log" >&2
+    exit 1
+  }
+  "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" stats --addr "$ADDR" > "$OBS_TMP/stats.log"
+  for needle in "^queue_wait:" "^e2e:" "^batch:"; do
+    grep -q "$needle" "$OBS_TMP/stats.log" || {
+      echo "repro stats output is missing $needle; log follows:" >&2
+      cat "$OBS_TMP/stats.log" >&2
+      exit 1
+    }
+  done
+  "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" serve-bench --addr "$ADDR" \
+    --concurrency 1 --requests 1 > /dev/null
+  status=0
+  wait "$OBS_PID" || status=$?
+  if [[ "$status" -ne 0 ]]; then
+    echo "server exited with status $status; log follows:" >&2
+    cat "$OBS_TMP/serve.log" >&2
+    exit 1
+  fi
+  OBS_PID=""
+  echo "obs smoke OK"
 fi
 
 # Fault-injection soak: the serve_chaos suite with the in-process

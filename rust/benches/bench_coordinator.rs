@@ -114,6 +114,7 @@ fn main() -> anyhow::Result<()> {
                 min_s: wall,
                 gflops: None,
                 git_rev: git_rev(),
+                unix_ms: rigl::util::unix_ms(),
             },
         )?;
         walls.push(wall);

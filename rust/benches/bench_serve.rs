@@ -162,8 +162,9 @@ fn main() -> anyhow::Result<()> {
                         "serve",
                         &format!(
                             "{{\"name\":\"engine/steady_state_allocs/b={b}/S={s}/t={t}/lanes={lanes}\",\"iters\":{iters},\
-                             \"mean_s\":{per_req:.9},\"min_s\":{per_req:.9},\"git_rev\":\"{}\"}}",
-                            rigl::util::git_rev()
+                             \"mean_s\":{per_req:.9},\"min_s\":{per_req:.9},\"git_rev\":\"{}\",\"unix_ms\":{}}}",
+                            rigl::util::git_rev(),
+                            rigl::util::unix_ms()
                         ),
                     )?;
                     if allocs != 0 {
@@ -231,6 +232,9 @@ fn main() -> anyhow::Result<()> {
             "tcp/batched-vs-serial/{label}: {} ({reqs} requests in {batches} batches)",
             stats.render()
         );
+        if let Some(line) = stats.render_server() {
+            println!("tcp/batched-vs-serial/{label}: {line}");
+        }
         append_bench_json(
             "serve",
             &stats.to_json(&format!("tcp/batched-vs-serial/{label}/c={concurrency}")),
@@ -292,6 +296,9 @@ fn main() -> anyhow::Result<()> {
             "tcp/overload/{label}/c={over_conc}: {} (server shed {shed_total} total)",
             stats.render()
         );
+        if let Some(line) = stats.render_server() {
+            println!("tcp/overload/{label}/c={over_conc}: {line}");
+        }
         append_bench_json("serve", &stats.to_json(&format!("tcp/overload/{label}/c={over_conc}")))?;
         server.shutdown();
     }

@@ -156,6 +156,7 @@ fn main() {
                 min_s: per_update,
                 gflops: None,
                 git_rev: git_rev(),
+                unix_ms: rigl::util::unix_ms(),
             },
         );
         if allocs != 0 {

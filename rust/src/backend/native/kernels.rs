@@ -202,6 +202,7 @@ pub fn spmm_bias_fwd(
     y: &mut [f32],
     scratch: &mut PanelScratch,
 ) {
+    crate::obs_counter!("kernels.spmm_bias_fwd").inc();
     spmm_fwd_impl(exec, x, batch, topo, &DenseW(w), bias, y, scratch);
 }
 
@@ -225,6 +226,7 @@ pub fn csr_spmm_bias_fwd(
     scratch: &mut PanelScratch,
 ) {
     debug_assert_eq!(vals.len(), topo.nnz());
+    crate::obs_counter!("kernels.csr_spmm_bias_fwd").inc();
     spmm_fwd_impl(exec, x, batch, topo, &CsrVals(vals), bias, y, scratch);
 }
 
@@ -434,6 +436,7 @@ pub fn spmm_back_dx(
     let (ind, outd) = (topo.rows, topo.cols);
     debug_assert_eq!(dy.len(), batch * outd);
     debug_assert_eq!(dx.len(), batch * ind);
+    crate::obs_counter!("kernels.spmm_back_dx").inc();
     let nrb = topo.blocks.n_row_blocks();
     let pool = exec.pool_for(batch * topo.nnz().max(ind));
     let dxp = MutPtr(dx.as_mut_ptr());
@@ -566,6 +569,7 @@ pub fn spmm_back_dw(
 ) {
     let ind = topo.rows;
     debug_assert_eq!(dw_vals.len(), topo.nnz());
+    crate::obs_counter!("kernels.spmm_back_dw").inc();
     let nrb = topo.blocks.n_row_blocks();
     let pool = exec.pool_for(batch * topo.nnz());
     let dwp = MutPtr(dw_vals.as_mut_ptr());
@@ -698,6 +702,7 @@ pub fn dense_back_dw(
     scratch: &mut PanelScratch,
 ) {
     debug_assert_eq!(dw.len(), in_dim * out_dim);
+    crate::obs_counter!("kernels.dense_back_dw").inc();
     let pool = exec.pool_for(batch * in_dim * out_dim);
     let dwp = MutPtr(dw.as_mut_ptr());
     let npanels = if use_panels(batch) { batch / LANES } else { 0 };

@@ -64,6 +64,7 @@ use self::csr::{CsrScratch, CsrTopo};
 use self::kernels::Exec;
 use self::simd::{PanelScratch, LANES};
 use crate::model::{ElemType, Kind, Manifest, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
+use crate::obs::trace;
 use crate::pool::KernelPool;
 use crate::train::{Batch, TrainState};
 
@@ -393,21 +394,29 @@ impl Session for NativeSession<'_> {
         lr: f32,
     ) -> Result<f64> {
         let xs = self.input(x)?;
-        self.forward(state, xs);
+        {
+            let _g = trace::span("forward", "native");
+            self.forward(state, xs);
+        }
         let classes = self.be.classes();
         let last = self.be.layers.len() - 1;
-        let loss = kernels::softmax_xent_grad_par(
-            self.be.exec(),
-            &self.acts[last],
-            self.batch,
-            classes,
-            y,
-            self.be.label_smoothing,
-            &mut self.dbuf[last],
-            &mut self.row_loss,
-            &mut self.panels,
-        );
-        self.backward(state, xs, None);
+        let loss;
+        {
+            let _g = trace::span("backward", "native");
+            loss = kernels::softmax_xent_grad_par(
+                self.be.exec(),
+                &self.acts[last],
+                self.batch,
+                classes,
+                y,
+                self.be.label_smoothing,
+                &mut self.dbuf[last],
+                &mut self.row_loss,
+                &mut self.panels,
+            );
+            self.backward(state, xs, None);
+        }
+        let _g = trace::span("optimizer", "native");
         for l in 0..self.be.layers.len() {
             let lay = self.be.layers[l];
             let (mu, wd) = (self.be.momentum, self.be.weight_decay);
@@ -440,7 +449,10 @@ impl Session for NativeSession<'_> {
         y: &[i32],
     ) -> Result<(ParamSet, f64)> {
         let xs = self.input(x)?;
-        self.forward(state, xs);
+        {
+            let _g = trace::span("forward", "native");
+            self.forward(state, xs);
+        }
         let classes = self.be.classes();
         let last = self.be.layers.len() - 1;
         let loss = kernels::softmax_xent_grad_par(
@@ -455,6 +467,7 @@ impl Session for NativeSession<'_> {
             &mut self.panels,
         );
         let mut grads = ParamSet::zeros(&self.be.def);
+        let _g = trace::span("backward", "native");
         self.backward(state, xs, Some(&mut grads));
         Ok((grads, loss))
     }
@@ -473,6 +486,7 @@ impl Session for NativeSession<'_> {
 
     fn masks_updated(&mut self, li: usize, dropped: &[u32], grown: &[u32]) {
         if let Some(l) = self.spec_layer.get(li).copied().flatten() {
+            let _g = trace::span_id("csr_patch", "native", li as u64);
             self.topos[l].apply_swap(dropped, grown, &mut self.csr_scratch);
             self.dw_vals[l].resize(self.topos[l].nnz(), 0.0);
         }

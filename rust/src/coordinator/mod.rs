@@ -187,14 +187,23 @@ impl ExpContext {
     /// Run a config across seeds (in parallel up to `jobs`), aggregating
     /// into a Cell. Per-seed results are bit-identical at any job count.
     pub fn run_cell(&self, label: &str, cfg: &TrainConfig) -> Result<Cell> {
+        let _g = crate::obs::trace::span("cell", "coordinator");
+        let t0 = crate::obs::enabled().then(std::time::Instant::now);
         let trainer = self.trainer(cfg)?;
         let seeds: Vec<u64> = (0..self.seeds as u64).collect();
         let results = pool::par_map(&seeds, self.jobs, |_, &seed| {
+            let _g = crate::obs::trace::span_id("seed", "coordinator", seed);
             let mut c = cfg.clone();
             c.seed = seed;
             trainer.run(&c)
         });
-        self.aggregate(label, results)
+        let cell = self.aggregate(label, results)?;
+        if let Some(t) = t0 {
+            if self.verbose {
+                eprintln!("  [{label}] cell wall {:.1}s", t.elapsed().as_secs_f64());
+            }
+        }
+        Ok(cell)
     }
 
     /// Run a whole grid of `(label, config)` cells with cells × seeds
@@ -212,6 +221,7 @@ impl ExpContext {
             .flat_map(|c| (0..seeds).map(move |s| (c, s)))
             .collect();
         let mut results = pool::par_map(&tasks, self.jobs, |_, &(ci, seed)| {
+            let _g = crate::obs::trace::span_id("cell", "coordinator", ci as u64);
             let mut c = specs[ci].1.clone();
             c.seed = seed;
             let trainer = self.trainer(&c)?; // cache hit
@@ -232,8 +242,21 @@ impl ExpContext {
         for (seed, r) in results.into_iter().enumerate() {
             let r = r?;
             if self.verbose {
+                // Phase split from the run's obs accumulators (all-zero
+                // when obs is disabled — then omitted). Goes to stderr
+                // only: Cell contents stay bit-identical across job
+                // counts, wall-clock never does.
+                let o = &r.obs;
+                let phases = if o.train_step_s + o.dense_grad_s + o.mask_update_s > 0.0 {
+                    format!(
+                        " | step {:.2}s ΔT-grad {:.2}s mask {:.2}s drop/grow {}/{}",
+                        o.train_step_s, o.dense_grad_s, o.mask_update_s, o.dropped, o.grown
+                    )
+                } else {
+                    String::new()
+                };
                 eprintln!(
-                    "  [{label} seed {seed}] metric={:.4} trainF={:.3}x testF={:.3}x S={:.3} ({:.1}s)",
+                    "  [{label} seed {seed}] metric={:.4} trainF={:.3}x testF={:.3}x S={:.3} ({:.1}s){phases}",
                     r.final_metric,
                     r.train_flops_ratio,
                     r.test_flops_ratio,

@@ -35,6 +35,7 @@ pub mod flops;
 pub mod landscape;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod pool;
 pub mod prune;
 #[cfg(feature = "pjrt")]

@@ -10,6 +10,7 @@
 //!   export --model M [...]       freeze a model into a .srvd artifact
 //!   serve --model m.srvd [...]   serve it over TCP with micro-batching
 //!   serve-bench [...]            load-generate against a serve endpoint
+//!   stats --addr host:port       query a live server's INFO STATS block
 //!
 //! Shared flags: --seeds N (default 1), --scale F (step multiplier,
 //! default 1.0), --jobs N (worker threads for cell/seed fan-out,
@@ -19,6 +20,12 @@
 //! runs, threads WITHIN one step), --backend pjrt|native (execution
 //! engine, default pjrt; native is the pure-Rust CSR engine — FC tracks
 //! only, no artifacts needed), --out DIR (CSV output, default results/).
+//!
+//! Observability flags (any subcommand): --trace-out FILE arms span
+//! tracing and writes a Chrome trace-event JSON on exit (load it at
+//! https://ui.perfetto.dev); --no-obs turns the `obs` subsystem off
+//! entirely (counters, histograms and spans all compile down to one
+//! relaxed load). Neither changes numerics — see rust/src/obs/README.md.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -42,7 +49,12 @@ fn main() {
     }
 }
 
-/// Tiny flag parser: `--key value` pairs after the subcommand.
+/// Flags that take no value — presence alone means "on". Everything
+/// else stays strict `--key value`.
+const BOOL_FLAGS: &[&str] = &["no-obs"];
+
+/// Tiny flag parser: `--key value` pairs after the subcommand, plus the
+/// valueless [`BOOL_FLAGS`].
 struct Args {
     flags: HashMap<String, String>,
 }
@@ -55,6 +67,11 @@ impl Args {
             let k = argv[i]
                 .strip_prefix("--")
                 .with_context(|| format!("expected --flag, got {:?}", argv[i]))?;
+            if BOOL_FLAGS.contains(&k) {
+                flags.insert(k.to_string(), "1".to_string());
+                i += 1;
+                continue;
+            }
             let v = argv
                 .get(i + 1)
                 .with_context(|| format!("--{k} needs a value"))?;
@@ -66,6 +83,10 @@ impl Args {
 
     fn get(&self, k: &str) -> Option<&str> {
         self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn has(&self, k: &str) -> bool {
+        self.flags.contains_key(k)
     }
 
     fn f64(&self, k: &str, default: f64) -> Result<f64> {
@@ -88,6 +109,16 @@ fn run() -> Result<()> {
         return Ok(());
     };
     let args = Args::parse(&argv[1..])?;
+    // Observability flags apply to every subcommand: --no-obs turns the
+    // whole subsystem off; --trace-out arms span recording up front and
+    // exports the Chrome trace after the subcommand finishes.
+    if args.has("no-obs") {
+        rigl::obs::set_enabled(false);
+    }
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    if trace_out.is_some() {
+        rigl::obs::trace::set_armed(true);
+    }
     match cmd.as_str() {
         "list" => {
             println!("{:<18} description", "id");
@@ -113,10 +144,15 @@ fn run() -> Result<()> {
         "export" => export_cmd(&args)?,
         "serve" => serve_cmd(&args)?,
         "serve-bench" => serve_bench_cmd(&args)?,
+        "stats" => stats_cmd(&args)?,
         other => {
             print_usage();
             bail!("unknown subcommand {other:?}");
         }
+    }
+    if let Some(path) = trace_out {
+        rigl::obs::trace::write_chrome_trace(&path)?;
+        eprintln!("trace → {} (Perfetto/chrome://tracing format)", path.display());
     }
     Ok(())
 }
@@ -245,6 +281,40 @@ fn train_cmd(args: &Args) -> Result<()> {
         r.final_sparsity,
         r.wall_seconds
     );
+    // Observability readout: phase split, the full counter/histogram
+    // registry, and one BENCH_obs.json record (append-only history like
+    // the benches'). All of it vanishes under --no-obs.
+    if rigl::obs::enabled() {
+        let o = &r.obs;
+        println!(
+            "obs: step {:.2}s | ΔT-grad {:.2}s | mask-update {:.2}s | updates {} (drop {} grow {})",
+            o.train_step_s, o.dense_grad_s, o.mask_update_s, o.updates, o.dropped, o.grown
+        );
+        print!("{}", rigl::obs::metrics::render());
+        let nnz = |v: &[u64]| v.iter().map(u64::to_string).collect::<Vec<_>>().join(",");
+        let json = format!(
+            "{{\"name\":\"train/{}/{}\",\"train_step_s\":{:.6},\"dense_grad_s\":{:.6},\
+             \"mask_update_s\":{:.6},\"updates\":{},\"dropped\":{},\"grown\":{},\
+             \"nnz_start\":[{}],\"nnz_end\":[{}],\"wall_s\":{:.6},\"git_rev\":\"{}\",\
+             \"unix_ms\":{}}}",
+            model,
+            method.label(),
+            o.train_step_s,
+            o.dense_grad_s,
+            o.mask_update_s,
+            o.updates,
+            o.dropped,
+            o.grown,
+            nnz(&o.nnz_start),
+            nnz(&o.nnz_end),
+            r.wall_seconds,
+            rigl::util::git_rev(),
+            rigl::util::unix_ms()
+        );
+        if let Err(e) = rigl::util::append_bench_json("obs", &json) {
+            eprintln!("warning: could not append BENCH_obs.json: {e}");
+        }
+    }
     // Save the full training state (params, masks, opt — the set order
     // `repro export --ckpt` and the resume paths read back).
     if let Some(out) = args.get("save-ckpt") {
@@ -399,6 +469,43 @@ fn serve_bench_cmd(args: &Args) -> Result<()> {
         (None, None) => bail!("serve-bench needs --addr host:port or --model file.srvd"),
     };
     println!("{}", stats.render());
+    // The server's own histogram view of the same run, when it was
+    // still reachable for the post-run INFO sample.
+    if let Some(line) = stats.render_server() {
+        println!("{line}");
+    }
+    Ok(())
+}
+
+/// Query a live server's INFO STATS block: admission counters plus the
+/// queue-wait / end-to-end latency histograms and the executed-batch
+/// size distribution (`repro stats --addr host:port`).
+fn stats_cmd(args: &Args) -> Result<()> {
+    let addr = args.get("addr").context("stats needs --addr host:port")?;
+    let info = rigl::serve::Client::connect(addr)?.info()?;
+    let s = info.stats;
+    println!(
+        "model: in_dim={} classes={} layers={} nnz={}",
+        info.in_dim, info.classes, info.layers, info.nnz
+    );
+    println!(
+        "admission: queue_depth={}/{} shed={} reload_failures={} active_conns={}{}",
+        s.queue_depth,
+        s.queue_cap,
+        s.shed,
+        s.reload_failures,
+        s.active_conns,
+        if s.draining { " DRAINING" } else { "" }
+    );
+    let hist = |h: &rigl::serve::protocol::HistSummary| {
+        format!("count={} p50={}µs p90={}µs p99={}µs", h.count, h.p50, h.p90, h.p99)
+    };
+    println!("queue_wait: {}", hist(&s.queue_wait_us));
+    println!("e2e:        {}", hist(&s.e2e_us));
+    println!(
+        "batch:      p50={} p90={} max={}",
+        s.batch_p50, s.batch_p90, s.batch_max
+    );
     Ok(())
 }
 
@@ -445,7 +552,7 @@ fn flops_cmd(args: &Args) -> Result<()> {
 fn print_usage() {
     eprintln!(
         "repro — RigL (ICML 2020) reproduction\n\
-         usage: repro <list|info|table|all-tables|train|flops|export|serve|serve-bench> [--flags]\n\
+         usage: repro <list|info|table|all-tables|train|flops|export|serve|serve-bench|stats> [--flags]\n\
          \n\
          repro table --id fig2-left [--seeds 3] [--scale 1.0] [--jobs 4] [--threads 1] [--out results]\n\
          \x20          (--jobs fans runs out; --threads parallelizes INSIDE a native\n\
@@ -474,7 +581,16 @@ fn print_usage() {
          \x20           --idle-timeout-ms (0 = never); shutdown finishes in-flight\n\
          \x20           work within --drain-timeout-ms — see rust/src/serve/README.md)\n\
          repro serve-bench --addr 127.0.0.1:PORT [--concurrency 4] [--requests 100] [--k 1]\n\
-         \x20          (--requests is PER CONNECTION: total load = concurrency × requests)\n\
-         repro serve-bench --model mlp.srvd      (self-host over loopback and bench)"
+         \x20          (--requests is PER CONNECTION: total load = concurrency × requests;\n\
+         \x20           also prints the server's own queue-wait/e2e histograms when reachable)\n\
+         repro serve-bench --model mlp.srvd      (self-host over loopback and bench)\n\
+         repro stats --addr 127.0.0.1:PORT       (live INFO STATS: admission counters,\n\
+         \x20          queue-wait + e2e latency percentiles, batch-size distribution)\n\
+         \n\
+         observability (any subcommand — see rust/src/obs/README.md):\n\
+         \x20 --trace-out t.json   record phase spans, export Chrome trace-event JSON\n\
+         \x20                      (view at https://ui.perfetto.dev)\n\
+         \x20 --no-obs             disable counters/histograms/spans entirely\n\
+         \x20                      (numerics are identical either way)"
     );
 }

@@ -1,0 +1,484 @@
+//! Process-global metrics: sharded counters, gauges, and fixed-bucket
+//! log2 latency histograms.
+//!
+//! Contract:
+//!
+//! * **Recording never allocates.** [`Counter::add`], [`Gauge::set`],
+//!   and [`Histogram::record`] are one relaxed atomic RMW apiece, plus
+//!   a relaxed load of the global enable flag. Counters shard across
+//!   cache-line-padded cells indexed by a thread-local id, so hot
+//!   multi-thread increments do not ping-pong a single line.
+//! * **Registration is the cold path.** [`counter`] / [`gauge`] /
+//!   [`histogram`] lock the registry and may allocate; call them once
+//!   and cache the `&'static` handle. The [`obs_counter!`] macro wraps
+//!   the idiom in a `OnceLock` so call sites stay one-liners.
+//! * **Snapshots merge.** [`HistSnapshot`] is a plain bucket array:
+//!   snapshots from different histograms (or processes) add
+//!   bucket-wise, and percentiles come from the merged counts.
+//!
+//! Histogram semantics: bucket `0` holds values `{0, 1}`; bucket `i`
+//! (`i ≥ 1`) holds `[2^i, 2^(i+1) - 1]`. [`HistSnapshot::percentile`]
+//! returns the bucket's *inclusive upper bound* (so the reported
+//! quantile never understates the true one, and overstates it by less
+//! than 2×) — an exact, unit-testable rule rather than an
+//! interpolation heuristic.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+/// Shard count for [`Counter`]. Power of two; more shards than typical
+/// kernel-pool widths so increments from distinct threads rarely
+/// collide.
+const N_SHARDS: usize = 16;
+
+/// Number of log2 buckets — covers the full `u64` range.
+pub const HIST_BUCKETS: usize = 64;
+
+/// One cache line per shard so concurrent increments from different
+/// threads do not false-share.
+#[repr(align(64))]
+struct Shard(AtomicU64);
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// This thread's counter shard, assigned on first use (plain TLS
+    /// read afterwards — no allocation, no lock).
+    static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+#[inline]
+fn shard_id() -> usize {
+    SHARD.with(|s| {
+        let mut id = s.get();
+        if id == usize::MAX {
+            id = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % N_SHARDS;
+            s.set(id);
+        }
+        id
+    })
+}
+
+/// Monotonic event counter, sharded to keep concurrent increments off
+/// a shared cache line.
+pub struct Counter {
+    shards: [Shard; N_SHARDS],
+}
+
+impl Counter {
+    /// A zeroed counter. `const` so counters can live in statics.
+    pub const fn new() -> Self {
+        const ZERO: Shard = Shard(AtomicU64::new(0));
+        Counter { shards: [ZERO; N_SHARDS] }
+    }
+
+    /// Add `n` events. One relaxed `fetch_add`; allocation-free; a
+    /// no-op when observability is disabled.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if !super::enabled() {
+            return;
+        }
+        self.shards[shard_id()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add one event.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Sum across shards. Relaxed loads — exact once writers quiesce.
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depths, config knobs).
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    /// A zeroed gauge.
+    pub const fn new() -> Self {
+        Gauge { value: AtomicU64::new(0) }
+    }
+
+    /// Set the value. One relaxed store; a no-op when disabled.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        if !super::enabled() {
+            return;
+        }
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+/// Fixed-bucket log2 histogram: 64 buckets cover all of `u64`, so the
+/// record path is one relaxed `fetch_add` with no bounds decisions and
+/// no allocation, ever.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+/// Bucket index for a recorded value: `0` for `{0, 1}`, else
+/// `floor(log2(v))`.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < 2 {
+        0
+    } else {
+        63 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `i` — the representative value
+/// percentile extraction reports.
+fn bucket_ceil(i: usize) -> u64 {
+    if i == 0 {
+        1
+    } else if i >= HIST_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << (i + 1)) - 1
+    }
+}
+
+impl Histogram {
+    /// A zeroed histogram. `const` so histograms embed in shared stats
+    /// structs without registry involvement.
+    pub const fn new() -> Self {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram { buckets: [ZERO; HIST_BUCKETS] }
+    }
+
+    /// Record one observation. One relaxed `fetch_add`;
+    /// allocation-free; a no-op when observability is disabled.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if !super::enabled() {
+            return;
+        }
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Copy the current bucket counts out.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = [0u64; HIST_BUCKETS];
+        for (c, b) in counts.iter_mut().zip(self.buckets.iter()) {
+            *c = b.load(Ordering::Relaxed);
+        }
+        HistSnapshot { counts }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// A point-in-time copy of a histogram's buckets. Plain data:
+/// mergeable, serializable, and the basis for percentile extraction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket observation counts (log2 buckets, see module docs).
+    pub counts: [u64; HIST_BUCKETS],
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { counts: [0; HIST_BUCKETS] }
+    }
+}
+
+impl HistSnapshot {
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Add `other`'s buckets into `self` (shard / process merge).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a = a.saturating_add(*b);
+        }
+    }
+
+    /// The value at quantile `q ∈ [0, 1]`: the inclusive upper bound of
+    /// the bucket holding the observation of rank `ceil(q·n)` (clamped
+    /// to `[1, n]`). Returns 0 for an empty snapshot.
+    pub fn percentile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_ceil(i);
+            }
+        }
+        bucket_ceil(HIST_BUCKETS - 1)
+    }
+}
+
+/// What a registered metric currently reads — for rendering and the
+/// BENCH_obs export.
+pub enum Value {
+    /// Summed counter value.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(u64),
+    /// Histogram bucket snapshot.
+    Hist(HistSnapshot),
+}
+
+enum Slot {
+    Counter(&'static Counter),
+    Gauge(&'static Gauge),
+    Hist(&'static Histogram),
+}
+
+/// Name → handle registry. Lock + linear scan: registration is the
+/// cold path by contract (call sites cache the returned handle).
+static REGISTRY: Mutex<Vec<(&'static str, Slot)>> = Mutex::new(Vec::new());
+
+fn registry() -> std::sync::MutexGuard<'static, Vec<(&'static str, Slot)>> {
+    REGISTRY.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The counter registered under `name`, creating it on first call.
+/// Locks and may allocate — cache the handle (see [`obs_counter!`]).
+///
+/// Panics if `name` is already registered as a different metric kind.
+pub fn counter(name: &'static str) -> &'static Counter {
+    let mut reg = registry();
+    for (n, slot) in reg.iter() {
+        if *n == name {
+            match slot {
+                Slot::Counter(c) => return c,
+                _ => panic!("obs metric {name:?} already registered with a different kind"),
+            }
+        }
+    }
+    let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+    reg.push((name, Slot::Counter(c)));
+    c
+}
+
+/// The gauge registered under `name`, creating it on first call.
+pub fn gauge(name: &'static str) -> &'static Gauge {
+    let mut reg = registry();
+    for (n, slot) in reg.iter() {
+        if *n == name {
+            match slot {
+                Slot::Gauge(g) => return g,
+                _ => panic!("obs metric {name:?} already registered with a different kind"),
+            }
+        }
+    }
+    let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+    reg.push((name, Slot::Gauge(g)));
+    g
+}
+
+/// The histogram registered under `name`, creating it on first call.
+pub fn histogram(name: &'static str) -> &'static Histogram {
+    let mut reg = registry();
+    for (n, slot) in reg.iter() {
+        if *n == name {
+            match slot {
+                Slot::Hist(h) => return h,
+                _ => panic!("obs metric {name:?} already registered with a different kind"),
+            }
+        }
+    }
+    let h: &'static Histogram = Box::leak(Box::new(Histogram::new()));
+    reg.push((name, Slot::Hist(h)));
+    h
+}
+
+/// Read every registered metric, sorted by name.
+pub fn snapshot_all() -> Vec<(&'static str, Value)> {
+    let reg = registry();
+    let mut out: Vec<(&'static str, Value)> = reg
+        .iter()
+        .map(|(n, slot)| {
+            let v = match slot {
+                Slot::Counter(c) => Value::Counter(c.get()),
+                Slot::Gauge(g) => Value::Gauge(g.get()),
+                Slot::Hist(h) => Value::Hist(h.snapshot()),
+            };
+            (*n, v)
+        })
+        .collect();
+    out.sort_by_key(|(n, _)| *n);
+    out
+}
+
+/// Human-readable one-line-per-metric dump (`obs/<name> ...`), used by
+/// the CLI's end-of-run report and grepped by the CI obs smoke.
+pub fn render() -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for (name, value) in snapshot_all() {
+        match value {
+            Value::Counter(v) => {
+                let _ = writeln!(out, "obs/{name} {v}");
+            }
+            Value::Gauge(v) => {
+                let _ = writeln!(out, "obs/{name} {v}");
+            }
+            Value::Hist(s) => {
+                let _ = writeln!(
+                    out,
+                    "obs/{name} count={} p50={} p90={} p99={}",
+                    s.count(),
+                    s.percentile(0.50),
+                    s.percentile(0.90),
+                    s.percentile(0.99)
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Register-once counter handle: expands to a `&'static Counter`
+/// cached in a local `OnceLock`, so only the first execution pays the
+/// registry lock and every later hit is a TLS-free static read.
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<&'static $crate::obs::metrics::Counter> =
+            std::sync::OnceLock::new();
+        *HANDLE.get_or_init(|| $crate::obs::metrics::counter($name))
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: nothing in the library's unit tests may toggle the global
+    // enable flag — a disable window would race with sibling tests
+    // recording in parallel. The flag's semantics are covered by
+    // `tests/obs_determinism.rs`, which serializes on a process-wide
+    // lock.
+
+    #[test]
+    fn bucket_mapping_is_floor_log2() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        assert_eq!(bucket_ceil(0), 1);
+        assert_eq!(bucket_ceil(1), 3);
+        assert_eq!(bucket_ceil(10), 2047);
+        assert_eq!(bucket_ceil(63), u64::MAX);
+    }
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let c = Counter::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn percentile_matches_exact_oracle() {
+        // Oracle: sort the raw values, take rank ceil(q·n), map through
+        // the bucket upper bound — the documented exact rule.
+        let values: Vec<u64> = (1..=100).map(|i| i * 37 % 1500).collect();
+        let h = Histogram::new();
+        for &v in &values {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        let mut sorted = values.clone();
+        sorted.sort_unstable();
+        for &q in &[0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let expect = bucket_ceil(bucket_of(sorted[rank - 1]));
+            assert_eq!(snap.percentile(q), expect, "q={q}");
+        }
+        assert_eq!(snap.count(), 100);
+    }
+
+    #[test]
+    fn merge_adds_bucketwise() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in [1u64, 5, 5, 100] {
+            a.record(v);
+        }
+        for v in [2u64, 5, 1000] {
+            b.record(v);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count(), 7);
+        let all = Histogram::new();
+        for v in [1u64, 5, 5, 100, 2, 5, 1000] {
+            all.record(v);
+        }
+        assert_eq!(m, all.snapshot());
+    }
+
+    #[test]
+    fn empty_snapshot_percentile_is_zero() {
+        assert_eq!(HistSnapshot::default().percentile(0.5), 0);
+    }
+
+    #[test]
+    fn registry_returns_stable_handles() {
+        let a = counter("test.metrics.registry_handle");
+        let b = counter("test.metrics.registry_handle");
+        assert!(std::ptr::eq(a, b));
+        a.add(2);
+        assert_eq!(b.get(), 2);
+        let g = gauge("test.metrics.registry_gauge");
+        g.set(7);
+        assert_eq!(gauge("test.metrics.registry_gauge").get(), 7);
+        let h = histogram("test.metrics.registry_hist");
+        h.record(3);
+        assert_eq!(histogram("test.metrics.registry_hist").snapshot().count(), 1);
+        let dump = render();
+        assert!(dump.contains("obs/test.metrics.registry_handle"));
+        assert!(dump.contains("obs/test.metrics.registry_hist count=1"));
+    }
+}

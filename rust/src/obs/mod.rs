@@ -1,0 +1,48 @@
+//! Zero-overhead observability: hot-path counters, latency histograms,
+//! and span tracing shared by training and serving.
+//!
+//! The subsystem is std-only and split in two:
+//!
+//! * [`metrics`] — a process-global registry of sharded atomic
+//!   counters, gauges, and fixed-bucket log2 histograms. Recording is
+//!   allocation-free (one relaxed atomic RMW); snapshots merge across
+//!   shards/processes and yield p50/p90/p99.
+//! * [`trace`] — span-scoped wall-clock timing into bounded per-thread
+//!   ring buffers, exported as Chrome trace-event JSON (open in
+//!   Perfetto / `chrome://tracing`). Disarmed spans cost one relaxed
+//!   load and never call `Instant::now`.
+//!
+//! Hard contract, enforced by `tests/obs_determinism.rs`:
+//!
+//! * observability never changes numerics — no RNG draws, no
+//!   reordering, results are bit-identical with obs on or off;
+//! * steady-state recording performs zero heap allocations;
+//! * with the global switch off (`--no-obs`) every record path reduces
+//!   to a relaxed load and a branch.
+//!
+//! See `rust/src/obs/README.md` for the metric naming scheme and how
+//! to view traces.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{counter, gauge, histogram, Counter, Gauge, HistSnapshot, Histogram};
+pub use trace::{span, span_id, write_chrome_trace, SpanGuard};
+
+/// Global enable switch (default ON). `--no-obs` clears it; every
+/// record path checks it with a single relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable all metric recording; returns the previous setting.
+/// Purely an instrumentation knob — numerics are identical either way.
+pub fn set_enabled(on: bool) -> bool {
+    ENABLED.swap(on, Ordering::Relaxed)
+}
+
+/// Whether metric recording is currently enabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}

@@ -322,6 +322,11 @@ impl KernelPool {
             f(0);
             return;
         }
+        // Round accounting: one sharded-atomic increment plus (when a
+        // trace is armed) one span — neither allocates, preserving the
+        // zero-alloc round contract above.
+        crate::obs_counter!("pool.fork_join.rounds").inc();
+        let _span = crate::obs::trace::span("fork_join", "pool");
         fn call_impl<F: Fn(usize) + Sync>(data: *const (), lane: usize) {
             // SAFETY: `data` was created from `&F` by the publishing
             // `fork_join`, which is still blocked in this round.

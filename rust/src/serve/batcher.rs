@@ -33,6 +33,8 @@ use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::obs::metrics::{HistSnapshot, Histogram};
+use crate::obs::trace;
 use crate::pool::{KernelPool, WorkerPool};
 
 use super::engine::{top_k, InferEngine, TopKScratch};
@@ -83,6 +85,9 @@ struct Job {
     k: usize,
     /// Drop (with `Expired`) rather than compute past this instant.
     deadline: Option<Instant>,
+    /// When the request entered the queue — the start of its
+    /// queue-wait histogram sample.
+    enqueued: Instant,
     resp: SyncSender<InferResult>,
 }
 
@@ -128,6 +133,17 @@ struct Stats {
     expired: AtomicU64,
     /// Requests enqueued but not yet picked up by a worker.
     depth: AtomicUsize,
+    /// Enqueue → batch-execution pickup, µs. Owned per batcher (not
+    /// the global registry) so concurrent servers/tests don't mix.
+    queue_wait_us: Histogram,
+    /// End-to-end latency as the serving layer observed it, µs
+    /// (recorded by the connection handler around submit → reply).
+    e2e_us: Histogram,
+    /// Executed (post-validation) batch sizes.
+    batch_size: Histogram,
+    /// Largest executed batch — exact, since log2 buckets are coarse
+    /// at batch granularity.
+    batch_max: AtomicU64,
 }
 
 /// The queue + worker pool. Dropping the batcher closes the queue and
@@ -175,7 +191,7 @@ impl Batcher {
     /// has shut down the reply is a [`RejectKind::Shutdown`] error.
     pub fn submit(&self, input: Vec<f32>, k: usize) -> Receiver<InferResult> {
         let (resp, rx) = std::sync::mpsc::sync_channel(1);
-        let job = Job { input, k, deadline: None, resp };
+        let job = Job { input, k, deadline: None, enqueued: Instant::now(), resp };
         if let Some(tx) = &self.tx {
             match tx.send(job) {
                 Ok(()) => {
@@ -211,7 +227,7 @@ impl Batcher {
             )));
             return rx;
         }
-        let job = Job { input, k, deadline, resp };
+        let job = Job { input, k, deadline, enqueued: Instant::now(), resp };
         if let Some(tx) = &self.tx {
             match tx.try_send(job) {
                 Ok(()) => {
@@ -271,6 +287,33 @@ impl Batcher {
     pub(crate) fn count_external_shed(&self) {
         self.stats.shed.fetch_add(1, Ordering::Relaxed);
     }
+
+    /// Record one end-to-end request latency (µs), observed by the
+    /// connection handler around submit → reply. Lives here so every
+    /// latency histogram the INFO frame reports shares one home.
+    pub(crate) fn record_e2e_us(&self, us: u64) {
+        self.stats.e2e_us.record(us);
+    }
+
+    /// Queue-wait (enqueue → batch pickup) histogram, µs.
+    pub fn queue_wait_snapshot(&self) -> HistSnapshot {
+        self.stats.queue_wait_us.snapshot()
+    }
+
+    /// End-to-end request latency histogram, µs.
+    pub fn e2e_snapshot(&self) -> HistSnapshot {
+        self.stats.e2e_us.snapshot()
+    }
+
+    /// Executed batch-size histogram.
+    pub fn batch_size_snapshot(&self) -> HistSnapshot {
+        self.stats.batch_size.snapshot()
+    }
+
+    /// Largest batch executed so far (exact).
+    pub fn batch_max(&self) -> u64 {
+        self.stats.batch_max.load(Ordering::Relaxed)
+    }
 }
 
 impl Drop for Batcher {
@@ -302,6 +345,7 @@ fn worker_loop(
         // concurrent requests into ONE batch instead of K singletons.
         pending.clear();
         {
+            let _fill = trace::span("batch.fill", "serve");
             let rx = rx.lock().unwrap();
             match rx.recv() {
                 Ok(job) => {
@@ -357,6 +401,7 @@ fn run_batch(
     accepted.clear();
     xbuf.clear();
     for job in pending.drain(..) {
+        stats.queue_wait_us.record(now.duration_since(job.enqueued).as_micros() as u64);
         if job.deadline.is_some_and(|d| d < now) {
             stats.expired.fetch_add(1, Ordering::Relaxed);
             let _ = job.resp.try_send(Err(Reject::new(
@@ -379,6 +424,9 @@ fn run_batch(
     if batch == 0 {
         return false;
     }
+    stats.batch_size.record(batch as u64);
+    stats.batch_max.fetch_max(batch as u64, Ordering::Relaxed);
+    let _flush = trace::span_id("batch.flush", "serve", batch as u64);
     let classes = model.classes();
     let logits = engine.forward(&model, xbuf, batch);
     for (row, job) in accepted.drain(..).enumerate() {
@@ -436,6 +484,11 @@ mod tests {
         assert!((1..=20).contains(&batches));
         assert_eq!(batcher.depth(), 0);
         assert_eq!(batcher.shed(), 0);
+        // Every drained job left a queue-wait sample; every executed
+        // batch left a size sample; the max is exact.
+        assert_eq!(batcher.queue_wait_snapshot().count(), 20);
+        assert_eq!(batcher.batch_size_snapshot().count(), batches);
+        assert!((1..=4).contains(&batcher.batch_max()));
     }
 
     #[test]

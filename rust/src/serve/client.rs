@@ -267,6 +267,12 @@ pub struct LoadStats {
     pub mean_us: f64,
     pub p50_us: f64,
     pub p99_us: f64,
+    /// The server's own INFO STATS sample, fetched (best effort) right
+    /// after the run: its queue-wait vs end-to-end histograms separate
+    /// queueing time from service time in a way client-side totals
+    /// cannot. `None` when the server was gone by then (e.g. a
+    /// `--max-requests` smoke target) or predates the OBS block.
+    pub server: Option<proto::InfoStats>,
 }
 
 impl LoadStats {
@@ -274,9 +280,30 @@ impl LoadStats {
     /// `util::BenchRecord` but with throughput/percentile fields).
     pub fn to_json(&self, name: &str) -> String {
         let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        // Server-side histogram percentiles ride along when the
+        // post-run INFO sample was available, so BENCH_serve.json rows
+        // carry the server's own latency split, not just the client's.
+        let srv = self
+            .server
+            .map(|s| {
+                format!(
+                    ",\"srv_qw_p50_us\":{},\"srv_qw_p99_us\":{},\"srv_e2e_count\":{},\
+                     \"srv_e2e_p50_us\":{},\"srv_e2e_p99_us\":{},\"srv_batch_p50\":{},\
+                     \"srv_batch_max\":{}",
+                    s.queue_wait_us.p50,
+                    s.queue_wait_us.p99,
+                    s.e2e_us.count,
+                    s.e2e_us.p50,
+                    s.e2e_us.p99,
+                    s.batch_p50,
+                    s.batch_max
+                )
+            })
+            .unwrap_or_default();
         format!(
             "{{\"name\":\"{}\",\"requests\":{},\"busy\":{},\"wall_s\":{:.6},\"rps\":{:.3},\
-             \"mean_us\":{:.3},\"p50_us\":{:.3},\"p99_us\":{:.3},\"git_rev\":\"{}\"}}",
+             \"mean_us\":{:.3},\"p50_us\":{:.3},\"p99_us\":{:.3}{},\"git_rev\":\"{}\",\
+             \"unix_ms\":{}}}",
             esc(name),
             self.requests,
             self.busy,
@@ -285,7 +312,9 @@ impl LoadStats {
             self.mean_us,
             self.p50_us,
             self.p99_us,
-            esc(&crate::util::git_rev())
+            srv,
+            esc(&crate::util::git_rev()),
+            crate::util::unix_ms()
         )
     }
 
@@ -294,6 +323,25 @@ impl LoadStats {
             "{} requests ({} shed) in {:.3}s → {:.1} req/s | latency mean {:.1}µs p50 {:.1}µs p99 {:.1}µs",
             self.requests, self.busy, self.wall_s, self.rps, self.mean_us, self.p50_us, self.p99_us
         )
+    }
+
+    /// The server-side view of the same run, when the post-run INFO
+    /// sample landed: queue wait vs end-to-end, from the server's own
+    /// histograms (µs bucket upper bounds).
+    pub fn render_server(&self) -> Option<String> {
+        self.server.map(|s| {
+            format!(
+                "server: queue_wait p50 {}µs p99 {}µs | e2e p50 {}µs p99 {}µs ({} obs) | \
+                 batch p50 {} max {}",
+                s.queue_wait_us.p50,
+                s.queue_wait_us.p99,
+                s.e2e_us.p50,
+                s.e2e_us.p99,
+                s.e2e_us.count,
+                s.batch_p50,
+                s.batch_max
+            )
+        })
     }
 }
 
@@ -373,6 +421,13 @@ pub fn run_load_opts(
     if lat.is_empty() && busy == 0 {
         bail!("load run completed zero requests");
     }
+    // Best-effort post-run INFO sample: the server's own histograms.
+    // A smoke target that already hit `--max-requests` refuses the
+    // connection — that degrades to `server: None`, never an error.
+    let server = Client::connect(addr)
+        .ok()
+        .and_then(|mut c| c.info().ok())
+        .map(|i| i.stats);
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |q: f64| {
         if lat.is_empty() {
@@ -393,6 +448,7 @@ pub fn run_load_opts(
         },
         p50_us: pct(0.50),
         p99_us: pct(0.99),
+        server,
     })
 }
 
@@ -410,6 +466,7 @@ mod tests {
             mean_us: 100.0,
             p50_us: 90.0,
             p99_us: 400.0,
+            server: None,
         };
         let j = s.to_json("tcp/b=1/S=0.9");
         assert!(j.starts_with('{') && j.ends_with('}'));
@@ -421,10 +478,32 @@ mod tests {
             "\"p50_us\"",
             "\"p99_us\"",
             "\"git_rev\"",
+            "\"unix_ms\"",
         ] {
             assert!(j.contains(key), "{j}");
         }
+        assert!(!j.contains("srv_"), "no server keys without a sample: {j}");
+        assert!(s.render_server().is_none());
         assert!(!s.render().is_empty());
+
+        // With a server sample, the srv_* keys and the render line
+        // appear.
+        let stats = proto::InfoStats {
+            e2e_us: proto::HistSummary { count: 10, p50: 127, p90: 255, p99: 511 },
+            queue_wait_us: proto::HistSummary { count: 10, p50: 15, p90: 31, p99: 63 },
+            batch_p50: 3,
+            batch_p90: 7,
+            batch_max: 5,
+            ..Default::default()
+        };
+        let with = LoadStats { server: Some(stats), ..s };
+        let j = with.to_json("tcp/b=1/S=0.9");
+        for key in ["\"srv_qw_p50_us\":15", "\"srv_e2e_p99_us\":511", "\"srv_batch_max\":5"] {
+            assert!(j.contains(key), "{j}");
+        }
+        let line = with.render_server().unwrap();
+        assert!(line.contains("queue_wait p50 15µs"), "{line}");
+        assert!(line.contains("e2e p50 127µs"), "{line}");
     }
 
     /// Typed errors downcast the way the retry loop relies on.

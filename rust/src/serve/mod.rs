@@ -42,7 +42,12 @@
 //!   deadlines (slowloris peers are disconnected, not leaked), graceful
 //!   drain, and hot model reload via an atomic `Arc<SparseModel>` swap
 //!   when the artifact file changes (`repro serve`; failures keep the
-//!   old model and are counted into INFO). [`client`] is the matching
+//!   old model and are counted into INFO). The INFO STATS block also
+//!   carries the batcher's own queue-wait and end-to-end latency
+//!   histograms plus the executed-batch-size distribution (see
+//!   `obs::metrics`) — `repro stats --addr` prints them, and
+//!   `serve-bench` folds them into `BENCH_serve.json` next to the
+//!   client-side percentiles. [`client`] is the matching
 //!   client + load generator (`repro serve-bench`, `bench_serve` →
 //!   `BENCH_serve.json`) with typed BUSY/transport errors and seeded,
 //!   jittered retry for idempotent INFER.
@@ -69,5 +74,5 @@ pub use client::{
     run_load, run_load_opts, BusyError, Client, LoadOpts, LoadStats, RetryPolicy, TransportError,
 };
 pub use engine::{top_k, InferEngine, TopKScratch};
-pub use protocol::InfoStats;
+pub use protocol::{HistSummary, InfoStats};
 pub use server::{ModelHandle, ServeConfig, Server};

@@ -27,6 +27,9 @@
 //! OK+info: u8 0 | u32 in_dim | u32 classes | u32 layers | u64 nnz
 //!          | u32 queue_depth | u32 queue_cap | u64 shed
 //!          | u64 reload_failures | u32 active_conns | u8 draining
+//!          | u64 qw_count | u32 qw_p50 | u32 qw_p90 | u32 qw_p99
+//!          | u64 e2e_count | u32 e2e_p50 | u32 e2e_p90 | u32 e2e_p99
+//!          | u32 batch_p50 | u32 batch_p90 | u32 batch_max
 //! ERROR:   u8 1 | u32 len | len utf-8 message
 //! BUSY:    u8 2 | u32 len | len utf-8 message
 //! ```
@@ -35,9 +38,14 @@
 //! could not complete within bounded latency (queue high-water or the
 //! connection gate), and the client may retry with backoff. ERROR means
 //! the request itself was unacceptable — retrying the same bytes cannot
-//! succeed. The INFO payload's trailing STATS block is what admission
-//! control exposes to operators; decoders also accept the 20-byte
-//! pre-STATS payload so a new client can interrogate an old server.
+//! succeed. The INFO payload grows by appending: the 20-byte model
+//! core came first, the 29-byte STATS block second, and the 52-byte
+//! OBS block (queue-wait / end-to-end latency histogram summaries in
+//! µs, plus the executed-batch-size distribution) third. The decoder
+//! therefore accepts any prefix-complete payload — 20, 49, or 101
+//! bytes, or longer from a future server (unknown tail ignored) — so
+//! old and new clients/servers interoperate in both directions:
+//! missing blocks simply read as zeros.
 //!
 //! A protocol error (bad opcode, wrong input length) is answered with
 //! an ERROR frame and the connection stays usable — clients shouldn't
@@ -76,6 +84,22 @@ pub enum Request {
     Info,
 }
 
+/// A latency histogram condensed to what fits on the wire: how many
+/// observations, and the p50/p90/p99 bucket upper bounds (µs for the
+/// serve histograms). Zeros mean "no data" — an old server, or no
+/// traffic yet.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistSummary {
+    /// Observations recorded.
+    pub count: u64,
+    /// Median (log2-bucket upper bound, see `obs::metrics`).
+    pub p50: u32,
+    /// 90th percentile.
+    pub p90: u32,
+    /// 99th percentile.
+    pub p99: u32,
+}
+
 /// The admission/overload counters riding in an INFO reply.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct InfoStats {
@@ -91,6 +115,17 @@ pub struct InfoStats {
     pub active_conns: u32,
     /// True once drain has begun: finishing in-flight, accepting no one.
     pub draining: bool,
+    /// Time requests spent queued in the batcher before pickup (µs).
+    pub queue_wait_us: HistSummary,
+    /// End-to-end request latency as the server observed it (µs):
+    /// enqueue through reply-ready, i.e. queue wait + service time.
+    pub e2e_us: HistSummary,
+    /// Median executed batch size (log2-bucket upper bound).
+    pub batch_p50: u32,
+    /// 90th-percentile executed batch size (bucket upper bound).
+    pub batch_p90: u32,
+    /// Largest batch actually executed (exact, not bucketed).
+    pub batch_max: u32,
 }
 
 /// A decoded server response.
@@ -248,6 +283,15 @@ pub fn encode_info_response(
     buf.extend_from_slice(&stats.reload_failures.to_le_bytes());
     buf.extend_from_slice(&stats.active_conns.to_le_bytes());
     buf.push(stats.draining as u8);
+    for h in [&stats.queue_wait_us, &stats.e2e_us] {
+        buf.extend_from_slice(&h.count.to_le_bytes());
+        buf.extend_from_slice(&h.p50.to_le_bytes());
+        buf.extend_from_slice(&h.p90.to_le_bytes());
+        buf.extend_from_slice(&h.p99.to_le_bytes());
+    }
+    buf.extend_from_slice(&stats.batch_p50.to_le_bytes());
+    buf.extend_from_slice(&stats.batch_p90.to_le_bytes());
+    buf.extend_from_slice(&stats.batch_max.to_le_bytes());
 }
 
 /// Encode an ERROR response body into `buf` (cleared first).
@@ -297,42 +341,58 @@ pub fn decode_topk_response(body: &[u8]) -> Result<Response> {
     }
 }
 
-/// Decode an info response body. Accepts both the 20-byte pre-STATS
-/// payload (stats report as zeros) and the current 49-byte form.
+/// Little-endian field reads at a byte offset — the staged info
+/// decoder below indexes blocks, not hand-unrolled byte lists.
+fn rd_u32(b: &[u8], o: usize) -> u32 {
+    u32::from_le_bytes([b[o], b[o + 1], b[o + 2], b[o + 3]])
+}
+
+fn rd_u64(b: &[u8], o: usize) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[o..o + 8]);
+    u64::from_le_bytes(x)
+}
+
+/// Decode an info response body. The payload is prefix-stable and
+/// grows by appending, so any complete prefix decodes: 20 bytes
+/// (pre-STATS), 49 (STATS), 101 (STATS + OBS histograms), or longer
+/// from a future server — blocks beyond what the peer sent read as
+/// zeros, unknown tail bytes are ignored.
 pub fn decode_info_response(body: &[u8]) -> Result<Response> {
     match split_status(body)? {
         Split::Ok(rest) => {
-            ensure!(
-                rest.len() == 20 || rest.len() == 49,
-                "info response of {} bytes",
-                rest.len()
-            );
-            let stats = if rest.len() == 49 {
-                InfoStats {
-                    queue_depth: u32::from_le_bytes([rest[20], rest[21], rest[22], rest[23]]),
-                    queue_cap: u32::from_le_bytes([rest[24], rest[25], rest[26], rest[27]]),
-                    shed: u64::from_le_bytes([
-                        rest[28], rest[29], rest[30], rest[31], rest[32], rest[33], rest[34],
-                        rest[35],
-                    ]),
-                    reload_failures: u64::from_le_bytes([
-                        rest[36], rest[37], rest[38], rest[39], rest[40], rest[41], rest[42],
-                        rest[43],
-                    ]),
-                    active_conns: u32::from_le_bytes([rest[44], rest[45], rest[46], rest[47]]),
-                    draining: rest[48] != 0,
-                }
-            } else {
-                InfoStats::default()
-            };
+            ensure!(rest.len() >= 20, "info response of {} bytes", rest.len());
+            let mut stats = InfoStats::default();
+            if rest.len() >= 49 {
+                stats.queue_depth = rd_u32(rest, 20);
+                stats.queue_cap = rd_u32(rest, 24);
+                stats.shed = rd_u64(rest, 28);
+                stats.reload_failures = rd_u64(rest, 36);
+                stats.active_conns = rd_u32(rest, 44);
+                stats.draining = rest[48] != 0;
+            }
+            if rest.len() >= 101 {
+                stats.queue_wait_us = HistSummary {
+                    count: rd_u64(rest, 49),
+                    p50: rd_u32(rest, 57),
+                    p90: rd_u32(rest, 61),
+                    p99: rd_u32(rest, 65),
+                };
+                stats.e2e_us = HistSummary {
+                    count: rd_u64(rest, 69),
+                    p50: rd_u32(rest, 77),
+                    p90: rd_u32(rest, 81),
+                    p99: rd_u32(rest, 85),
+                };
+                stats.batch_p50 = rd_u32(rest, 89);
+                stats.batch_p90 = rd_u32(rest, 93);
+                stats.batch_max = rd_u32(rest, 97);
+            }
             Ok(Response::Info {
-                in_dim: u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize,
-                classes: u32::from_le_bytes([rest[4], rest[5], rest[6], rest[7]]) as usize,
-                layers: u32::from_le_bytes([rest[8], rest[9], rest[10], rest[11]]) as usize,
-                nnz: u64::from_le_bytes([
-                    rest[12], rest[13], rest[14], rest[15], rest[16], rest[17], rest[18],
-                    rest[19],
-                ]),
+                in_dim: rd_u32(rest, 0) as usize,
+                classes: rd_u32(rest, 4) as usize,
+                layers: rd_u32(rest, 8) as usize,
+                nnz: rd_u64(rest, 12),
                 stats,
             })
         }
@@ -401,8 +461,14 @@ mod tests {
             reload_failures: 2,
             active_conns: 5,
             draining: true,
+            queue_wait_us: HistSummary { count: 100, p50: 63, p90: 255, p99: 1023 },
+            e2e_us: HistSummary { count: 100, p50: 127, p90: 511, p99: 2047 },
+            batch_p50: 7,
+            batch_p90: 15,
+            batch_max: 12,
         };
         encode_info_response(784, 10, 3, 266_200, &stats, &mut buf);
+        assert_eq!(buf.len(), 1 + 101, "info payload is status + 101 bytes");
         assert_eq!(
             decode_info_response(&buf).unwrap(),
             Response::Info {
@@ -450,6 +516,62 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    /// Prefix stability in both directions: an "old client" sees only
+    /// the first 49 (or 20) payload bytes of a new server's reply —
+    /// simulated by truncation — and must read the same core/STATS
+    /// fields; a new client given extra unknown tail bytes must ignore
+    /// them rather than reject the frame.
+    #[test]
+    fn info_payload_prefix_stable_across_versions() {
+        let stats = InfoStats {
+            queue_depth: 9,
+            queue_cap: 128,
+            shed: 4,
+            reload_failures: 1,
+            active_conns: 2,
+            draining: false,
+            queue_wait_us: HistSummary { count: 50, p50: 31, p90: 63, p99: 127 },
+            e2e_us: HistSummary { count: 50, p50: 255, p90: 511, p99: 1023 },
+            batch_p50: 3,
+            batch_p90: 7,
+            batch_max: 6,
+        };
+        let mut buf = Vec::new();
+        encode_info_response(784, 10, 3, 55_555, &stats, &mut buf);
+
+        // Old STATS-era client: payload truncated at 49 bytes.
+        let old_stats_view = &buf[..1 + 49];
+        match decode_info_response(old_stats_view).unwrap() {
+            Response::Info { in_dim, nnz, stats: got, .. } => {
+                assert_eq!(in_dim, 784);
+                assert_eq!(nnz, 55_555);
+                assert_eq!(got.queue_depth, 9);
+                assert_eq!(got.shed, 4);
+                // The blocks the old frame lacks read as zeros.
+                assert_eq!(got.queue_wait_us, HistSummary::default());
+                assert_eq!(got.batch_max, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // Pre-STATS client: payload truncated at the 20-byte core.
+        match decode_info_response(&buf[..1 + 20]).unwrap() {
+            Response::Info { in_dim, stats: got, .. } => {
+                assert_eq!(in_dim, 784);
+                assert_eq!(got, InfoStats::default());
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // Future server: unknown appended bytes are ignored.
+        let mut future = buf.clone();
+        future.extend_from_slice(&[0xAB; 16]);
+        assert_eq!(
+            decode_info_response(&future).unwrap(),
+            decode_info_response(&buf).unwrap()
+        );
     }
 
     #[test]

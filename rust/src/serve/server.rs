@@ -369,7 +369,20 @@ impl Drop for Server {
     }
 }
 
+/// Condense a histogram snapshot to the wire summary (µs values
+/// saturate into u32 — 71 minutes, far past any serve latency).
+fn hist_summary(s: &crate::obs::metrics::HistSnapshot) -> proto::HistSummary {
+    let pct = |q: f64| s.percentile(q).min(u32::MAX as u64) as u32;
+    proto::HistSummary {
+        count: s.count(),
+        p50: pct(0.50),
+        p90: pct(0.90),
+        p99: pct(0.99),
+    }
+}
+
 fn sample_stats(batcher: &Batcher, stats: &ServeStats) -> proto::InfoStats {
+    let batch = batcher.batch_size_snapshot();
     proto::InfoStats {
         queue_depth: batcher.depth().min(u32::MAX as usize) as u32,
         queue_cap: batcher.queue_cap().min(u32::MAX as usize) as u32,
@@ -377,6 +390,11 @@ fn sample_stats(batcher: &Batcher, stats: &ServeStats) -> proto::InfoStats {
         reload_failures: stats.reload_failures.load(Ordering::Relaxed),
         active_conns: stats.active_conns.load(Ordering::SeqCst).min(u32::MAX as usize) as u32,
         draining: stats.draining.load(Ordering::SeqCst),
+        queue_wait_us: hist_summary(&batcher.queue_wait_snapshot()),
+        e2e_us: hist_summary(&batcher.e2e_snapshot()),
+        batch_p50: batch.percentile(0.50).min(u32::MAX as u64) as u32,
+        batch_p90: batch.percentile(0.90).min(u32::MAX as u64) as u32,
+        batch_max: batcher.batch_max().min(u32::MAX as u64) as u32,
     }
 }
 
@@ -625,6 +643,10 @@ fn handle_conn(
             Ok(proto::Request::Infer { k, deadline_ms, input }) => {
                 let deadline =
                     (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));
+                // End-to-end as the server sees it: enqueue through
+                // reply-ready (sheds and errors included — their
+                // latency is part of what the operator is reading).
+                let t0 = Instant::now();
                 match batcher.submit_with(input, k, deadline).recv() {
                     Ok(Ok(pairs)) => proto::encode_topk_response(&pairs, &mut outbuf),
                     Ok(Err(rej)) if rej.kind == RejectKind::Busy => {
@@ -633,6 +655,7 @@ fn handle_conn(
                     Ok(Err(rej)) => proto::encode_error_response(&rej.msg, &mut outbuf),
                     Err(_) => proto::encode_error_response("batcher shut down", &mut outbuf),
                 }
+                batcher.record_e2e_us(t0.elapsed().as_micros() as u64);
                 infer_done = true;
             }
             Err(e) => proto::encode_error_response(&format!("{e:#}"), &mut outbuf),

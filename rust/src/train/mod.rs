@@ -47,6 +47,7 @@ use crate::backend::pjrt::PjrtBackend;
 use crate::backend::{Backend, BackendKind, Session};
 use crate::data::{augment_batch, BatchIter, CharDataset, DigitDataset, ImageDataset};
 use crate::model::{ElemType, Manifest, ModelDef, Optimizer, ParamSet, Task};
+use crate::obs::trace;
 use crate::prune::PruneSchedule;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
@@ -154,6 +155,33 @@ pub struct RunResult {
     pub wall_seconds: f64,
     /// Mask-update diagnostics: total connections swapped.
     pub total_swapped: usize,
+    /// Phase/topology breakdown (zeros when obs was disabled).
+    pub obs: RunObs,
+}
+
+/// Per-run observability: wall-clock split by step phase plus
+/// mask-update churn, accumulated by `run_from` only while
+/// [`crate::obs::enabled`] — a `--no-obs` run never reads the clock on
+/// these paths and returns the all-zeros default. Purely diagnostic:
+/// nothing here feeds back into training, so numerics are identical
+/// either way.
+#[derive(Clone, Debug, Default)]
+pub struct RunObs {
+    /// Seconds inside fused `train_step` calls (fwd + bwd + optimizer).
+    pub train_step_s: f64,
+    /// Seconds inside dense-gradient (ΔT / SNFS) computations.
+    pub dense_grad_s: f64,
+    /// Seconds inside mask updates (drop/grow + incremental CSR patch).
+    pub mask_update_s: f64,
+    /// Mask updates applied.
+    pub updates: usize,
+    /// Connections dropped / grown, summed over all updates.
+    pub dropped: usize,
+    pub grown: usize,
+    /// Per-sparsifiable-layer nonzeros at run start and end (same order
+    /// as `ModelDef::sparse_indices`) — the nnz-drift readout.
+    pub nnz_start: Vec<u64>,
+    pub nnz_end: Vec<u64>,
 }
 
 /// Mutable training state (exposed for the landscape / lottery tooling).
@@ -302,13 +330,36 @@ impl Trainer {
         // sparsity readouts at the end are O(1) instead of O(N) rescans.
         state.masks.track_nnz();
 
+        // Phase/topology observability, sampled once per run: with obs
+        // disabled none of the per-step branches below read the clock.
+        let obs_on = crate::obs::enabled();
+        let mut obs = RunObs {
+            nnz_start: if obs_on {
+                self.def
+                    .sparse_indices()
+                    .iter()
+                    .map(|&i| state.masks.nnz(i) as u64)
+                    .collect()
+            } else {
+                Vec::new()
+            },
+            ..RunObs::default()
+        };
+
         while state.step < total {
             let t = state.step;
             let (x, y) = self.next_batch(cfg, &mut iter, &mut data_rng);
 
             // SNFS accumulates dense-gradient momentum EVERY step.
             if let Some(gm) = snfs_mom.as_mut() {
-                let (grads, _) = sess.dense_grads(state, &x, &y)?;
+                let t_dg = obs_on.then(std::time::Instant::now);
+                let (grads, _) = {
+                    let _g = trace::span("dense_grad", "train");
+                    sess.dense_grads(state, &x, &y)?
+                };
+                if let Some(t) = t_dg {
+                    obs.dense_grad_s += t.elapsed().as_secs_f64();
+                }
                 for (m, g) in gm.tensors.iter_mut().zip(&grads.tensors) {
                     for (a, b) in m.iter_mut().zip(g) {
                         *a = cfg.snfs_beta * *a + *b;
@@ -322,12 +373,19 @@ impl Trainer {
                 let frac = update.fraction(t);
                 match cfg.method {
                     Method::Rigl => {
-                        let (grads, loss) = sess.dense_grads(state, &x, &y)?;
+                        let t_dg = obs_on.then(std::time::Instant::now);
+                        let (grads, loss) = {
+                            let _g = trace::span("dense_grad", "train");
+                            sess.dense_grads(state, &x, &y)?
+                        };
+                        if let Some(t) = t_dg {
+                            obs.dense_grad_s += t.elapsed().as_secs_f64();
+                        }
                         recent_losses.push_back(loss);
                         if recent_losses.len() > 20 {
                             recent_losses.pop_front();
                         }
-                        self.apply_update(
+                        obs.mask_update_s += self.apply_update(
                             sess.as_mut(),
                             state,
                             frac,
@@ -339,7 +397,7 @@ impl Trainer {
                     Method::Snfs => {
                         // The momentum buffer is a run-local, disjoint
                         // from `state` — no clone needed.
-                        self.apply_update(
+                        obs.mask_update_s += self.apply_update(
                             sess.as_mut(),
                             state,
                             frac,
@@ -350,7 +408,7 @@ impl Trainer {
                     }
                     Method::Set => {
                         let mut rng = Rng::new(cfg.seed ^ 0x5E7).split(t as u64);
-                        self.apply_update(
+                        obs.mask_update_s += self.apply_update(
                             sess.as_mut(),
                             state,
                             frac,
@@ -362,8 +420,20 @@ impl Trainer {
                     _ => unreachable!(),
                 }
                 total_swapped += topo_stats.grown;
+                if obs_on {
+                    obs.updates += 1;
+                    obs.dropped += topo_stats.dropped;
+                    obs.grown += topo_stats.grown;
+                }
+                crate::obs_counter!("train.mask_updates").inc();
+                crate::obs_counter!("train.drop").add(topo_stats.dropped as u64);
+                crate::obs_counter!("train.grow").add(topo_stats.grown as u64);
             } else {
+                let t_ts = obs_on.then(std::time::Instant::now);
                 let loss = sess.train_step(state, &x, &y, lr.at(t) as f32)?;
+                if let Some(tt) = t_ts {
+                    obs.train_step_s += tt.elapsed().as_secs_f64();
+                }
                 recent_losses.push_back(loss);
                 if recent_losses.len() > 20 {
                     recent_losses.pop_front();
@@ -380,10 +450,20 @@ impl Trainer {
             }
 
             state.step += 1;
+            crate::obs_counter!("train.steps").inc();
             if cfg.eval_every > 0 && state.step % cfg.eval_every == 0 {
                 let m = self.evaluate_with(sess.as_mut(), state, cfg)?;
                 eval_history.push((state.step, m));
             }
+        }
+
+        if obs_on {
+            obs.nnz_end = self
+                .def
+                .sparse_indices()
+                .iter()
+                .map(|&i| state.masks.nnz(i) as u64)
+                .collect();
         }
 
         let final_metric = self.evaluate_with(sess.as_mut(), state, cfg)?;
@@ -414,6 +494,7 @@ impl Trainer {
             final_sparsity: state.masks.sparsity_over(&self.def.sparse_indices()),
             wall_seconds: t0.elapsed().as_secs_f64(),
             total_swapped,
+            obs,
         })
     }
 
@@ -435,7 +516,8 @@ impl Trainer {
 
     /// One Algorithm-1 mask update, with the backend session's sparse
     /// views patched incrementally from the exact per-layer drop/grow
-    /// lists (no dense rescan).
+    /// lists (no dense rescan). Returns the elapsed wall-clock seconds
+    /// (0.0 with obs disabled — the clock is never read then).
     fn apply_update(
         &self,
         sess: &mut dyn Session,
@@ -444,7 +526,9 @@ impl Trainer {
         grow: Grow<'_>,
         scratch: &mut TopoScratch,
         stats: &mut UpdateStats,
-    ) {
+    ) -> f64 {
+        let t0 = crate::obs::enabled().then(std::time::Instant::now);
+        let _g = trace::span("mask_update", "train");
         update_masks_visit(
             &self.def,
             &mut state.params,
@@ -456,6 +540,7 @@ impl Trainer {
             stats,
             |li, dropped, grown| sess.masks_updated(li, dropped, grown),
         );
+        t0.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
     }
 
     // ----------------------------------------------------------------

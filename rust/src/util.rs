@@ -237,6 +237,7 @@ pub fn bench_to_flops<F: FnMut()>(
         min_s,
         gflops,
         git_rev: git_rev(),
+        unix_ms: unix_ms(),
     };
     if let Err(e) = append_bench_record(target, &rec) {
         eprintln!("warning: could not append BENCH_{target}.json: {e}");
@@ -277,6 +278,10 @@ pub struct BenchRecord {
     /// recorded via [`bench_to_flops`]).
     pub gflops: Option<f64>,
     pub git_rev: String,
+    /// Wall-clock record time (ms since the Unix epoch), stamped when
+    /// the record is built — `git_rev` alone cannot order reruns on
+    /// one commit. Never derived inside replayed/measured code paths.
+    pub unix_ms: u64,
 }
 
 impl BenchRecord {
@@ -290,15 +295,26 @@ impl BenchRecord {
             .unwrap_or_default();
         format!(
             "{{\"name\":\"{}\",\"iters\":{},\"mean_s\":{:.9},\"min_s\":{:.9}{},\
-             \"git_rev\":\"{}\"}}",
+             \"git_rev\":\"{}\",\"unix_ms\":{}}}",
             esc(&self.name),
             self.iters,
             self.mean_s,
             self.min_s,
             gflops,
-            esc(&self.git_rev)
+            esc(&self.git_rev),
+            self.unix_ms
         )
     }
+}
+
+/// Milliseconds since the Unix epoch — the timestamp stamped onto
+/// bench records at record time. Not for use inside measured or
+/// replayable code paths.
+pub fn unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 /// Append one record to `BENCH_<target>.json` (JSON-lines: one object per
@@ -580,12 +596,16 @@ mod tests {
             min_s: 0.0005,
             gflops: None,
             git_rev: "abc123".into(),
+            unix_ms: 1_700_000_000_123,
         };
         let j = rec.to_json();
         assert!(j.starts_with('{') && j.ends_with('}'));
-        for key in ["\"name\"", "\"iters\"", "\"mean_s\"", "\"min_s\"", "\"git_rev\""] {
+        for key in
+            ["\"name\"", "\"iters\"", "\"mean_s\"", "\"min_s\"", "\"git_rev\"", "\"unix_ms\""]
+        {
             assert!(j.contains(key), "{j}");
         }
+        assert!(j.contains("\"unix_ms\":1700000000123"), "{j}");
         assert!(!j.contains("gflops"), "absent gflops must not serialize: {j}");
         let with = BenchRecord { gflops: Some(12.5), ..rec };
         let j = with.to_json();

@@ -1,0 +1,318 @@
+//! Observability contract suite: the `obs` subsystem must never change
+//! numerics, never allocate on the steady-state record path, and
+//! compile down to a relaxed load + branch when disabled.
+//!
+//! Everything here is hermetic (in-code models, synthetic data,
+//! loopback servers) and serializes on a process-wide lock because the
+//! tests toggle the *global* enable/arm flags — the library's own unit
+//! tests never touch those flags, by convention, so this file is the
+//! single place their semantics are exercised.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use rigl::backend::native::{mlp_def, NativeBackend};
+use rigl::obs::{self, metrics, trace};
+use rigl::pool::KernelPool;
+use rigl::serve::{Client, ServeConfig, Server, SparseModel};
+use rigl::sparsity::Distribution;
+use rigl::topology::Method;
+use rigl::train::{RunObs, TrainConfig, Trainer};
+use rigl::util::Rng;
+
+/// Counting allocator: the zero-steady-state-allocation gate is an
+/// exact count of alloc + realloc events, not a heuristic (same
+/// discipline as `bench_serve`). Dealloc is uncounted — dropping a
+/// warm buffer is fine; *acquiring* one on the hot path is not.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::Relaxed)
+}
+
+/// Process-wide serialization: these tests flip global flags, so they
+/// must not interleave. Poison-tolerant — an assert failure in one
+/// test must not cascade into every other test "failing" on a
+/// poisoned lock.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn serialize() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Restores the global enable/arm flags on drop, so a panicking test
+/// cannot leak a disabled-obs or armed-trace state into its siblings.
+struct FlagGuard {
+    enabled: bool,
+    armed: bool,
+}
+
+impl FlagGuard {
+    fn set(enabled: bool, armed: bool) -> FlagGuard {
+        FlagGuard { enabled: obs::set_enabled(enabled), armed: trace::set_armed(armed) }
+    }
+}
+
+impl Drop for FlagGuard {
+    fn drop(&mut self) {
+        obs::set_enabled(self.enabled);
+        trace::set_armed(self.armed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Numerics: bit-identity with obs on / off / armed, serial and threaded.
+// ---------------------------------------------------------------------------
+
+fn small_cfg() -> TrainConfig {
+    let mut cfg = TrainConfig::new("obs_det_mlp", Method::Rigl);
+    cfg.sparsity = 0.9;
+    cfg.steps = 30;
+    cfg.delta_t = 10;
+    cfg.augment = false;
+    cfg.data_train = 256;
+    cfg.data_val = 128;
+    cfg
+}
+
+/// One full RigL run; returns every parameter tensor as raw bits plus
+/// the final train loss, so comparisons are exact, not approximate.
+fn train_bits(obs_on: bool, threads: usize, arm_trace: bool) -> (Vec<Vec<u32>>, u64, RunObs) {
+    let _flags = FlagGuard::set(obs_on, arm_trace);
+    let cfg = small_cfg();
+    let def = mlp_def(&cfg.model, 784, &[32], 10, 16);
+    let pool = Arc::new(KernelPool::with_par_min_ops(threads, 1));
+    let backend = Arc::new(NativeBackend::with_pool(&def, Some(pool)).unwrap());
+    let trainer = Trainer::from_parts(def, backend, &cfg).unwrap();
+    let mut state = trainer.init_state(&cfg);
+    let r = trainer.run_from(&cfg, &mut state).unwrap();
+    let bits = state
+        .params
+        .tensors
+        .iter()
+        .map(|t| t.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    (bits, r.final_train_loss.to_bits(), r.obs)
+}
+
+#[test]
+fn training_is_bit_identical_with_obs_on_off_and_armed() {
+    let _g = serialize();
+    let (base_bits, base_loss, _) = train_bits(true, 1, false);
+    // Ordered as (obs enabled, kernel threads, trace armed).
+    let cases = [(false, 1, false), (true, 8, false), (false, 8, false), (true, 1, true)];
+    for (on, threads, armed) in cases {
+        let (bits, loss, _) = train_bits(on, threads, armed);
+        assert_eq!(
+            bits, base_bits,
+            "params diverged at obs={on} threads={threads} armed={armed}"
+        );
+        assert_eq!(
+            loss, base_loss,
+            "loss diverged at obs={on} threads={threads} armed={armed}"
+        );
+    }
+}
+
+#[test]
+fn run_obs_populates_when_enabled_and_stays_zero_when_disabled() {
+    let _g = serialize();
+    let (_, _, on) = train_bits(true, 1, false);
+    // steps=30, delta_t=10 → mask updates fired; phases were timed.
+    assert!(on.updates >= 1, "no mask updates recorded: {on:?}");
+    assert!(!on.nnz_start.is_empty() && !on.nnz_end.is_empty());
+    assert_eq!(on.nnz_start.len(), on.nnz_end.len());
+    assert!(on.train_step_s > 0.0, "train_step phase not timed");
+    assert!(on.mask_update_s > 0.0, "mask_update phase not timed");
+    // RigL's update is drop/grow balanced, so nnz must not drift.
+    assert_eq!(on.nnz_start, on.nnz_end, "per-layer nnz drifted across mask updates");
+
+    let (_, _, off) = train_bits(false, 1, false);
+    assert_eq!(off.updates, 0);
+    assert_eq!(off.train_step_s, 0.0);
+    assert_eq!(off.dense_grad_s, 0.0);
+    assert_eq!(off.mask_update_s, 0.0);
+    assert!(off.nnz_start.is_empty() && off.nnz_end.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Allocation: warm record paths must be allocation-free.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn steady_state_recording_allocates_nothing() {
+    let _g = serialize();
+    let _flags = FlagGuard::set(true, true);
+    // Cold path: registration and this thread's span ring allocate
+    // exactly once, before the measured window.
+    let c = metrics::counter("test.obsdet.counter");
+    let h = metrics::histogram("test.obsdet.hist");
+    let gauge = metrics::gauge("test.obsdet.gauge");
+    {
+        let _warm = trace::span("test.obsdet.warm", "test");
+    }
+    c.inc();
+    h.record(1);
+    gauge.set(1);
+
+    let before = alloc_events();
+    for i in 0..10_000u64 {
+        c.add(1);
+        h.record(i);
+        gauge.set(i);
+        let _span = trace::span_id("test.obsdet.span", "test", i);
+    }
+    let after = alloc_events();
+    assert_eq!(
+        after - before,
+        0,
+        "hot record path allocated {} times in 10k iterations",
+        after - before
+    );
+    assert!(c.get() >= 10_001);
+}
+
+// ---------------------------------------------------------------------------
+// Disable semantics: `--no-obs` turns every record into a no-op.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn disabled_flag_suppresses_all_recording() {
+    let _g = serialize();
+    let c = metrics::counter("test.obsdet.disabled_counter");
+    let h = metrics::histogram("test.obsdet.disabled_hist");
+    let gauge = metrics::gauge("test.obsdet.disabled_gauge");
+    {
+        let _flags = FlagGuard::set(false, false);
+        c.add(100);
+        c.inc();
+        h.record(42);
+        gauge.set(7);
+        assert_eq!(c.get(), 0, "counter recorded while disabled");
+        assert_eq!(h.snapshot().count(), 0, "histogram recorded while disabled");
+        assert_eq!(gauge.get(), 0, "gauge recorded while disabled");
+    }
+    // Flag restored: the same handles record again.
+    let _flags = FlagGuard::set(true, false);
+    c.add(3);
+    h.record(42);
+    gauge.set(7);
+    assert_eq!(c.get(), 3);
+    assert_eq!(h.snapshot().count(), 1);
+    assert_eq!(gauge.get(), 7);
+}
+
+// ---------------------------------------------------------------------------
+// Histogram algebra: merge + percentile against an exact oracle.
+// ---------------------------------------------------------------------------
+
+/// Inclusive upper bound of the log2 bucket holding `v` — the
+/// documented percentile representative, restated independently here.
+fn oracle_ceil(v: u64) -> u64 {
+    if v < 2 {
+        1
+    } else {
+        let b = 63 - v.leading_zeros() as usize;
+        if b >= 63 {
+            u64::MAX
+        } else {
+            (1u64 << (b + 1)) - 1
+        }
+    }
+}
+
+#[test]
+fn merged_snapshot_percentiles_match_exact_oracle() {
+    let _g = serialize();
+    let _flags = FlagGuard::set(true, false);
+    // Two histograms fed disjoint halves of one seeded value stream
+    // must merge into exactly the distribution of the whole stream.
+    let mut rng = Rng::new(0xD15EA5E);
+    let values: Vec<u64> = (0..1000).map(|_| rng.next_u64() % 2_000_000).collect();
+    let a = metrics::Histogram::new();
+    let b = metrics::Histogram::new();
+    let whole = metrics::Histogram::new();
+    for (i, &v) in values.iter().enumerate() {
+        let half = if i % 2 == 0 { &a } else { &b };
+        half.record(v);
+        whole.record(v);
+    }
+    let mut merged = a.snapshot();
+    merged.merge(&b.snapshot());
+    assert_eq!(merged, whole.snapshot());
+    assert_eq!(merged.count(), 1000);
+
+    let mut sorted = values.clone();
+    sorted.sort_unstable();
+    for &q in &[0.5, 0.9, 0.99] {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        let expect = oracle_ceil(sorted[rank - 1]);
+        assert_eq!(merged.percentile(q), expect, "q={q}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving: a live INFO roundtrip carries the latency histograms.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn info_roundtrip_populates_latency_histograms() {
+    let _g = serialize();
+    let _flags = FlagGuard::set(true, false);
+    let def = mlp_def("obs_det_serve", 784, &[32], 10, 1);
+    let model = SparseModel::init_random(&def, 0.9, &Distribution::Uniform, 7).unwrap();
+    let server = Server::start(model, None, ServeConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // Before traffic: the OBS block decodes, histograms are empty.
+    let idle = client.info().unwrap();
+    assert_eq!(idle.stats.e2e_us.count, 0);
+
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+    for _ in 0..8 {
+        client.infer(&x, 3).unwrap();
+    }
+    let info = client.info().unwrap();
+    assert_eq!(info.in_dim, 784);
+    assert!(
+        info.stats.e2e_us.count >= 8,
+        "e2e histogram missing requests: {:?}",
+        info.stats.e2e_us
+    );
+    assert!(
+        info.stats.queue_wait_us.count >= 8,
+        "queue-wait histogram missing requests: {:?}",
+        info.stats.queue_wait_us
+    );
+    // Percentiles are bucket upper bounds: p50 ≤ p90 ≤ p99 always.
+    let e = info.stats.e2e_us;
+    assert!(e.p50 <= e.p90 && e.p90 <= e.p99, "non-monotone percentiles: {e:?}");
+    // One serial client → executed batches of exactly 1.
+    assert!(info.stats.batch_max >= 1);
+    assert_eq!(info.stats.batch_p50, 1);
+
+    server.shutdown();
+}
