@@ -38,7 +38,13 @@
 #                   same run under --no-obs must print none of it, and
 #                   the serving stats must round-trip over loopback TCP
 #                   via `repro stats --addr` and serve-bench's
-#                   server-side histogram report.
+#                   server-side histogram report. Also runs the topology
+#                   leg: a tiny `repro topo-grid` RigL-vs-SET grid must
+#                   append parseable records to
+#                   BENCH_topology_metrics.json and print live `topo/`
+#                   counters, `repro topo-report` must render the
+#                   comparison table from them, and topo-grid under
+#                   --no-obs must refuse to run.
 #   --chaos-smoke   additionally run the seeded fault-injection soak:
 #                   the serve_chaos suite rebuilt with the
 #                   `fault-inject` cargo feature, which arms in-process
@@ -197,6 +203,53 @@ if [[ "$OBS_SMOKE" == 1 ]]; then
   if grep -q "^obs" "$OBS_TMP/train_off.log"; then
     echo "--no-obs still printed obs lines:" >&2
     grep "^obs" "$OBS_TMP/train_off.log" >&2
+    exit 1
+  fi
+
+  # Topology leg: a tiny RigL-vs-SET grid appends one parseable record
+  # per run to BENCH_topology_metrics.json, prints live topo/ counters,
+  # and topo-report renders the per-strategy table back out of the file.
+  TOPO_JSON=BENCH_topology_metrics.json
+  "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" topo-grid --strategies rigl,set \
+    --sparsities 0.9 --seeds 2 --steps 40 --threads 2 --jobs 2 \
+    > "$OBS_TMP/topo_grid.log" 2> "$OBS_TMP/topo_grid.err"
+  grep -q "^topo-grid: appended 4 records" "$OBS_TMP/topo_grid.log" || {
+    echo "topo-grid did not append the expected 4 records; log follows:" >&2
+    cat "$OBS_TMP/topo_grid.log" "$OBS_TMP/topo_grid.err" >&2
+    exit 1
+  }
+  for needle in "obs/topo.updates" "obs/topo.added" "obs/topo.removed"; do
+    grep -q "$needle" "$OBS_TMP/topo_grid.log" || {
+      echo "topo-grid registry dump is missing $needle; log follows:" >&2
+      cat "$OBS_TMP/topo_grid.log" >&2
+      exit 1
+    }
+  done
+  if command -v python3 > /dev/null 2>&1; then
+    tail -n 1 "$TOPO_JSON" | python3 -m json.tool > /dev/null || {
+      echo "last BENCH_topology_metrics.json record is not valid JSON:" >&2
+      tail -n 1 "$TOPO_JSON" >&2
+      exit 1
+    }
+  else
+    tail -n 1 "$TOPO_JSON" | grep -q '"strategy":"' || {
+      echo "last BENCH_topology_metrics.json record looks malformed:" >&2
+      tail -n 1 "$TOPO_JSON" >&2
+      exit 1
+    }
+  fi
+  "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" topo-report > "$OBS_TMP/topo_report.log" 2>/dev/null
+  for needle in "strategy" "rigl" "set"; do
+    grep -q "$needle" "$OBS_TMP/topo_report.log" || {
+      echo "topo-report table is missing $needle; log follows:" >&2
+      cat "$OBS_TMP/topo_report.log" >&2
+      exit 1
+    }
+  done
+  # topo-grid is meaningless without the recorder: --no-obs must refuse.
+  if "$BIN" topo-grid --no-obs --strategies set --sparsities 0.9 --seeds 1 \
+    --steps 20 > /dev/null 2>&1; then
+    echo "topo-grid under --no-obs should have refused to run" >&2
     exit 1
   fi
 

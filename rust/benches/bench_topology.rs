@@ -17,7 +17,10 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use rigl::model::{ElemType, Kind, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
-use rigl::topology::{update_masks, update_masks_scratch, Grow, TopoScratch, UpdateStats};
+use rigl::obs::topo::TopoRecorder;
+use rigl::topology::{
+    update_masks, update_masks_scratch, update_masks_visit, Grow, TopoScratch, UpdateStats,
+};
 use rigl::util::{append_bench_record, bench_to, git_rev, smoke_mode, BenchRecord, Rng};
 
 /// Forwarding allocator that counts allocation events (alloc + realloc).
@@ -179,6 +182,110 @@ fn main() {
                 &mut stats,
             );
         });
+
+        // ------- rest of the grow zoo, reused scratch ----------------
+        // SNFS momentum grow scores like gradient grow (a dense score
+        // tensor), magnitude grow reads the live weights — together with
+        // the legs above, every GrowCriterion is timed on one axis.
+        let (def, mut params, mut masks, grads, mut mom) = setup(n);
+        bench_to("topology", &format!("snfs_update/reused_scratch/n={n}"), reps, || {
+            update_masks_scratch(
+                &def,
+                &mut params,
+                std::slice::from_mut(&mut mom),
+                &mut masks,
+                0.3,
+                Grow::Momentum(&grads),
+                &mut scratch,
+                &mut stats,
+            );
+        });
+        let (def, mut params, mut masks, _, mut mom) = setup(n);
+        bench_to("topology", &format!("magnitude_update/reused_scratch/n={n}"), reps, || {
+            update_masks_scratch(
+                &def,
+                &mut params,
+                std::slice::from_mut(&mut mom),
+                &mut masks,
+                0.3,
+                Grow::Magnitude,
+                &mut scratch,
+                &mut stats,
+            );
+        });
+
+        // ------- topology recorder riding the visitor ----------------
+        // The full observability path: drop/grow plus the obs::topo
+        // recorder ingesting every (dropped, grown) list. Held to the
+        // same zero-allocation standard as the bare update.
+        let (def, mut params, mut masks, grads, mut mom) = setup(n);
+        let mut rec = TopoRecorder::new(&def, &masks, reps * 4 + 64);
+        let mut step = 0usize;
+        let mut run_recorded = |rec: &mut TopoRecorder,
+                                params: &mut ParamSet,
+                                mom: &mut ParamSet,
+                                masks: &mut ParamSet,
+                                scratch: &mut TopoScratch,
+                                stats: &mut UpdateStats,
+                                step: &mut usize| {
+            update_masks_visit(
+                &def,
+                params,
+                std::slice::from_mut(mom),
+                masks,
+                0.3,
+                Grow::Gradient(&grads),
+                scratch,
+                stats,
+                |li, dropped, grown| rec.record_layer(li, dropped, grown),
+            );
+            *step += 1;
+            rec.end_update(*step);
+        };
+        bench_to("topology", &format!("rigl_update/with_recorder/n={n}"), reps, || {
+            run_recorded(
+                &mut rec,
+                &mut params,
+                &mut mom,
+                &mut masks,
+                &mut scratch,
+                &mut stats,
+                &mut step,
+            );
+        });
+        let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+        for _ in 0..updates {
+            run_recorded(
+                &mut rec,
+                &mut params,
+                &mut mom,
+                &mut masks,
+                &mut scratch,
+                &mut stats,
+                &mut step,
+            );
+        }
+        let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+        let per_update = allocs as f64 / updates as f64;
+        println!("rigl_update/recorder_steady_allocs/n={n}  {per_update:.1} allocs/update");
+        let _ = append_bench_record(
+            "topology",
+            &BenchRecord {
+                name: format!("rigl_update/recorder_steady_allocs/n={n}"),
+                iters: updates as usize,
+                mean_s: per_update,
+                min_s: per_update,
+                gflops: None,
+                git_rev: git_rev(),
+                unix_ms: rigl::util::unix_ms(),
+            },
+        );
+        if allocs != 0 {
+            steady_state_ok = false;
+            eprintln!(
+                "REGRESSION: recorder path made {allocs} heap allocations over {updates} warm updates (n={n})"
+            );
+        }
     }
     if !steady_state_ok {
         std::process::exit(1);

@@ -41,7 +41,7 @@ use crate::pool;
 use crate::runtime::Runtime;
 use crate::schedule::Decay;
 use crate::sparsity::Distribution;
-use crate::topology::Method;
+use crate::topology::{GrowOverride, Method};
 use crate::train::{RunResult, TrainConfig, Trainer};
 
 /// Shared experiment context: backend, manifest, trainer cache, knobs.
@@ -63,6 +63,10 @@ pub struct ExpContext {
     /// rounds, so `jobs × threads` never oversubscribes by more than
     /// the pool width. Bit-identical results at any setting of either.
     pub threads: usize,
+    /// Grow-criterion override (`--grow`) applied to every config this
+    /// context derives — the strategy-zoo axis. `Auto` keeps each
+    /// method's native criterion.
+    pub grow: GrowOverride,
     pub out_dir: PathBuf,
     trainers: Mutex<HashMap<String, Arc<Trainer>>>,
     pub verbose: bool,
@@ -104,6 +108,7 @@ impl ExpContext {
             scale,
             jobs: jobs.max(1),
             threads: 1,
+            grow: GrowOverride::Auto,
             out_dir,
             trainers: Mutex::new(HashMap::new()),
             verbose: true,
@@ -115,6 +120,13 @@ impl ExpContext {
     /// is built — the pool is sized at trainer construction.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Set the grow-criterion override (builder-style, applied to every
+    /// config this context derives via [`ExpContext::base`]).
+    pub fn with_grow(mut self, grow: GrowOverride) -> Self {
+        self.grow = grow;
         self
     }
 
@@ -135,6 +147,7 @@ impl ExpContext {
     pub fn base(&self, model: &str, method: Method) -> TrainConfig {
         let mut cfg = TrainConfig::new(model, method);
         cfg.threads = self.threads;
+        cfg.grow = self.grow;
         cfg.steps = ((Self::nominal_steps(model) as f64) * self.scale).round() as usize;
         // ΔT scales with run length. Calibrated on this testbed (see
         // EXPERIMENTS.md): each mask update needs roughly an epoch of
@@ -210,31 +223,53 @@ impl ExpContext {
     /// fanned out together over the thread pool. Returns cells in input
     /// order; each cell's per-seed results are in seed order.
     pub fn run_cells(&self, specs: Vec<(String, TrainConfig)>) -> Result<Vec<Cell>> {
+        let full = self.run_cells_full(&specs)?;
+        specs
+            .iter()
+            .zip(full)
+            .map(|((label, _), runs)| {
+                self.aggregate(label, runs.into_iter().map(Ok).collect())
+            })
+            .collect()
+    }
+
+    /// Like [`ExpContext::run_cells`] but returning every per-seed
+    /// [`RunResult`] instead of aggregated cells — for consumers that
+    /// need the full run payloads (topology series, histories). Results
+    /// are `[cell][seed]`, both in input order, bit-identical at any
+    /// job count.
+    pub fn run_cells_full(&self, specs: &[(String, TrainConfig)]) -> Result<Vec<Vec<RunResult>>> {
         // Prebuild every distinct trainer serially first: compilation is
         // cached per artifact, and building here keeps the fan-out phase
         // free of duplicate dataset construction.
-        for (_, cfg) in &specs {
+        for (_, cfg) in specs {
             self.trainer(cfg)?;
         }
         let seeds = self.seeds as u64;
         let tasks: Vec<(usize, u64)> = (0..specs.len())
             .flat_map(|c| (0..seeds).map(move |s| (c, s)))
             .collect();
-        let mut results = pool::par_map(&tasks, self.jobs, |_, &(ci, seed)| {
+        let results = pool::par_map(&tasks, self.jobs, |_, &(ci, seed)| {
             let _g = crate::obs::trace::span_id("cell", "coordinator", ci as u64);
             let mut c = specs[ci].1.clone();
             c.seed = seed;
             let trainer = self.trainer(&c)?; // cache hit
             trainer.run(&c)
         });
-        let mut cells = Vec::with_capacity(specs.len());
-        // Drain in order: `results` is task-ordered (cell-major).
-        for (label, _) in &specs {
-            let rest = results.split_off(self.seeds.min(results.len()));
-            let chunk = std::mem::replace(&mut results, rest);
-            cells.push(self.aggregate(label, chunk)?);
+        // Chunk in order: `results` is task-ordered (cell-major).
+        let mut it = results.into_iter();
+        let mut out = Vec::with_capacity(specs.len());
+        for _ in specs {
+            let mut cell = Vec::with_capacity(self.seeds);
+            for _ in 0..self.seeds {
+                match it.next() {
+                    Some(r) => cell.push(r?),
+                    None => break,
+                }
+            }
+            out.push(cell);
         }
-        Ok(cells)
+        Ok(out)
     }
 
     fn aggregate(&self, label: &str, results: Vec<Result<RunResult>>) -> Result<Cell> {

@@ -11,6 +11,8 @@
 //!   serve --model m.srvd [...]   serve it over TCP with micro-batching
 //!   serve-bench [...]            load-generate against a serve endpoint
 //!   stats --addr host:port       query a live server's INFO STATS block
+//!   topo-grid [...]              strategy × sparsity mask-dynamics grid
+//!   topo-report [...]            render BENCH_topology_metrics.json tables
 //!
 //! Shared flags: --seeds N (default 1), --scale F (step multiplier,
 //! default 1.0), --jobs N (worker threads for cell/seed fan-out,
@@ -36,7 +38,8 @@ use rigl::coordinator::{run_experiment, ExpContext, EXPERIMENTS};
 use rigl::schedule::Decay;
 use rigl::serve::{ServeConfig, Server, SparseModel};
 use rigl::sparsity::{achieved_sparsity, layer_sparsities, Distribution};
-use rigl::topology::Method;
+use rigl::obs::topo::{nnstd_distance, record_json, TopoRunMeta};
+use rigl::topology::{GrowOverride, Method};
 use rigl::train::TrainConfig;
 use rigl::BackendKind;
 #[cfg(feature = "pjrt")]
@@ -145,6 +148,8 @@ fn run() -> Result<()> {
         "serve" => serve_cmd(&args)?,
         "serve-bench" => serve_bench_cmd(&args)?,
         "stats" => stats_cmd(&args)?,
+        "topo-grid" => topo_grid_cmd(&args)?,
+        "topo-report" => topo_report_cmd(&args)?,
         other => {
             print_usage();
             bail!("unknown subcommand {other:?}");
@@ -178,7 +183,8 @@ fn context(args: &Args) -> Result<ExpContext> {
         PathBuf::from(args.get("out").unwrap_or("results")),
         backend_kind(args)?,
     )?
-    .with_threads(args.usize("threads", 1)?))
+    .with_threads(args.usize("threads", 1)?)
+    .with_grow(GrowOverride::parse(args.get("grow").unwrap_or("auto"))?))
 }
 
 fn emit_tables(ctx: &ExpContext, id: &str) -> Result<()> {
@@ -249,6 +255,7 @@ fn train_cmd(args: &Args) -> Result<()> {
     cfg.decay = Decay::parse(args.get("decay").unwrap_or("cosine"))?;
     cfg.eval_every = args.usize("eval-every", (cfg.steps / 10).max(1))?;
     cfg.threads = args.usize("threads", 1)?;
+    cfg.grow = GrowOverride::parse(args.get("grow").unwrap_or("auto"))?;
 
     let kind = backend_kind(args)?;
     // One-cell context: reuses the coordinator's backend dispatch +
@@ -313,6 +320,25 @@ fn train_cmd(args: &Args) -> Result<()> {
         );
         if let Err(e) = rigl::util::append_bench_json("obs", &json) {
             eprintln!("warning: could not append BENCH_obs.json: {e}");
+        }
+        // Topology-dynamics record (present when the topology moved or
+        // the run was an explicit static control).
+        if let Some(tm) = &r.topo {
+            let decay_label = cfg.decay.label();
+            let meta = TopoRunMeta {
+                model: &model,
+                strategy: method.label(),
+                grow: grow_label(&cfg),
+                sparsity: cfg.sparsity,
+                decay: &decay_label,
+                delta_t: cfg.delta_t,
+                steps: cfg.total_steps(),
+                seed: cfg.seed,
+            };
+            let topo_json = record_json(&meta, tm, None);
+            if let Err(e) = rigl::util::append_bench_json("topology_metrics", &topo_json) {
+                eprintln!("warning: could not append BENCH_topology_metrics.json: {e}");
+            }
         }
     }
     // Save the full training state (params, masks, opt — the set order
@@ -509,6 +535,127 @@ fn stats_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Record label for the grow criterion a config actually runs with.
+fn grow_label(cfg: &TrainConfig) -> &'static str {
+    cfg.effective_grow().map(|k| k.label()).unwrap_or("static")
+}
+
+/// The strategy × sparsity topology-dynamics grid on the hermetic MLP
+/// track: train every {method} × {sparsity} cell across seeds, append
+/// one BENCH_topology_metrics.json record per run (seeds > 0 carry the
+/// cross-seed NNSTD distance of their final masks to seed 0's), and
+/// dump the live `topo/` registry counters.
+fn topo_grid_cmd(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        rigl::obs::enabled(),
+        "topo-grid records topology metrics; drop --no-obs"
+    );
+    let model = args.get("model").unwrap_or("mlp").to_string();
+    let strategies: Vec<Method> = args
+        .get("strategies")
+        .unwrap_or("rigl,set,snfs,static")
+        .split(',')
+        .map(Method::parse)
+        .collect::<Result<_>>()?;
+    let sparsities: Vec<f64> = args
+        .get("sparsities")
+        .unwrap_or("0.5,0.9")
+        .split(',')
+        .map(|s| s.parse().with_context(|| format!("--sparsities {s:?}")))
+        .collect::<Result<_>>()?;
+    // Native by default: the grid is hermetic (no artifacts, no XLA).
+    let kind = BackendKind::parse(args.get("backend").unwrap_or("native"))?;
+    let ctx = ExpContext::with_backend(
+        args.usize("seeds", 2)?,
+        args.f64("scale", 1.0)?,
+        args.usize("jobs", rigl::pool::default_jobs())?,
+        PathBuf::from(args.get("out").unwrap_or("results")),
+        kind,
+    )?
+    .with_threads(args.usize("threads", 1)?)
+    .with_grow(GrowOverride::parse(args.get("grow").unwrap_or("auto"))?);
+    let steps = args.usize("steps", 0)?; // 0 = the track's nominal steps
+    let mut specs = Vec::new();
+    for &s in &sparsities {
+        for &m in &strategies {
+            let mut cfg = ctx.base(&model, m);
+            if steps > 0 {
+                cfg.steps = steps;
+                cfg.delta_t = (steps / 4).max(5);
+            }
+            cfg.sparsity = s;
+            specs.push((format!("{}/S{s:.2}", m.label()), cfg));
+        }
+    }
+    eprintln!(
+        "topo-grid: {} cells × {} seeds on {model} (backend={}, jobs={}, threads={})",
+        specs.len(),
+        ctx.seeds,
+        kind.label(),
+        ctx.jobs,
+        ctx.threads
+    );
+    let full = ctx.run_cells_full(&specs)?;
+    let mut appended = 0usize;
+    for ((label, cfg), runs) in specs.iter().zip(&full) {
+        let reference = runs.first().and_then(|r| r.topo.as_ref());
+        for (si, r) in runs.iter().enumerate() {
+            let Some(tm) = &r.topo else {
+                eprintln!("  [{label} seed {si}] no topology record (obs off?)");
+                continue;
+            };
+            // Cross-seed NNSTD: this seed's final masks vs seed 0's,
+            // layer by layer (greedy neuron matching inside).
+            let cross: Vec<f64> = match (si, reference) {
+                (0, _) | (_, None) => Vec::new(),
+                (_, Some(r0)) => tm
+                    .layers
+                    .iter()
+                    .zip(&r0.layers)
+                    .map(|(a, b)| nnstd_distance(a.rows, a.cols, &a.final_active, &b.final_active))
+                    .collect(),
+            };
+            let decay_label = cfg.decay.label();
+            let meta = TopoRunMeta {
+                model: &model,
+                strategy: cfg.method.label(),
+                grow: grow_label(cfg),
+                sparsity: cfg.sparsity,
+                decay: &decay_label,
+                delta_t: cfg.delta_t,
+                steps: cfg.total_steps(),
+                seed: si as u64,
+            };
+            let json = record_json(&meta, tm, (!cross.is_empty()).then_some(cross.as_slice()));
+            rigl::util::append_bench_json("topology_metrics", &json)?;
+            appended += 1;
+        }
+    }
+    println!(
+        "topo-grid: appended {appended} records → {}",
+        rigl::util::bench_json_path("topology_metrics").display()
+    );
+    print!("{}", rigl::obs::metrics::render());
+    Ok(())
+}
+
+/// Render per-strategy comparison tables from the append-only
+/// `BENCH_topology_metrics.json` history (churn decay vs schedule,
+/// survivor half-life, consecutive + cross-seed NNSTD, in-degree
+/// percentiles).
+fn topo_report_cmd(args: &Args) -> Result<()> {
+    let path = args
+        .get("file")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| rigl::util::bench_json_path("topology_metrics"));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (run `repro topo-grid` first)", path.display()))?;
+    let records = rigl::obs::topo::parse_records(&text);
+    eprintln!("topo-report: {} records from {}", records.len(), path.display());
+    print!("{}", rigl::obs::topo::render_report(&records));
+    Ok(())
+}
+
 fn flops_cmd(args: &Args) -> Result<()> {
     let manifest = rigl::backend::manifest_for(backend_kind(args)?)?;
     let model = args.get("model").unwrap_or("cnn");
@@ -552,7 +699,7 @@ fn flops_cmd(args: &Args) -> Result<()> {
 fn print_usage() {
     eprintln!(
         "repro — RigL (ICML 2020) reproduction\n\
-         usage: repro <list|info|table|all-tables|train|flops|export|serve|serve-bench|stats> [--flags]\n\
+         usage: repro <list|info|table|all-tables|train|flops|export|serve|serve-bench|stats|topo-grid|topo-report> [--flags]\n\
          \n\
          repro table --id fig2-left [--seeds 3] [--scale 1.0] [--jobs 4] [--threads 1] [--out results]\n\
          \x20          (--jobs fans runs out; --threads parallelizes INSIDE a native\n\
@@ -562,7 +709,19 @@ fn print_usage() {
          repro train --model mlp --method rigl --backend native --threads 4\n\
          repro train --model mlp --method rigl --backend native --export mlp.srvd\n\
          \x20          [--save-ckpt ckpt.bin]   (full state: params, masks, opt)\n\
+         repro train --model mlp --method rigl --grow random   (mix-and-match drop/grow:\n\
+         \x20          auto|gradient|momentum|random|magnitude|static — auto keeps the\n\
+         \x20          method's native criterion, static freezes the topology)\n\
          repro flops --model wrn --sparsity 0.95 --dist erk\n\
+         \n\
+         topology dynamics (hermetic, native backend — see rust/src/obs/README.md):\n\
+         repro topo-grid [--model mlp] [--strategies rigl,set,snfs,static]\n\
+         \x20          [--sparsities 0.5,0.9] [--seeds 2] [--steps 0] [--grow auto]\n\
+         \x20          (trains the strategy zoo, appends one mask-evolution record per\n\
+         \x20           run to BENCH_topology_metrics.json — churn, survivor half-life,\n\
+         \x20           degree histograms, consecutive + cross-seed NNSTD)\n\
+         repro topo-report [--file BENCH_topology_metrics.json]\n\
+         \x20          (per-strategy comparison tables from those records)\n\
          \n\
          serving (std-only, hermetic — no XLA, no artifacts dir):\n\
          repro export --model mlp --out mlp.srvd [--ckpt ckpt.bin | --sparsity 0.9 --dist uniform --seed 0]\n\

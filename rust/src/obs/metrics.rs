@@ -339,11 +339,18 @@ pub fn snapshot_all() -> Vec<(&'static str, Value)> {
 }
 
 /// Human-readable one-line-per-metric dump (`obs/<name> ...`), used by
-/// the CLI's end-of-run report and grepped by the CI obs smoke.
+/// the CLI's end-of-run report and grepped by the CI obs smoke. Output
+/// is name-sorted (so dumps diff cleanly across runs) and includes the
+/// trace-ring span totals, which live outside the registry.
 pub fn render() -> String {
     use std::fmt::Write as _;
+    let mut all = snapshot_all();
+    let (retained, dropped) = super::trace::ring_totals();
+    all.push(("trace.retained_spans", Value::Counter(retained)));
+    all.push(("trace.dropped_spans", Value::Counter(dropped)));
+    all.sort_by_key(|(n, _)| *n);
     let mut out = String::new();
-    for (name, value) in snapshot_all() {
+    for (name, value) in all {
         match value {
             Value::Counter(v) => {
                 let _ = writeln!(out, "obs/{name} {v}");
@@ -375,6 +382,18 @@ macro_rules! obs_counter {
         static HANDLE: std::sync::OnceLock<&'static $crate::obs::metrics::Counter> =
             std::sync::OnceLock::new();
         *HANDLE.get_or_init(|| $crate::obs::metrics::counter($name))
+    }};
+}
+
+/// Register-once histogram handle — the [`obs_counter!`] idiom for
+/// histograms: first execution registers, every later hit is a static
+/// read, so recording stays allocation-free once warm.
+#[macro_export]
+macro_rules! obs_histogram {
+    ($name:expr) => {{
+        static HANDLE: std::sync::OnceLock<&'static $crate::obs::metrics::Histogram> =
+            std::sync::OnceLock::new();
+        *HANDLE.get_or_init(|| $crate::obs::metrics::histogram($name))
     }};
 }
 
@@ -480,5 +499,23 @@ mod tests {
         let dump = render();
         assert!(dump.contains("obs/test.metrics.registry_handle"));
         assert!(dump.contains("obs/test.metrics.registry_hist count=1"));
+    }
+
+    #[test]
+    fn render_is_name_sorted_and_carries_trace_totals() {
+        // Register in anti-sorted order; the dump must still be sorted.
+        counter("test.render.zz_last");
+        counter("test.render.aa_first");
+        let dump = render();
+        let names: Vec<&str> = dump
+            .lines()
+            .filter_map(|l| l.strip_prefix("obs/"))
+            .map(|l| l.split_whitespace().next().unwrap_or(""))
+            .collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "render() output is not name-sorted");
+        assert!(dump.contains("obs/trace.retained_spans"));
+        assert!(dump.contains("obs/trace.dropped_spans"));
     }
 }

@@ -11,6 +11,11 @@
 //!   ring buffers, exported as Chrome trace-event JSON (open in
 //!   Perfetto / `chrome://tracing`). Disarmed spans cost one relaxed
 //!   load and never call `Instant::now`.
+//! * [`topo`] — the topology-dynamics recorder: per-layer degree
+//!   distributions, churn, survivor half-life, and NNSTD-style mask
+//!   distances at every ΔT sparse-topology update, recorded into
+//!   preallocated series and exported to
+//!   `BENCH_topology_metrics.json` / `repro topo-report`.
 //!
 //! Hard contract, enforced by `tests/obs_determinism.rs`:
 //!
@@ -26,6 +31,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 
 pub mod metrics;
+pub mod topo;
 pub mod trace;
 
 pub use metrics::{counter, gauge, histogram, Counter, Gauge, HistSnapshot, Histogram};

@@ -1,0 +1,1217 @@
+//! Topology-dynamics recorder: mask evolution as a first-class,
+//! recorded, comparable signal.
+//!
+//! RigL's claim is that *letting the topology move* escapes the optima
+//! a static mask is stuck in — but the training loop previously
+//! recorded only scalar nnz totals and drop/grow counts. This module
+//! captures, at every ΔT mask update and per sparsifiable layer:
+//!
+//! * **degree distributions** — in-degree (incoming connections per
+//!   output neuron = column of the FC weight matrix) and out-degree
+//!   (per input neuron = row), log2-bucketed with the same rule as the
+//!   obs histograms (bucket 0 = {0, 1}, bucket *i* = [2^i, 2^(i+1)−1],
+//!   top bucket saturating);
+//! * **nnz drift** — per-layer cardinality after each update (RigL-style
+//!   balanced strategies hold it constant; the series proves it);
+//! * **churn** — the fraction of the layer's connections that are new
+//!   this update (`added / nnz`, where drop+regrow of the same index
+//!   cancels and counts as neither), plus the whole-layer Jaccard
+//!   distance `1 − |A∩B| / |A∪B|` between consecutive active sets;
+//! * **survivor half-life** — the fraction of step-0 connections still
+//!   alive (never net-dropped; an instant regrow keeps survivor
+//!   status), whose crossing of 0.5 is the topology's half-life;
+//! * **NNSTD-style distance** — a per-neuron topology distance in the
+//!   spirit of Topological Insights (Liu et al.): the mean over output
+//!   neurons of the Jaccard distance between the neuron's previous and
+//!   new incoming-connection sets. Consecutive-update distances are
+//!   recorded live; [`nnstd_distance`] computes the cross-seed variant
+//!   on final masks with greedy neuron matching (neurons of different
+//!   seeds have no canonical order).
+//!
+//! The recorder is fed from the `update_masks_visit` drop/grow visitor
+//! (the same hook backends use for incremental CSR patching), so it
+//! sees exact per-update `(dropped, grown)` index lists and never
+//! rescans masks. The hot path is **zero-steady-state-allocation**: all
+//! bitmaps, per-column scratch, and metric series are preallocated at
+//! construction (series capacity = the run's update count), enforced by
+//! the counting-allocator gate in `tests/topo_metrics.rs`. It is also
+//! numerics-inert: it only *reads* the visitor's index lists, never
+//! draws RNG, and a disabled recorder ([`TopoRecorder::disabled`])
+//! reduces every call to a branch — whole runs are bit-identical with
+//! the recorder on, off, or under `--no-obs`.
+//!
+//! Results flow three ways: live into the `obs::metrics` registry
+//! (`topo.*` counters/histograms in `render()`), per-run into
+//! `BENCH_topology_metrics.json` (append-only JSON lines, schema in
+//! ROADMAP.md; written by `repro train` / `repro topo-grid`), and back
+//! out through `repro topo-report`, which parses those records
+//! ([`parse_records`]) and prints per-strategy comparison tables
+//! ([`render_report`]).
+
+use crate::model::{ModelDef, ParamSet};
+
+/// Degree-histogram bucket count. Same log2 rule as the obs latency
+/// histograms, truncated: bucket 15 holds every degree ≥ 2^15 (no FC
+/// layer in the zoo has fan-in past 32768).
+pub const DEG_BUCKETS: usize = 16;
+
+/// Bucket index for a degree: 0 for {0, 1}, else `floor(log2 d)`,
+/// saturating at [`DEG_BUCKETS`] − 1.
+#[inline]
+pub fn deg_bucket(d: u32) -> usize {
+    let b = if d < 2 { 0 } else { (31 - d.leading_zeros()) as usize };
+    b.min(DEG_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of degree bucket `i` (the representative a
+/// percentile reports — mirrors `metrics::bucket_ceil`).
+fn deg_bucket_ceil(i: usize) -> u32 {
+    if i == 0 {
+        1
+    } else if i >= DEG_BUCKETS - 1 {
+        u32::MAX
+    } else {
+        (1u32 << (i + 1)) - 1
+    }
+}
+
+fn hist_of(degs: &[u32]) -> [u32; DEG_BUCKETS] {
+    let mut h = [0u32; DEG_BUCKETS];
+    for &d in degs {
+        h[deg_bucket(d)] += 1;
+    }
+    h
+}
+
+/// Percentile over a degree histogram: upper bound of the bucket
+/// holding the observation of rank `ceil(q·n)` — the obs rule.
+pub fn deg_percentile(hist: &[u32], q: f64) -> u32 {
+    let n: u64 = hist.iter().map(|&c| c as u64).sum();
+    if n == 0 {
+        return 0;
+    }
+    let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+    let mut seen = 0u64;
+    for (i, &c) in hist.iter().enumerate() {
+        seen += c as u64;
+        if seen >= rank {
+            return deg_bucket_ceil(i);
+        }
+    }
+    deg_bucket_ceil(DEG_BUCKETS - 1)
+}
+
+/// Per-layer state + recorded series. The layer is viewed as a
+/// `rows × cols` matrix with `cols` = the spec's last shape dim (FC:
+/// input neurons × output neurons; element `i` sits at row `i / cols`,
+/// column `i % cols`).
+struct LayerRec {
+    spec: usize,
+    name: String,
+    rows: usize,
+    cols: usize,
+    nnz0: u64,
+    nnz_cur: u64,
+    /// Live active-set bitmap over flat element indices.
+    active: Vec<u64>,
+    /// Subset of the step-0 active set never net-dropped since.
+    survivor: Vec<u64>,
+    survivor_count: u64,
+    /// Out-degree per row (input neuron), in-degree per column (output
+    /// neuron), maintained incrementally.
+    row_deg: Vec<u32>,
+    col_deg: Vec<u32>,
+    /// Per-update column scratch, reset via `touched_cols` so the cost
+    /// is O(churn), not O(cols).
+    col_removed: Vec<u32>,
+    col_added: Vec<u32>,
+    touched_cols: Vec<u32>,
+    /// Marks drop∩grow indices within one `record_layer` call.
+    cancel: Vec<u64>,
+    visited: bool,
+    // Metric series, one entry per mask update (preallocated).
+    nnz: Vec<u64>,
+    dropped: Vec<u32>,
+    grown: Vec<u32>,
+    churn: Vec<f32>,
+    jaccard: Vec<f32>,
+    nnstd: Vec<f32>,
+    survivor_frac: Vec<f32>,
+    in_deg_hist: Vec<[u32; DEG_BUCKETS]>,
+    out_deg_hist: Vec<[u32; DEG_BUCKETS]>,
+}
+
+impl LayerRec {
+    fn survivor_frac_now(&self) -> f32 {
+        if self.nnz0 == 0 {
+            0.0
+        } else {
+            self.survivor_count as f32 / self.nnz0 as f32
+        }
+    }
+
+    fn push_row(
+        &mut self,
+        dropped: u32,
+        grown: u32,
+        churn: f32,
+        jaccard: f32,
+        nnstd: f32,
+    ) {
+        self.nnz.push(self.nnz_cur);
+        self.dropped.push(dropped);
+        self.grown.push(grown);
+        self.churn.push(churn);
+        self.jaccard.push(jaccard);
+        self.nnstd.push(nnstd);
+        self.survivor_frac.push(self.survivor_frac_now());
+        self.in_deg_hist.push(hist_of(&self.col_deg));
+        self.out_deg_hist.push(hist_of(&self.row_deg));
+    }
+}
+
+/// The zero-steady-state-allocation topology-metrics recorder. Create
+/// one per training run ([`TopoRecorder::new`] from the initial masks,
+/// or [`TopoRecorder::disabled`] as the no-op), feed every layer's
+/// visitor callback to [`TopoRecorder::record_layer`], close each ΔT
+/// update with [`TopoRecorder::end_update`], and harvest the series
+/// with [`TopoRecorder::finish`].
+pub struct TopoRecorder {
+    enabled: bool,
+    layers: Vec<LayerRec>,
+    /// spec index → slot in `layers` (`usize::MAX` = not tracked).
+    spec_to_slot: Vec<usize>,
+    update_steps: Vec<u32>,
+    upd_removed: u64,
+    upd_added: u64,
+}
+
+impl TopoRecorder {
+    /// The no-op recorder: every call is a branch, nothing allocates.
+    pub fn disabled() -> TopoRecorder {
+        TopoRecorder {
+            enabled: false,
+            layers: Vec::new(),
+            spec_to_slot: Vec::new(),
+            update_steps: Vec::new(),
+            upd_removed: 0,
+            upd_added: 0,
+        }
+    }
+
+    /// Snapshot the initial masks and preallocate every buffer and
+    /// series. `max_updates` bounds the number of `end_update` calls
+    /// (series capacity; overshooting merely reallocates, it does not
+    /// lose data — but the zero-alloc gate assumes the bound holds).
+    pub fn new(def: &ModelDef, masks: &ParamSet, max_updates: usize) -> TopoRecorder {
+        let cap = max_updates + 2;
+        let mut layers = Vec::new();
+        let mut spec_to_slot = vec![usize::MAX; def.specs.len()];
+        for (li, spec) in def.specs.iter().enumerate() {
+            if !spec.sparsifiable {
+                continue;
+            }
+            let n = spec.size();
+            let cols = spec.shape.last().copied().unwrap_or(1).max(1);
+            let rows = n.div_ceil(cols);
+            let words = n.div_ceil(64);
+            let mut active = vec![0u64; words];
+            let mut row_deg = vec![0u32; rows];
+            let mut col_deg = vec![0u32; cols];
+            let mut nnz0 = 0u64;
+            for (i, &m) in masks.tensors[li].iter().enumerate() {
+                if m != 0.0 {
+                    active[i / 64] |= 1u64 << (i % 64);
+                    row_deg[i / cols] += 1;
+                    col_deg[i % cols] += 1;
+                    nnz0 += 1;
+                }
+            }
+            spec_to_slot[li] = layers.len();
+            layers.push(LayerRec {
+                spec: li,
+                name: spec.name.clone(),
+                rows,
+                cols,
+                nnz0,
+                nnz_cur: nnz0,
+                survivor: active.clone(),
+                active,
+                survivor_count: nnz0,
+                row_deg,
+                col_deg,
+                col_removed: vec![0u32; cols],
+                col_added: vec![0u32; cols],
+                touched_cols: Vec::with_capacity(cols),
+                cancel: vec![0u64; words],
+                visited: false,
+                nnz: Vec::with_capacity(cap),
+                dropped: Vec::with_capacity(cap),
+                grown: Vec::with_capacity(cap),
+                churn: Vec::with_capacity(cap),
+                jaccard: Vec::with_capacity(cap),
+                nnstd: Vec::with_capacity(cap),
+                survivor_frac: Vec::with_capacity(cap),
+                in_deg_hist: Vec::with_capacity(cap),
+                out_deg_hist: Vec::with_capacity(cap),
+            });
+        }
+        TopoRecorder {
+            enabled: true,
+            layers,
+            spec_to_slot,
+            update_steps: Vec::with_capacity(cap),
+            upd_removed: 0,
+            upd_added: 0,
+        }
+    }
+
+    /// Whether this recorder captures anything.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Ingest one layer's drop/grow visitor callback: exact flat index
+    /// lists, where an index in both lists is a cancelled drop+regrow
+    /// (net unchanged — it keeps survivor status, exactly like the
+    /// weight it keeps). Allocation-free; O(churn + touched columns).
+    pub fn record_layer(&mut self, spec_index: usize, dropped: &[u32], grown: &[u32]) {
+        if !self.enabled {
+            return;
+        }
+        let Some(&slot) = self.spec_to_slot.get(spec_index) else { return };
+        if slot == usize::MAX {
+            return;
+        }
+        let l = &mut self.layers[slot];
+        l.visited = true;
+        // Pass 1 — grown. A grown index whose active bit is still set
+        // is also in `dropped` (drop+regrow): mark it cancelled. A
+        // clear bit is a genuine addition: set it and bump degrees.
+        let mut added = 0u64;
+        for &g in grown {
+            let (w, b) = ((g / 64) as usize, g % 64);
+            if l.active[w] >> b & 1 == 1 {
+                l.cancel[w] |= 1u64 << b;
+            } else {
+                l.active[w] |= 1u64 << b;
+                let (r, c) = (g as usize / l.cols, g as usize % l.cols);
+                l.row_deg[r] += 1;
+                l.col_deg[c] += 1;
+                if l.col_added[c] == 0 && l.col_removed[c] == 0 {
+                    l.touched_cols.push(c as u32);
+                }
+                l.col_added[c] += 1;
+                added += 1;
+            }
+        }
+        // Pass 2 — dropped, skipping cancels. A genuine removal clears
+        // the active bit and, if present, the survivor bit.
+        let mut removed = 0u64;
+        for &d in dropped {
+            let (w, b) = ((d / 64) as usize, d % 64);
+            if l.cancel[w] >> b & 1 == 1 {
+                continue;
+            }
+            l.active[w] &= !(1u64 << b);
+            if l.survivor[w] >> b & 1 == 1 {
+                l.survivor[w] &= !(1u64 << b);
+                l.survivor_count -= 1;
+            }
+            let (r, c) = (d as usize / l.cols, d as usize % l.cols);
+            l.row_deg[r] -= 1;
+            l.col_deg[c] -= 1;
+            if l.col_added[c] == 0 && l.col_removed[c] == 0 {
+                l.touched_cols.push(c as u32);
+            }
+            l.col_removed[c] += 1;
+            removed += 1;
+        }
+        // Pass 3 — clear the cancel marks (only bits we set).
+        for &g in grown {
+            l.cancel[(g / 64) as usize] &= !(1u64 << (g % 64));
+        }
+        // Whole-layer set distance from exact counts: with A = previous
+        // active set and B = new, |A∩B| = |A| − removed and |A∪B| =
+        // |A| + added.
+        let nnz_prev = l.nnz_cur;
+        l.nnz_cur = nnz_prev + added - removed;
+        let union = nnz_prev + added;
+        let jac = if union == 0 {
+            0.0
+        } else {
+            1.0 - (nnz_prev - removed) as f64 / union as f64
+        };
+        // NNSTD-style consecutive distance: per-column Jaccard between
+        // the column's previous and new incoming sets, averaged over
+        // ALL columns — untouched ones contribute 0 and are skipped.
+        let mut nnstd_sum = 0.0f64;
+        for &tc in &l.touched_cols {
+            let c = tc as usize;
+            let (ca, cr) = (l.col_added[c] as u64, l.col_removed[c] as u64);
+            let d_new = l.col_deg[c] as u64;
+            let d_prev = d_new - ca + cr;
+            let cu = d_prev + ca;
+            if cu > 0 {
+                nnstd_sum += 1.0 - (d_prev - cr) as f64 / cu as f64;
+            }
+            l.col_added[c] = 0;
+            l.col_removed[c] = 0;
+        }
+        l.touched_cols.clear();
+        let nnstd = if l.cols == 0 { 0.0 } else { nnstd_sum / l.cols as f64 };
+        let churn = if l.nnz_cur == 0 {
+            0.0
+        } else {
+            added as f32 / l.nnz_cur as f32
+        };
+        l.push_row(dropped.len() as u32, grown.len() as u32, churn, jac as f32, nnstd as f32);
+        self.upd_removed += removed;
+        self.upd_added += added;
+    }
+
+    /// Close one ΔT update: layers the engine skipped (k == 0, dense,
+    /// or empty) get an explicit no-change row so every series stays
+    /// parallel to `update_steps`, and the registry metrics are bumped.
+    pub fn end_update(&mut self, step: usize) {
+        if !self.enabled {
+            return;
+        }
+        for l in self.layers.iter_mut() {
+            if !l.visited {
+                l.push_row(0, 0, 0.0, 0.0, 0.0);
+            }
+            l.visited = false;
+            let churn_pm = (l.churn.last().copied().unwrap_or(0.0) * 1000.0) as u64;
+            let surv_pm = (l.survivor_frac.last().copied().unwrap_or(0.0) * 1000.0) as u64;
+            crate::obs_histogram!("topo.churn_permille").record(churn_pm);
+            crate::obs_histogram!("topo.survivor_permille").record(surv_pm);
+        }
+        self.update_steps.push(step.min(u32::MAX as usize) as u32);
+        crate::obs_counter!("topo.updates").inc();
+        crate::obs_counter!("topo.removed").add(self.upd_removed);
+        crate::obs_counter!("topo.added").add(self.upd_added);
+        self.upd_removed = 0;
+        self.upd_added = 0;
+    }
+
+    /// Harvest the recorded series. `None` for a disabled recorder.
+    pub fn finish(self) -> Option<TopoMetrics> {
+        if !self.enabled {
+            return None;
+        }
+        let layers = self
+            .layers
+            .into_iter()
+            .map(|l| LayerTopoMetrics {
+                spec: l.spec,
+                name: l.name,
+                rows: l.rows,
+                cols: l.cols,
+                nnz0: l.nnz0,
+                nnz: l.nnz,
+                dropped: l.dropped,
+                grown: l.grown,
+                churn: l.churn,
+                jaccard: l.jaccard,
+                nnstd: l.nnstd,
+                survivor_frac: l.survivor_frac,
+                in_deg_final: l.in_deg_hist.last().copied().unwrap_or(hist_of(&l.col_deg)),
+                out_deg_final: l.out_deg_hist.last().copied().unwrap_or(hist_of(&l.row_deg)),
+                in_deg_hist: l.in_deg_hist,
+                out_deg_hist: l.out_deg_hist,
+                final_active: l.active,
+            })
+            .collect();
+        Some(TopoMetrics { update_steps: self.update_steps, layers })
+    }
+}
+
+/// The harvested per-run topology metrics (`RunResult.topo`).
+#[derive(Clone, Debug, Default)]
+pub struct TopoMetrics {
+    /// Training step of each recorded mask update; every layer series
+    /// below is parallel to this.
+    pub update_steps: Vec<u32>,
+    pub layers: Vec<LayerTopoMetrics>,
+}
+
+/// One layer's recorded series (fields documented in the module docs).
+#[derive(Clone, Debug, Default)]
+pub struct LayerTopoMetrics {
+    pub spec: usize,
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz0: u64,
+    pub nnz: Vec<u64>,
+    pub dropped: Vec<u32>,
+    pub grown: Vec<u32>,
+    pub churn: Vec<f32>,
+    pub jaccard: Vec<f32>,
+    pub nnstd: Vec<f32>,
+    pub survivor_frac: Vec<f32>,
+    pub in_deg_hist: Vec<[u32; DEG_BUCKETS]>,
+    pub out_deg_hist: Vec<[u32; DEG_BUCKETS]>,
+    pub in_deg_final: [u32; DEG_BUCKETS],
+    pub out_deg_final: [u32; DEG_BUCKETS],
+    /// Final active-set bitmap, for cross-seed [`nnstd_distance`].
+    pub final_active: Vec<u64>,
+}
+
+/// NNSTD-style distance between two masks of the SAME layer shape from
+/// DIFFERENT runs (e.g. final masks of two seeds): per-column (output
+/// neuron) incoming-connection bitsets, all-pairs Jaccard distances,
+/// greedy minimum-distance neuron matching (neurons of different runs
+/// have no canonical correspondence — Topological Insights aligns them
+/// by similarity), and the mean matched distance. 0 = identical up to
+/// neuron permutation, → 1 = no overlap. Cold path: allocates freely.
+pub fn nnstd_distance(rows: usize, cols: usize, a: &[u64], b: &[u64]) -> f64 {
+    if cols == 0 || rows == 0 {
+        return 0.0;
+    }
+    let words = rows.div_ceil(64);
+    let col_sets = |bits: &[u64]| -> Vec<Vec<u64>> {
+        let mut sets = vec![vec![0u64; words]; cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let i = r * cols + c;
+                if bits.get(i / 64).is_some_and(|w| w >> (i % 64) & 1 == 1) {
+                    sets[c][r / 64] |= 1u64 << (r % 64);
+                }
+            }
+        }
+        sets
+    };
+    let (sa, sb) = (col_sets(a), col_sets(b));
+    let mut pairs: Vec<(f64, u32, u32)> = Vec::with_capacity(cols * cols);
+    for i in 0..cols {
+        for j in 0..cols {
+            let (mut inter, mut union) = (0u64, 0u64);
+            for w in 0..words {
+                inter += (sa[i][w] & sb[j][w]).count_ones() as u64;
+                union += (sa[i][w] | sb[j][w]).count_ones() as u64;
+            }
+            let d = if union == 0 { 0.0 } else { 1.0 - inter as f64 / union as f64 };
+            pairs.push((d, i as u32, j as u32));
+        }
+    }
+    // Deterministic greedy matching: best available pair first, ties
+    // broken by (i, j).
+    pairs.sort_by(|x, y| {
+        x.0.partial_cmp(&y.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(x.1.cmp(&y.1))
+            .then(x.2.cmp(&y.2))
+    });
+    let (mut used_a, mut used_b) = (vec![false; cols], vec![false; cols]);
+    let (mut sum, mut matched) = (0.0f64, 0usize);
+    for (d, i, j) in pairs {
+        if used_a[i as usize] || used_b[j as usize] {
+            continue;
+        }
+        used_a[i as usize] = true;
+        used_b[j as usize] = true;
+        sum += d;
+        matched += 1;
+        if matched == cols {
+            break;
+        }
+    }
+    sum / cols as f64
+}
+
+// ---------------------------------------------------------------------------
+// BENCH_topology_metrics.json: record serialization.
+// ---------------------------------------------------------------------------
+
+/// Run-identifying fields of one BENCH_topology_metrics.json record.
+pub struct TopoRunMeta<'a> {
+    pub model: &'a str,
+    /// Method label — the strategy axis ("rigl" | "set" | "snfs" | …).
+    pub strategy: &'a str,
+    /// Effective grow criterion label ("gradient" | … | "static").
+    pub grow: &'a str,
+    pub sparsity: f64,
+    pub decay: &'a str,
+    pub delta_t: usize,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+fn join_u64(v: &[u64]) -> String {
+    v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn join_u32(v: &[u32]) -> String {
+    v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn fmt_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".into()
+    }
+}
+
+fn join_f32(v: &[f32]) -> String {
+    v.iter().map(|&x| fmt_f64(x as f64)).collect::<Vec<_>>().join(",")
+}
+
+fn join_f64(v: &[f64]) -> String {
+    v.iter().map(|&x| fmt_f64(x)).collect::<Vec<_>>().join(",")
+}
+
+/// One JSON-lines record for `BENCH_topology_metrics.json` (hand-rolled
+/// like every other BENCH writer — no serde in this workspace).
+/// `cross_seed_nnstd` carries per-layer distances of this run's final
+/// masks to the cell's reference seed (grid runs; `None` for single
+/// runs). Layer names are spec identifiers and need no JSON escaping.
+pub fn record_json(
+    meta: &TopoRunMeta<'_>,
+    m: &TopoMetrics,
+    cross_seed_nnstd: Option<&[f64]>,
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(1024);
+    let _ = write!(
+        out,
+        "{{\"name\":\"topo/{}/{}\",\"model\":\"{}\",\"strategy\":\"{}\",\"grow\":\"{}\",\
+         \"sparsity\":{},\"decay\":\"{}\",\"delta_t\":{},\"steps\":{},\"seed\":{},\
+         \"update_steps\":[{}],\"layers\":[",
+        meta.model,
+        meta.strategy,
+        meta.model,
+        meta.strategy,
+        meta.grow,
+        fmt_f64(meta.sparsity),
+        meta.decay,
+        meta.delta_t,
+        meta.steps,
+        meta.seed,
+        join_u32(&m.update_steps),
+    );
+    for (i, l) in m.layers.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"spec\":\"{}\",\"rows\":{},\"cols\":{},\"nnz0\":{},\"nnz\":[{}],\
+             \"dropped\":[{}],\"grown\":[{}],\"churn\":[{}],\"jaccard\":[{}],\
+             \"nnstd\":[{}],\"survivor_frac\":[{}],\"in_deg_final\":[{}],\
+             \"out_deg_final\":[{}]}}",
+            l.name,
+            l.rows,
+            l.cols,
+            l.nnz0,
+            join_u64(&l.nnz),
+            join_u32(&l.dropped),
+            join_u32(&l.grown),
+            join_f32(&l.churn),
+            join_f32(&l.jaccard),
+            join_f32(&l.nnstd),
+            join_f32(&l.survivor_frac),
+            join_u32(&l.in_deg_final),
+            join_u32(&l.out_deg_final),
+        );
+    }
+    let _ = write!(
+        out,
+        "],\"cross_seed_nnstd\":[{}],\"git_rev\":\"{}\",\"unix_ms\":{}}}",
+        join_f64(cross_seed_nnstd.unwrap_or(&[])),
+        crate::util::git_rev(),
+        crate::util::unix_ms(),
+    );
+    out
+}
+
+// ---------------------------------------------------------------------------
+// `repro topo-report`: minimal JSON parsing + comparison tables.
+// ---------------------------------------------------------------------------
+
+/// Minimal JSON value — std-only reader for the records this module
+/// writes (plus tolerant handling of the schema-note first line).
+#[derive(Clone, Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], p: &mut usize) {
+    while *p < b.len() && matches!(b[*p], b' ' | b'\t' | b'\n' | b'\r') {
+        *p += 1;
+    }
+}
+
+fn parse_value(b: &[u8], p: &mut usize) -> Option<Json> {
+    skip_ws(b, p);
+    match *b.get(*p)? {
+        b'{' => {
+            *p += 1;
+            let mut obj = Vec::new();
+            skip_ws(b, p);
+            if b.get(*p) == Some(&b'}') {
+                *p += 1;
+                return Some(Json::Obj(obj));
+            }
+            loop {
+                skip_ws(b, p);
+                let Json::Str(key) = parse_value(b, p)? else { return None };
+                skip_ws(b, p);
+                if b.get(*p) != Some(&b':') {
+                    return None;
+                }
+                *p += 1;
+                obj.push((key, parse_value(b, p)?));
+                skip_ws(b, p);
+                match b.get(*p)? {
+                    b',' => *p += 1,
+                    b'}' => {
+                        *p += 1;
+                        return Some(Json::Obj(obj));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        b'[' => {
+            *p += 1;
+            let mut arr = Vec::new();
+            skip_ws(b, p);
+            if b.get(*p) == Some(&b']') {
+                *p += 1;
+                return Some(Json::Arr(arr));
+            }
+            loop {
+                arr.push(parse_value(b, p)?);
+                skip_ws(b, p);
+                match b.get(*p)? {
+                    b',' => *p += 1,
+                    b']' => {
+                        *p += 1;
+                        return Some(Json::Arr(arr));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        b'"' => {
+            *p += 1;
+            let mut s = String::new();
+            loop {
+                match *b.get(*p)? {
+                    b'"' => {
+                        *p += 1;
+                        return Some(Json::Str(s));
+                    }
+                    b'\\' => {
+                        *p += 1;
+                        match *b.get(*p)? {
+                            b'"' => s.push('"'),
+                            b'\\' => s.push('\\'),
+                            b'/' => s.push('/'),
+                            b'n' => s.push('\n'),
+                            b't' => s.push('\t'),
+                            b'r' => s.push('\r'),
+                            b'b' => s.push('\u{8}'),
+                            b'f' => s.push('\u{c}'),
+                            b'u' => {
+                                let hex = b.get(*p + 1..*p + 5)?;
+                                let code =
+                                    u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16)
+                                        .ok()?;
+                                s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                                *p += 4;
+                            }
+                            _ => return None,
+                        }
+                        *p += 1;
+                    }
+                    _ => {
+                        // Copy the raw UTF-8 byte run up to the next
+                        // quote or escape.
+                        let start = *p;
+                        while *p < b.len() && b[*p] != b'"' && b[*p] != b'\\' {
+                            *p += 1;
+                        }
+                        s.push_str(std::str::from_utf8(&b[start..*p]).ok()?);
+                    }
+                }
+            }
+        }
+        b't' => {
+            if b.get(*p..*p + 4)? == b"true" {
+                *p += 4;
+                Some(Json::Bool(true))
+            } else {
+                None
+            }
+        }
+        b'f' => {
+            if b.get(*p..*p + 5)? == b"false" {
+                *p += 5;
+                Some(Json::Bool(false))
+            } else {
+                None
+            }
+        }
+        b'n' => {
+            if b.get(*p..*p + 4)? == b"null" {
+                *p += 4;
+                Some(Json::Null)
+            } else {
+                None
+            }
+        }
+        _ => {
+            let start = *p;
+            while *p < b.len()
+                && matches!(b[*p], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *p += 1;
+            }
+            std::str::from_utf8(&b[start..*p]).ok()?.parse::<f64>().ok().map(Json::Num)
+        }
+    }
+}
+
+fn parse_json(s: &str) -> Option<Json> {
+    let b = s.as_bytes();
+    let mut p = 0;
+    let v = parse_value(b, &mut p)?;
+    skip_ws(b, &mut p);
+    (p == b.len()).then_some(v)
+}
+
+/// One parsed BENCH_topology_metrics.json record.
+#[derive(Clone, Debug, Default)]
+pub struct TopoRecord {
+    pub model: String,
+    pub strategy: String,
+    pub grow: String,
+    pub sparsity: f64,
+    pub decay: String,
+    pub delta_t: usize,
+    pub steps: usize,
+    pub seed: u64,
+    pub update_steps: Vec<u32>,
+    pub layers: Vec<TopoRecordLayer>,
+    /// Per-layer distance to the cell's reference seed; empty for
+    /// single runs.
+    pub cross_seed_nnstd: Vec<f64>,
+}
+
+/// One layer's series as read back from a record.
+#[derive(Clone, Debug, Default)]
+pub struct TopoRecordLayer {
+    pub spec: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz0: u64,
+    pub nnz: Vec<u64>,
+    pub dropped: Vec<u32>,
+    pub grown: Vec<u32>,
+    pub churn: Vec<f64>,
+    pub jaccard: Vec<f64>,
+    pub nnstd: Vec<f64>,
+    pub survivor_frac: Vec<f64>,
+    pub in_deg_final: Vec<u32>,
+    pub out_deg_final: Vec<u32>,
+}
+
+fn num_arr(v: Option<&Json>) -> Vec<f64> {
+    v.and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default()
+}
+
+/// Parse the JSON-lines file contents, skipping the schema-note line
+/// and anything else that is not a topology record.
+pub fn parse_records(text: &str) -> Vec<TopoRecord> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some(v) = parse_json(line) else { continue };
+        let Some(layers) = v.get("layers").and_then(Json::as_arr) else { continue };
+        if v.get("strategy").is_none() {
+            continue;
+        }
+        let rec = TopoRecord {
+            model: v.get("model").and_then(Json::as_str).unwrap_or("?").to_string(),
+            strategy: v.get("strategy").and_then(Json::as_str).unwrap_or("?").to_string(),
+            grow: v.get("grow").and_then(Json::as_str).unwrap_or("?").to_string(),
+            sparsity: v.get("sparsity").and_then(Json::as_f64).unwrap_or(0.0),
+            decay: v.get("decay").and_then(Json::as_str).unwrap_or("?").to_string(),
+            delta_t: v.get("delta_t").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+            steps: v.get("steps").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+            seed: v.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            update_steps: num_arr(v.get("update_steps")).iter().map(|&x| x as u32).collect(),
+            layers: layers
+                .iter()
+                .map(|l| TopoRecordLayer {
+                    spec: l.get("spec").and_then(Json::as_str).unwrap_or("?").to_string(),
+                    rows: l.get("rows").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+                    cols: l.get("cols").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+                    nnz0: l.get("nnz0").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+                    nnz: num_arr(l.get("nnz")).iter().map(|&x| x as u64).collect(),
+                    dropped: num_arr(l.get("dropped")).iter().map(|&x| x as u32).collect(),
+                    grown: num_arr(l.get("grown")).iter().map(|&x| x as u32).collect(),
+                    churn: num_arr(l.get("churn")),
+                    jaccard: num_arr(l.get("jaccard")),
+                    nnstd: num_arr(l.get("nnstd")),
+                    survivor_frac: num_arr(l.get("survivor_frac")),
+                    in_deg_final: num_arr(l.get("in_deg_final"))
+                        .iter()
+                        .map(|&x| x as u32)
+                        .collect(),
+                    out_deg_final: num_arr(l.get("out_deg_final"))
+                        .iter()
+                        .map(|&x| x as u32)
+                        .collect(),
+                })
+                .collect(),
+            cross_seed_nnstd: num_arr(v.get("cross_seed_nnstd")),
+        };
+        out.push(rec);
+    }
+    out
+}
+
+fn mean(v: impl Iterator<Item = f64>) -> Option<f64> {
+    let (mut sum, mut n) = (0.0, 0usize);
+    for x in v {
+        sum += x;
+        n += 1;
+    }
+    (n > 0).then(|| sum / n as f64)
+}
+
+fn fmt_opt(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.prec$}"),
+        None => "-".into(),
+    }
+}
+
+/// Render per-strategy comparison tables from parsed records: one row
+/// per (model, strategy, grow, sparsity, decay) cell, aggregated
+/// across seeds — churn at the first vs. last update (the decay
+/// schedule made visible), final survivor fraction and the half-life
+/// update index (first update where survivor_frac < 0.5), the mean
+/// consecutive NNSTD distance, the mean cross-seed NNSTD, and final
+/// in-degree p50/p90 (merged across layers).
+pub fn render_report(records: &[TopoRecord]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    if records.is_empty() {
+        out.push_str("no topology records found\n");
+        return out;
+    }
+    // Group by cell identity; keys sorted for a diff-stable report.
+    let mut keys: Vec<(String, String, String, String, String)> = records
+        .iter()
+        .map(|r| {
+            (
+                r.model.clone(),
+                format!("{:.4}", r.sparsity),
+                r.strategy.clone(),
+                r.grow.clone(),
+                r.decay.clone(),
+            )
+        })
+        .collect();
+    keys.sort();
+    keys.dedup();
+    let _ = writeln!(
+        out,
+        "{:<10} {:<8} {:<10} {:>6} {:<8} {:>5} {:>15} {:>9} {:>6} {:>10} {:>10} {:>12}",
+        "model",
+        "strategy",
+        "grow",
+        "S",
+        "decay",
+        "seeds",
+        "churn u1->uN",
+        "survivor",
+        "t1/2",
+        "nnstd-step",
+        "nnstd-seed",
+        "indeg p50/90"
+    );
+    for (model, s_key, strategy, grow, decay) in keys {
+        let group: Vec<&TopoRecord> = records
+            .iter()
+            .filter(|r| {
+                r.model == model
+                    && format!("{:.4}", r.sparsity) == s_key
+                    && r.strategy == strategy
+                    && r.grow == grow
+                    && r.decay == decay
+            })
+            .collect();
+        let seeds = group.len();
+        let layer_iter = || group.iter().flat_map(|r| r.layers.iter());
+        let churn_first = mean(layer_iter().filter_map(|l| l.churn.first().copied()));
+        let churn_last = mean(layer_iter().filter_map(|l| l.churn.last().copied()));
+        let survivor = mean(layer_iter().filter_map(|l| l.survivor_frac.last().copied()));
+        // Half-life: first update index where the survivor fraction
+        // crosses below 0.5, averaged over layers that cross at all.
+        let half_life = mean(layer_iter().filter_map(|l| {
+            l.survivor_frac.iter().position(|&f| f < 0.5).map(|u| u as f64)
+        }));
+        let nnstd_step = mean(layer_iter().flat_map(|l| l.nnstd.iter().copied()));
+        let nnstd_seed =
+            mean(group.iter().flat_map(|r| r.cross_seed_nnstd.iter().copied()));
+        let mut in_deg = vec![0u32; DEG_BUCKETS];
+        for l in layer_iter() {
+            for (i, &c) in l.in_deg_final.iter().take(DEG_BUCKETS).enumerate() {
+                in_deg[i] = in_deg[i].saturating_add(c);
+            }
+        }
+        let sparsity: f64 = s_key.parse().unwrap_or(0.0);
+        let _ = writeln!(
+            out,
+            "{:<10} {:<8} {:<10} {:>6.2} {:<8} {:>5} {:>15} {:>9} {:>6} {:>10} {:>10} {:>12}",
+            model,
+            strategy,
+            grow,
+            sparsity,
+            decay,
+            seeds,
+            format!("{}->{}", fmt_opt(churn_first, 3), fmt_opt(churn_last, 3)),
+            fmt_opt(survivor, 3),
+            fmt_opt(half_life, 1),
+            fmt_opt(nnstd_step, 4),
+            fmt_opt(nnstd_seed, 4),
+            format!("{}/{}", deg_percentile(&in_deg, 0.50), deg_percentile(&in_deg, 0.90)),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ElemType, Kind, ModelDef, Optimizer, ParamSpec, Task};
+
+    fn toy_def(rows: usize, cols: usize) -> ModelDef {
+        ModelDef {
+            name: "topo_toy".into(),
+            backend: "jnp".into(),
+            optimizer: Optimizer::SgdMomentum,
+            task: Task::Classify,
+            input_ty: ElemType::F32,
+            input_shape: vec![1, rows],
+            target_shape: vec![1],
+            hyper: vec![],
+            artifacts: vec![],
+            specs: vec![ParamSpec {
+                name: "w".into(),
+                kind: Kind::Fc,
+                sparsifiable: true,
+                first_layer: false,
+                flops: 0.0,
+                shape: vec![rows, cols],
+            }],
+        }
+    }
+
+    fn masks_with(def: &ModelDef, active: &[usize]) -> ParamSet {
+        let mut m = ParamSet::zeros(def);
+        for &i in active {
+            m.tensors[0][i] = 1.0;
+        }
+        m
+    }
+
+    #[test]
+    fn deg_bucket_matches_obs_rule() {
+        assert_eq!(deg_bucket(0), 0);
+        assert_eq!(deg_bucket(1), 0);
+        assert_eq!(deg_bucket(2), 1);
+        assert_eq!(deg_bucket(3), 1);
+        assert_eq!(deg_bucket(4), 2);
+        assert_eq!(deg_bucket(1023), 9);
+        assert_eq!(deg_bucket(1024), 10);
+        assert_eq!(deg_bucket(u32::MAX), DEG_BUCKETS - 1);
+        assert_eq!(deg_bucket_ceil(0), 1);
+        assert_eq!(deg_bucket_ceil(1), 3);
+        assert_eq!(deg_bucket_ceil(9), 1023);
+    }
+
+    #[test]
+    fn recorder_tracks_one_update_exactly() {
+        // 4×4 layer, active {0, 5, 10, 15} (the diagonal). Update:
+        // drop {0, 5}, grow {5, 1}: 5 cancels, so net change is
+        // remove 0, add 1 — both in column-set terms on cols 0 and 1.
+        let def = toy_def(4, 4);
+        let masks = masks_with(&def, &[0, 5, 10, 15]);
+        let mut rec = TopoRecorder::new(&def, &masks, 4);
+        rec.record_layer(0, &[0, 5], &[5, 1]);
+        rec.end_update(10);
+        let m = rec.finish().unwrap();
+        assert_eq!(m.update_steps, vec![10]);
+        let l = &m.layers[0];
+        assert_eq!(l.nnz0, 4);
+        assert_eq!(l.nnz, vec![4]); // balanced: one out, one in
+        assert_eq!(l.dropped, vec![2]); // raw visitor counts
+        assert_eq!(l.grown, vec![2]);
+        // churn = added / nnz = 1/4.
+        assert!((l.churn[0] - 0.25).abs() < 1e-6);
+        // Jaccard: |A∩B| = 3, |A∪B| = 5 → 1 − 3/5 = 0.4.
+        assert!((l.jaccard[0] - 0.4).abs() < 1e-6);
+        // Survivors: index 0 lost, 5 kept (cancelled drop) → 3/4.
+        assert!((l.survivor_frac[0] - 0.75).abs() < 1e-6);
+        // NNSTD: col 0 {r0} → {} d=1; col 1 {} → {r0} d=1; cols 2,3
+        // untouched d=0 → mean = 0.5.
+        assert!((l.nnstd[0] - 0.5).abs() < 1e-6, "nnstd={}", l.nnstd[0]);
+        // Final active = {1, 5, 10, 15}.
+        assert_eq!(l.final_active[0], (1 << 1) | (1 << 5) | (1 << 10) | (1 << 15));
+    }
+
+    #[test]
+    fn unvisited_layers_get_no_change_rows() {
+        let def = toy_def(4, 4);
+        let masks = masks_with(&def, &[0, 5]);
+        let mut rec = TopoRecorder::new(&def, &masks, 4);
+        // Engine skipped the layer entirely this update (k == 0).
+        rec.end_update(5);
+        rec.record_layer(0, &[0], &[2]);
+        rec.end_update(10);
+        let m = rec.finish().unwrap();
+        assert_eq!(m.update_steps, vec![5, 10]);
+        let l = &m.layers[0];
+        assert_eq!(l.nnz, vec![2, 2]);
+        assert_eq!(l.dropped, vec![0, 1]);
+        assert_eq!(l.churn, vec![0.0, 0.5]);
+        assert_eq!(l.survivor_frac, vec![1.0, 0.5]);
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let mut rec = TopoRecorder::disabled();
+        rec.record_layer(0, &[1], &[2]);
+        rec.end_update(1);
+        assert!(!rec.enabled());
+        assert!(rec.finish().is_none());
+    }
+
+    #[test]
+    fn nnstd_identical_masks_is_zero_disjoint_is_one() {
+        // 4×2: columns interleave (i = r*2 + c).
+        let a = vec![0b0101_0101u64]; // col 0 of every row
+        let b = vec![0b1010_1010u64]; // col 1 of every row
+        assert_eq!(nnstd_distance(4, 2, &a, &a), 0.0);
+        // Matching maps a-col0 ↔ b-col1 (identical sets, distance 0)
+        // and a-col1 (empty) ↔ b-col0: empty vs {r0..r3} → 1.0. Mean
+        // over 2 cols = 0.5.
+        let d = nnstd_distance(4, 2, &a, &b);
+        assert!((d - 0.5).abs() < 1e-9, "d={d}");
+        // Fully disjoint per-neuron sets with no permutation escape:
+        // a = rows {0,1} everywhere, b = rows {2,3} everywhere.
+        let a2 = vec![0b0000_1111u64];
+        let b2 = vec![0b1111_0000u64];
+        assert_eq!(nnstd_distance(4, 2, &a2, &b2), 1.0);
+    }
+
+    #[test]
+    fn record_roundtrips_through_parser() {
+        let def = toy_def(4, 4);
+        let masks = masks_with(&def, &[0, 5, 10, 15]);
+        let mut rec = TopoRecorder::new(&def, &masks, 4);
+        rec.record_layer(0, &[0], &[1]);
+        rec.end_update(10);
+        rec.record_layer(0, &[1], &[0]);
+        rec.end_update(20);
+        let m = rec.finish().unwrap();
+        let meta = TopoRunMeta {
+            model: "toy",
+            strategy: "rigl",
+            grow: "gradient",
+            sparsity: 0.75,
+            decay: "cosine",
+            delta_t: 10,
+            steps: 30,
+            seed: 7,
+        };
+        let json = record_json(&meta, &m, Some(&[0.125]));
+        let recs = parse_records(&format!(
+            "{{\"note\": \"schema line, not a record\"}}\n{json}\n"
+        ));
+        assert_eq!(recs.len(), 1, "note line must be skipped");
+        let r = &recs[0];
+        assert_eq!(r.model, "toy");
+        assert_eq!(r.strategy, "rigl");
+        assert_eq!(r.grow, "gradient");
+        assert!((r.sparsity - 0.75).abs() < 1e-9);
+        assert_eq!(r.update_steps, vec![10, 20]);
+        assert_eq!(r.layers.len(), 1);
+        let l = &r.layers[0];
+        assert_eq!(l.spec, "w");
+        assert_eq!(l.nnz, vec![4, 4]);
+        assert_eq!(l.dropped, vec![1, 1]);
+        assert_eq!(l.in_deg_final.len(), DEG_BUCKETS);
+        assert_eq!(r.cross_seed_nnstd, vec![0.125]);
+        // And the report renders the cell.
+        let report = render_report(&recs);
+        assert!(report.contains("rigl"), "{report}");
+        assert!(report.contains("gradient"), "{report}");
+        assert!(report.contains("cosine"), "{report}");
+    }
+
+    #[test]
+    fn json_parser_handles_escapes_and_nesting() {
+        let v = parse_json(r#"{"a": [1, 2.5, -3e2], "b": {"c": "x\ny"}, "d": true, "e": null}"#)
+            .unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[2].as_f64(), Some(-300.0));
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_str(), Some("x\ny"));
+        assert_eq!(v.get("d"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("e"), Some(&Json::Null));
+        assert!(parse_json("{\"unterminated\": ").is_none());
+        assert!(parse_json("").is_none());
+    }
+
+    #[test]
+    fn report_on_empty_records_is_graceful() {
+        assert!(render_report(&[]).contains("no topology records"));
+    }
+}

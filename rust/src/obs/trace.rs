@@ -156,6 +156,22 @@ impl Drop for SpanGuard {
     }
 }
 
+/// Totals across every thread's ring: `(retained, dropped)` span
+/// counts. Cold path — `metrics::render` folds these into the standard
+/// `obs/...` dump so ring truncation is visible without opening the
+/// trace file.
+pub fn ring_totals() -> (u64, u64) {
+    let rings: Vec<Arc<Mutex<Ring>>> =
+        RINGS.lock().unwrap_or_else(PoisonError::into_inner).clone();
+    let (mut retained, mut dropped) = (0u64, 0u64);
+    for ring in &rings {
+        let ring = ring.lock().unwrap_or_else(PoisonError::into_inner);
+        retained += ring.buf.len() as u64;
+        dropped += ring.dropped;
+    }
+    (retained, dropped)
+}
+
 /// Export every thread's retained spans as Chrome trace-event JSON.
 /// Events are sorted by start time; `pid` is constant 1 and `tid` is
 /// the per-thread ring id. Dropped-span counts are emitted as metadata

@@ -146,6 +146,24 @@ struct Stats {
     batch_max: AtomicU64,
 }
 
+impl Stats {
+    /// Count one shed (BUSY): the per-batcher atomic (the INFO STATS
+    /// source of truth — per server, survives `--no-obs`) and the
+    /// global `obs/serve.shed` registry counter move together here so
+    /// `metrics::render()` and INFO can never disagree.
+    fn count_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!("serve.shed").inc();
+    }
+
+    /// Count one deadline-expired drop, same dual-home contract as
+    /// [`Stats::count_shed`] (`obs/serve.expired`).
+    fn count_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!("serve.expired").inc();
+    }
+}
+
 /// The queue + worker pool. Dropping the batcher closes the queue and
 /// joins the workers (in-flight requests are answered first).
 pub struct Batcher {
@@ -220,7 +238,7 @@ impl Batcher {
     ) -> Receiver<InferResult> {
         let (resp, rx) = std::sync::mpsc::sync_channel(1);
         if faults::hit(Site::Enqueue) {
-            self.stats.shed.fetch_add(1, Ordering::Relaxed);
+            self.stats.count_shed();
             let _ = resp.try_send(Err(Reject::new(
                 RejectKind::Busy,
                 "server busy (fault-inject: enqueue)",
@@ -235,7 +253,7 @@ impl Batcher {
                     self.stats.depth.fetch_add(1, Ordering::Relaxed);
                 }
                 Err(TrySendError::Full(job)) => {
-                    self.stats.shed.fetch_add(1, Ordering::Relaxed);
+                    self.stats.count_shed();
                     let depth = self.stats.depth.load(Ordering::Relaxed);
                     let _ = job.resp.try_send(Err(Reject::new(
                         RejectKind::Busy,
@@ -285,7 +303,7 @@ impl Batcher {
     /// connection gate), so INFO's `shed` is the one total the operator
     /// watches.
     pub(crate) fn count_external_shed(&self) {
-        self.stats.shed.fetch_add(1, Ordering::Relaxed);
+        self.stats.count_shed();
     }
 
     /// Record one end-to-end request latency (µs), observed by the
@@ -403,7 +421,7 @@ fn run_batch(
     for job in pending.drain(..) {
         stats.queue_wait_us.record(now.duration_since(job.enqueued).as_micros() as u64);
         if job.deadline.is_some_and(|d| d < now) {
-            stats.expired.fetch_add(1, Ordering::Relaxed);
+            stats.count_expired();
             let _ = job.resp.try_send(Err(Reject::new(
                 RejectKind::Expired,
                 "deadline expired while queued",

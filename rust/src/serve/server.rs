@@ -139,11 +139,24 @@ impl Default for ServeConfig {
 #[derive(Default)]
 pub(crate) struct ServeStats {
     /// Hot-reload attempts that failed (old model kept serving).
+    /// Bump via [`ServeStats::count_reload_failure`] only, which keeps
+    /// this INFO-sampled atomic and the `obs/serve.reload_failures`
+    /// registry counter in lockstep.
     pub reload_failures: AtomicU64,
     /// Connections currently admitted.
     pub active_conns: AtomicUsize,
     /// Set once drain begins: finish in-flight, accept no one.
     pub draining: AtomicBool,
+}
+
+impl ServeStats {
+    /// Count one failed hot reload — per-server atomic (INFO STATS)
+    /// plus the global registry counter, incremented together so
+    /// `metrics::render()` and INFO agree.
+    pub(crate) fn count_reload_failure(&self) {
+        self.reload_failures.fetch_add(1, Ordering::Relaxed);
+        crate::obs_counter!("serve.reload_failures").inc();
+    }
 }
 
 /// Decrements `active_conns` when a connection thread exits on ANY
@@ -732,7 +745,7 @@ fn watch_loop(
                 handle.swap(m);
             }
             Err(e) => {
-                stats.reload_failures.fetch_add(1, Ordering::Relaxed);
+                stats.count_reload_failure();
                 eprintln!("serve: reload of {path:?} failed, keeping old model: {e:#}");
             }
         }

@@ -16,6 +16,13 @@
 //!    their optimizer moments are reset. Dropped weights and moments are
 //!    zeroed.
 //!
+//! The grow step is pluggable: [`GrowCriterion`] abstracts "pick `k` of
+//! the eligible positions", [`Grow`] is the built-in implementation
+//! covering the whole strategy zoo (gradient / momentum / random /
+//! magnitude), and [`GrowOverride`] (`--grow` on the CLI) swaps the
+//! criterion under any dynamic method so the topology analytics in
+//! `obs::topo` have a strategy axis to compare.
+//!
 //! ## The allocation-free hot path
 //!
 //! `update_masks_scratch` is the coordinator's inner loop: one call per
@@ -87,6 +94,18 @@ impl Method {
         matches!(self, Method::Set | Method::Snfs | Method::Rigl)
     }
 
+    /// The native grow criterion of a dynamic method (`None` for the
+    /// static family). `TrainConfig::effective_grow` starts here and
+    /// applies the `--grow` override on top.
+    pub fn native_grow(&self) -> Option<GrowKind> {
+        match self {
+            Method::Rigl => Some(GrowKind::Gradient),
+            Method::Snfs => Some(GrowKind::Momentum),
+            Method::Set => Some(GrowKind::Random),
+            _ => None,
+        }
+    }
+
     /// Does this method need dense gradients, and how often?
     /// (Drives the Appendix-H FLOPs accounting.)
     pub fn dense_grad_cadence(&self) -> DenseGradCadence {
@@ -107,7 +126,8 @@ pub enum DenseGradCadence {
     EveryStep,
 }
 
-/// Grow criterion input for one mask update.
+/// Grow criterion input for one mask update — the built-in
+/// [`GrowCriterion`] implementation covering the whole strategy zoo.
 pub enum Grow<'a> {
     /// RigL: dense gradients ∇_Θ L (magnitudes used).
     Gradient(&'a ParamSet),
@@ -115,6 +135,171 @@ pub enum Grow<'a> {
     Momentum(&'a ParamSet),
     /// SET: uniform over eligible connections.
     Random(&'a mut Rng),
+    /// Churn-minimal control: largest |θ| among eligible. Selection
+    /// runs after the drop phase clears masks but BEFORE dropped
+    /// weights are zeroed, so this mostly regrows the largest of what
+    /// was just dropped — the "rig nothing" end of the strategy axis,
+    /// useful as a baseline for the topology-movement metrics.
+    Magnitude,
+}
+
+/// The pluggable grow criteria of the strategy zoo, by mechanism:
+/// RigL grows by instantaneous gradient, SNFS by gradient momentum,
+/// SET at random, and `Magnitude` is the churn-minimal control.
+/// [`Method`] picks its native kind ([`Method::native_grow`]);
+/// [`GrowOverride`] / `--grow` swaps it per run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GrowKind {
+    Gradient,
+    Momentum,
+    Random,
+    Magnitude,
+}
+
+impl GrowKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GrowKind::Gradient => "gradient",
+            GrowKind::Momentum => "momentum",
+            GrowKind::Random => "random",
+            GrowKind::Magnitude => "magnitude",
+        }
+    }
+}
+
+/// Config/CLI-level grow-criterion override (`--grow`). `Auto` keeps
+/// each method's native criterion; `Static` suppresses mask updates
+/// entirely (the frozen-topology control of the zoo); the rest force
+/// one [`GrowKind`] onto any dynamic method. Purely a diagnostic axis:
+/// FLOPs accounting stays keyed on [`Method`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GrowOverride {
+    #[default]
+    Auto,
+    Gradient,
+    Momentum,
+    Random,
+    Magnitude,
+    Static,
+}
+
+impl GrowOverride {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "auto" => GrowOverride::Auto,
+            "gradient" => GrowOverride::Gradient,
+            "momentum" => GrowOverride::Momentum,
+            "random" => GrowOverride::Random,
+            "magnitude" => GrowOverride::Magnitude,
+            "static" => GrowOverride::Static,
+            _ => anyhow::bail!(
+                "unknown grow criterion {s:?} (auto|gradient|momentum|random|magnitude|static)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            GrowOverride::Auto => "auto",
+            GrowOverride::Gradient => "gradient",
+            GrowOverride::Momentum => "momentum",
+            GrowOverride::Random => "random",
+            GrowOverride::Magnitude => "magnitude",
+            GrowOverride::Static => "static",
+        }
+    }
+}
+
+/// Selection working storage shared by the drop phase and every
+/// [`GrowCriterion`]: score buffer, argselect index buffer, the output
+/// positions, and the sampling bitmap. Buffers keep capacity across
+/// updates, so a warm criterion selects with zero heap allocations.
+#[derive(Clone, Debug, Default)]
+pub struct SelectScratch {
+    /// Scores parallel to the candidate list (|θ|, |∇L|, …).
+    pub scores: Vec<f32>,
+    /// argselect working index buffer.
+    pub sel_idx: Vec<u32>,
+    /// Output: selected POSITIONS into the candidate list.
+    pub selected: Vec<u32>,
+    /// Sampling buffers for the random criterion (see
+    /// `Rng::sample_indices_into`).
+    pub sample_perm: Vec<u32>,
+    pub sample_seen: Vec<u64>,
+}
+
+/// A pluggable grow criterion: given a layer's eligible (inactive)
+/// positions, choose `k` of them to activate. Implementations write
+/// the chosen positions into `sel.selected` (indices INTO `eligible` —
+/// the contract `argselect_k_into` and `sample_indices_into` already
+/// follow) and must be deterministic and allocation-free once `sel` is
+/// warm: the counting-allocator gates in bench_topology and
+/// tests/topo_metrics.rs hold every criterion to the same standard as
+/// the drop phase.
+pub trait GrowCriterion {
+    /// Which criterion this is (labels, topo records, diagnostics).
+    fn kind(&self) -> GrowKind;
+
+    /// Select `k` grow positions for layer `li`. `params` are the live
+    /// weights after the drop phase cleared masks but before dropped
+    /// weights were zeroed, so magnitude-style criteria still see the
+    /// dropped values.
+    fn select(
+        &mut self,
+        li: usize,
+        params: &ParamSet,
+        eligible: &[u32],
+        k: usize,
+        sel: &mut SelectScratch,
+    );
+}
+
+impl GrowCriterion for Grow<'_> {
+    fn kind(&self) -> GrowKind {
+        match self {
+            Grow::Gradient(_) => GrowKind::Gradient,
+            Grow::Momentum(_) => GrowKind::Momentum,
+            Grow::Random(_) => GrowKind::Random,
+            Grow::Magnitude => GrowKind::Magnitude,
+        }
+    }
+
+    fn select(
+        &mut self,
+        li: usize,
+        params: &ParamSet,
+        eligible: &[u32],
+        k: usize,
+        sel: &mut SelectScratch,
+    ) {
+        match self {
+            Grow::Gradient(g) | Grow::Momentum(g) => {
+                sel.scores.clear();
+                for &i in eligible {
+                    sel.scores.push(g.tensors[li][i as usize].abs());
+                }
+                argselect_k_into(&sel.scores, k, true, &mut sel.sel_idx, &mut sel.selected);
+            }
+            Grow::Magnitude => {
+                sel.scores.clear();
+                for &i in eligible {
+                    sel.scores.push(params.tensors[li][i as usize].abs());
+                }
+                argselect_k_into(&sel.scores, k, true, &mut sel.sel_idx, &mut sel.selected);
+            }
+            Grow::Random(rng) => {
+                // Stateless per-layer stream (Appendix M bug #1 fix).
+                let mut layer_rng = rng.split(li as u64);
+                layer_rng.sample_indices_into(
+                    eligible.len(),
+                    k,
+                    &mut sel.sample_perm,
+                    &mut sel.sample_seen,
+                    &mut sel.selected,
+                );
+            }
+        }
+    }
 }
 
 /// Outcome of one topology update.
@@ -144,21 +329,14 @@ pub struct TopoScratch {
     active: Vec<u32>,
     /// Indices of grow-eligible (mask == 0 after drop) connections.
     eligible: Vec<u32>,
-    /// Scores parallel to `active` (|θ|) or `eligible` (|∇L| etc.).
-    scores: Vec<f32>,
-    /// argselect output: positions into `active`/`eligible`.
-    selected: Vec<u32>,
-    /// argselect working index buffer.
-    sel_idx: Vec<u32>,
+    /// Score/argselect/sampling buffers shared by the drop phase and
+    /// the pluggable grow criterion.
+    sel: SelectScratch,
     /// Resolved dropped/grown connection indices.
     dropped: Vec<u32>,
     grown: Vec<u32>,
     /// Bitmap over layer elements: active before this update.
     was_active: Vec<u64>,
-    /// Sampling buffers for the SET random grow (see
-    /// `Rng::sample_indices_into`).
-    sample_perm: Vec<u32>,
-    sample_seen: Vec<u64>,
 }
 
 /// One Algorithm-1 mask update across all sparsifiable layers —
@@ -174,7 +352,7 @@ pub fn update_masks(
     opt_buffers: &mut [ParamSet],
     masks: &mut ParamSet,
     fraction: f64,
-    grow: Grow<'_>,
+    grow: impl GrowCriterion,
 ) -> UpdateStats {
     let mut scratch = TopoScratch::default();
     let mut stats = UpdateStats::default();
@@ -200,7 +378,7 @@ pub fn update_masks_scratch(
     opt_buffers: &mut [ParamSet],
     masks: &mut ParamSet,
     fraction: f64,
-    grow: Grow<'_>,
+    grow: impl GrowCriterion,
     scratch: &mut TopoScratch,
     stats: &mut UpdateStats,
 ) {
@@ -221,9 +399,12 @@ pub fn update_masks_scratch(
 /// grown)` after each layer's swap is applied (flat element indices, in
 /// selection order). This is how execution backends keep derived sparse
 /// views (e.g. the native engine's CSR topologies) in sync incrementally
-/// instead of rescanning the dense mask: the final active set of a layer
-/// is `(active \ dropped) ∪ grown`, and an index present in both lists
-/// was drop-then-regrown (net unchanged).
+/// instead of rescanning the dense mask, and how the topology recorder
+/// (`obs::topo`) observes churn: the final active set of a layer is
+/// `(active \ dropped) ∪ grown`, and an index present in both lists was
+/// drop-then-regrown (net unchanged). Layers that are skipped (not
+/// sparsifiable, fully dense/empty, or k == 0) produce NO visit call —
+/// incremental consumers must tolerate the gap.
 #[allow(clippy::too_many_arguments)]
 pub fn update_masks_visit(
     def: &ModelDef,
@@ -231,7 +412,7 @@ pub fn update_masks_visit(
     opt_buffers: &mut [ParamSet],
     masks: &mut ParamSet,
     fraction: f64,
-    mut grow: Grow<'_>,
+    mut grow: impl GrowCriterion,
     scratch: &mut TopoScratch,
     stats: &mut UpdateStats,
     mut visit: impl FnMut(usize, &[u32], &[u32]),
@@ -267,26 +448,28 @@ pub fn update_masks_visit(
         }
 
         // (1) Drop: k smallest |θ| among active.
-        scratch.scores.clear();
+        scratch.sel.scores.clear();
         for &i in &scratch.active {
-            scratch.scores.push(params.tensors[li][i as usize].abs());
+            scratch.sel.scores.push(params.tensors[li][i as usize].abs());
         }
         argselect_k_into(
-            &scratch.scores,
+            &scratch.sel.scores,
             k,
             false,
-            &mut scratch.sel_idx,
-            &mut scratch.selected,
+            &mut scratch.sel.sel_idx,
+            &mut scratch.sel.selected,
         );
         scratch.dropped.clear();
-        for &p in &scratch.selected {
+        for &p in &scratch.sel.selected {
             scratch.dropped.push(scratch.active[p as usize]);
         }
         for &i in &scratch.dropped {
             masks.tensors[li][i as usize] = 0.0;
         }
 
-        // (2) Grow among NOT(remaining active) = mask==0 right now.
+        // (2) Grow among NOT(remaining active) = mask==0 right now,
+        // delegated to the pluggable criterion. Weights of just-dropped
+        // connections are still unzeroed here (see GrowCriterion docs).
         scratch.eligible.clear();
         for (i, &m) in masks.tensors[li].iter().enumerate() {
             if m == 0.0 {
@@ -294,34 +477,9 @@ pub fn update_masks_visit(
             }
         }
         let k_grow = k.min(scratch.eligible.len());
-        match &mut grow {
-            Grow::Gradient(g) | Grow::Momentum(g) => {
-                scratch.scores.clear();
-                for &i in &scratch.eligible {
-                    scratch.scores.push(g.tensors[li][i as usize].abs());
-                }
-                argselect_k_into(
-                    &scratch.scores,
-                    k_grow,
-                    true,
-                    &mut scratch.sel_idx,
-                    &mut scratch.selected,
-                );
-            }
-            Grow::Random(rng) => {
-                // Stateless per-layer stream (Appendix M bug #1 fix).
-                let mut layer_rng = rng.split(li as u64);
-                layer_rng.sample_indices_into(
-                    scratch.eligible.len(),
-                    k_grow,
-                    &mut scratch.sample_perm,
-                    &mut scratch.sample_seen,
-                    &mut scratch.selected,
-                );
-            }
-        }
+        grow.select(li, &*params, &scratch.eligible, k_grow, &mut scratch.sel);
         scratch.grown.clear();
-        for &p in &scratch.selected {
+        for &p in &scratch.sel.selected {
             scratch.grown.push(scratch.eligible[p as usize]);
         }
 
@@ -696,6 +854,48 @@ mod tests {
         assert_eq!(masks.nnz(0), 2);
         assert_eq!(masks.tensors[0][2], 1.0);
         assert_eq!(masks.tensors[0][7], 1.0);
+    }
+
+    #[test]
+    fn magnitude_grow_regrows_the_dropped_weights() {
+        // The churn-minimal control: dropped weights are still unzeroed
+        // at selection time, so they are the largest-|θ| eligible and
+        // come straight back — topology movement ≈ 0.
+        let (def, mut params, mut masks, mut mom) = setup();
+        let stats = update_masks(
+            &def,
+            &mut params,
+            std::slice::from_mut(&mut mom),
+            &mut masks,
+            0.4, // k = 2 → drop indices 3, 4
+            Grow::Magnitude,
+        );
+        assert_eq!(stats.dropped, 2);
+        assert_eq!(stats.grown, 2);
+        // Drop+regrow of the same index cancels: same active set,
+        // weights kept.
+        for i in 0..5 {
+            assert_eq!(masks.tensors[0][i], 1.0, "index {i} lost");
+            assert_eq!(params.tensors[0][i], (5 - i) as f32, "weight {i} lost");
+        }
+        assert_eq!(masks.nnz(0), 5);
+    }
+
+    #[test]
+    fn grow_kind_and_override_taxonomy() {
+        assert_eq!(Method::Rigl.native_grow(), Some(GrowKind::Gradient));
+        assert_eq!(Method::Snfs.native_grow(), Some(GrowKind::Momentum));
+        assert_eq!(Method::Set.native_grow(), Some(GrowKind::Random));
+        assert_eq!(Method::Static.native_grow(), None);
+        assert_eq!(Method::Dense.native_grow(), None);
+        let g = ParamSet::zeros(&def_one_layer(2, 5));
+        assert_eq!(Grow::Gradient(&g).kind(), GrowKind::Gradient);
+        assert_eq!(Grow::Momentum(&g).kind(), GrowKind::Momentum);
+        assert_eq!(Grow::Magnitude.kind(), GrowKind::Magnitude);
+        for name in ["auto", "gradient", "momentum", "random", "magnitude", "static"] {
+            assert_eq!(GrowOverride::parse(name).unwrap().label(), name);
+        }
+        assert!(GrowOverride::parse("bogus").is_err());
     }
 
     #[test]

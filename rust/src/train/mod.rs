@@ -53,7 +53,11 @@ use crate::prune::PruneSchedule;
 use crate::runtime::Runtime;
 use crate::schedule::{Decay, LrSchedule, UpdateSchedule};
 use crate::sparsity::{layer_sparsities, random_masks, Distribution};
-use crate::topology::{snip_masks, update_masks_visit, Grow, Method, TopoScratch, UpdateStats};
+use crate::obs::topo::{TopoMetrics, TopoRecorder};
+use crate::topology::{
+    snip_masks, update_masks_visit, Grow, GrowKind, GrowOverride, Method, TopoScratch,
+    UpdateStats,
+};
 use crate::util::Rng;
 
 /// Everything that defines one training run.
@@ -76,6 +80,12 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// SNFS gradient-momentum coefficient (Appendix D).
     pub snfs_beta: f32,
+    /// Grow-criterion override (`--grow`): `Auto` keeps the method's
+    /// native criterion (RigL→gradient, SNFS→momentum, SET→random);
+    /// the explicit criteria mix-and-match drop/grow for the strategy
+    /// zoo; `Static` freezes the initial topology entirely (control).
+    /// Diagnostic axis only: FLOPs accounting stays keyed on `method`.
+    pub grow: GrowOverride,
     /// Train-time augmentation for image tasks.
     pub augment: bool,
     /// Dataset sizes (train, val) for image/digit tasks; token count for LM.
@@ -110,6 +120,7 @@ impl TrainConfig {
             decay: Decay::Cosine,
             eval_every: 0,
             snfs_beta: 0.9,
+            grow: GrowOverride::Auto,
             augment: true,
             data_train: 2048,
             data_val: 512,
@@ -119,6 +130,24 @@ impl TrainConfig {
 
     pub fn total_steps(&self) -> usize {
         (self.steps as f64 * self.multiplier).round() as usize
+    }
+
+    /// The grow criterion this run actually uses at mask updates:
+    /// `None` means the topology never moves (non-dynamic methods, or
+    /// the `Static` override turning a dynamic method into its
+    /// frozen-topology control).
+    pub fn effective_grow(&self) -> Option<GrowKind> {
+        if !self.method.is_dynamic() {
+            return None;
+        }
+        match self.grow {
+            GrowOverride::Auto => self.method.native_grow(),
+            GrowOverride::Static => None,
+            GrowOverride::Gradient => Some(GrowKind::Gradient),
+            GrowOverride::Momentum => Some(GrowKind::Momentum),
+            GrowOverride::Random => Some(GrowKind::Random),
+            GrowOverride::Magnitude => Some(GrowKind::Magnitude),
+        }
     }
 
     pub fn update_schedule(&self) -> UpdateSchedule {
@@ -157,6 +186,10 @@ pub struct RunResult {
     pub total_swapped: usize,
     /// Phase/topology breakdown (zeros when obs was disabled).
     pub obs: RunObs,
+    /// Per-update topology-dynamics series (degree histograms, churn,
+    /// survivor half-life, NNSTD distances). `None` when obs was
+    /// disabled or the topology never moved. Purely diagnostic.
+    pub topo: Option<TopoMetrics>,
 }
 
 /// Per-run observability: wall-clock split by step phase plus
@@ -298,7 +331,12 @@ impl Trainer {
         };
         let mut data_rng = Rng::new(cfg.seed ^ 0xD47A);
         let mut iter = self.batch_iter(cfg);
-        let mut snfs_mom: Option<ParamSet> = matches!(cfg.method, Method::Snfs)
+        // The effective grow criterion decides both whether the
+        // topology moves at all and which signal drives regrowth; the
+        // dense-gradient momentum buffer exists exactly when momentum
+        // (SNFS-style) grow is in play, whatever the nominal method.
+        let grow_kind = cfg.effective_grow();
+        let mut snfs_mom: Option<ParamSet> = (grow_kind == Some(GrowKind::Momentum))
             .then(|| ParamSet::zeros(&self.def));
         let mut loss_history = Vec::new();
         let mut eval_history = Vec::new();
@@ -345,6 +383,21 @@ impl Trainer {
             },
             ..RunObs::default()
         };
+        // Topology-dynamics recorder: snapshots the (post-SNIP) initial
+        // masks and preallocates every series for the run's update
+        // count. Read-only over the visitor's drop/grow lists, so the
+        // run is bit-identical with it enabled or disabled. Static
+        // controls (Method::Static, or `--grow static` freezing a
+        // dynamic method) record too — their empty series plus the
+        // final-mask snapshot are the zoo's zero-churn baseline.
+        let static_control = cfg.method == Method::Static
+            || (cfg.method.is_dynamic() && cfg.grow == GrowOverride::Static);
+        let max_updates = update.t_end / cfg.delta_t.max(1) + 2;
+        let mut topo_rec = if obs_on && (grow_kind.is_some() || static_control) {
+            TopoRecorder::new(&self.def, &state.masks, max_updates)
+        } else {
+            TopoRecorder::disabled()
+        };
 
         while state.step < total {
             let t = state.step;
@@ -367,12 +420,12 @@ impl Trainer {
                 }
             }
 
-            let dynamic = cfg.method.is_dynamic();
+            let dynamic = grow_kind.is_some();
             if dynamic && update.due(t) {
                 // Mask-update iteration: dense grads REPLACE the SGD step.
                 let frac = update.fraction(t);
-                match cfg.method {
-                    Method::Rigl => {
+                match grow_kind.unwrap() {
+                    GrowKind::Gradient => {
                         let t_dg = obs_on.then(std::time::Instant::now);
                         let (grads, loss) = {
                             let _g = trace::span("dense_grad", "train");
@@ -392,9 +445,10 @@ impl Trainer {
                             Grow::Gradient(&grads),
                             &mut topo_scratch,
                             &mut topo_stats,
+                            &mut topo_rec,
                         );
                     }
-                    Method::Snfs => {
+                    GrowKind::Momentum => {
                         // The momentum buffer is a run-local, disjoint
                         // from `state` — no clone needed.
                         obs.mask_update_s += self.apply_update(
@@ -404,9 +458,10 @@ impl Trainer {
                             Grow::Momentum(snfs_mom.as_ref().unwrap()),
                             &mut topo_scratch,
                             &mut topo_stats,
+                            &mut topo_rec,
                         );
                     }
-                    Method::Set => {
+                    GrowKind::Random => {
                         let mut rng = Rng::new(cfg.seed ^ 0x5E7).split(t as u64);
                         obs.mask_update_s += self.apply_update(
                             sess.as_mut(),
@@ -415,10 +470,22 @@ impl Trainer {
                             Grow::Random(&mut rng),
                             &mut topo_scratch,
                             &mut topo_stats,
+                            &mut topo_rec,
                         );
                     }
-                    _ => unreachable!(),
+                    GrowKind::Magnitude => {
+                        obs.mask_update_s += self.apply_update(
+                            sess.as_mut(),
+                            state,
+                            frac,
+                            Grow::Magnitude,
+                            &mut topo_scratch,
+                            &mut topo_stats,
+                            &mut topo_rec,
+                        );
+                    }
                 }
+                topo_rec.end_update(t);
                 total_swapped += topo_stats.grown;
                 if obs_on {
                     obs.updates += 1;
@@ -495,6 +562,7 @@ impl Trainer {
             wall_seconds: t0.elapsed().as_secs_f64(),
             total_swapped,
             obs,
+            topo: topo_rec.finish(),
         })
     }
 
@@ -526,6 +594,7 @@ impl Trainer {
         grow: Grow<'_>,
         scratch: &mut TopoScratch,
         stats: &mut UpdateStats,
+        rec: &mut TopoRecorder,
     ) -> f64 {
         let t0 = crate::obs::enabled().then(std::time::Instant::now);
         let _g = trace::span("mask_update", "train");
@@ -538,7 +607,10 @@ impl Trainer {
             grow,
             scratch,
             stats,
-            |li, dropped, grown| sess.masks_updated(li, dropped, grown),
+            |li, dropped, grown| {
+                sess.masks_updated(li, dropped, grown);
+                rec.record_layer(li, dropped, grown);
+            },
         );
         t0.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0)
     }

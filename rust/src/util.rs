@@ -331,6 +331,17 @@ pub fn append_bench_record(target: &str, rec: &BenchRecord) -> std::io::Result<(
 /// when available.
 pub fn append_bench_json(target: &str, json: &str) -> std::io::Result<()> {
     use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(bench_json_path(target))?;
+    writeln!(f, "{json}")
+}
+
+/// Workspace-root path of `BENCH_<target>.json` — the same resolution
+/// `append_bench_json` writes through, shared with readers
+/// (`repro topo-report`).
+pub fn bench_json_path(target: &str) -> std::path::PathBuf {
     let dir = match std::env::var_os("CARGO_MANIFEST_DIR") {
         Some(d) => {
             let p = std::path::PathBuf::from(d);
@@ -338,11 +349,7 @@ pub fn append_bench_json(target: &str, json: &str) -> std::io::Result<()> {
         }
         None => std::path::PathBuf::from("."),
     };
-    let mut f = std::fs::OpenOptions::new()
-        .create(true)
-        .append(true)
-        .open(dir.join(format!("BENCH_{target}.json")))?;
-    writeln!(f, "{json}")
+    dir.join(format!("BENCH_{target}.json"))
 }
 
 /// Crash-safe file write: stream through the closure into a `.tmp`

@@ -1,0 +1,494 @@
+//! Topology-observability contract suite: the `obs::topo` recorder must
+//! never change numerics, never allocate on the steady-state record
+//! path, and report metrics that match hand-computed oracles.
+//!
+//! Everything here is hermetic (in-code models, synthetic data) and
+//! serializes on a process-wide lock because several tests toggle the
+//! *global* obs enable flag — same discipline as `obs_determinism.rs`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use rigl::backend::native::{mlp_def, NativeBackend};
+use rigl::coordinator::ExpContext;
+use rigl::model::{ElemType, Kind, ModelDef, Optimizer, ParamSet, ParamSpec, Task};
+use rigl::obs::topo::{
+    deg_bucket, deg_percentile, nnstd_distance, parse_records, record_json, render_report,
+    TopoRecorder, TopoRunMeta, DEG_BUCKETS,
+};
+use rigl::obs::{self, trace};
+use rigl::pool::KernelPool;
+use rigl::topology::{update_masks, Grow, GrowOverride, Method};
+use rigl::train::{TrainConfig, Trainer};
+use rigl::util::Rng;
+use rigl::BackendKind;
+
+/// Counting allocator: the zero-steady-state-allocation gate is an
+/// exact count of alloc + realloc events, not a heuristic. Dealloc is
+/// uncounted — dropping a warm buffer is fine; *acquiring* one on the
+/// hot path is not.
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::Relaxed)
+}
+
+/// Process-wide serialization: tests that flip the global obs flag or
+/// measure allocations must not interleave. Poison-tolerant.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn serialize() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Restores the global enable/arm flags on drop.
+struct FlagGuard {
+    enabled: bool,
+    armed: bool,
+}
+
+impl FlagGuard {
+    fn set(enabled: bool, armed: bool) -> FlagGuard {
+        FlagGuard { enabled: obs::set_enabled(enabled), armed: trace::set_armed(armed) }
+    }
+}
+
+impl Drop for FlagGuard {
+    fn drop(&mut self) {
+        obs::set_enabled(self.enabled);
+        trace::set_armed(self.armed);
+    }
+}
+
+/// Single-FC-layer toy model: `rows × cols` weight matrix, flat element
+/// `i` at (row i / cols, col i % cols).
+fn toy_def(rows: usize, cols: usize) -> ModelDef {
+    ModelDef {
+        name: "topo_toy".into(),
+        backend: "jnp".into(),
+        optimizer: Optimizer::SgdMomentum,
+        task: Task::Classify,
+        input_ty: ElemType::F32,
+        input_shape: vec![1, rows],
+        target_shape: vec![1],
+        hyper: vec![],
+        artifacts: vec![],
+        specs: vec![ParamSpec {
+            name: "w".into(),
+            kind: Kind::Fc,
+            sparsifiable: true,
+            first_layer: false,
+            flops: 0.0,
+            shape: vec![rows, cols],
+        }],
+    }
+}
+
+fn masks_with(def: &ModelDef, active: &[usize]) -> ParamSet {
+    let mut m = ParamSet::zeros(def);
+    for &i in active {
+        m.tensors[0][i] = 1.0;
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Hand-computed oracles: NNSTD distance, degree bucketing, half-life.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nnstd_cross_seed_distance_matches_hand_oracle() {
+    // 4×4 diagonal: column c's incoming set is {row c}.
+    let a = vec![(1u64 << 0) | (1 << 5) | (1 << 10) | (1 << 15)];
+    // Column-rotated diagonal: col0←{r1}, col1←{r2}, col2←{r3}, col3←{r0}
+    // (flat indices 4, 9, 14, 3). Every a-column has an identical
+    // b-column under permutation, so the matched distance is exactly 0 —
+    // NNSTD is invariant to neuron reordering.
+    let b = vec![(1u64 << 4) | (1 << 9) | (1 << 14) | (1 << 3)];
+    assert_eq!(nnstd_distance(4, 4, &a, &a), 0.0);
+    assert_eq!(nnstd_distance(4, 4, &a, &b), 0.0);
+
+    // 4×2 partial overlap, every pair hand-computable. a: col0 = {r0,r1}
+    // (flat 0, 2), col1 = {r2,r3} (flat 5, 7). b: col0 = {r0,r2}
+    // (flat 0, 4), col1 = {r1,r3} (flat 3, 7). Every (a_i, b_j) pair
+    // shares exactly 1 of 3 union rows → distance 2/3; any matching
+    // averages to 2/3.
+    let a2 = vec![(1u64 << 0) | (1 << 2) | (1 << 5) | (1 << 7)];
+    let b2 = vec![(1u64 << 0) | (1 << 4) | (1 << 3) | (1 << 7)];
+    let d = nnstd_distance(4, 2, &a2, &b2);
+    assert!((d - 2.0 / 3.0).abs() < 1e-9, "d={d}");
+}
+
+#[test]
+fn degree_bucketing_matches_naive_log2_oracle() {
+    for d in 0u32..70_000 {
+        let expect = if d < 2 {
+            0
+        } else {
+            ((d as f64).log2().floor() as usize).min(DEG_BUCKETS - 1)
+        };
+        assert_eq!(deg_bucket(d), expect, "d={d}");
+    }
+    // Percentiles report the inclusive bucket upper bound at rank
+    // ceil(q·n): 2 obs in bucket 0 (degrees ≤ 1), 3 in bucket 2
+    // (degrees 4–7) → n = 5, p50 rank 3 lands in bucket 2 (ceil 7),
+    // p20 rank 1 in bucket 0 (ceil 1).
+    let mut hist = [0u32; DEG_BUCKETS];
+    hist[0] = 2;
+    hist[2] = 3;
+    assert_eq!(deg_percentile(&hist, 0.20), 1);
+    assert_eq!(deg_percentile(&hist, 0.50), 7);
+    assert_eq!(deg_percentile(&hist, 1.0), 7);
+    assert_eq!(deg_percentile(&[0u32; DEG_BUCKETS], 0.5), 0);
+}
+
+#[test]
+fn survivor_half_life_crosses_at_known_update() {
+    let _g = serialize();
+    let _flags = FlagGuard::set(true, false);
+    // 4×4 diagonal start, nnz0 = 4. Three updates each net-drop one
+    // original connection: survivor fraction 0.75 → 0.50 → 0.25, so
+    // the half-life crossing (first update with fraction < 0.5) is
+    // update index 2.
+    let def = toy_def(4, 4);
+    let masks = masks_with(&def, &[0, 5, 10, 15]);
+    let mut rec = TopoRecorder::new(&def, &masks, 8);
+    rec.record_layer(0, &[0], &[1]);
+    rec.end_update(5);
+    rec.record_layer(0, &[5], &[4]);
+    rec.end_update(10);
+    rec.record_layer(0, &[10], &[6]);
+    rec.end_update(15);
+    let m = rec.finish().unwrap();
+    let l = &m.layers[0];
+    assert_eq!(l.nnz, vec![4, 4, 4], "balanced swaps must hold nnz");
+    assert_eq!(l.survivor_frac, vec![0.75, 0.5, 0.25]);
+    assert_eq!(l.survivor_frac.iter().position(|&f| f < 0.5), Some(2));
+
+    // The same oracle survives the record → parse → report roundtrip.
+    let meta = TopoRunMeta {
+        model: "toy",
+        strategy: "set",
+        grow: "random",
+        sparsity: 0.75,
+        decay: "cosine",
+        delta_t: 5,
+        steps: 20,
+        seed: 0,
+    };
+    let recs = parse_records(&record_json(&meta, &m, None));
+    assert_eq!(recs.len(), 1);
+    let r = &recs[0];
+    assert_eq!(r.layers[0].survivor_frac, vec![0.75, 0.5, 0.25]);
+    let report = render_report(&recs);
+    assert!(report.contains("set"), "{report}");
+    assert!(report.contains("random"), "{report}");
+}
+
+// ---------------------------------------------------------------------------
+// SET / random grow: exact nnz preservation and zero-init of regrowth.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_grow_preserves_exact_per_layer_nnz() {
+    // Two-layer toy so the per-layer invariant is distinguishable from
+    // a global-total coincidence.
+    let mut def = toy_def(16, 8);
+    def.specs.push(ParamSpec {
+        name: "w2".into(),
+        kind: Kind::Fc,
+        sparsifiable: true,
+        first_layer: false,
+        flops: 0.0,
+        shape: vec![8, 4],
+    });
+    for seed in 0..4u64 {
+        for &fraction in &[0.1f64, 0.3, 0.5] {
+            let mut init_rng = Rng::new(seed ^ 0xBEEF);
+            let mut params = ParamSet::zeros(&def);
+            let mut masks = ParamSet::zeros(&def);
+            let mut active_before: Vec<Vec<bool>> = Vec::new();
+            for li in 0..def.specs.len() {
+                let n = def.specs[li].size();
+                let mut act = vec![false; n];
+                for i in 0..n {
+                    // ~50% sparse random init; active weights nonzero.
+                    if init_rng.next_f32() < 0.5 {
+                        masks.tensors[li][i] = 1.0;
+                        params.tensors[li][i] = init_rng.next_f32() + 0.1;
+                        act[i] = true;
+                    }
+                }
+                active_before.push(act);
+            }
+            let nnz_before: Vec<usize> = masks
+                .tensors
+                .iter()
+                .map(|t| t.iter().filter(|&&m| m != 0.0).count())
+                .collect();
+            let mut opt = [ParamSet::zeros(&def)];
+            let mut rng = Rng::new(seed);
+            let stats = update_masks(
+                &def,
+                &mut params,
+                &mut opt,
+                &mut masks,
+                fraction,
+                Grow::Random(&mut rng),
+            );
+            let nnz_after: Vec<usize> = masks
+                .tensors
+                .iter()
+                .map(|t| t.iter().filter(|&&m| m != 0.0).count())
+                .collect();
+            assert_eq!(
+                nnz_before, nnz_after,
+                "per-layer nnz drifted (seed={seed} fraction={fraction})"
+            );
+            assert_eq!(stats.dropped, stats.grown, "unbalanced swap");
+            assert!(stats.grown > 0, "degenerate test: nothing moved");
+            // Paper §3(4): freshly grown connections start at zero.
+            for li in 0..def.specs.len() {
+                for (i, &m) in masks.tensors[li].iter().enumerate() {
+                    if m != 0.0 && !active_before[li][i] {
+                        assert_eq!(
+                            params.tensors[li][i], 0.0,
+                            "grown weight not zero-initialized (layer {li}, idx {i})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allocation: the warm recorder's record path must be allocation-free.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recorder_steady_state_allocates_nothing() {
+    let _g = serialize();
+    let _flags = FlagGuard::set(true, false);
+    // 64×64 layer, every 4th element active (1024 connections).
+    let def = toy_def(64, 64);
+    let active: Vec<usize> = (0..64 * 64).step_by(4).collect();
+    let masks = masks_with(&def, &active);
+    const UPDATES: usize = 512;
+    let mut rec = TopoRecorder::new(&def, &masks, UPDATES + 1);
+    // Cold path: first record registers the topo.* counters/histograms
+    // in the metrics registry, outside the measured window.
+    rec.record_layer(0, &[0], &[1]);
+    rec.end_update(0);
+
+    let before = alloc_events();
+    for u in 1..=UPDATES {
+        // Ping-pong one connection between flat indices 0 and 1 so
+        // every drop hits an active index and every grow an inactive
+        // one, exactly like a real balanced update.
+        let (dropped, grown) = if u % 2 == 1 { ([1u32], [0u32]) } else { ([0u32], [1u32]) };
+        rec.record_layer(0, &dropped, &grown);
+        rec.end_update(u * 5);
+    }
+    let after = alloc_events();
+    assert_eq!(
+        after - before,
+        0,
+        "warm topo record path allocated {} times in {UPDATES} updates",
+        after - before
+    );
+    let m = rec.finish().unwrap();
+    assert_eq!(m.update_steps.len(), UPDATES + 1);
+    assert_eq!(m.layers[0].nnz.len(), UPDATES + 1);
+    assert!(m.layers[0].nnz.iter().all(|&n| n == 1024));
+}
+
+// ---------------------------------------------------------------------------
+// Training integration: series populate for the zoo, vanish under
+// --no-obs, and never perturb numerics.
+// ---------------------------------------------------------------------------
+
+fn small_cfg(method: Method, grow: GrowOverride) -> TrainConfig {
+    let mut cfg = TrainConfig::new("topo_mlp", method);
+    cfg.sparsity = 0.9;
+    cfg.steps = 30;
+    cfg.delta_t = 10;
+    cfg.augment = false;
+    cfg.data_train = 256;
+    cfg.data_val = 128;
+    cfg.grow = grow;
+    cfg
+}
+
+/// One full run; returns every parameter tensor as raw bits plus the
+/// run result, so comparisons are exact.
+fn train_run(
+    method: Method,
+    grow: GrowOverride,
+    obs_on: bool,
+    threads: usize,
+) -> (Vec<Vec<u32>>, rigl::train::RunResult) {
+    let _flags = FlagGuard::set(obs_on, false);
+    let cfg = small_cfg(method, grow);
+    let def = mlp_def(&cfg.model, 784, &[32], 10, 16);
+    let pool = Arc::new(KernelPool::with_par_min_ops(threads, 1));
+    let backend = Arc::new(NativeBackend::with_pool(&def, Some(pool)).unwrap());
+    let trainer = Trainer::from_parts(def, backend, &cfg).unwrap();
+    let mut state = trainer.init_state(&cfg);
+    let r = trainer.run_from(&cfg, &mut state).unwrap();
+    let bits = state
+        .params
+        .tensors
+        .iter()
+        .map(|t| t.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    (bits, r)
+}
+
+#[test]
+fn topo_series_populate_for_dynamic_methods() {
+    let _g = serialize();
+    let (_, r) = train_run(Method::Set, GrowOverride::Auto, true, 1);
+    let m = r.topo.expect("dynamic run with obs on must record topology");
+    assert!(!m.update_steps.is_empty(), "steps=30 ΔT=10 → updates fired");
+    assert!(!m.layers.is_empty());
+    let n = m.update_steps.len();
+    for l in &m.layers {
+        // Every series stays parallel to update_steps, including the
+        // no-change rows of engine-skipped layers.
+        assert_eq!(l.nnz.len(), n, "layer {}", l.name);
+        assert_eq!(l.churn.len(), n);
+        assert_eq!(l.jaccard.len(), n);
+        assert_eq!(l.nnstd.len(), n);
+        assert_eq!(l.survivor_frac.len(), n);
+        assert_eq!(l.in_deg_hist.len(), n);
+        // SET is drop/grow balanced: nnz must not drift from nnz0.
+        assert!(l.nnz.iter().all(|&v| v == l.nnz0), "nnz drifted on {}", l.name);
+        // Survivor fraction is monotone non-increasing by construction.
+        for w in l.survivor_frac.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "survivor fraction rose on {}", l.name);
+        }
+        for (&c, &j) in l.churn.iter().zip(&l.jaccard) {
+            assert!((0.0..=1.0).contains(&c) && (0.0..=1.0).contains(&j));
+        }
+        // The degree histograms account for every row/column.
+        let cols: u64 = l.in_deg_final.iter().map(|&c| c as u64).sum();
+        let rows: u64 = l.out_deg_final.iter().map(|&c| c as u64).sum();
+        assert_eq!(cols, l.cols as u64);
+        assert_eq!(rows, l.rows as u64);
+    }
+}
+
+#[test]
+fn static_control_records_masks_but_no_updates() {
+    let _g = serialize();
+    // `--grow static` on a dynamic method freezes the topology but
+    // still snapshots it: empty series, valid final degree histograms
+    // and active bitmaps (the cross-seed NNSTD baseline).
+    let (_, r) = train_run(Method::Rigl, GrowOverride::Static, true, 1);
+    let m = r.topo.expect("static control still snapshots the topology");
+    assert!(m.update_steps.is_empty(), "static control must not record updates");
+    assert!(!m.layers.is_empty());
+    for l in &m.layers {
+        assert!(l.nnz0 > 0);
+        assert!(l.nnz.is_empty());
+        let ones: u64 = l.final_active.iter().map(|w| w.count_ones() as u64).sum();
+        assert_eq!(ones, l.nnz0, "final_active must equal the frozen mask");
+        let cols: u64 = l.in_deg_final.iter().map(|&c| c as u64).sum();
+        assert_eq!(cols, l.cols as u64);
+    }
+    assert_eq!(r.obs.updates, 0, "static control must not update masks");
+
+    let (_, off) = train_run(Method::Set, GrowOverride::Auto, false, 1);
+    assert!(off.topo.is_none(), "--no-obs must suppress the recorder entirely");
+}
+
+#[test]
+fn training_is_bit_identical_with_recorder_on_off_across_threads() {
+    let _g = serialize();
+    // SET is the sharpest probe: its grow draws RNG, so any recorder
+    // interference with the random stream would move the topology.
+    let (base_bits, base_r) = train_run(Method::Set, GrowOverride::Auto, true, 1);
+    for (obs_on, threads) in [(false, 1), (true, 8), (false, 8)] {
+        let (bits, r) = train_run(Method::Set, GrowOverride::Auto, obs_on, threads);
+        assert_eq!(
+            bits, base_bits,
+            "params diverged at obs={obs_on} threads={threads}"
+        );
+        assert_eq!(r.final_train_loss.to_bits(), base_r.final_train_loss.to_bits());
+        assert_eq!(r.total_swapped, base_r.total_swapped);
+    }
+}
+
+#[test]
+fn coordinator_runs_bit_identical_across_jobs_threads_and_obs() {
+    let _g = serialize();
+    // The acceptance matrix: --jobs {1,4} × --threads {1,8}, recorder
+    // on and off, through the real coordinator fan-out. Fingerprints
+    // are raw f64 bits of every per-seed loss trajectory.
+    let run = |jobs: usize, threads: usize, obs_on: bool| -> Vec<(u64, u64, Vec<u64>)> {
+        let _flags = FlagGuard::set(obs_on, false);
+        let out = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target/topo_test");
+        let mut ctx = ExpContext::with_backend(2, 1.0, jobs, out, BackendKind::Native)
+            .unwrap()
+            .with_threads(threads);
+        ctx.verbose = false;
+        let mut cfg = ctx.base("mlp", Method::Set);
+        cfg.sparsity = 0.9;
+        cfg.steps = 20;
+        cfg.delta_t = 5;
+        cfg.augment = false;
+        cfg.data_train = 128;
+        cfg.data_val = 64;
+        let full = ctx.run_cells_full(&[("cell".into(), cfg)]).unwrap();
+        assert_eq!(full.len(), 1);
+        assert_eq!(full[0].len(), 2, "two seeds expected");
+        full[0]
+            .iter()
+            .map(|r| {
+                assert_eq!(
+                    r.topo.is_some(),
+                    obs_on,
+                    "recorder presence must track the obs flag"
+                );
+                (
+                    r.final_train_loss.to_bits(),
+                    r.final_metric.to_bits(),
+                    r.loss_history.iter().map(|&(_, l)| l.to_bits()).collect(),
+                )
+            })
+            .collect()
+    };
+    let base = run(1, 1, true);
+    for (jobs, threads, obs_on) in
+        [(4, 1, true), (1, 8, true), (4, 8, true), (1, 1, false), (4, 8, false)]
+    {
+        let got = run(jobs, threads, obs_on);
+        assert_eq!(
+            got, base,
+            "run diverged at jobs={jobs} threads={threads} obs={obs_on}"
+        );
+    }
+}
