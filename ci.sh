@@ -13,7 +13,8 @@
 #                   backend_parity.rs + serve_roundtrip.rs +
 #                   threads_determinism.rs) must pass on a bare CPU, and
 #                   the serve smoke test below must export, serve and
-#                   answer over loopback TCP. Machines without an XLA
+#                   answer over loopback TCP — once per artifact format
+#                   (v1, v2+f32, v2+f16). Machines without an XLA
 #                   toolchain should run this path; machines with one
 #                   should run both.
 #   --smoke-bench   additionally run every hermetic bench in --smoke
@@ -97,6 +98,34 @@ cargo build --release "${FLAGS[@]+"${FLAGS[@]}"}" "${SIMD[@]+"${SIMD[@]}"}"
 echo "== cargo test -q =="
 cargo test -q "${FLAGS[@]+"${FLAGS[@]}"}" "${SIMD[@]+"${SIMD[@]}"}"
 
+# Docs leg (always on, std-only): every `repro <subcommand>` snippet in
+# the written docs must name a real subcommand, and the flags the format
+# spec documents must exist in the binary's usage text. Keeps
+# README.md / docs/*.md from drifting away from the CLI they describe.
+echo "== docs leg: CLI snippets in docs/ vs the binary's usage =="
+BIN=target/release/repro
+USAGE=$("$BIN" help 2>&1)
+DOC_SUBS=$(grep -rhoE 'repro [a-z][a-z-]*' README.md docs/*.md \
+  rust/src/serve/README.md rust/src/backend/native/README.md \
+  | awk '{print $2}' | sort -u)
+if [[ -z "$DOC_SUBS" ]]; then
+  echo "docs leg found no 'repro <subcommand>' snippets — docs missing?" >&2
+  exit 1
+fi
+for sub in $DOC_SUBS; do
+  if ! grep -qw -- "$sub" <<< "$USAGE"; then
+    echo "docs mention 'repro $sub' but the usage text does not list it" >&2
+    exit 1
+  fi
+done
+for flag in --format --values --save-ckpt; do
+  if ! grep -q -- "$flag" <<< "$USAGE"; then
+    echo "usage text is missing the documented flag $flag" >&2
+    exit 1
+  fi
+done
+echo "docs leg OK ($(echo "$DOC_SUBS" | wc -w | tr -d ' ') documented subcommands verified)"
+
 # Shared teardown + time-bounding for the smoke blocks below. The trap
 # is registered once; each block fills (and clears) its own slots, so
 # running any combination of smokes cleans up exactly what it started.
@@ -121,23 +150,25 @@ fi
 # Hermetic serve smoke test (no-pjrt path: no XLA, no artifacts dir —
 # the builtin LeNet-300-100 is exported, served on an ephemeral
 # loopback port, answers one request, and exits on its own via
-# --max-requests). Exercises the shipped binary end to end, not just
-# the library tests.
-if [[ "$NO_PJRT" == 1 ]]; then
-  echo "== serve smoke test (export → serve → one request → clean shutdown) =="
-  BIN=target/release/repro
-  SMOKE=$(mktemp -d)
-  "$BIN" export --model mlp --sparsity 0.9 --out "$SMOKE/mlp.srvd"
+# --max-requests). Runs once per artifact format — v1, v2+f32, v2+f16 —
+# so every on-disk layout the exporter can emit is proven loadable and
+# servable by the shipped binary, not just the library tests.
+serve_smoke_one() {
+  # $1 = artifact path; remaining args are extra `repro export` flags.
+  local art=$1
+  shift
+  echo "-- serve smoke: export $* → serve → one request --"
+  "$BIN" export --model mlp --sparsity 0.9 --out "$art" "$@"
   : > "$SMOKE/serve.log"
-  "$BIN" serve --model "$SMOKE/mlp.srvd" --port 0 --workers 2 --threads 2 \
+  "$BIN" serve --model "$art" --port 0 --workers 2 --threads 2 \
     --max-requests 1 >> "$SMOKE/serve.log" 2>&1 &
   SERVE_PID=$!
   # The address has no spaces, so capture the first field after the
   # prefix — portable across BRE dialects (no char-class surprises).
-  ADDR=""
+  local addr=""
   for _ in $(seq 1 100); do
-    ADDR=$(sed -n 's/^serve: listening on \([^ ]*\) .*/\1/p' "$SMOKE/serve.log")
-    [[ -n "$ADDR" ]] && break
+    addr=$(sed -n 's/^serve: listening on \([^ ]*\) .*/\1/p' "$SMOKE/serve.log")
+    [[ -n "$addr" ]] && break
     kill -0 "$SERVE_PID" 2>/dev/null || {
       echo "server exited before reporting its address; log follows:" >&2
       cat "$SMOKE/serve.log" >&2
@@ -145,15 +176,15 @@ if [[ "$NO_PJRT" == 1 ]]; then
     }
     sleep 0.1
   done
-  if [[ -z "$ADDR" ]]; then
+  if [[ -z "$addr" ]]; then
     echo "server never reported its address; log follows:" >&2
     cat "$SMOKE/serve.log" >&2
     exit 1
   fi
-  "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" serve-bench --addr "$ADDR" --concurrency 1 --requests 1
+  "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" serve-bench --addr "$addr" --concurrency 1 --requests 1
   # --max-requests 1 ⇒ the server exits 0 after the reply; any other
   # status (crash, kill, hang-then-signal) fails CI with the log.
-  status=0
+  local status=0
   wait "$SERVE_PID" || status=$?
   if [[ "$status" -ne 0 ]]; then
     echo "server exited with status $status; log follows:" >&2
@@ -161,7 +192,16 @@ if [[ "$NO_PJRT" == 1 ]]; then
     exit 1
   fi
   SERVE_PID=""
-  echo "serve smoke OK"
+}
+
+if [[ "$NO_PJRT" == 1 ]]; then
+  echo "== serve smoke test (export → serve → one request → clean shutdown) =="
+  BIN=target/release/repro
+  SMOKE=$(mktemp -d)
+  serve_smoke_one "$SMOKE/mlp_v1.srvd"
+  serve_smoke_one "$SMOKE/mlp_v2.srvd" --format v2
+  serve_smoke_one "$SMOKE/mlp_v2f16.srvd" --format v2 --values f16
+  echo "serve smoke OK (v1, v2+f32, v2+f16)"
 fi
 
 # Observability smoke: the obs subsystem end to end through the shipped

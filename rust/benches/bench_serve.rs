@@ -21,6 +21,16 @@
 //!   allocator WITH the kernel pool and the panel scratch engaged; any
 //!   nonzero value is a regression and the binary exits 1 (same
 //!   discipline as bench_topology).
+//! * `artifact/bytes/S=0.9/{v1,v2+f32,v2+f16}` — on-disk artifact size
+//!   of the three export formats on the same S=0.9 model. GATED: v2+f16
+//!   must be ≥40% smaller than v1 (the headline compression claim) and
+//!   v2+f32 ≥25% smaller, else exit 1.
+//! * `engine/forward_packed/b=*/S=*/t=*/fmt=*` — decode-on-the-fly
+//!   latency through packed (RIGLSRVD v2) weights, same GFLOP/s field.
+//!   GATED: `fmt=v2+f32` logits bit-identical to the plain engine at
+//!   every cell; `fmt=v2+f16` within an epsilon bound with margin-gated
+//!   top-1 agreement; and the packed decode path passes the same
+//!   steady-state zero-allocation gate (warm `PanelScratch` staging).
 //! * `tcp/*` — end-to-end loopback numbers from the load generator:
 //!   `tcp/single/S=*` for per-request latency vs sparsity,
 //!   `tcp/batched-vs-serial/*` for the coalescing win — micro-batched
@@ -188,6 +198,157 @@ fn main() -> anyhow::Result<()> {
              approach the sparsifiable share)",
             dense.1 / sparse.1
         );
+    }
+
+    // ---- packed (RIGLSRVD v2) artifacts: compression ratio + decode-
+    // ---- on-the-fly latency, bit-identity / epsilon / alloc gates ----
+    {
+        use rigl::serve::ValueKind;
+        let s = 0.9;
+        let model = model_at(s);
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let p1 = dir.join(format!("bench_serve_{pid}_v1.srvd"));
+        let p2 = dir.join(format!("bench_serve_{pid}_v2f32.srvd"));
+        let p3 = dir.join(format!("bench_serve_{pid}_v2f16.srvd"));
+        model.save(&p1)?;
+        model.save_v2(&p2, ValueKind::F32)?;
+        model.save_v2(&p3, ValueKind::F16)?;
+        let len = |p: &std::path::Path| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+        let (b1, b2, b3) = (len(&p1), len(&p2), len(&p3));
+        for (label, bytes) in [("v1", b1), ("v2+f32", b2), ("v2+f16", b3)] {
+            println!("artifact/bytes/S={s}/{label}  {bytes} bytes");
+            append_bench_json(
+                "serve",
+                &format!(
+                    "{{\"name\":\"artifact/bytes/S={s}/{label}\",\"iters\":1,\
+                     \"mean_s\":{bytes},\"min_s\":{bytes},\"git_rev\":\"{}\",\"unix_ms\":{}}}",
+                    rigl::util::git_rev(),
+                    rigl::util::unix_ms()
+                ),
+            )?;
+        }
+        if (b2 as f64) > 0.75 * b1 as f64 {
+            failed = true;
+            eprintln!("REGRESSION: v2+f32 artifact {b2} bytes is not ≥25% smaller than v1 {b1}");
+        }
+        if (b3 as f64) > 0.60 * b1 as f64 {
+            failed = true;
+            eprintln!("REGRESSION: v2+f16 artifact {b3} bytes is not ≥40% smaller than v1 {b1}");
+        }
+        let packed32 = SparseModel::load(&p2)?;
+        let packed16 = SparseModel::load(&p3)?;
+        for p in [&p1, &p2, &p3] {
+            std::fs::remove_file(p).ok();
+        }
+        let nnz: usize = model.nnz();
+        let mut rng = Rng::new(2);
+        for &b in batches {
+            let x: Vec<f32> = (0..b * 784).map(|_| rng.next_f32()).collect();
+            let mut base_eng = InferEngine::new(&model, b);
+            let base: Vec<f32> = base_eng.forward(&model, &x, b).to_vec();
+            let base_bits: Vec<u32> = base.iter().map(|v| v.to_bits()).collect();
+            let scale = base.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+            let eps = 0.02 * scale;
+            for &t in thread_counts {
+                for (fmt, pm) in [("v2+f32", &packed32), ("v2+f16", &packed16)] {
+                    let pool = (t > 1).then(|| Arc::new(KernelPool::with_par_min_ops(t, 1)));
+                    let mut eng = InferEngine::new(pm, b);
+                    eng.set_pool(pool);
+                    let mut scratch = TopKScratch::default();
+                    let mut pairs = Vec::new();
+                    let flops = 2.0 * nnz as f64 * b as f64;
+                    bench_to_flops(
+                        "serve",
+                        &format!("engine/forward_packed/b={b}/S={s}/t={t}/fmt={fmt}"),
+                        fwd_iters,
+                        Some(flops),
+                        || {
+                            let logits = eng.forward(pm, &x, b);
+                            top_k(&logits[..pm.classes()], 1, &mut scratch, &mut pairs);
+                        },
+                    );
+                    let got: Vec<f32> = eng.forward(pm, &x, b).to_vec();
+                    if fmt == "v2+f32" {
+                        let bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                        if bits != base_bits {
+                            failed = true;
+                            eprintln!(
+                                "REGRESSION: packed f32 logits diverged from plain \
+                                 (b={b} t={t})"
+                            );
+                        }
+                    } else {
+                        // f16: epsilon bound + margin-gated top-1 agreement
+                        // (near-ties may legitimately flip).
+                        let classes = pm.classes();
+                        for (bi, (a, e)) in got.iter().zip(&base).enumerate() {
+                            if (a - e).abs() > eps {
+                                failed = true;
+                                eprintln!(
+                                    "REGRESSION: f16 logit {a} vs {e} exceeds eps {eps} \
+                                     (b={b} t={t} idx={bi})"
+                                );
+                                break;
+                            }
+                        }
+                        for bi in 0..b {
+                            let row = &base[bi * classes..(bi + 1) * classes];
+                            let grow = &got[bi * classes..(bi + 1) * classes];
+                            let top = |r: &[f32]| {
+                                (0..r.len())
+                                    .max_by(|&i, &j| r[i].partial_cmp(&r[j]).unwrap())
+                                    .unwrap()
+                            };
+                            let (w1, g1) = (top(row), top(grow));
+                            let mut second = f32::NEG_INFINITY;
+                            for (c, &v) in row.iter().enumerate() {
+                                if c != w1 && v > second {
+                                    second = v;
+                                }
+                            }
+                            if row[w1] - second > 2.0 * eps && g1 != w1 {
+                                failed = true;
+                                eprintln!(
+                                    "REGRESSION: f16 top-1 flipped on a confident row \
+                                     (b={b} t={t} row={bi})"
+                                );
+                            }
+                        }
+                    }
+                    // Warm from the bench above: the decode staging must
+                    // be steady-state allocation-free like everything else.
+                    let iters = if smoke { 20u64 } else { 100 };
+                    let before = ALLOC_EVENTS.load(Ordering::Relaxed);
+                    for _ in 0..iters {
+                        let logits = eng.forward(pm, &x, b);
+                        top_k(&logits[..pm.classes()], 1, &mut scratch, &mut pairs);
+                    }
+                    let allocs = ALLOC_EVENTS.load(Ordering::Relaxed) - before;
+                    let per_req = allocs as f64 / iters as f64;
+                    println!(
+                        "engine/steady_state_allocs/b={b}/S={s}/t={t}/fmt={fmt}  \
+                         {per_req:.2} allocs/request"
+                    );
+                    append_bench_json(
+                        "serve",
+                        &format!(
+                            "{{\"name\":\"engine/steady_state_allocs/b={b}/S={s}/t={t}/fmt={fmt}\",\"iters\":{iters},\
+                             \"mean_s\":{per_req:.9},\"min_s\":{per_req:.9},\"git_rev\":\"{}\",\"unix_ms\":{}}}",
+                            rigl::util::git_rev(),
+                            rigl::util::unix_ms()
+                        ),
+                    )?;
+                    if allocs != 0 {
+                        failed = true;
+                        eprintln!(
+                            "REGRESSION: {allocs} heap allocations over {iters} warm \
+                             packed requests (b={b} S={s} t={t} fmt={fmt})"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     // ---- TCP end to end: single-request latency vs sparsity ----------

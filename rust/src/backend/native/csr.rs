@@ -160,17 +160,53 @@ impl CsrTopo {
     /// Build the block decomposition with explicit sizing (tests sweep
     /// block sizes to prove results are layout-independent).
     pub fn build_blocks_with(&mut self, target_nnz: usize, max_blocks: usize) {
-        let nnz = self.col_idx.len();
+        let nnz = self.nnz();
         let target_nnz = target_nnz.max(1);
         let max_blocks = max_blocks.max(1);
         let want = (nnz / target_nnz).clamp(1, max_blocks);
+        self.blocks.target_nnz = target_nnz;
+        self.blocks.max_blocks = max_blocks;
+        self.build_row_blocks(want);
 
-        // Row blocks: greedy nnz-balanced cut points.
+        // Column blocks: uniform boundaries (masks are column-uniform in
+        // expectation, and uniformity keeps `cb_end` lookups trivial).
+        let ncb = want.min(self.cols.max(1));
+        let b = &mut self.blocks;
+        b.col_blk.clear();
+        for j in 0..=ncb {
+            b.col_blk.push((j * self.cols / ncb) as u32);
+        }
+        self.rebuild_cb_end();
+    }
+
+    /// Install a decomposition whose COLUMN boundaries come from outside
+    /// — the packed (RIGLSRVD v2) serve artifact serializes them, and
+    /// its loader pre-builds `cb_end` while streaming the delta-encoded
+    /// indices, because a packed topology never materializes `col_idx`
+    /// for `rebuild_cb_end` to walk. The encoder and the kernels must
+    /// agree on the partition by construction, so re-deriving it from
+    /// nnz here (as `build_blocks` would) is exactly what this path
+    /// avoids. Row blocks are derived from `row_ptr` the same way
+    /// `build_blocks` derives them. `cb_end` must be the row-major
+    /// `rows × ncb` end-offset index when `ncb > 1`, empty otherwise.
+    pub fn install_blocks(&mut self, col_blk: Vec<u32>, cb_end: Vec<u32>) {
+        let ncb = col_blk.len().saturating_sub(1).max(1);
+        debug_assert!(col_blk.first() == Some(&0) && col_blk.last() == Some(&(self.cols as u32)));
+        debug_assert_eq!(cb_end.len(), if ncb > 1 { self.rows * ncb } else { 0 });
+        self.blocks.target_nnz = TARGET_BLOCK_NNZ;
+        self.blocks.max_blocks = MAX_BLOCKS;
+        self.build_row_blocks(ncb);
+        self.blocks.col_blk = col_blk;
+        self.blocks.cb_end = cb_end;
+    }
+
+    /// Row blocks: greedy nnz-balanced cut points into at most `want`
+    /// blocks, from `row_ptr` alone.
+    fn build_row_blocks(&mut self, want: usize) {
+        let nnz = self.nnz();
         let nrb = want.min(self.rows.max(1));
         let per = nnz.div_ceil(nrb).max(1);
         let b = &mut self.blocks;
-        b.target_nnz = target_nnz;
-        b.max_blocks = max_blocks;
         b.row_blk.clear();
         b.rb_nnz.clear();
         b.row_blk.push(0);
@@ -188,15 +224,6 @@ impl CsrTopo {
         b.row_blk.push(self.rows as u32);
         b.rb_nnz.push(acc);
         debug_assert_eq!(b.rb_nnz.iter().map(|&n| n as usize).sum::<usize>(), nnz);
-
-        // Column blocks: uniform boundaries (masks are column-uniform in
-        // expectation, and uniformity keeps `cb_end` lookups trivial).
-        let ncb = want.min(self.cols.max(1));
-        b.col_blk.clear();
-        for j in 0..=ncb {
-            b.col_blk.push((j * self.cols / ncb) as u32);
-        }
-        self.rebuild_cb_end();
     }
 
     /// Recompute the per-`(row, col-block)` sub-range index from the
@@ -249,8 +276,13 @@ impl CsrTopo {
         }
     }
 
+    /// Surviving entries. Read off `row_ptr` rather than `col_idx`: the
+    /// two agree on every training topology, but a PACKED serve
+    /// topology (RIGLSRVD v2) carries `row_ptr` with an empty `col_idx`
+    /// — the kernels decode indices on the fly — and its nnz must still
+    /// be right for the autotune gates and the INFO endpoint.
     pub fn nnz(&self) -> usize {
-        self.col_idx.len()
+        self.row_ptr.last().map_or(0, |&n| n as usize)
     }
 
     /// Column slice of row `r`.

@@ -416,6 +416,340 @@ fn fwd_flat_cols<S: WSource>(
 }
 
 // ---------------------------------------------------------------------
+// Packed (decode-on-the-fly) forward — RIGLSRVD v2
+// ---------------------------------------------------------------------
+
+/// Borrowed view of one packed (RIGLSRVD v2) layer's weight streams —
+/// what `serve::artifact::PackedWeights` lends the kernels. The
+/// topology's `col_idx` is EMPTY for a packed layer: indices live in
+/// `idx` as per-(row, column-block) varint delta chains (byte-level
+/// spec in `docs/FORMATS.md`) and are decoded into `PanelScratch`
+/// staging one sub-range at a time, just ahead of the inner loop.
+pub struct PackedFwd<'a> {
+    /// The varint index stream, verbatim from disk (counts + deltas).
+    pub idx: &'a [u8],
+    /// Byte offset of each sub-range's FIRST DELTA (past its count
+    /// varint), row-major `rows × max(ncb, 1)`. Built once at load.
+    pub cb_byte: &'a [u32],
+    /// Largest per-row entry count — bounds every staging region.
+    pub max_row: usize,
+    /// Values in entry order (f32 verbatim, or f16 widened per decode).
+    pub vals: PackedValsRef<'a>,
+}
+
+/// The two value encodings a packed layer can carry.
+#[derive(Clone, Copy)]
+pub enum PackedValsRef<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+}
+
+impl<'a> PackedValsRef<'a> {
+    /// The `n` values at entry offset `ks` as f32: a zero-copy slice on
+    /// the f32 path (bit-identical to the plain forward by
+    /// construction), a widening copy through `stage` on the f16 path
+    /// (one rounding per weight at ENCODE time; widening is exact).
+    #[inline(always)]
+    fn widen<'s>(&self, ks: usize, n: usize, stage: &'s mut [f32]) -> &'s [f32]
+    where
+        'a: 's,
+    {
+        match *self {
+            PackedValsRef::F32(v) => &v[ks..ks + n],
+            PackedValsRef::F16(h) => {
+                for (s, &b) in stage[..n].iter_mut().zip(&h[ks..ks + n]) {
+                    *s = crate::util::f16_bits_to_f32(b);
+                }
+                &stage[..n]
+            }
+        }
+    }
+}
+
+/// Decode the column indices of sub-range `(i, j)` — `n` entries — into
+/// `out`. The first delta is from the block's base column, the rest are
+/// strictly-positive gaps, so a running sum reproduces the sorted
+/// indices. The stream was exhaustively validated at load; a decode
+/// failure here is unreachable.
+#[inline(always)]
+fn decode_sub(pw: &PackedFwd, topo: &CsrTopo, i: usize, j: usize, ncb: usize, n: usize, out: &mut [u32]) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let mut pos = pw.cb_byte[i * ncb + j] as usize;
+    let mut c = topo.blocks.col_blk[j];
+    for slot in out[..n].iter_mut() {
+        c += crate::util::uvarint_decode(pw.idx, &mut pos).expect("validated v2 index stream");
+        *slot = c;
+    }
+    n
+}
+
+/// Decode row `i` restricted to column block `blk` (`None` = the whole
+/// row, concatenating every sub-range's chain). Returns `(ks, n)`: the
+/// row/block's entry offset (for the value stream) and entry count.
+/// `out` must hold `PackedFwd::max_row` entries.
+#[inline]
+fn decode_row(pw: &PackedFwd, topo: &CsrTopo, i: usize, blk: Option<usize>, out: &mut [u32]) -> (usize, usize) {
+    let ncb = topo.blocks.n_col_blocks().max(1);
+    match blk {
+        Some(j) => {
+            let (ks, ke) = topo.cb_range(i, j);
+            (ks, decode_sub(pw, topo, i, j, ncb, ke - ks, out))
+        }
+        None => {
+            let ks = topo.row_ptr[i] as usize;
+            let ke = topo.row_ptr[i + 1] as usize;
+            if ncb == 1 {
+                return (ks, decode_sub(pw, topo, i, 0, 1, ke - ks, out));
+            }
+            let mut n = 0usize;
+            for j in 0..ncb {
+                let (s, e) = topo.cb_range(i, j);
+                n += decode_sub(pw, topo, i, j, ncb, e - s, &mut out[n..]);
+            }
+            debug_assert_eq!(n, ke - ks);
+            (ks, n)
+        }
+    }
+}
+
+/// Forward `y = x·W + bias` with `W` PACKED (RIGLSRVD v2): the hot loop
+/// streams ~3 bytes/nnz (varint index deltas + f16 values) instead of
+/// the plain path's 8, decoding each (row, column-block) sub-range into
+/// per-task `scratch` staging right before the same lane-8 / flat inner
+/// loops [`csr_spmm_bias_fwd`] runs. Work-unit partition, term order and
+/// the zero-activation skip are identical, so f32-valued packed logits
+/// are bit-identical to the plain forward at any threads × blocks ×
+/// lanes. f16 values are widened to f32 (exactly) and accumulated in
+/// f32 — still deterministic, but each weight was rounded once at
+/// export; the serve tests gate that path by epsilon + top-1 agreement.
+#[allow(clippy::too_many_arguments)]
+pub fn packed_spmm_bias_fwd(
+    exec: Exec,
+    x: &[f32],
+    batch: usize,
+    topo: &CsrTopo,
+    pw: &PackedFwd,
+    bias: &[f32],
+    y: &mut [f32],
+    scratch: &mut PanelScratch,
+) {
+    crate::obs_counter!("kernels.packed_spmm_bias_fwd").inc();
+    let (ind, outd) = (topo.rows, topo.cols);
+    debug_assert_eq!(x.len(), batch * ind);
+    debug_assert_eq!(y.len(), batch * outd);
+    debug_assert_eq!(bias.len(), outd);
+    let ncb = topo.blocks.n_col_blocks();
+    let pool = exec.pool_for(batch * topo.nnz().max(outd));
+    let yp = MutPtr(y.as_mut_ptr());
+    // Per-task staging region length: the worst row covers every case
+    // (a `Some(j)` sub-range is a subset of its row).
+    let rl = pw.max_row.max(1);
+    if use_panels(batch) {
+        let npanels = batch / LANES;
+        let tail = npanels * LANES;
+        let units = npanels + (tail < batch) as usize;
+        let ncb_eff = ncb.max(1);
+        let n_tasks = units * ncb_eff;
+        let (xp, yacc, di, dv) =
+            scratch.packed_bufs(npanels * ind, npanels * outd, n_tasks * rl);
+        pack_panels(x, ind, npanels, xp);
+        let xp: &[F32Lanes] = xp;
+        match pool {
+            Some(pool) if ncb > 1 || units > 1 => {
+                let ap = MutPtr(yacc.as_mut_ptr());
+                let dip = MutPtr(di.as_mut_ptr());
+                let dvp = MutPtr(dv.as_mut_ptr());
+                dispatch(pool, n_tasks, &|t| {
+                    let (u, j) = (t / ncb_eff, t % ncb_eff);
+                    let (c0, c1, blk) = if ncb > 1 {
+                        (
+                            topo.blocks.col_blk[j] as usize,
+                            topo.blocks.col_blk[j + 1] as usize,
+                            Some(j),
+                        )
+                    } else {
+                        (0, outd, None)
+                    };
+                    // SAFETY: staging entries [t·rl, (t+1)·rl) — owned by
+                    // task t alone (MutPtr contract).
+                    let (di, dv) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(dip.0.add(t * rl), rl),
+                            std::slice::from_raw_parts_mut(dvp.0.add(t * rl), rl),
+                        )
+                    };
+                    if u < npanels {
+                        // SAFETY: accumulator lanes [u·outd+c0, u·outd+c1)
+                        // — owned by task (u, j) alone (MutPtr contract).
+                        let acc = unsafe {
+                            std::slice::from_raw_parts_mut(ap.0.add(u * outd + c0), c1 - c0)
+                        };
+                        packed_fwd_panel(
+                            &xp[u * ind..(u + 1) * ind],
+                            u * LANES,
+                            topo,
+                            pw,
+                            bias,
+                            c0,
+                            c1,
+                            blk,
+                            acc,
+                            yp,
+                            outd,
+                            di,
+                            dv,
+                        );
+                    } else {
+                        packed_fwd_flat_cols(x, tail, batch, topo, pw, bias, c0, c1, blk, yp, di, dv);
+                    }
+                });
+            }
+            _ => {
+                for p in 0..npanels {
+                    packed_fwd_panel(
+                        &xp[p * ind..(p + 1) * ind],
+                        p * LANES,
+                        topo,
+                        pw,
+                        bias,
+                        0,
+                        outd,
+                        None,
+                        &mut yacc[p * outd..(p + 1) * outd],
+                        yp,
+                        outd,
+                        &mut di[..rl],
+                        &mut dv[..rl],
+                    );
+                }
+                packed_fwd_flat_cols(
+                    x,
+                    tail,
+                    batch,
+                    topo,
+                    pw,
+                    bias,
+                    0,
+                    outd,
+                    None,
+                    yp,
+                    &mut di[..rl],
+                    &mut dv[..rl],
+                );
+            }
+        }
+    } else {
+        match pool {
+            Some(pool) if ncb > 1 => {
+                let (di, dv) = scratch.decode_bufs(ncb * rl);
+                let dip = MutPtr(di.as_mut_ptr());
+                let dvp = MutPtr(dv.as_mut_ptr());
+                dispatch(pool, ncb, &|j| {
+                    let c0 = topo.blocks.col_blk[j] as usize;
+                    let c1 = topo.blocks.col_blk[j + 1] as usize;
+                    // SAFETY: staging entries [j·rl, (j+1)·rl) — owned by
+                    // task j alone (MutPtr contract).
+                    let (di, dv) = unsafe {
+                        (
+                            std::slice::from_raw_parts_mut(dip.0.add(j * rl), rl),
+                            std::slice::from_raw_parts_mut(dvp.0.add(j * rl), rl),
+                        )
+                    };
+                    packed_fwd_flat_cols(x, 0, batch, topo, pw, bias, c0, c1, Some(j), yp, di, dv);
+                });
+            }
+            _ => {
+                let (di, dv) = scratch.decode_bufs(rl);
+                packed_fwd_flat_cols(x, 0, batch, topo, pw, bias, 0, outd, None, yp, di, dv);
+            }
+        }
+    }
+}
+
+/// Packed twin of [`fwd_panel`]: decode the sub-range, then the
+/// identical lane-8 accumulation.
+#[allow(clippy::too_many_arguments)]
+fn packed_fwd_panel(
+    xp: &[F32Lanes],
+    b0: usize,
+    topo: &CsrTopo,
+    pw: &PackedFwd,
+    bias: &[f32],
+    c0: usize,
+    c1: usize,
+    blk: Option<usize>,
+    yacc: &mut [F32Lanes],
+    y: MutPtr<f32>,
+    outd: usize,
+    di: &mut [u32],
+    dv: &mut [f32],
+) {
+    for (c, acc) in (c0..c1).zip(yacc.iter_mut()) {
+        *acc = F32Lanes::splat(bias[c]);
+    }
+    for (i, xl) in xp.iter().enumerate() {
+        if !xl.any_nonzero() {
+            continue; // every lane would skip row i: adds no terms
+        }
+        let (ks, n) = decode_row(pw, topo, i, blk, di);
+        let vals = pw.vals.widen(ks, n, dv);
+        for (k, &c) in di[..n].iter().enumerate() {
+            let c = c as usize;
+            yacc[c - c0] = yacc[c - c0].fma_nz(*xl, vals[k]);
+        }
+    }
+    for l in 0..LANES {
+        // SAFETY: columns [c0, c1) of batch row b0+l — this task's panel
+        // and column range alone (MutPtr contract).
+        let row = unsafe { std::slice::from_raw_parts_mut(y.0.add((b0 + l) * outd + c0), c1 - c0) };
+        for (slot, acc) in row.iter_mut().zip(yacc.iter()) {
+            *slot = acc.0[l];
+        }
+    }
+}
+
+/// Packed twin of [`fwd_flat_cols`] — the ragged-tail and small-batch
+/// path (each batch row re-decodes, which only ever covers < LANES rows
+/// on the panel path or batches too small to matter).
+#[allow(clippy::too_many_arguments)]
+fn packed_fwd_flat_cols(
+    x: &[f32],
+    b0: usize,
+    b1: usize,
+    topo: &CsrTopo,
+    pw: &PackedFwd,
+    bias: &[f32],
+    c0: usize,
+    c1: usize,
+    blk: Option<usize>,
+    y: MutPtr<f32>,
+    di: &mut [u32],
+    dv: &mut [f32],
+) {
+    let (ind, outd) = (topo.rows, topo.cols);
+    for b in b0..b1 {
+        let xrow = &x[b * ind..(b + 1) * ind];
+        // SAFETY: columns [c0, c1) of batch row b — callers hand each
+        // (row-range, column-range) region to exactly one task (MutPtr
+        // contract).
+        let yreg = unsafe { std::slice::from_raw_parts_mut(y.0.add(b * outd + c0), c1 - c0) };
+        yreg.copy_from_slice(&bias[c0..c1]);
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let (ks, n) = decode_row(pw, topo, i, blk, di);
+            let vals = pw.vals.widen(ks, n, dv);
+            for (k, &c) in di[..n].iter().enumerate() {
+                yreg[c as usize - c0] += xv * vals[k];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // Backward data product
 // ---------------------------------------------------------------------
 
@@ -1468,6 +1802,91 @@ mod tests {
                 );
                 for (a, e) in y1.iter().zip(&y_csr[bi * outd..(bi + 1) * outd]) {
                     assert_eq!(a.to_bits(), e.to_bits());
+                }
+            }
+        }
+    }
+
+    /// Test-local twin of the serve artifact's encoder: delta-pack a
+    /// topology's indices against its own block decomposition.
+    fn pack(topo: &CsrTopo) -> (Vec<u8>, Vec<u32>, usize) {
+        let ncb = topo.blocks.n_col_blocks().max(1);
+        let (mut idx, mut cb_byte, mut max_row) = (Vec::new(), Vec::new(), 0usize);
+        for r in 0..topo.rows {
+            max_row = max_row.max(topo.row_ptr[r + 1] as usize - topo.row_ptr[r] as usize);
+            for j in 0..ncb {
+                let (ks, ke) = topo.cb_range(r, j);
+                crate::util::uvarint_encode((ke - ks) as u32, &mut idx);
+                cb_byte.push(idx.len() as u32);
+                let mut prev = topo.blocks.col_blk[j];
+                for k in ks..ke {
+                    crate::util::uvarint_encode(topo.col_idx[k] - prev, &mut idx);
+                    prev = topo.col_idx[k];
+                }
+            }
+        }
+        (idx, cb_byte, max_row)
+    }
+
+    /// The decode-on-the-fly forward must be bit-identical to the plain
+    /// value-carrying forward at every batch size (flat, panel and
+    /// ragged-tail paths), block decomposition, and execution mode —
+    /// the determinism contract extended across the format axis. The
+    /// f16 variant must equal the plain forward over pre-widened values
+    /// bitwise (widening is exact; only the encode rounding differs).
+    #[test]
+    fn packed_fwd_bit_identical_to_plain_across_exec_blocks_batch() {
+        let mut rng = Rng::new(31);
+        let mut s = PanelScratch::default();
+        for &(ind, outd, density) in &[(12, 10, 0.5), (9, 17, 0.8), (6, 5, 0.0)] {
+            let (w, mut topo) = setup(&mut rng, ind, outd, density);
+            for &(target, maxb) in &[(4096usize, 16usize), (4, 4), (1, 8)] {
+                topo.build_blocks_with(target, maxb);
+                let mut vals = Vec::with_capacity(topo.nnz());
+                for i in 0..ind {
+                    for &c in topo.row(i) {
+                        vals.push(w[i * outd + c as usize]);
+                    }
+                }
+                let (idx, cb_byte, max_row) = pack(&topo);
+                let halves: Vec<u16> =
+                    vals.iter().map(|&v| crate::util::f32_to_f16_bits(v)).collect();
+                let wide: Vec<f32> =
+                    halves.iter().map(|&h| crate::util::f16_bits_to_f32(h)).collect();
+                for b in [1usize, 3, 8, 11] {
+                    let x: Vec<f32> = (0..b * ind).map(|_| rng.next_f32() - 0.3).collect();
+                    let bias: Vec<f32> = (0..outd).map(|_| rng.next_f32()).collect();
+                    let mut want = vec![0.0f32; b * outd];
+                    csr_spmm_bias_fwd(Exec::Serial, &x, b, &topo, &vals, &bias, &mut want, &mut s);
+                    let mut want16 = vec![0.0f32; b * outd];
+                    csr_spmm_bias_fwd(
+                        Exec::Serial, &x, b, &topo, &wide, &bias, &mut want16, &mut s,
+                    );
+                    let pool = crate::pool::KernelPool::with_par_min_ops(4, 1);
+                    for exec in [Exec::Serial, Exec::Pool(&pool)] {
+                        let pw = PackedFwd {
+                            idx: &idx,
+                            cb_byte: &cb_byte,
+                            max_row,
+                            vals: PackedValsRef::F32(&vals),
+                        };
+                        let mut y = vec![9.0f32; b * outd];
+                        packed_spmm_bias_fwd(exec, &x, b, &topo, &pw, &bias, &mut y, &mut s);
+                        for (a, e) in y.iter().zip(&want) {
+                            assert_eq!(a.to_bits(), e.to_bits(), "f32 b={b} target={target}");
+                        }
+                        let pw = PackedFwd {
+                            idx: &idx,
+                            cb_byte: &cb_byte,
+                            max_row,
+                            vals: PackedValsRef::F16(&halves),
+                        };
+                        let mut y = vec![9.0f32; b * outd];
+                        packed_spmm_bias_fwd(exec, &x, b, &topo, &pw, &bias, &mut y, &mut s);
+                        for (a, e) in y.iter().zip(&want16) {
+                            assert_eq!(a.to_bits(), e.to_bits(), "f16 b={b} target={target}");
+                        }
+                    }
                 }
             }
         }

@@ -183,6 +183,13 @@ pub(crate) fn pack_panels(src: &[f32], dim: usize, npanels: usize, out: &mut [F3
 pub struct PanelScratch {
     pub(crate) x: Vec<F32Lanes>,
     pub(crate) y: Vec<F32Lanes>,
+    /// Decode staging for the packed (RIGLSRVD v2) forwards: per-task
+    /// regions of column indices decoded from the varint delta stream,
+    /// and f32-widened values on the f16 path. Sized `n_tasks × max
+    /// sub-range length` by the kernel before dispatch (grow-only, so
+    /// the warm path allocates nothing — same discipline as `x`/`y`).
+    pub(crate) di: Vec<u32>,
+    pub(crate) dv: Vec<f32>,
 }
 
 impl PanelScratch {
@@ -204,6 +211,46 @@ impl PanelScratch {
             self.y.resize(ny, F32Lanes::zero());
         }
         (&mut self.x[..nx], &mut self.y[..ny])
+    }
+
+    /// The decode staging buffers, each grown to at least `n` entries.
+    pub(crate) fn decode_bufs(&mut self, n: usize) -> (&mut [u32], &mut [f32]) {
+        if self.di.len() < n {
+            self.di.resize(n, 0);
+        }
+        if self.dv.len() < n {
+            self.dv.resize(n, 0.0);
+        }
+        (&mut self.di[..n], &mut self.dv[..n])
+    }
+
+    /// All four buffers at once — the packed panel forward needs the
+    /// transpose, the accumulators, and both staging regions live
+    /// simultaneously (distinct fields, so the borrows don't conflict).
+    pub(crate) fn packed_bufs(
+        &mut self,
+        nx: usize,
+        ny: usize,
+        nd: usize,
+    ) -> (&mut [F32Lanes], &mut [F32Lanes], &mut [u32], &mut [f32]) {
+        if self.x.len() < nx {
+            self.x.resize(nx, F32Lanes::zero());
+        }
+        if self.y.len() < ny {
+            self.y.resize(ny, F32Lanes::zero());
+        }
+        if self.di.len() < nd {
+            self.di.resize(nd, 0);
+        }
+        if self.dv.len() < nd {
+            self.dv.resize(nd, 0.0);
+        }
+        (
+            &mut self.x[..nx],
+            &mut self.y[..ny],
+            &mut self.di[..nd],
+            &mut self.dv[..nd],
+        )
     }
 }
 

@@ -111,6 +111,12 @@ fn run() -> Result<()> {
         print_usage();
         return Ok(());
     };
+    // `repro help` / `--help` / `-h` print usage and succeed — the CI
+    // docs leg diffs documented subcommands/flags against this output.
+    if matches!(cmd.as_str(), "help" | "--help" | "-h") {
+        print_usage();
+        return Ok(());
+    }
     let args = Args::parse(&argv[1..])?;
     // Observability flags apply to every subcommand: --no-obs turns the
     // whole subsystem off; --trace-out arms span recording up front and
@@ -379,10 +385,14 @@ fn describe(m: &SparseModel) -> String {
 /// Freeze a model into a `.srvd` serve artifact: from a training
 /// checkpoint when `--ckpt` is given, else He-init weights through a
 /// random mask at `--sparsity` (the hermetic path — works with no
-/// artifacts dir via the builtin MLP zoo).
+/// artifacts dir via the builtin MLP zoo). `--format v2` writes the
+/// delta-compressed format, optionally with `--values f16`
+/// (`docs/FORMATS.md` has the byte-level spec).
 fn export_cmd(args: &Args) -> Result<()> {
     let model = args.get("model").unwrap_or("mlp");
     let out = PathBuf::from(args.get("out").unwrap_or("model.srvd"));
+    let fmt =
+        rigl::serve::ArtifactFormat::parse(args.get("format").unwrap_or("v1"), args.get("values"))?;
     let manifest = rigl::backend::manifest_for(BackendKind::Native)?;
     let def = manifest.get(model)?;
     let sm = match args.get("ckpt") {
@@ -397,9 +407,13 @@ fn export_cmd(args: &Args) -> Result<()> {
             args.usize("seed", 0)? as u64,
         )?,
     };
-    sm.save(&out)?;
+    sm.save_as(&out, fmt)?;
     let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
-    println!("exported {model} → {} ({}, {bytes} bytes)", out.display(), describe(&sm));
+    println!(
+        "exported {model} → {} ({fmt}, {}, {bytes} bytes)",
+        out.display(),
+        describe(&sm)
+    );
     Ok(())
 }
 
@@ -699,7 +713,7 @@ fn flops_cmd(args: &Args) -> Result<()> {
 fn print_usage() {
     eprintln!(
         "repro — RigL (ICML 2020) reproduction\n\
-         usage: repro <list|info|table|all-tables|train|flops|export|serve|serve-bench|stats|topo-grid|topo-report> [--flags]\n\
+         usage: repro <list|info|table|all-tables|train|flops|export|serve|serve-bench|stats|topo-grid|topo-report|help> [--flags]\n\
          \n\
          repro table --id fig2-left [--seeds 3] [--scale 1.0] [--jobs 4] [--threads 1] [--out results]\n\
          \x20          (--jobs fans runs out; --threads parallelizes INSIDE a native\n\
@@ -725,6 +739,9 @@ fn print_usage() {
          \n\
          serving (std-only, hermetic — no XLA, no artifacts dir):\n\
          repro export --model mlp --out mlp.srvd [--ckpt ckpt.bin | --sparsity 0.9 --dist uniform --seed 0]\n\
+         \x20          [--format v1|v2] [--values f32|f16]   (v2 = delta-compressed\n\
+         \x20           indices, ~3 bytes/nnz; --values f16 halves the value stream;\n\
+         \x20           f32 serving is bit-identical across formats — docs/FORMATS.md)\n\
          repro serve --model mlp.srvd [--port 0] [--workers 4] [--threads 1] [--max-batch 16]\n\
          \x20          [--max-wait-us 200] [--max-requests 0] [--reload-poll-ms 200]\n\
          \x20          [--max-conns 256] [--idle-timeout-ms 10000] [--queue-depth 0]\n\

@@ -9,6 +9,10 @@
 //! kernels (`csr_spmm_bias_fwd` + `relu`), value-carrying instead of
 //! dense-backed, so per-request cost is O(nnz·batch) and logits are
 //! bit-identical to the native training forward on the same weights.
+//! Packed (RIGLSRVD v2) layers route to `packed_spmm_bias_fwd`, which
+//! decodes varint index deltas into `PanelScratch` staging on the fly —
+//! same work partition, same term order, so f32-valued packed logits
+//! are bit-identical to the plain path too.
 //!
 //! The classification heads ([`top_k`], [`argmax`]) run over one logits
 //! row; `top_k` reuses `util::argselect_k_into`'s allocation-free
@@ -17,12 +21,12 @@
 
 use std::sync::Arc;
 
-use crate::backend::native::kernels::{csr_spmm_bias_fwd, relu, Exec};
+use crate::backend::native::kernels::{csr_spmm_bias_fwd, packed_spmm_bias_fwd, relu, Exec};
 use crate::backend::native::simd::{PanelScratch, LANES};
 use crate::pool::KernelPool;
 use crate::util::argselect_k_into;
 
-use super::artifact::SparseModel;
+use super::artifact::{SparseModel, Weights};
 
 /// Per-worker activation scratch for one model shape.
 #[derive(Default)]
@@ -96,6 +100,26 @@ impl InferEngine {
             let max_out = self.dims.iter().map(|&(_, o)| o).max().unwrap_or(0);
             let _ = self.panels.xy_bufs(npanels * max_in, npanels * max_out);
         }
+        // Decode staging for packed (RIGLSRVD v2) layers: the worst case
+        // is the panel path's per-task regions — (panels + tail) ×
+        // column-blocks tasks, each staging one worst-row decode. Plain
+        // models need none; a v1→v2 hot reload at unchanged shape grows
+        // these once inside the first forward and is warm thereafter.
+        let units = self.cap / LANES + 1;
+        let need = model
+            .layers
+            .iter()
+            .filter_map(|l| match &l.weights {
+                Weights::Packed(pw) => Some(
+                    units * l.topo.blocks.n_col_blocks().max(1) * pw.max_row.max(1),
+                ),
+                Weights::Plain(_) => None,
+            })
+            .max()
+            .unwrap_or(0);
+        if need > 0 {
+            let _ = self.panels.decode_bufs(need);
+        }
     }
 
     /// Run `batch` rows of `x` (`batch × in_dim`, row-major) through the
@@ -123,16 +147,28 @@ impl InferEngine {
                 &prev[l - 1][..batch * model.layers[l - 1].topo.cols]
             };
             let y = &mut rest[0][..batch * out];
-            csr_spmm_bias_fwd(
-                exec,
-                input,
-                batch,
-                &layer.topo,
-                &layer.values,
-                &layer.bias,
-                y,
-                &mut self.panels,
-            );
+            match &layer.weights {
+                Weights::Plain(vals) => csr_spmm_bias_fwd(
+                    exec,
+                    input,
+                    batch,
+                    &layer.topo,
+                    vals,
+                    &layer.bias,
+                    y,
+                    &mut self.panels,
+                ),
+                Weights::Packed(pw) => packed_spmm_bias_fwd(
+                    exec,
+                    input,
+                    batch,
+                    &layer.topo,
+                    &pw.view(),
+                    &layer.bias,
+                    y,
+                    &mut self.panels,
+                ),
+            }
             if l + 1 < n {
                 relu(y);
             }
@@ -314,6 +350,77 @@ mod tests {
                     .collect();
                 assert_eq!(got, want, "batch={batch} threads={threads}");
             }
+        }
+    }
+
+    /// A packed (v2, f32-valued) model must serve logits bit-identical
+    /// to its plain (v1) twin — at every batch size (flat, panel, and
+    /// ragged-tail paths) and thread count. This is the determinism
+    /// contract extended across the FORMAT axis.
+    #[test]
+    fn packed_engine_logits_bit_identical_to_plain() {
+        use crate::serve::artifact::ValueKind;
+        let def = mlp_def("mlp", 784, &[300, 100], 10, 1);
+        let plain = SparseModel::init_random(&def, 0.8, &Distribution::Uniform, 21).unwrap();
+        let packed = plain.to_packed(ValueKind::F32).unwrap();
+        assert!(packed.is_packed());
+        let mut r = Rng::new(22);
+        for batch in [1usize, 4, 8, 12] {
+            let x: Vec<f32> = (0..batch * 784).map(|_| r.next_f32()).collect();
+            let mut pe = InferEngine::new(&plain, batch);
+            let want: Vec<u32> = pe
+                .forward(&plain, &x, batch)
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            let mut ser = InferEngine::new(&packed, batch);
+            let got: Vec<u32> = ser
+                .forward(&packed, &x, batch)
+                .iter()
+                .map(|v| v.to_bits())
+                .collect();
+            assert_eq!(got, want, "serial batch={batch}");
+            for threads in [2usize, 8] {
+                let pool =
+                    std::sync::Arc::new(crate::pool::KernelPool::with_par_min_ops(threads, 1));
+                let mut eng = InferEngine::new(&packed, batch);
+                eng.set_pool(Some(pool));
+                let got: Vec<u32> = eng
+                    .forward(&packed, &x, batch)
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(got, want, "batch={batch} threads={threads}");
+            }
+        }
+    }
+
+    /// The f16 path is NOT bit-exact (one RNE rounding per weight at
+    /// export) but must stay within a small relative error of the f32
+    /// logits on tame inputs — the serve integration tests add the
+    /// top-1-agreement gate on top.
+    #[test]
+    fn f16_engine_logits_within_epsilon_of_f32() {
+        use crate::serve::artifact::ValueKind;
+        let def = mlp_def("t", 64, &[32], 8, 1);
+        let plain = SparseModel::init_random(&def, 0.7, &Distribution::Uniform, 23).unwrap();
+        let half = plain.to_packed(ValueKind::F16).unwrap();
+        let mut r = Rng::new(24);
+        let batch = 4;
+        let x: Vec<f32> = (0..batch * 64).map(|_| r.next_f32()).collect();
+        let mut pe = InferEngine::new(&plain, batch);
+        let want = pe.forward(&plain, &x, batch).to_vec();
+        let mut he = InferEngine::new(&half, batch);
+        let got = he.forward(&half, &x, batch).to_vec();
+        let scale = want.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        for (a, e) in got.iter().zip(&want) {
+            // f16 has an 11-bit significand: per-weight relative error ≤
+            // 2⁻¹¹; accumulation over ≤64 in-rows keeps the logit error
+            // well under 64·2⁻¹¹ of the logit scale.
+            assert!(
+                (a - e).abs() <= 64.0 * scale / 2048.0,
+                "{a} vs {e} (scale {scale})"
+            );
         }
     }
 

@@ -13,13 +13,16 @@
 //!
 //! Six layers, bottom up:
 //!
-//! * [`artifact`] — the `RIGLSRVD` frozen [`SparseModel`] format:
-//!   per-layer `indptr`/`indices`/`values` + bias, exported from a
-//!   training [`Checkpoint`](crate::model::Checkpoint) + manifest (or
-//!   straight from in-memory params/masks) via `repro export`. No dense
-//!   weight storage, no optimizer state; writes are atomic
-//!   (tmp + rename) so the hot-reload watcher can never see a torn
-//!   file.
+//! * [`artifact`] — the `RIGLSRVD` frozen [`SparseModel`] formats
+//!   (byte-level spec: `docs/FORMATS.md`): v1 stores per-layer
+//!   `indptr`/`indices`/`values` + bias; v2 delta-compresses the index
+//!   stream (per-(row, column-block) varint gap chains) and optionally
+//!   carries f16 values — `repro export --format v2 [--values f16]` —
+//!   for ~3 bytes/nnz instead of 8. Exported from a training
+//!   [`Checkpoint`](crate::model::Checkpoint) + manifest (or straight
+//!   from in-memory params/masks) via `repro export`. No dense weight
+//!   storage, no optimizer state; writes are atomic (tmp + rename) so
+//!   the hot-reload watcher can never see a torn file.
 //! * [`engine`] — a forward-only inference path over the frozen CSR,
 //!   reusing the native training kernels
 //!   (`backend::native::kernels::{csr_spmm_bias_fwd, relu}`) with
@@ -67,7 +70,9 @@ pub mod faults;
 pub mod protocol;
 pub mod server;
 
-pub use artifact::{ServeLayer, SparseModel};
+pub use artifact::{
+    ArtifactFormat, PackedVals, PackedWeights, ServeLayer, SparseModel, ValueKind, Weights,
+};
 pub use batcher::{Batcher, BatcherConfig, Reject, RejectKind};
 pub use chaos::{ChaosConfig, ChaosProxy};
 pub use client::{

@@ -425,6 +425,115 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
+// ---------------------------------------------------------------------
+// LEB128 varints and IEEE binary16 — the RIGLSRVD v2 primitives
+// (spec: docs/FORMATS.md). Here rather than in `serve` because the
+// decode-on-the-fly kernels in `backend::native` read the same streams.
+// ---------------------------------------------------------------------
+
+/// Append `v` as an unsigned LEB128 varint: low 7 bits per byte, high
+/// bit set on every byte except the last. A `u32` takes 1–5 bytes;
+/// values < 128 (almost every delta in a v2 index stream) take one.
+pub fn uvarint_encode(mut v: u32, out: &mut Vec<u8>) {
+    while v >= 0x80 {
+        out.push((v as u8 & 0x7F) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Decode one unsigned LEB128 varint at `*pos`, advancing it. Returns
+/// `None` on truncation or a value that overflows u32 (a 6-byte chain,
+/// or a 5th byte with bits above u32). The single-byte fast path is the
+/// v2 decode hot loop, so keep it branch-light.
+#[inline(always)]
+pub fn uvarint_decode(bytes: &[u8], pos: &mut usize) -> Option<u32> {
+    let b = *bytes.get(*pos)?;
+    if b < 0x80 {
+        *pos += 1;
+        return Some(b as u32);
+    }
+    let mut v = (b & 0x7F) as u32;
+    let mut shift = 7u32;
+    loop {
+        *pos += 1;
+        let b = *bytes.get(*pos)?;
+        if shift == 28 && b > 0x0F {
+            // Bits 32+ set, or a 6th byte coming: not a u32.
+            return None;
+        }
+        v |= ((b & 0x7F) as u32) << shift;
+        if b < 0x80 {
+            *pos += 1;
+            return Some(v);
+        }
+        shift += 7;
+    }
+}
+
+/// `f32` → IEEE 754 binary16 bit pattern, round-to-nearest-even.
+/// Overflow saturates to ±Inf, |x| < 2⁻²⁵ rounds to ±0, NaNs stay NaN
+/// (payload truncated, quiet bit forced so it cannot collapse to Inf).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mut mant = bits & 0x007F_FFFF;
+    if exp == 255 {
+        let payload = if mant != 0 { 0x200 | (mant >> 13) as u16 } else { 0 };
+        return sign | 0x7C00 | payload;
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7C00; // overflow → ±Inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow → ±0
+        }
+        // Subnormal: make the implicit bit explicit, then round the
+        // 24-bit significand down to `10 + e` bits with RNE. A carry
+        // out of the top rolls into the exponent field on its own
+        // (0x400 is the smallest normal).
+        mant |= 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let rounded = (mant + (1 << (shift - 1)) - 1 + ((mant >> shift) & 1)) >> shift;
+        return sign | rounded as u16;
+    }
+    // Normal: 23 → 10 mantissa bits with RNE; a mantissa carry adds one
+    // to the exponent field arithmetically, and may saturate to Inf.
+    let rounded = (mant + 0xFFF + ((mant >> 13) & 1)) >> 13;
+    let v = ((e as u32) << 10) + rounded;
+    if v >= 0x7C00 {
+        return sign | 0x7C00;
+    }
+    sign | v as u16
+}
+
+/// IEEE 754 binary16 bit pattern → `f32` (exact — every f16 value is
+/// representable in f32).
+#[inline(always)]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = (h as u32 >> 15) << 31;
+    let exp = (h >> 10) & 0x1F;
+    let frac = (h & 0x3FF) as u32;
+    let bits = match exp {
+        0 => {
+            if frac == 0 {
+                sign // ±0
+            } else {
+                // Subnormal: value is frac · 2⁻²⁴; normalize into f32.
+                let shift = frac.leading_zeros() - 21; // bits below the top set bit
+                let e = 127 - 15 + 1 - shift;
+                sign | (e << 23) | ((frac << (shift + 13)) & 0x007F_FFFF)
+            }
+        }
+        0x1F => sign | 0x7F80_0000 | (frac << 13), // ±Inf / NaN
+        _ => sign | ((exp as u32 + 112) << 23) | (frac << 13),
+    };
+    f32::from_bits(bits)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -624,5 +733,98 @@ mod tests {
         assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
         assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138).abs() < 1e-3);
         assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn uvarint_roundtrips_across_width_boundaries() {
+        let cases = [
+            0u32, 1, 5, 127, 128, 129, 300, 16383, 16384, 1 << 21, (1 << 21) - 1, (1 << 28) - 1,
+            1 << 28, u32::MAX - 1, u32::MAX,
+        ];
+        let mut buf = Vec::new();
+        for &v in &cases {
+            uvarint_encode(v, &mut buf);
+        }
+        let mut pos = 0usize;
+        for &v in &cases {
+            assert_eq!(uvarint_decode(&buf, &mut pos), Some(v));
+        }
+        assert_eq!(pos, buf.len());
+        // Width: 1 byte below 128, 5 bytes at the top.
+        let mut one = Vec::new();
+        uvarint_encode(127, &mut one);
+        assert_eq!(one.len(), 1);
+        one.clear();
+        uvarint_encode(128, &mut one);
+        assert_eq!(one.len(), 2);
+        one.clear();
+        uvarint_encode(u32::MAX, &mut one);
+        assert_eq!(one.len(), 5);
+    }
+
+    #[test]
+    fn uvarint_rejects_truncation_and_overflow() {
+        // Truncated: continuation bit set on the last available byte.
+        let mut pos = 0;
+        assert_eq!(uvarint_decode(&[0x80], &mut pos), None);
+        let mut pos = 0;
+        assert_eq!(uvarint_decode(&[], &mut pos), None);
+        // 5th byte with bits above u32 (0x10 puts a bit at position 32).
+        let mut pos = 0;
+        assert_eq!(uvarint_decode(&[0x80, 0x80, 0x80, 0x80, 0x10], &mut pos), None);
+        // A 6-byte chain can only overflow.
+        let mut pos = 0;
+        assert_eq!(
+            uvarint_decode(&[0x80, 0x80, 0x80, 0x80, 0x80, 0x01], &mut pos),
+            None
+        );
+        // The largest valid 5-byte encoding still decodes.
+        let mut pos = 0;
+        assert_eq!(
+            uvarint_decode(&[0xFF, 0xFF, 0xFF, 0xFF, 0x0F], &mut pos),
+            Some(u32::MAX)
+        );
+    }
+
+    #[test]
+    fn f16_exact_values_and_edge_cases() {
+        // Exactly representable values roundtrip to identical f32 bits.
+        for v in [
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 2.5, -2.5, 65504.0, -65504.0, 6.1035156e-5,
+            5.9604645e-8, // smallest f16 subnormal
+        ] {
+            let h = f32_to_f16_bits(v);
+            assert_eq!(f16_bits_to_f32(h).to_bits(), v.to_bits(), "{v}");
+        }
+        // Overflow saturates, tiny underflows to signed zero.
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-1e6), 0xFC00);
+        assert_eq!(f32_to_f16_bits(1e-9), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Round-to-nearest-even at the halfway point: 1 + 2⁻¹¹ is
+        // exactly between 1.0 and the next f16 (1 + 2⁻¹⁰); even wins.
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11)), 0x3C00);
+        // …but just above the tie rounds up.
+        assert_eq!(f32_to_f16_bits(1.0 + 1.5 * 2.0f32.powi(-11)), 0x3C01);
+    }
+
+    /// Exhaustive: decoding any of the 65536 f16 bit patterns to f32 and
+    /// re-encoding is the identity (NaNs stay NaN; payloads with the
+    /// quiet bit set are preserved exactly).
+    #[test]
+    fn f16_decode_encode_is_identity_on_all_bit_patterns() {
+        for h in 0..=u16::MAX {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(f)).is_nan(), "{h:#06x}");
+                if h & 0x200 != 0 {
+                    assert_eq!(f32_to_f16_bits(f), h, "{h:#06x}");
+                }
+            } else {
+                assert_eq!(f32_to_f16_bits(f), h, "{h:#06x}");
+            }
+        }
     }
 }
