@@ -118,7 +118,7 @@ for sub in $DOC_SUBS; do
     exit 1
   fi
 done
-for flag in --format --values --save-ckpt; do
+for flag in --format --values --save-ckpt --shards --client-batch; do
   if ! grep -q -- "$flag" <<< "$USAGE"; then
     echo "usage text is missing the documented flag $flag" >&2
     exit 1
@@ -160,7 +160,9 @@ serve_smoke_one() {
   echo "-- serve smoke: export $* → serve → one request --"
   "$BIN" export --model mlp --sparsity 0.9 --out "$art" "$@"
   : > "$SMOKE/serve.log"
-  "$BIN" serve --model "$art" --port 0 --workers 2 --threads 2 \
+  # --shards 2 so the smoke exercises the sharded event-loop front end
+  # (accept fan-out, poll-driven deadlines) through the shipped binary.
+  "$BIN" serve --model "$art" --port 0 --shards 2 --workers 2 --threads 2 \
     --max-requests 1 >> "$SMOKE/serve.log" 2>&1 &
   SERVE_PID=$!
   # The address has no spaces, so capture the first field after the
@@ -298,8 +300,8 @@ if [[ "$OBS_SMOKE" == 1 ]]; then
   # up between the two serve-bench calls and still exits 0 on its own.
   "$BIN" export --model mlp --sparsity 0.9 --out "$OBS_TMP/mlp.srvd"
   : > "$OBS_TMP/serve.log"
-  "$BIN" serve --model "$OBS_TMP/mlp.srvd" --port 0 --workers 2 --threads 2 \
-    --max-requests 2 >> "$OBS_TMP/serve.log" 2>&1 &
+  "$BIN" serve --model "$OBS_TMP/mlp.srvd" --port 0 --shards 2 --workers 2 \
+    --threads 2 --max-requests 2 >> "$OBS_TMP/serve.log" 2>&1 &
   OBS_PID=$!
   ADDR=""
   for _ in $(seq 1 100); do
@@ -325,15 +327,18 @@ if [[ "$OBS_SMOKE" == 1 ]]; then
     exit 1
   }
   "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" stats --addr "$ADDR" > "$OBS_TMP/stats.log"
-  for needle in "^queue_wait:" "^e2e:" "^batch:"; do
+  for needle in "^queue_wait:" "^e2e:" "^batch:" "^shards:     count=2"; do
     grep -q "$needle" "$OBS_TMP/stats.log" || {
       echo "repro stats output is missing $needle; log follows:" >&2
       cat "$OBS_TMP/stats.log" >&2
       exit 1
     }
   done
+  # Second (budget-closing) request rides a multi-row INFERM frame:
+  # one 2-row frame is ONE request against --max-requests, and proves
+  # client-side batching end to end through the shipped binary.
   "${TIMEOUT[@]+"${TIMEOUT[@]}"}" "$BIN" serve-bench --addr "$ADDR" \
-    --concurrency 1 --requests 1 > /dev/null
+    --concurrency 1 --requests 1 --client-batch 2 > /dev/null
   status=0
   wait "$OBS_PID" || status=$?
   if [[ "$status" -ne 0 ]]; then

@@ -434,6 +434,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         idle_timeout_ms: args.usize("idle-timeout-ms", 10_000)? as u64,
         queue_depth: args.usize("queue-depth", 0)?,
         drain_timeout_ms: args.usize("drain-timeout-ms", 2_000)? as u64,
+        shards: args.usize("shards", 1)?,
     };
     // start_watching stamps the artifact before loading it, so an
     // export racing this startup is caught by the watcher's first poll.
@@ -451,9 +452,10 @@ fn serve_cmd(args: &Args) -> Result<()> {
         let mut so = std::io::stdout();
         writeln!(
             so,
-            "serve: listening on {} | model {name} ({desc}) | workers={} threads={} \
+            "serve: listening on {} | model {name} ({desc}) | shards={} workers={} threads={} \
              max_batch={} max_wait={}µs | max_conns={} idle_timeout={}ms{}",
             server.addr(),
+            cfg.shards.max(1),
             cfg.workers,
             cfg.threads,
             cfg.max_batch,
@@ -480,12 +482,19 @@ fn serve_cmd(args: &Args) -> Result<()> {
 
 /// Load-generate against a serve endpoint (`--addr`), or self-host a
 /// frozen artifact first (`--model`) and bench over loopback.
+/// `--client-batch R` packs R rows per INFERM frame (client-side
+/// batching; requests/rps then count rows, latency samples are
+/// per-frame).
 fn serve_bench_cmd(args: &Args) -> Result<()> {
     let concurrency = args.usize("concurrency", 4)?;
     let requests = args.usize("requests", 100)?;
     let k = args.usize("k", 1)?;
+    let opts = rigl::serve::LoadOpts {
+        client_batch: args.usize("client-batch", 1)?,
+        ..Default::default()
+    };
     let stats = match (args.get("addr"), args.get("model")) {
-        (Some(addr), _) => rigl::serve::run_load(addr, concurrency, requests, k)?,
+        (Some(addr), _) => rigl::serve::run_load_opts(addr, concurrency, requests, k, opts)?,
         (None, Some(path)) => {
             let model = SparseModel::load(std::path::Path::new(path))?;
             let server = Server::start(
@@ -496,11 +505,12 @@ fn serve_bench_cmd(args: &Args) -> Result<()> {
                     max_batch: args.usize("max-batch", 16)?,
                     max_wait_us: args.usize("max-wait-us", 200)? as u64,
                     threads: args.usize("threads", 1)?,
+                    shards: args.usize("shards", 1)?,
                     ..ServeConfig::default()
                 },
             )?;
             let addr = server.addr().to_string();
-            let stats = rigl::serve::run_load(&addr, concurrency, requests, k)?;
+            let stats = rigl::serve::run_load_opts(&addr, concurrency, requests, k, opts)?;
             let (reqs, batches) = server.stats();
             server.shutdown();
             eprintln!("serve-bench: {reqs} requests fused into {batches} batches");
@@ -546,6 +556,18 @@ fn stats_cmd(args: &Args) -> Result<()> {
         "batch:      p50={} p90={} max={}",
         s.batch_p50, s.batch_p90, s.batch_max
     );
+    // Per-shard SHARD block (servers newer than the OBS era; first 8
+    // shards on the wire).
+    if s.shard_count > 0 {
+        let per: Vec<String> = s
+            .shards
+            .iter()
+            .take(s.shard_count as usize)
+            .enumerate()
+            .map(|(i, sh)| format!("{i}:q={} shed={}", sh.queue_depth, sh.shed))
+            .collect();
+        println!("shards:     count={} [{}]", s.shard_count, per.join(" "));
+    }
     Ok(())
 }
 
@@ -742,26 +764,36 @@ fn print_usage() {
          \x20          [--format v1|v2] [--values f32|f16]   (v2 = delta-compressed\n\
          \x20           indices, ~3 bytes/nnz; --values f16 halves the value stream;\n\
          \x20           f32 serving is bit-identical across formats — docs/FORMATS.md)\n\
-         repro serve --model mlp.srvd [--port 0] [--workers 4] [--threads 1] [--max-batch 16]\n\
-         \x20          [--max-wait-us 200] [--max-requests 0] [--reload-poll-ms 200]\n\
-         \x20          [--max-conns 256] [--idle-timeout-ms 10000] [--queue-depth 0]\n\
-         \x20          [--drain-timeout-ms 2000]\n\
+         repro serve --model mlp.srvd [--port 0] [--shards 1] [--workers 4] [--threads 1]\n\
+         \x20          [--max-batch 16] [--max-wait-us 200] [--max-requests 0]\n\
+         \x20          [--reload-poll-ms 200] [--max-conns 256] [--idle-timeout-ms 10000]\n\
+         \x20          [--queue-depth 0] [--drain-timeout-ms 2000]\n\
          \x20          (port 0 = ephemeral, printed on stdout; the artifact file is\n\
-         \x20           watched and hot-reloaded on change; --threads shares one\n\
-         \x20           kernel pool across workers for per-request latency;\n\
+         \x20           watched and hot-reloaded on change — one atomic swap shared by\n\
+         \x20           every shard; --shards N runs N nonblocking accept/poll loops,\n\
+         \x20           each with its own micro-batcher and --workers engine replicas\n\
+         \x20           (--queue-depth and --workers are PER SHARD); --threads shares\n\
+         \x20           one kernel pool across all replicas for per-request latency;\n\
          \x20           keep --max-batch a multiple of 8 — fused forwards run in\n\
          \x20           SIMD batch-panels of 8, ragged rows fall to the scalar tail.\n\
-         \x20           Admission: connections past --max-conns and requests past the\n\
-         \x20           batcher queue bound (--queue-depth, 0 = derived) get a typed\n\
-         \x20           BUSY frame; idle/slowloris peers are closed after\n\
-         \x20           --idle-timeout-ms (0 = never); shutdown finishes in-flight\n\
-         \x20           work within --drain-timeout-ms — see rust/src/serve/README.md)\n\
+         \x20           Admission: connections past --max-conns (a budget shared by\n\
+         \x20           all shards) and requests past the shard's queue bound\n\
+         \x20           (--queue-depth, 0 = derived) get a typed BUSY frame;\n\
+         \x20           idle/slowloris peers are closed by the poll deadline sweep\n\
+         \x20           after --idle-timeout-ms (0 = never); shutdown finishes\n\
+         \x20           in-flight work within --drain-timeout-ms across every shard\n\
+         \x20           — see rust/src/serve/README.md)\n\
          repro serve-bench --addr 127.0.0.1:PORT [--concurrency 4] [--requests 100] [--k 1]\n\
+         \x20          [--client-batch 1]\n\
          \x20          (--requests is PER CONNECTION: total load = concurrency × requests;\n\
-         \x20           also prints the server's own queue-wait/e2e histograms when reachable)\n\
-         repro serve-bench --model mlp.srvd      (self-host over loopback and bench)\n\
+         \x20           --client-batch R packs R rows into one multi-row INFER frame —\n\
+         \x20           requests/rps count rows, one latency sample per frame, and a\n\
+         \x20           frame retries as ONE idempotent unit; also prints the server's\n\
+         \x20           own queue-wait/e2e histograms when reachable)\n\
+         repro serve-bench --model mlp.srvd [--shards 1]   (self-host over loopback and bench)\n\
          repro stats --addr 127.0.0.1:PORT       (live INFO STATS: admission counters,\n\
-         \x20          queue-wait + e2e latency percentiles, batch-size distribution)\n\
+         \x20          queue-wait + e2e latency percentiles, batch-size distribution,\n\
+         \x20          per-shard queue depth + shed)\n\
          \n\
          observability (any subcommand — see rust/src/obs/README.md):\n\
          \x20 --trace-out t.json   record phase spans, export Chrome trace-event JSON\n\

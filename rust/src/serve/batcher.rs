@@ -27,6 +27,17 @@
 //! client as a typed BUSY frame rather than as an unbounded stall.
 //! Requests carrying a deadline that expires while queued are dropped
 //! with [`RejectKind::Expired`] before any compute is spent on them.
+//!
+//! Two reply paths share the queue. The blocking paths ([`submit`]
+//! (Batcher::submit), [`submit_with`](Batcher::submit_with)) hand back a
+//! one-shot channel, as they always have. The event-loop path
+//! ([`submit_event`](Batcher::submit_event)) instead tags the job with
+//! a connection token and pushes the finished [`MultiResult`] into the
+//! shard's [`Completions`] queue, waking that shard's poll loop — no
+//! thread ever blocks on a reply. A multi-row job contributes `rows`
+//! (not 1) toward `max_batch` when a worker collects it, and is
+//! validated, expired, and answered as ONE unit: one BUSY/ERROR frame
+//! covers the whole client-side batch.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
@@ -39,6 +50,7 @@ use crate::pool::{KernelPool, WorkerPool};
 
 use super::engine::{top_k, InferEngine, TopKScratch};
 use super::faults::{self, Site};
+use super::poll;
 use super::server::ModelHandle;
 
 /// Why a request was refused or failed, mapped onto the wire statuses:
@@ -80,15 +92,72 @@ impl std::fmt::Display for Reject {
 /// rejection.
 pub type InferResult = Result<Vec<(u32, f32)>, Reject>;
 
+/// A whole frame's reply on the event path: per-row `(class, logit)`
+/// pair lists (one inner `Vec` per input row, frame order), or ONE
+/// typed rejection covering every row.
+pub(crate) type MultiResult = Result<Vec<Vec<(u32, f32)>>, Reject>;
+
+/// Where a finished job's answer goes.
+enum ReplyTo {
+    /// Blocking path: a one-shot channel the submitter waits on.
+    /// Always single-row; the reply is row 0's pairs.
+    Single(SyncSender<InferResult>),
+    /// Event-loop path: push the per-row results into the owning
+    /// shard's completion queue (keyed by the connection token) and
+    /// wake its poll loop.
+    Event { tag: u64, done: Arc<Completions> },
+}
+
+impl ReplyTo {
+    /// Deliver a typed rejection on either path. A dropped receiver
+    /// (client hung up mid-request) is not an error.
+    fn reject(self, rej: Reject) {
+        match self {
+            ReplyTo::Single(tx) => {
+                let _ = tx.try_send(Err(rej));
+            }
+            ReplyTo::Event { tag, done } => done.push(tag, Err(rej)),
+        }
+    }
+}
+
+/// The mailbox a shard's poll loop drains: finished jobs land here from
+/// worker threads, tagged with the connection token that submitted
+/// them, and each push wakes the loop out of its `epoll_pwait`.
+pub(crate) struct Completions {
+    q: Mutex<Vec<(u64, MultiResult)>>,
+    waker: poll::Waker,
+}
+
+impl Completions {
+    pub(crate) fn new(waker: poll::Waker) -> Completions {
+        Completions { q: Mutex::new(Vec::new()), waker }
+    }
+
+    fn push(&self, tag: u64, res: MultiResult) {
+        self.q.lock().unwrap().push((tag, res));
+        self.waker.wake();
+    }
+
+    /// Move every queued completion into `out` (appending), oldest
+    /// first. Never blocks beyond the mutex.
+    pub(crate) fn drain(&self, out: &mut Vec<(u64, MultiResult)>) {
+        out.append(&mut self.q.lock().unwrap());
+    }
+}
+
 struct Job {
+    /// `rows * in_dim` fused feature values, row-major.
     input: Vec<f32>,
+    /// Input rows this frame carries (1 on the blocking paths).
+    rows: usize,
     k: usize,
     /// Drop (with `Expired`) rather than compute past this instant.
     deadline: Option<Instant>,
     /// When the request entered the queue — the start of its
     /// queue-wait histogram sample.
     enqueued: Instant,
-    resp: SyncSender<InferResult>,
+    reply: ReplyTo,
 }
 
 /// Micro-batcher knobs.
@@ -209,7 +278,14 @@ impl Batcher {
     /// has shut down the reply is a [`RejectKind::Shutdown`] error.
     pub fn submit(&self, input: Vec<f32>, k: usize) -> Receiver<InferResult> {
         let (resp, rx) = std::sync::mpsc::sync_channel(1);
-        let job = Job { input, k, deadline: None, enqueued: Instant::now(), resp };
+        let job = Job {
+            input,
+            rows: 1,
+            k,
+            deadline: None,
+            enqueued: Instant::now(),
+            reply: ReplyTo::Single(resp),
+        };
         if let Some(tx) = &self.tx {
             match tx.send(job) {
                 Ok(()) => {
@@ -217,9 +293,8 @@ impl Batcher {
                     self.stats.depth.fetch_add(1, Ordering::Relaxed);
                 }
                 Err(std::sync::mpsc::SendError(job)) => {
-                    let _ = job
-                        .resp
-                        .try_send(Err(Reject::new(RejectKind::Shutdown, "batcher shut down")));
+                    job.reply
+                        .reject(Reject::new(RejectKind::Shutdown, "batcher shut down"));
                 }
             }
         }
@@ -245,7 +320,14 @@ impl Batcher {
             )));
             return rx;
         }
-        let job = Job { input, k, deadline, enqueued: Instant::now(), resp };
+        let job = Job {
+            input,
+            rows: 1,
+            k,
+            deadline,
+            enqueued: Instant::now(),
+            reply: ReplyTo::Single(resp),
+        };
         if let Some(tx) = &self.tx {
             match tx.try_send(job) {
                 Ok(()) => {
@@ -255,19 +337,73 @@ impl Batcher {
                 Err(TrySendError::Full(job)) => {
                     self.stats.count_shed();
                     let depth = self.stats.depth.load(Ordering::Relaxed);
-                    let _ = job.resp.try_send(Err(Reject::new(
+                    job.reply.reject(Reject::new(
                         RejectKind::Busy,
                         format!("server busy: queue at {depth}/{} requests", self.queue_cap),
-                    )));
+                    ));
                 }
                 Err(TrySendError::Disconnected(job)) => {
-                    let _ = job
-                        .resp
-                        .try_send(Err(Reject::new(RejectKind::Shutdown, "batcher shut down")));
+                    job.reply
+                        .reject(Reject::new(RejectKind::Shutdown, "batcher shut down"));
                 }
             }
         }
         rx
+    }
+
+    /// The event-loop path: enqueue one frame (possibly multi-row)
+    /// without a reply channel. On success the answer later lands in
+    /// `done` tagged with `tag` and the shard's poll loop is woken; an
+    /// `Err` here means NOTHING was enqueued and nothing will arrive —
+    /// the caller answers the connection inline (typed BUSY/ERROR
+    /// frame), exactly like [`Batcher::submit_with`]'s synchronous
+    /// sheds. Shed accounting and message strings are identical to the
+    /// blocking path.
+    pub(crate) fn submit_event(
+        &self,
+        input: Vec<f32>,
+        rows: usize,
+        k: usize,
+        deadline: Option<Instant>,
+        tag: u64,
+        done: &Arc<Completions>,
+    ) -> Result<(), Reject> {
+        if faults::hit(Site::Enqueue) {
+            self.stats.count_shed();
+            return Err(Reject::new(
+                RejectKind::Busy,
+                "server busy (fault-inject: enqueue)",
+            ));
+        }
+        let job = Job {
+            input,
+            rows: rows.max(1),
+            k,
+            deadline,
+            enqueued: Instant::now(),
+            reply: ReplyTo::Event { tag, done: done.clone() },
+        };
+        let Some(tx) = &self.tx else {
+            return Err(Reject::new(RejectKind::Shutdown, "batcher shut down"));
+        };
+        match tx.try_send(job) {
+            Ok(()) => {
+                self.stats.requests.fetch_add(1, Ordering::Relaxed);
+                self.stats.depth.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Full(_)) => {
+                self.stats.count_shed();
+                let depth = self.stats.depth.load(Ordering::Relaxed);
+                Err(Reject::new(
+                    RejectKind::Busy,
+                    format!("server busy: queue at {depth}/{} requests", self.queue_cap),
+                ))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Reject::new(RejectKind::Shutdown, "batcher shut down"))
+            }
+        }
     }
 
     /// `(requests served, batches executed)` so far. Coalescing shows
@@ -365,19 +501,26 @@ fn worker_loop(
         {
             let _fill = trace::span("batch.fill", "serve");
             let rx = rx.lock().unwrap();
+            // Multi-row frames count their rows (not 1) toward
+            // `max_batch`; the first frame is always taken whole even
+            // if it alone exceeds the bound (the engine's scratch
+            // grows), so an oversized client batch can't deadlock.
+            let mut rows_in_hand;
             match rx.recv() {
                 Ok(job) => {
                     stats.depth.fetch_sub(1, Ordering::Relaxed);
+                    rows_in_hand = job.rows;
                     pending.push(job);
                 }
                 Err(_) => return, // queue closed: shut down
             }
             let deadline = Instant::now() + cfg.max_wait;
-            while pending.len() < cfg.max_batch {
+            while rows_in_hand < cfg.max_batch {
                 let left = deadline.saturating_duration_since(Instant::now());
                 match rx.recv_timeout(left) {
                     Ok(job) => {
                         stats.depth.fetch_sub(1, Ordering::Relaxed);
+                        rows_in_hand += job.rows;
                         pending.push(job);
                     }
                     Err(_) => break, // timeout, or closed with this batch in hand
@@ -419,26 +562,37 @@ fn run_batch(
     accepted.clear();
     xbuf.clear();
     for job in pending.drain(..) {
+        // One queue-wait sample and one accept/reject decision per
+        // FRAME: a multi-row frame expires or fails validation as a
+        // unit, never row-by-row.
         stats.queue_wait_us.record(now.duration_since(job.enqueued).as_micros() as u64);
         if job.deadline.is_some_and(|d| d < now) {
             stats.count_expired();
-            let _ = job.resp.try_send(Err(Reject::new(
-                RejectKind::Expired,
-                "deadline expired while queued",
-            )));
-        } else if job.input.len() == in_dim {
+            job.reply
+                .reject(Reject::new(RejectKind::Expired, "deadline expired while queued"));
+        } else if job.input.len() == job.rows * in_dim {
             xbuf.extend_from_slice(&job.input);
             accepted.push(job);
         } else {
-            let msg = format!(
-                "input of {} values; model {:?} takes {in_dim}",
-                job.input.len(),
-                model.name
-            );
-            let _ = job.resp.try_send(Err(Reject::new(RejectKind::Invalid, msg)));
+            let msg = if job.rows == 1 {
+                format!(
+                    "input of {} values; model {:?} takes {in_dim}",
+                    job.input.len(),
+                    model.name
+                )
+            } else {
+                format!(
+                    "input of {} values; model {:?} takes {} for {} rows of {in_dim}",
+                    job.input.len(),
+                    model.name,
+                    job.rows * in_dim,
+                    job.rows
+                )
+            };
+            job.reply.reject(Reject::new(RejectKind::Invalid, msg));
         }
     }
-    let batch = accepted.len();
+    let batch: usize = accepted.iter().map(|j| j.rows).sum();
     if batch == 0 {
         return false;
     }
@@ -447,11 +601,26 @@ fn run_batch(
     let _flush = trace::span_id("batch.flush", "serve", batch as u64);
     let classes = model.classes();
     let logits = engine.forward(&model, xbuf, batch);
-    for (row, job) in accepted.drain(..).enumerate() {
-        top_k(&logits[row * classes..(row + 1) * classes], job.k, topk, pairs);
-        // A dropped receiver (client hung up mid-request) is not an
-        // error for the batch.
-        let _ = job.resp.try_send(Ok(pairs.clone()));
+    let mut row = 0usize;
+    for job in accepted.drain(..) {
+        match job.reply {
+            ReplyTo::Single(tx) => {
+                top_k(&logits[row * classes..(row + 1) * classes], job.k, topk, pairs);
+                // A dropped receiver (client hung up mid-request) is
+                // not an error for the batch.
+                let _ = tx.try_send(Ok(pairs.clone()));
+                row += 1;
+            }
+            ReplyTo::Event { tag, done } => {
+                let mut out = Vec::with_capacity(job.rows);
+                for _ in 0..job.rows {
+                    top_k(&logits[row * classes..(row + 1) * classes], job.k, topk, pairs);
+                    out.push(pairs.clone());
+                    row += 1;
+                }
+                done.push(tag, Ok(out));
+            }
+        }
     }
     true
 }
@@ -607,6 +776,72 @@ mod tests {
         let future = Instant::now() + Duration::from_secs(30);
         let alive = batcher.submit_with(vec![0.5; 8], 1, Some(future));
         assert!(alive.recv().unwrap().is_ok());
+    }
+
+    /// The event path: a multi-row frame submitted with `submit_event`
+    /// lands in the completion queue tagged correctly, and every row is
+    /// bit-identical to a batch-of-1 direct engine call — client-side
+    /// batching cannot change replies.
+    #[test]
+    fn multi_row_event_frame_matches_single_row_calls() {
+        let (handle, model) = tiny_handle();
+        let batcher = Batcher::new(
+            handle,
+            BatcherConfig {
+                workers: 2,
+                max_batch: 4,
+                max_wait: Duration::from_micros(100),
+                queue_depth: 64,
+            },
+        );
+        let (waker, _wake_rx) = poll::wake_pair().unwrap();
+        let done = Arc::new(Completions::new(waker));
+        let mut rng = Rng::new(4);
+        let rows = 3usize;
+        let input: Vec<f32> = (0..rows * 8).map(|_| rng.next_f32() - 0.5).collect();
+        batcher
+            .submit_event(input.clone(), rows, 2, None, 42, &done)
+            .unwrap();
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while got.is_empty() && Instant::now() < deadline {
+            done.drain(&mut got);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(got.len(), 1, "one frame in, one completion out");
+        let (tag, res) = got.pop().unwrap();
+        assert_eq!(tag, 42);
+        let per_row = res.unwrap();
+        assert_eq!(per_row.len(), rows);
+        let mut eng = InferEngine::new(&model, 1);
+        let mut scratch = TopKScratch::default();
+        for (r, row_pairs) in per_row.iter().enumerate() {
+            let logits = eng.forward(&model, &input[r * 8..(r + 1) * 8], 1);
+            let mut want = Vec::new();
+            top_k(logits, 2, &mut scratch, &mut want);
+            assert_eq!(row_pairs.len(), want.len());
+            for ((gc, gl), (wc, wl)) in row_pairs.iter().zip(&want) {
+                assert_eq!(gc, wc);
+                assert_eq!(gl.to_bits(), wl.to_bits());
+            }
+        }
+        // A frame whose payload disagrees with its row count is
+        // rejected as ONE unit with a row-aware message, and an Err
+        // from submit_event leaves the completion queue untouched.
+        batcher
+            .submit_event(vec![0.5; 7], 2, 1, None, 43, &done)
+            .unwrap();
+        let mut rejected = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while rejected.is_empty() && Instant::now() < deadline {
+            done.drain(&mut rejected);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let (tag, res) = rejected.pop().unwrap();
+        assert_eq!(tag, 43);
+        let rej = res.unwrap_err();
+        assert_eq!(rej.kind, RejectKind::Invalid);
+        assert!(rej.msg.contains("2 rows"), "{}", rej.msg);
     }
 
     /// With no worker draining the queue, `submit_with` sheds `Busy`

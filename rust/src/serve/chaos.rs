@@ -8,6 +8,10 @@
 //! connections mid-stream (truncating whatever frame was in flight).
 //! Every decision comes from one seeded [`Rng`](crate::util::Rng)
 //! stream per pump direction, so a failing soak replays from its seed.
+//! Against the sharded event-loop server the fragmentation mode
+//! exercises the poll-driven frame deadline: a frame budget is armed
+//! once at the first byte, so a byte-dribbling peer is disconnected by
+//! the shard's timeout sweep no matter how steadily it trickles.
 //!
 //! Deliberately absent: silent byte corruption or mid-stream byte
 //! *removal* while the connection lives. TCP guarantees an intact,

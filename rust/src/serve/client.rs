@@ -6,10 +6,15 @@
 //! [`Client::infer_retry`] does so with seeded, jittered exponential
 //! backoff, reconnecting through [`TransportError`]s because INFER is
 //! idempotent), a plain error is the request being wrong (retrying the
-//! same bytes cannot help). [`run_load`] is the measurement half of
-//! the subsystem — `repro serve-bench` and `bench_serve` drive it to
-//! record throughput and latency percentiles against a live server
-//! (in-process or remote), counting sheds separately from failures.
+//! same bytes cannot help). Client-side batching rides multi-row
+//! INFERM frames: [`Client::infer_batch`] classifies R rows in one
+//! round trip, and [`Client::infer_batch_retry`] retries the whole
+//! frame as ONE idempotent unit — a frame is answered by exactly one
+//! reply or one typed error, never row-by-row. [`run_load`] is the
+//! measurement half of the subsystem — `repro serve-bench` and
+//! `bench_serve` drive it to record throughput and latency percentiles
+//! against a live server (in-process or remote), counting sheds
+//! separately from failures.
 //!
 //! [`protocol`]: super::protocol
 
@@ -207,6 +212,90 @@ impl Client {
         }
     }
 
+    /// Classify `rows` inputs in one multi-row INFERM frame (`input`
+    /// is `rows × in_dim` values, row-major); returns per-row
+    /// `(class, logit)` pairs, best first, in frame order. One reply
+    /// (or one typed error) covers the whole frame; a BUSY reply comes
+    /// back as a downcastable [`BusyError`].
+    pub fn infer_batch(
+        &mut self,
+        input: &[f32],
+        rows: usize,
+        k: usize,
+        deadline_ms: u32,
+    ) -> Result<Vec<Vec<(u32, f32)>>> {
+        anyhow::ensure!(rows >= 1, "a multi-row frame needs at least one row");
+        anyhow::ensure!(
+            input.len() % rows == 0,
+            "{} values do not split into {rows} equal rows",
+            input.len()
+        );
+        proto::encode_infer_multi(
+            k.min(u16::MAX as usize) as u16,
+            deadline_ms,
+            rows as u32,
+            input,
+            &mut self.outbuf,
+        );
+        self.roundtrip()?;
+        match proto::decode_multi_topk_response(&self.inbuf)? {
+            proto::Response::MultiTopK(per_row) => {
+                anyhow::ensure!(
+                    per_row.len() == rows,
+                    "server answered {} rows for a {rows}-row frame",
+                    per_row.len()
+                );
+                Ok(per_row)
+            }
+            proto::Response::Busy(msg) => Err(anyhow::Error::new(BusyError(msg))),
+            proto::Response::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// [`Client::infer_batch`] with the same retry loop as
+    /// [`Client::infer_retry`]: the multi-row frame is ONE idempotent
+    /// unit — on a BUSY shed or transport failure the whole frame is
+    /// resent (replies are bit-identical per row, so a duplicate
+    /// execution is indistinguishable), never a partial subset of rows.
+    pub fn infer_batch_retry(
+        &mut self,
+        input: &[f32],
+        rows: usize,
+        k: usize,
+        deadline_ms: u32,
+        policy: &RetryPolicy,
+    ) -> Result<Vec<Vec<(u32, f32)>>> {
+        let mut rng = Rng::new(policy.seed);
+        let attempts = policy.attempts.max(1);
+        let mut last = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                let exp = policy
+                    .base
+                    .saturating_mul(1u32 << (attempt - 1).min(16))
+                    .min(policy.max);
+                let jitter = 0.5 + 0.5 * rng.next_f32() as f64;
+                std::thread::sleep(exp.mul_f64(jitter));
+            }
+            match self.infer_batch(input, rows, k, deadline_ms) {
+                Ok(per_row) => return Ok(per_row),
+                Err(e) => {
+                    let busy = e.downcast_ref::<BusyError>().is_some();
+                    let transport = e.downcast_ref::<TransportError>().is_some();
+                    if !busy && !transport {
+                        return Err(e);
+                    }
+                    if transport {
+                        let _ = self.reconnect();
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.expect("at least one attempt ran"))
+    }
+
     /// [`Client::infer_deadline`] with retries: INFER is idempotent
     /// (same input ⇒ bit-identical reply), so BUSY sheds and transport
     /// failures are retried up to `policy.attempts` times with seeded,
@@ -356,6 +445,11 @@ pub struct LoadOpts {
     pub retry: Option<RetryPolicy>,
     /// Bound every socket op (surface a stalled server as an error).
     pub timeout: Option<Duration>,
+    /// Rows per INFERM frame (0 or 1 = classic single-row INFER). With
+    /// R > 1 each connection sends `requests` frames of R rows —
+    /// completed/busy row counts scale by R, latency samples are
+    /// per-frame.
+    pub client_batch: usize,
 }
 
 /// Drive `concurrency` connections of `requests` random inferences each
@@ -378,47 +472,86 @@ pub fn run_load_opts(
     opts: LoadOpts,
 ) -> Result<LoadStats> {
     let info = Client::connect(addr)?.info()?;
+    let rows_per = opts.client_batch.max(1);
     let conns: Vec<usize> = (0..concurrency.max(1)).collect();
     let t0 = Instant::now();
-    let per_conn = crate::pool::par_map(&conns, conns.len(), |_, &ci| -> Result<(Vec<f64>, usize)> {
-        let mut client = Client::connect(addr)?;
-        client.set_timeout(opts.timeout)?;
-        let mut rng = Rng::new(0x10AD ^ ci as u64);
-        let mut input = vec![0.0f32; info.in_dim];
-        let mut lat = Vec::with_capacity(requests);
-        let mut busy = 0usize;
-        for r in 0..requests {
-            for v in input.iter_mut() {
-                *v = rng.next_f32();
-            }
-            let t = Instant::now();
-            let reply = match opts.retry {
-                Some(mut policy) => {
-                    policy.seed ^= ((ci as u64) << 32) | r as u64;
-                    client.infer_retry(&input, k, opts.deadline_ms, &policy)
+    let per_conn = crate::pool::par_map(
+        &conns,
+        conns.len(),
+        |_, &ci| -> Result<(Vec<f64>, usize, usize)> {
+            let mut client = Client::connect(addr)?;
+            client.set_timeout(opts.timeout)?;
+            let mut rng = Rng::new(0x10AD ^ ci as u64);
+            let mut input = vec![0.0f32; info.in_dim * rows_per];
+            let mut lat = Vec::with_capacity(requests);
+            let mut busy = 0usize;
+            let mut done = 0usize;
+            for r in 0..requests {
+                for v in input.iter_mut() {
+                    *v = rng.next_f32();
                 }
-                None => client.infer_deadline(&input, k, opts.deadline_ms),
-            };
-            match reply {
-                Ok(pairs) => {
-                    lat.push(t.elapsed().as_secs_f64() * 1e6);
-                    anyhow::ensure!(!pairs.is_empty(), "empty reply");
+                let t = Instant::now();
+                if rows_per > 1 {
+                    let reply = match opts.retry {
+                        Some(mut policy) => {
+                            policy.seed ^= ((ci as u64) << 32) | r as u64;
+                            client.infer_batch_retry(
+                                &input,
+                                rows_per,
+                                k,
+                                opts.deadline_ms,
+                                &policy,
+                            )
+                        }
+                        None => client.infer_batch(&input, rows_per, k, opts.deadline_ms),
+                    };
+                    match reply {
+                        Ok(per_row) => {
+                            lat.push(t.elapsed().as_secs_f64() * 1e6);
+                            anyhow::ensure!(
+                                per_row.iter().all(|p| !p.is_empty()),
+                                "empty row in multi-row reply"
+                            );
+                            done += rows_per;
+                        }
+                        // One BUSY covers the whole frame: every row in
+                        // it was shed.
+                        Err(e) if e.downcast_ref::<BusyError>().is_some() => busy += rows_per,
+                        Err(e) => return Err(e),
+                    }
+                } else {
+                    let reply = match opts.retry {
+                        Some(mut policy) => {
+                            policy.seed ^= ((ci as u64) << 32) | r as u64;
+                            client.infer_retry(&input, k, opts.deadline_ms, &policy)
+                        }
+                        None => client.infer_deadline(&input, k, opts.deadline_ms),
+                    };
+                    match reply {
+                        Ok(pairs) => {
+                            lat.push(t.elapsed().as_secs_f64() * 1e6);
+                            anyhow::ensure!(!pairs.is_empty(), "empty reply");
+                            done += 1;
+                        }
+                        Err(e) if e.downcast_ref::<BusyError>().is_some() => busy += 1,
+                        Err(e) => return Err(e),
+                    }
                 }
-                Err(e) if e.downcast_ref::<BusyError>().is_some() => busy += 1,
-                Err(e) => return Err(e),
             }
-        }
-        Ok((lat, busy))
-    });
+            Ok((lat, busy, done))
+        },
+    );
     let wall_s = t0.elapsed().as_secs_f64();
     let mut lat: Vec<f64> = Vec::with_capacity(concurrency * requests);
     let mut busy = 0usize;
+    let mut done = 0usize;
     for r in per_conn {
-        let (l, b) = r?;
+        let (l, b, d) = r?;
         lat.extend(l);
         busy += b;
+        done += d;
     }
-    if lat.is_empty() && busy == 0 {
+    if done == 0 && busy == 0 {
         bail!("load run completed zero requests");
     }
     // Best-effort post-run INFO sample: the server's own histograms.
@@ -437,10 +570,10 @@ pub fn run_load_opts(
         }
     };
     Ok(LoadStats {
-        requests: lat.len(),
+        requests: done,
         busy,
         wall_s,
-        rps: lat.len() as f64 / wall_s.max(1e-12),
+        rps: done as f64 / wall_s.max(1e-12),
         mean_us: if lat.is_empty() {
             0.0
         } else {

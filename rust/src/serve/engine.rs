@@ -1,7 +1,10 @@
 //! Forward-only inference over a frozen [`SparseModel`].
 //!
 //! An [`InferEngine`] is per-worker reusable scratch — one activation
-//! buffer per layer, sized for the worker's batch capacity — so in
+//! buffer per layer, sized for the worker's batch capacity. The sharded
+//! server runs `shards × workers` engine replicas, every one a snapshot
+//! reader of the same `Arc<SparseModel>`; replicas hold scratch, never
+//! weights, so replication costs activations only. In
 //! steady state a request performs ZERO heap allocations inside the
 //! engine (same counting-allocator discipline as `TopoScratch`;
 //! `bench_serve` verifies it with the counting global allocator and

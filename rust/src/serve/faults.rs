@@ -21,9 +21,12 @@ pub enum Site {
     ArtifactLoad,
     /// Batcher admission — a request refused at enqueue.
     Enqueue,
-    /// Connection frame read — the socket erroring under a request.
+    /// Frame decode on a shard's event loop — probed once per PARSED
+    /// frame (single- or multi-row), simulating the socket erroring
+    /// under a request.
     SockRead,
-    /// Connection frame write — the socket erroring under a reply.
+    /// Reply write — probed before a reply frame is queued on the
+    /// connection, simulating the socket erroring under a reply.
     SockWrite,
 }
 

@@ -39,21 +39,30 @@
 //!   serving path **sheds** typed BUSY rejections instead of queueing
 //!   unboundedly, and requests whose deadline expired while queued are
 //!   dropped before any compute is spent.
-//! * [`server`] — a thread-per-connection TCP front end speaking the
-//!   length-prefixed binary [`protocol`], with admission control
-//!   (`max_conns` gate + queue high-water), per-connection idle/frame
-//!   deadlines (slowloris peers are disconnected, not leaked), graceful
-//!   drain, and hot model reload via an atomic `Arc<SparseModel>` swap
-//!   when the artifact file changes (`repro serve`; failures keep the
-//!   old model and are counted into INFO). The INFO STATS block also
-//!   carries the batcher's own queue-wait and end-to-end latency
-//!   histograms plus the executed-batch-size distribution (see
-//!   `obs::metrics`) — `repro stats --addr` prints them, and
+//! * [`poll`] — a std-only level-triggered readiness poller (epoll via
+//!   raw syscalls on Linux, a timed-sweep fallback elsewhere; zero new
+//!   crates) plus the cross-thread [`poll::Waker`] the batcher uses to
+//!   hand completions back to an event loop.
+//! * [`server`] — a sharded nonblocking TCP front end speaking the
+//!   length-prefixed binary [`protocol`]: `--shards` poll loops each
+//!   own an accept path and a private micro-batcher (so
+//!   shards × workers engine replicas total), all serving snapshots of
+//!   one atomically swappable `Arc<SparseModel>`. Admission control
+//!   (shared `max_conns` budget + per-shard queue high-water),
+//!   poll-driven idle/frame deadlines (slowloris peers are
+//!   disconnected by the timeout sweep, not leaked), graceful drain
+//!   across all shards, and hot model reload when the artifact file
+//!   changes (`repro serve`; failures keep the old model and are
+//!   counted into INFO). The INFO STATS block carries aggregated
+//!   queue-wait / end-to-end latency histograms and the
+//!   executed-batch-size distribution (see `obs::metrics`), plus a
+//!   per-shard SHARD block — `repro stats --addr` prints them, and
 //!   `serve-bench` folds them into `BENCH_serve.json` next to the
 //!   client-side percentiles. [`client`] is the matching
 //!   client + load generator (`repro serve-bench`, `bench_serve` →
-//!   `BENCH_serve.json`) with typed BUSY/transport errors and seeded,
-//!   jittered retry for idempotent INFER.
+//!   `BENCH_serve.json`) with typed BUSY/transport errors, seeded,
+//!   jittered retry for idempotent INFER, and client-side batching via
+//!   multi-row INFERM frames (one frame = one idempotent retry unit).
 //! * [`faults`] — the deterministic failure-point registry (compiled to
 //!   constant `false` unless the `fault-inject` cargo feature is on)
 //!   and [`chaos`] — a seeded in-process chaos TCP proxy that delays,
@@ -67,6 +76,7 @@ pub mod chaos;
 pub mod client;
 pub mod engine;
 pub mod faults;
+pub mod poll;
 pub mod protocol;
 pub mod server;
 
@@ -79,5 +89,5 @@ pub use client::{
     run_load, run_load_opts, BusyError, Client, LoadOpts, LoadStats, RetryPolicy, TransportError,
 };
 pub use engine::{top_k, InferEngine, TopKScratch};
-pub use protocol::{HistSummary, InfoStats};
+pub use protocol::{HistSummary, InfoStats, ShardStat};
 pub use server::{ModelHandle, ServeConfig, Server};

@@ -11,27 +11,39 @@
 //! with a one-byte opcode:
 //!
 //! ```text
-//! INFER (0x01): u8 op | u16 k | u32 deadline_ms | u32 n | n × f32 input
-//! INFO  (0x02): u8 op
+//! INFER  (0x01): u8 op | u16 k | u32 deadline_ms | u32 n | n × f32 input
+//! INFO   (0x02): u8 op
+//! INFERM (0x03): u8 op | u16 k | u32 deadline_ms | u32 rows | u32 n
+//!                | rows × n × f32 input        — row-major, rows ≥ 1
 //! ```
 //!
 //! `deadline_ms` is the client's per-request budget (0 = none): the
 //! batcher drops requests still queued past their deadline with a typed
 //! EXPIRED-class error instead of computing answers nobody is waiting
-//! for.
+//! for. INFERM is client-side batching — the multi-row frame the
+//! protocol reserved room for since PR 3: one frame carries `rows`
+//! input rows and is answered by ONE frame (one status for the whole
+//! frame — a multi-row request is a single idempotent unit on the wire,
+//! which is what makes its retry story identical to INFER's). `rows`
+//! is capped at [`MAX_ROWS`]; each row's reply is bit-identical to the
+//! same row sent alone, because the batcher counts rows (not frames)
+//! toward `max_batch` and the kernels' batch loops are outermost.
 //!
 //! Responses open with a one-byte status:
 //!
 //! ```text
-//! OK+topk: u8 0 | u32 k | k × (u32 class, f32 logit)   — best first
-//! OK+info: u8 0 | u32 in_dim | u32 classes | u32 layers | u64 nnz
-//!          | u32 queue_depth | u32 queue_cap | u64 shed
-//!          | u64 reload_failures | u32 active_conns | u8 draining
-//!          | u64 qw_count | u32 qw_p50 | u32 qw_p90 | u32 qw_p99
-//!          | u64 e2e_count | u32 e2e_p50 | u32 e2e_p90 | u32 e2e_p99
-//!          | u32 batch_p50 | u32 batch_p90 | u32 batch_max
-//! ERROR:   u8 1 | u32 len | len utf-8 message
-//! BUSY:    u8 2 | u32 len | len utf-8 message
+//! OK+topk:  u8 0 | u32 k | k × (u32 class, f32 logit)   — best first
+//! OK+multi: u8 0 | u32 rows | rows × (u32 k | k × (u32 class, f32 logit))
+//! OK+info:  u8 0 | u32 in_dim | u32 classes | u32 layers | u64 nnz
+//!           | u32 queue_depth | u32 queue_cap | u64 shed
+//!           | u64 reload_failures | u32 active_conns | u8 draining
+//!           | u64 qw_count | u32 qw_p50 | u32 qw_p90 | u32 qw_p99
+//!           | u64 e2e_count | u32 e2e_p50 | u32 e2e_p90 | u32 e2e_p99
+//!           | u32 batch_p50 | u32 batch_p90 | u32 batch_max
+//!           | u32 shard_count
+//!           | min(shard_count, 8) × (u32 sh_queue_depth | u64 sh_shed)
+//! ERROR:    u8 1 | u32 len | len utf-8 message
+//! BUSY:     u8 2 | u32 len | len utf-8 message
 //! ```
 //!
 //! BUSY is load shedding, not failure: the server is refusing work it
@@ -39,13 +51,16 @@
 //! connection gate), and the client may retry with backoff. ERROR means
 //! the request itself was unacceptable — retrying the same bytes cannot
 //! succeed. The INFO payload grows by appending: the 20-byte model
-//! core came first, the 29-byte STATS block second, and the 52-byte
+//! core came first, the 29-byte STATS block second, the 52-byte
 //! OBS block (queue-wait / end-to-end latency histogram summaries in
-//! µs, plus the executed-batch-size distribution) third. The decoder
-//! therefore accepts any prefix-complete payload — 20, 49, or 101
-//! bytes, or longer from a future server (unknown tail ignored) — so
-//! old and new clients/servers interoperate in both directions:
-//! missing blocks simply read as zeros.
+//! µs, plus the executed-batch-size distribution) third, and the SHARD
+//! block (shard count plus per-shard queue depth / shed for the first
+//! [`MAX_WIRE_SHARDS`] shards; the aggregate fields above already sum
+//! ALL shards) fourth. The decoder therefore accepts any
+//! prefix-complete payload — 20, 49, 101, or 105+ bytes, or longer
+//! from a future server (unknown tail ignored) — so old and new
+//! clients/servers interoperate in both directions: missing blocks
+//! simply read as zeros.
 //!
 //! A protocol error (bad opcode, wrong input length) is answered with
 //! an ERROR frame and the connection stays usable — clients shouldn't
@@ -62,6 +77,19 @@ pub const READ_CHUNK: usize = 64 << 10;
 
 pub const OP_INFER: u8 = 0x01;
 pub const OP_INFO: u8 = 0x02;
+/// Multi-row INFER: one frame, `rows` inputs, one reply frame.
+pub const OP_INFER_MULTI: u8 = 0x03;
+
+/// Largest row count one INFERM frame may carry. Bounds the reply
+/// frame (rows × (4 + 8k) bytes) the way [`MAX_FRAME`] bounds the
+/// request, and keeps a single frame from monopolizing a batcher.
+pub const MAX_ROWS: usize = 4096;
+
+/// How many per-shard stat entries ride in an INFO reply. The
+/// `shard_count` field carries the true count; servers with more
+/// shards report the first 8 (the aggregate fields still sum all of
+/// them).
+pub const MAX_WIRE_SHARDS: usize = 8;
 
 pub const STATUS_OK: u8 = 0;
 pub const STATUS_ERR: u8 = 1;
@@ -78,6 +106,18 @@ pub enum Request {
         /// Client budget in milliseconds (0 = unbounded): queue time
         /// past this is a typed error, not a late answer.
         deadline_ms: u32,
+        input: Vec<f32>,
+    },
+    /// Classify `rows` inputs in one frame (client-side batching);
+    /// reply is one frame with per-row top-k, or one typed error for
+    /// the whole frame.
+    InferMulti {
+        k: usize,
+        /// Per-frame budget (0 = unbounded) — the whole frame expires
+        /// or survives as a unit.
+        deadline_ms: u32,
+        rows: usize,
+        /// `rows × n` values, row-major.
         input: Vec<f32>,
     },
     /// Describe the currently served model.
@@ -98,6 +138,16 @@ pub struct HistSummary {
     pub p90: u32,
     /// 99th percentile.
     pub p99: u32,
+}
+
+/// One shard's slice of the admission gauges — the SHARD block entry.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStat {
+    /// Requests queued in this shard's batcher right now.
+    pub queue_depth: u32,
+    /// Requests this shard refused with BUSY so far (its queue
+    /// high-water plus connection-gate refusals it performed).
+    pub shed: u64,
 }
 
 /// The admission/overload counters riding in an INFO reply.
@@ -126,6 +176,14 @@ pub struct InfoStats {
     pub batch_p90: u32,
     /// Largest batch actually executed (exact, not bucketed).
     pub batch_max: u32,
+    /// How many accept shards the server runs (0 = pre-shard server).
+    /// The aggregate fields above sum ALL shards even when it exceeds
+    /// [`MAX_WIRE_SHARDS`].
+    pub shard_count: u32,
+    /// Per-shard queue depth / shed for the first
+    /// `min(shard_count, MAX_WIRE_SHARDS)` shards; the rest read as
+    /// zeros.
+    pub shards: [ShardStat; MAX_WIRE_SHARDS],
 }
 
 /// A decoded server response.
@@ -133,6 +191,9 @@ pub struct InfoStats {
 pub enum Response {
     /// `(class, logit)` pairs, best first.
     TopK(Vec<(u32, f32)>),
+    /// Per-row top-k lists for a multi-row (INFERM) request, in
+    /// request-row order.
+    MultiTopK(Vec<Vec<(u32, f32)>>),
     Info {
         in_dim: usize,
         classes: usize,
@@ -217,6 +278,24 @@ pub fn encode_infer(k: u16, deadline_ms: u32, input: &[f32], buf: &mut Vec<u8>) 
     }
 }
 
+/// Encode a multi-row INFER request body into `buf` (cleared first).
+/// `input` is `rows × n` values, row-major; `n` is derived from the
+/// lengths (callers pass `rows ≥ 1` and a length divisible by it —
+/// the decoder enforces both on the server side).
+pub fn encode_infer_multi(k: u16, deadline_ms: u32, rows: u32, input: &[f32], buf: &mut Vec<u8>) {
+    debug_assert!(rows >= 1 && input.len() % (rows as usize).max(1) == 0);
+    let n = input.len() / (rows as usize).max(1);
+    buf.clear();
+    buf.push(OP_INFER_MULTI);
+    buf.extend_from_slice(&k.to_le_bytes());
+    buf.extend_from_slice(&deadline_ms.to_le_bytes());
+    buf.extend_from_slice(&rows.to_le_bytes());
+    buf.extend_from_slice(&(n as u32).to_le_bytes());
+    for v in input {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
 /// Encode an INFO request body into `buf` (cleared first).
 pub fn encode_info(buf: &mut Vec<u8>) {
     buf.clear();
@@ -247,6 +326,28 @@ pub fn decode_request(body: &[u8]) -> Result<Request> {
                 .collect();
             Ok(Request::Infer { k, deadline_ms, input })
         }
+        OP_INFER_MULTI => {
+            ensure!(body.len() >= 15, "truncated INFERM header");
+            let k = u16::from_le_bytes([body[1], body[2]]) as usize;
+            let deadline_ms = u32::from_le_bytes([body[3], body[4], body[5], body[6]]);
+            let rows = u32::from_le_bytes([body[7], body[8], body[9], body[10]]) as usize;
+            let n = u32::from_le_bytes([body[11], body[12], body[13], body[14]]) as usize;
+            ensure!(rows >= 1, "INFERM carries zero rows");
+            ensure!(rows <= MAX_ROWS, "INFERM of {rows} rows exceeds the {MAX_ROWS} cap");
+            // Bound n before the multiply so a hostile header cannot
+            // overflow rows·n·4 on 32-bit targets.
+            ensure!(n <= MAX_FRAME / 4, "INFERM declares {n}-wide rows");
+            ensure!(
+                body.len() == 15 + rows * n * 4,
+                "INFERM declares {rows}×{n} values but carries {} payload bytes",
+                body.len() - 15
+            );
+            let input = body[15..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(Request::InferMulti { k, deadline_ms, rows, input })
+        }
         op => bail!("unknown opcode {op:#04x}"),
     }
 }
@@ -259,6 +360,63 @@ pub fn encode_topk_response(pairs: &[(u32, f32)], buf: &mut Vec<u8>) {
     for (c, l) in pairs {
         buf.extend_from_slice(&c.to_le_bytes());
         buf.extend_from_slice(&l.to_le_bytes());
+    }
+}
+
+/// Encode an OK+multi response body into `buf` (cleared first): one
+/// top-k list per request row, in row order.
+pub fn encode_multi_topk_response(rows: &[Vec<(u32, f32)>], buf: &mut Vec<u8>) {
+    buf.clear();
+    buf.push(STATUS_OK);
+    buf.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    for pairs in rows {
+        buf.extend_from_slice(&(pairs.len() as u32).to_le_bytes());
+        for (c, l) in pairs {
+            buf.extend_from_slice(&c.to_le_bytes());
+            buf.extend_from_slice(&l.to_le_bytes());
+        }
+    }
+}
+
+/// Decode an OK+multi response body: per-row `(class, logit)` lists in
+/// request-row order ([`Response::MultiTopK`]), or the frame-wide
+/// Error/Busy. Like the other OK forms this is not self-describing —
+/// callers use it for replies to INFERM frames they sent.
+pub fn decode_multi_topk_response(body: &[u8]) -> Result<Response> {
+    match split_status(body)? {
+        Split::Ok(rest) => {
+            ensure!(rest.len() >= 4, "truncated multi-topk response");
+            let rows = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
+            ensure!(rows <= MAX_ROWS, "multi-topk declares {rows} rows");
+            let mut out = Vec::with_capacity(rows);
+            let mut off = 4usize;
+            for _ in 0..rows {
+                ensure!(rest.len() >= off + 4, "truncated multi-topk row header");
+                let k = u32::from_le_bytes([rest[off], rest[off + 1], rest[off + 2], rest[off + 3]])
+                    as usize;
+                off += 4;
+                ensure!(
+                    k <= (rest.len() - off) / 8,
+                    "multi-topk row declares {k} pairs but only {} bytes remain",
+                    rest.len() - off
+                );
+                let pairs = rest[off..off + k * 8]
+                    .chunks_exact(8)
+                    .map(|c| {
+                        (
+                            u32::from_le_bytes([c[0], c[1], c[2], c[3]]),
+                            f32::from_le_bytes([c[4], c[5], c[6], c[7]]),
+                        )
+                    })
+                    .collect();
+                off += k * 8;
+                out.push(pairs);
+            }
+            ensure!(off == rest.len(), "multi-topk carries {} trailing bytes", rest.len() - off);
+            Ok(Response::MultiTopK(out))
+        }
+        Split::Err(msg) => Ok(Response::Error(msg)),
+        Split::Busy(msg) => Ok(Response::Busy(msg)),
     }
 }
 
@@ -292,6 +450,14 @@ pub fn encode_info_response(
     buf.extend_from_slice(&stats.batch_p50.to_le_bytes());
     buf.extend_from_slice(&stats.batch_p90.to_le_bytes());
     buf.extend_from_slice(&stats.batch_max.to_le_bytes());
+    // SHARD block — appended after payload offset 101, per the
+    // prefix-stability rule: old clients ignore it, new clients read
+    // zeros from old servers.
+    buf.extend_from_slice(&stats.shard_count.to_le_bytes());
+    for sh in stats.shards.iter().take((stats.shard_count as usize).min(MAX_WIRE_SHARDS)) {
+        buf.extend_from_slice(&sh.queue_depth.to_le_bytes());
+        buf.extend_from_slice(&sh.shed.to_le_bytes());
+    }
 }
 
 /// Encode an ERROR response body into `buf` (cleared first).
@@ -388,6 +554,18 @@ pub fn decode_info_response(body: &[u8]) -> Result<Response> {
                 stats.batch_p90 = rd_u32(rest, 93);
                 stats.batch_max = rd_u32(rest, 97);
             }
+            if rest.len() >= 105 {
+                stats.shard_count = rd_u32(rest, 101);
+                let entries = (stats.shard_count as usize).min(MAX_WIRE_SHARDS);
+                for (i, sh) in stats.shards.iter_mut().enumerate().take(entries) {
+                    let off = 105 + i * 12;
+                    if rest.len() < off + 12 {
+                        break; // truncated tail: remaining entries read as zeros
+                    }
+                    sh.queue_depth = rd_u32(rest, off);
+                    sh.shed = rd_u64(rest, off + 4);
+                }
+            }
             Ok(Response::Info {
                 in_dim: rd_u32(rest, 0) as usize,
                 classes: rd_u32(rest, 4) as usize,
@@ -466,9 +644,20 @@ mod tests {
             batch_p50: 7,
             batch_p90: 15,
             batch_max: 12,
+            shard_count: 2,
+            shards: {
+                let mut sh = [ShardStat::default(); MAX_WIRE_SHARDS];
+                sh[0] = ShardStat { queue_depth: 2, shed: 11 };
+                sh[1] = ShardStat { queue_depth: 1, shed: 6 };
+                sh
+            },
         };
         encode_info_response(784, 10, 3, 266_200, &stats, &mut buf);
-        assert_eq!(buf.len(), 1 + 101, "info payload is status + 101 bytes");
+        assert_eq!(
+            buf.len(),
+            1 + 105 + 2 * 12,
+            "info payload is status + 105 bytes + one 12-byte entry per shard"
+        );
         assert_eq!(
             decode_info_response(&buf).unwrap(),
             Response::Info {
@@ -537,6 +726,12 @@ mod tests {
             batch_p50: 3,
             batch_p90: 7,
             batch_max: 6,
+            shard_count: 1,
+            shards: {
+                let mut sh = [ShardStat::default(); MAX_WIRE_SHARDS];
+                sh[0] = ShardStat { queue_depth: 9, shed: 4 };
+                sh
+            },
         };
         let mut buf = Vec::new();
         encode_info_response(784, 10, 3, 55_555, &stats, &mut buf);
@@ -552,6 +747,17 @@ mod tests {
                 // The blocks the old frame lacks read as zeros.
                 assert_eq!(got.queue_wait_us, HistSummary::default());
                 assert_eq!(got.batch_max, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // OBS-era client view: payload truncated at 101 bytes — the
+        // SHARD block reads as zeros, everything before it intact.
+        match decode_info_response(&buf[..1 + 101]).unwrap() {
+            Response::Info { stats: got, .. } => {
+                assert_eq!(got.batch_max, 6);
+                assert_eq!(got.shard_count, 0);
+                assert_eq!(got.shards, [ShardStat::default(); MAX_WIRE_SHARDS]);
             }
             other => panic!("{other:?}"),
         }
@@ -575,6 +781,52 @@ mod tests {
     }
 
     #[test]
+    fn multi_row_request_roundtrip() {
+        // 3 rows × 2 features each, values chosen to be bit-exact.
+        let input = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, -0.0, 42.0];
+        let mut buf = Vec::new();
+        encode_infer_multi(5, 750, 3, &input, &mut buf);
+        match decode_request(&buf).unwrap() {
+            Request::InferMulti { k, deadline_ms, rows, input: got } => {
+                assert_eq!(k, 5);
+                assert_eq!(deadline_ms, 750);
+                assert_eq!(rows, 3);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got), bits(&input));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn multi_topk_response_roundtrip() {
+        // Ragged per-row k is legal on the wire (k clamps server-side).
+        let rows = vec![
+            vec![(7u32, 0.5f32), (0, -1.5)],
+            vec![(3u32, 9.25f32)],
+            vec![],
+        ];
+        let mut buf = Vec::new();
+        encode_multi_topk_response(&rows, &mut buf);
+        assert_eq!(
+            decode_multi_topk_response(&buf).unwrap(),
+            Response::MultiTopK(rows)
+        );
+        // BUSY / ERR frames stay typed through the multi decoder: one
+        // status frame answers the whole multi-row request.
+        encode_busy_response("queue full", &mut buf);
+        assert_eq!(
+            decode_multi_topk_response(&buf).unwrap(),
+            Response::Busy("queue full".into())
+        );
+        encode_error_response("bad rows", &mut buf);
+        assert_eq!(
+            decode_multi_topk_response(&buf).unwrap(),
+            Response::Error("bad rows".into())
+        );
+    }
+
+    #[test]
     fn rejects_malformed() {
         assert!(decode_request(&[]).is_err());
         assert!(decode_request(&[0x7f]).is_err());
@@ -585,6 +837,38 @@ mod tests {
         buf[7] = 2;
         assert!(decode_request(&buf).is_err());
         assert!(decode_topk_response(&[9]).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_multi() {
+        // Truncated header.
+        assert!(decode_request(&[OP_INFER_MULTI, 0, 0, 0, 0, 0, 0]).is_err());
+        let mut buf = Vec::new();
+        encode_infer_multi(1, 0, 2, &[1.0, 2.0, 3.0, 4.0], &mut buf);
+        // Zero rows.
+        let mut zero = buf.clone();
+        zero[7..11].copy_from_slice(&0u32.to_le_bytes());
+        assert!(decode_request(&zero).is_err());
+        // Rows above the cap.
+        let mut many = buf.clone();
+        many[7..11].copy_from_slice(&(MAX_ROWS as u32 + 1).to_le_bytes());
+        assert!(decode_request(&many).is_err());
+        // Declared width disagrees with the payload length.
+        let mut wide = buf.clone();
+        wide[11..15].copy_from_slice(&3u32.to_le_bytes());
+        assert!(decode_request(&wide).is_err());
+        // Hostile n chosen so rows*n*4 wraps a 32-bit size: must be
+        // rejected by the width cap, not pass via overflow.
+        let mut wrap = buf.clone();
+        wrap[7..11].copy_from_slice(&2u32.to_le_bytes());
+        wrap[11..15].copy_from_slice(&0x8000_0001u32.to_le_bytes());
+        assert!(decode_request(&wrap).is_err());
+        // Well-formed frame still decodes after all that.
+        assert!(decode_request(&buf).is_ok());
+        // Malformed multi response: declared 2 rows, carries none.
+        let mut resp = vec![STATUS_OK];
+        resp.extend_from_slice(&2u32.to_le_bytes());
+        assert!(decode_multi_topk_response(&resp).is_err());
     }
 
     #[test]

@@ -1,53 +1,69 @@
-//! The TCP front end: thread-per-connection framing, the shared model
-//! handle, admission control, deadlines, and the hot-reload watcher.
+//! The TCP front end: sharded nonblocking event loops, the shared
+//! model handle, admission control, poll-driven deadlines, and the
+//! hot-reload watcher.
 //!
 //! A [`Server`] owns one loopback-bound `TcpListener` (port 0 = let the
 //! OS pick an ephemeral port; [`Server::addr`] reports the choice — the
-//! CI smoke test and in-process benches rely on it), a [`Batcher`], and
-//! optionally a watcher thread that polls the artifact file and swaps a
-//! freshly loaded model into the [`ModelHandle`] when it changes.
-//! Because exports go through `util::atomic_write`, the watcher can
-//! never load a torn file — it sees the old artifact or the new one; a
-//! load that fails anyway (truly corrupt file, or an injected fault)
-//! keeps the old model serving and bumps the `reload_failures` counter
-//! surfaced in INFO.
+//! CI smoke test and in-process benches rely on it) shared by
+//! `shards` accept shards. Each shard runs its own [`poll::Poller`]
+//! loop over a `try_clone` of the listener plus every connection it
+//! has accepted, and owns a private [`Batcher`] (its micro-batcher)
+//! whose workers are that shard's `InferEngine` replicas — so the
+//! serving tier holds `shards × workers` engine replicas in total, all
+//! executing against snapshots of ONE [`ModelHandle`]. Hot reload is
+//! still a single atomic swap: every shard's next request sees the new
+//! model, and because exports go through `util::atomic_write` the
+//! watcher never loads a torn file. A load that fails anyway (truly
+//! corrupt file, or an injected fault) keeps the old model serving and
+//! bumps the `reload_failures` counter surfaced in INFO.
 //!
-//! Connections get one thread each (requests on one connection are
-//! served in order; throughput scaling comes from many connections
-//! feeding the shared micro-batcher, not from pipelining within one).
-//! The robustness model, end to end:
+//! No thread ever blocks on a connection. A shard's loop sleeps in
+//! [`poll::Poller::wait`] until a socket is ready, a batch completion
+//! lands in its [`Completions`] mailbox (worker threads wake the loop
+//! through a [`poll::Waker`]), or the nearest connection deadline is
+//! due. Requests on one connection are served strictly in order
+//! (reading is parked while a request is in flight); throughput
+//! scaling comes from many connections spread across shards, and from
+//! multi-row INFER frames batched client-side.
 //!
-//! * **Admission**: at most `max_conns` connections are admitted; the
-//!   excess peer gets one typed BUSY frame and is disconnected. Past
-//!   the gate, the batcher's bounded queue sheds BUSY at high water —
-//!   an accepted request is one the server expects to answer within
-//!   bounded latency.
+//! The robustness model, end to end, unchanged in semantics from the
+//! thread-per-connection era:
+//!
+//! * **Admission**: at most `max_conns` connections are admitted
+//!   across ALL shards (one shared budget); the excess peer gets one
+//!   typed BUSY frame and is disconnected. Past the gate, each shard's
+//!   bounded queue sheds BUSY at high water — an accepted request is
+//!   one the server expects to answer within bounded latency.
 //! * **Deadlines**: `idle_timeout_ms` bounds both the wait for a new
 //!   request (an idle peer is closed cleanly) and the arrival of a
 //!   whole frame once its first byte shows up — a slowloris peer
-//!   trickling bytes is disconnected, not given a leaked thread.
-//!   Requests carrying a client deadline are dropped by the batcher
-//!   once it passes.
-//! * **Drain**: [`Server::drain`] stops accepting, lets every admitted
-//!   connection finish its current request, and bounds the whole
-//!   goodbye by `drain_timeout_ms`.
+//!   trickling bytes is disconnected by the poll-timeout sweep, not by
+//!   a kernel read timeout (there are no blocking reads left to time
+//!   out). Requests carrying a client deadline are dropped by the
+//!   batcher once it passes.
+//! * **Drain**: [`Server::drain`] stops accepting on every shard, lets
+//!   every in-flight request finish and flush its reply, closes idle
+//!   connections immediately, and bounds the whole goodbye by
+//!   `drain_timeout_ms` (stragglers are force-closed at the bound).
 //!
 //! `max_requests > 0` turns the server into a self-terminating smoke
-//! target: after that many INFER replies the accept loop stops and
-//! [`Server::wait`] returns.
+//! target: after that many INFER replies (a multi-row frame counts
+//! once) every shard stops and [`Server::wait`] returns.
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use super::artifact::SparseModel;
-use super::batcher::{Batcher, BatcherConfig, RejectKind};
+use super::batcher::{Batcher, BatcherConfig, Completions, MultiResult, RejectKind};
 use super::faults::{self, Site};
+use super::poll;
 use super::protocol as proto;
 
 /// The currently served model, swappable atomically under a reader
@@ -82,11 +98,16 @@ impl ModelHandle {
 pub struct ServeConfig {
     /// TCP port; 0 picks an ephemeral port.
     pub port: u16,
-    /// Micro-batcher worker threads.
+    /// Accept shards (`--shards`): independent poll loops, each with
+    /// its own micro-batcher. 0 is treated as 1.
+    pub shards: usize,
+    /// Micro-batcher worker threads PER SHARD (each owns one
+    /// `InferEngine` replica).
     pub workers: usize,
-    /// Largest fused batch (`--max-batch`). Prefer multiples of 8 so
-    /// coalesced batches split into whole SIMD batch-panels; ragged
-    /// remainders run the scalar tail (bit-identical, just slower).
+    /// Largest fused batch (`--max-batch`), counted in rows. Prefer
+    /// multiples of 8 so coalesced batches split into whole SIMD
+    /// batch-panels; ragged remainders run the scalar tail
+    /// (bit-identical, just slower).
     pub max_batch: usize,
     /// Coalescing window in microseconds.
     pub max_wait_us: u64,
@@ -95,21 +116,23 @@ pub struct ServeConfig {
     /// Artifact-file poll cadence for hot reload, in milliseconds.
     pub reload_poll_ms: u64,
     /// Intra-request kernel threads (`--threads`): one fork-join pool
-    /// shared by ALL batcher workers, cutting single-request latency on
-    /// big layers. 1 = serial. Replies are bit-identical at any value —
-    /// `workers` scales throughput, `threads` scales per-request
-    /// latency.
+    /// shared by ALL shards' batcher workers, cutting single-request
+    /// latency on big layers. 1 = serial. Replies are bit-identical at
+    /// any value — `shards`/`workers` scale throughput, `threads`
+    /// scales per-request latency.
     pub threads: usize,
-    /// Admission gate (`--max-conns`): connections past this many get
-    /// one BUSY frame and are closed.
+    /// Admission gate (`--max-conns`), shared across shards:
+    /// connections past this many get one BUSY frame and are closed.
     pub max_conns: usize,
     /// Per-connection deadline in milliseconds (`--idle-timeout-ms`):
     /// both the idle wait for the next request (clean close) and the
     /// budget for one whole frame to arrive once started (slowloris
-    /// disconnect). 0 = no timeouts, the pre-robustness behavior.
+    /// disconnect), enforced by each shard's poll-timeout sweep.
+    /// 0 = no timeouts, the pre-robustness behavior.
     pub idle_timeout_ms: u64,
-    /// Batcher queue bound (`--queue-depth`); 0 derives
-    /// `max(workers × max_batch × 4, 64)`.
+    /// PER-SHARD batcher queue bound (`--queue-depth`); 0 derives
+    /// `max(workers × max_batch × 4, 64)`. INFO's `queue_cap` reports
+    /// the aggregate across shards.
     pub queue_depth: usize,
     /// Bound on [`Server::drain`]'s wait for in-flight connections, in
     /// milliseconds (`--drain-timeout-ms`).
@@ -120,6 +143,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             port: 0,
+            shards: 1,
             workers: crate::pool::default_jobs().min(4),
             max_batch: 16,
             max_wait_us: 200,
@@ -135,7 +159,7 @@ impl Default for ServeConfig {
 }
 
 /// Shared robustness counters, sampled into the INFO frame's STATS
-/// block alongside the batcher's queue gauges.
+/// block alongside the batchers' queue gauges.
 #[derive(Default)]
 pub(crate) struct ServeStats {
     /// Hot-reload attempts that failed (old model kept serving).
@@ -143,7 +167,8 @@ pub(crate) struct ServeStats {
     /// this INFO-sampled atomic and the `obs/serve.reload_failures`
     /// registry counter in lockstep.
     pub reload_failures: AtomicU64,
-    /// Connections currently admitted.
+    /// Connections currently admitted, across all shards — the shared
+    /// `max_conns` budget.
     pub active_conns: AtomicUsize,
     /// Set once drain begins: finish in-flight, accept no one.
     pub draining: AtomicBool,
@@ -159,8 +184,8 @@ impl ServeStats {
     }
 }
 
-/// Decrements `active_conns` when a connection thread exits on ANY
-/// path — error, timeout, drain, or clean EOF.
+/// Decrements `active_conns` when a connection is dropped on ANY path
+/// — error, deadline, drain, kill, or clean EOF.
 struct ConnGuard(Arc<ServeStats>);
 
 impl Drop for ConnGuard {
@@ -169,15 +194,56 @@ impl Drop for ConnGuard {
     }
 }
 
+/// A latched stop flag other threads can block on — replaces joining
+/// the old accept thread as "the thing [`Server::wait`] waits for".
+struct StopCell {
+    flag: AtomicBool,
+    lock: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl StopCell {
+    fn new() -> StopCell {
+        StopCell {
+            flag: AtomicBool::new(false),
+            lock: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn set(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        *self.lock.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn is_set(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    /// Block until [`StopCell::set`] has been called (returns
+    /// immediately if it already was).
+    fn wait(&self) {
+        let mut latched = self.lock.lock().unwrap();
+        while !*latched {
+            latched = self.cv.wait(latched).unwrap();
+        }
+    }
+}
+
 /// A running serve instance.
 pub struct Server {
     addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    accept: Option<std::thread::JoinHandle<()>>,
+    stop: Arc<StopCell>,
+    /// Hard stop: shards force-close every connection and exit without
+    /// waiting for replies. Set only after the drain grace window.
+    kill: Arc<AtomicBool>,
+    shards: Vec<std::thread::JoinHandle<()>>,
+    wakers: Arc<Vec<poll::Waker>>,
     watcher: Option<std::thread::JoinHandle<()>>,
     /// Exposed so tests and embedding callers can hot-swap directly.
     pub handle: ModelHandle,
-    batcher: Arc<Batcher>,
+    batchers: Arc<Vec<Arc<Batcher>>>,
     stats: Arc<ServeStats>,
     drain_timeout: Duration,
 }
@@ -195,7 +261,7 @@ impl Server {
         Self::start_inner(model, Some((path, baseline)), cfg)
     }
 
-    /// Bind, spawn the accept loop (+ watcher when `watch_path` is
+    /// Bind, spawn the shard loops (+ watcher when `watch_path` is
     /// given) and return immediately. The watcher baseline is stamped
     /// here — if the model was loaded from `watch_path` some time
     /// before this call, prefer [`Server::start_watching`], which
@@ -231,42 +297,74 @@ impl Server {
         } else {
             (cfg.workers * cfg.max_batch * 4).max(64)
         };
-        let batcher = Arc::new(Batcher::with_pool(
-            handle.clone(),
-            BatcherConfig {
-                workers: cfg.workers,
-                max_batch: cfg.max_batch,
-                max_wait: Duration::from_micros(cfg.max_wait_us),
-                queue_depth,
-            },
-            kernel_pool,
-        ));
-        let stop = Arc::new(AtomicBool::new(false));
+        let nshards = cfg.shards.max(1);
+        let mut batchers = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            batchers.push(Arc::new(Batcher::with_pool(
+                handle.clone(),
+                BatcherConfig {
+                    workers: cfg.workers,
+                    max_batch: cfg.max_batch,
+                    max_wait: Duration::from_micros(cfg.max_wait_us),
+                    queue_depth,
+                },
+                kernel_pool.clone(),
+            )));
+        }
+        let batchers = Arc::new(batchers);
+        let stop = Arc::new(StopCell::new());
+        let kill = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServeStats::default());
         let served = Arc::new(AtomicUsize::new(0));
 
-        let accept = {
-            let (stop, served, handle, batcher, stats) = (
-                stop.clone(),
-                served.clone(),
-                handle.clone(),
-                batcher.clone(),
-                stats.clone(),
+        // Wake pairs are built before any shard spawns so every shard
+        // can wake ALL of them (the max_requests trip must stop the
+        // whole fleet, not just the shard that served the last reply).
+        let mut pairs = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            pairs.push(poll::wake_pair().context("building a shard waker")?);
+        }
+        let wakers: Arc<Vec<poll::Waker>> =
+            Arc::new(pairs.iter().map(|(w, _)| w.clone()).collect());
+
+        let mut shard_threads = Vec::with_capacity(nshards);
+        for (id, (waker, wake_rx)) in pairs.into_iter().enumerate() {
+            let shard = Shard {
+                id,
+                poller: poll::Poller::new().context("creating the shard poller")?,
+                listener: listener
+                    .try_clone()
+                    .context("cloning the listener for a shard")?,
+                wake_rx,
+                done: Arc::new(Completions::new(waker)),
+                batcher: batchers[id].clone(),
+                batchers: batchers.clone(),
+                handle: handle.clone(),
+                stats: stats.clone(),
+                served: served.clone(),
+                stop: stop.clone(),
+                kill: kill.clone(),
+                wakers: wakers.clone(),
+                cfg: cfg.clone(),
+                conns: HashMap::new(),
+                next_token: FIRST_CONN_TOKEN,
+                scratch: Vec::new(),
+            };
+            shard_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-shard-{id}"))
+                    .spawn(move || shard.run())
+                    .context("spawning a shard thread")?,
             );
-            let cfg = cfg.clone();
-            std::thread::Builder::new()
-                .name("serve-accept".into())
-                .spawn(move || accept_loop(listener, stop, served, handle, batcher, stats, cfg))
-                .context("spawning the accept thread")?
-        };
+        }
 
         let watcher = match watch {
             Some((path, baseline)) => Some({
                 let (stop, handle, stats) = (stop.clone(), handle.clone(), stats.clone());
-                let poll = Duration::from_millis(cfg.reload_poll_ms.max(10));
+                let poll_t = Duration::from_millis(cfg.reload_poll_ms.max(10));
                 std::thread::Builder::new()
                     .name("serve-reload".into())
-                    .spawn(move || watch_loop(path, baseline, poll, stop, handle, stats))
+                    .spawn(move || watch_loop(path, baseline, poll_t, stop, handle, stats))
                     .context("spawning the reload watcher")?
             }),
             None => None,
@@ -275,10 +373,12 @@ impl Server {
         Ok(Server {
             addr,
             stop,
-            accept: Some(accept),
+            kill,
+            shards: shard_threads,
+            wakers,
             watcher,
             handle,
-            batcher,
+            batchers,
             stats,
             drain_timeout: Duration::from_millis(cfg.drain_timeout_ms),
         })
@@ -289,66 +389,78 @@ impl Server {
         self.addr
     }
 
-    /// `(requests, batches)` served so far by the micro-batcher.
+    /// `(requests, batches)` served so far, summed across every
+    /// shard's micro-batcher. Coalescing shows up as
+    /// `batches < requests`.
     pub fn stats(&self) -> (u64, u64) {
-        self.batcher.stats()
-    }
-
-    /// Sample the robustness counters INFO reports — queue gauges from
-    /// the batcher, connection/reload/drain state from the front end.
-    pub fn info_stats(&self) -> proto::InfoStats {
-        sample_stats(&self.batcher, &self.stats)
-    }
-
-    /// Block until the accept loop ends (`max_requests` reached or
-    /// [`Server::shutdown`] from another thread), then stop the watcher.
-    pub fn wait(mut self) {
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
+        let mut requests = 0;
+        let mut batches = 0;
+        for b in self.batchers.iter() {
+            let (r, n) = b.stats();
+            requests += r;
+            batches += n;
         }
-        // `drop(self)` finishes the teardown (watcher + batcher).
+        (requests, batches)
     }
 
-    /// Ask the server to stop, then wait for teardown.
+    /// Sample the robustness counters INFO reports — queue gauges
+    /// aggregated across shards (plus the per-shard SHARD block),
+    /// connection/reload/drain state from the front end.
+    pub fn info_stats(&self) -> proto::InfoStats {
+        sample_stats(&self.batchers, &self.stats)
+    }
+
+    fn wake_all(&self) {
+        for w in self.wakers.iter() {
+            w.wake();
+        }
+    }
+
+    /// Block until the server stops on its own (`max_requests` reached
+    /// or [`Server::shutdown`]-equivalent stop from another owner),
+    /// then tear down.
+    pub fn wait(self) {
+        self.stop.wait();
+        // `drop(self)` finishes the teardown (shards, watcher, batchers).
+    }
+
+    /// Ask the server to stop, then wait for teardown. In-flight
+    /// replies get the drain grace window before stragglers are cut.
     pub fn shutdown(self) {
-        self.stop.store(true, Ordering::SeqCst);
-        self.wait();
+        self.stop.set();
+        self.wake_all();
+        // `drop(self)` finishes the teardown.
     }
 
-    /// Block until the accept loop ends on its own (`max_requests`
+    /// Block until the shard loops stop on their own (`max_requests`
     /// tripping, or another thread setting stop), THEN drain in-flight
     /// connections under the configured bound — `repro serve`'s
     /// shutdown path. Returns whether every connection exited inside
     /// the drain window, plus a final sample of the robustness
     /// counters (taken after the last reply, for the exit log).
-    pub fn wait_drain(mut self) -> (bool, proto::InfoStats) {
-        if let Some(h) = self.accept.take() {
-            let _ = h.join();
-        }
-        self.stats.draining.store(true, Ordering::SeqCst);
-        self.stop.store(true, Ordering::SeqCst);
-        let deadline = Instant::now() + self.drain_timeout;
-        let drained = loop {
-            if self.stats.active_conns.load(Ordering::SeqCst) == 0 {
-                break true;
-            }
-            if Instant::now() >= deadline {
-                break false;
-            }
-            std::thread::sleep(Duration::from_millis(2));
-        };
-        // `drop(self)` finishes the teardown (watcher + batcher).
-        (drained, sample_stats(&self.batcher, &self.stats))
+    pub fn wait_drain(self) -> (bool, proto::InfoStats) {
+        self.stop.wait();
+        let drained = self.drain_inner();
+        let sample = sample_stats(&self.batchers, &self.stats);
+        // `drop(self)` finishes the teardown.
+        (drained, sample)
     }
 
-    /// Graceful drain: stop accepting, let every admitted connection
-    /// finish the request it is on (connections close after their next
-    /// reply; idle ones close at their idle timeout), and bound the
-    /// whole goodbye by the configured `drain_timeout_ms`. Returns
-    /// `true` if every connection exited inside the bound.
+    /// Graceful drain: stop accepting on every shard, close idle
+    /// connections, let every in-flight request finish and flush, and
+    /// bound the whole goodbye by the configured `drain_timeout_ms`.
+    /// Returns `true` if every connection exited inside the bound.
     pub fn drain(self) -> bool {
+        self.stop.set();
+        self.drain_inner()
+        // `drop(self)` finishes the teardown.
+    }
+
+    /// Shared drain tail: flag, wake, wait out the grace window, then
+    /// hard-stop whatever is left so teardown can never hang.
+    fn drain_inner(&self) -> bool {
         self.stats.draining.store(true, Ordering::SeqCst);
-        self.stop.store(true, Ordering::SeqCst);
+        self.wake_all();
         let deadline = Instant::now() + self.drain_timeout;
         let drained = loop {
             if self.stats.active_conns.load(Ordering::SeqCst) == 0 {
@@ -359,26 +471,37 @@ impl Server {
             }
             std::thread::sleep(Duration::from_millis(2));
         };
-        self.wait();
+        self.kill.store(true, Ordering::SeqCst);
+        self.wake_all();
         drained
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // Draining tells connection threads to wrap up after their
-        // current request instead of waiting for the peer to hang up.
+        self.stop.set();
         self.stats.draining.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept.take() {
+        self.wake_all();
+        if !self.kill.load(Ordering::SeqCst) {
+            // Grace window for in-flight replies (skipped when an
+            // explicit drain already ran it).
+            let deadline = Instant::now() + self.drain_timeout;
+            while self.stats.active_conns.load(Ordering::SeqCst) > 0
+                && Instant::now() < deadline
+            {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            self.kill.store(true, Ordering::SeqCst);
+            self.wake_all();
+        }
+        for h in self.shards.drain(..) {
             let _ = h.join();
         }
         if let Some(h) = self.watcher.take() {
             let _ = h.join();
         }
-        // Connection threads are detached: they hold their own
-        // `Arc<Batcher>` clones and exit when their peer hangs up, at
-        // their idle deadline, or at their next reply (draining).
+        // Dropping `batchers` last closes each queue and joins its
+        // workers; in-flight batches finish first.
     }
 }
 
@@ -394,102 +517,64 @@ fn hist_summary(s: &crate::obs::metrics::HistSnapshot) -> proto::HistSummary {
     }
 }
 
-fn sample_stats(batcher: &Batcher, stats: &ServeStats) -> proto::InfoStats {
-    let batch = batcher.batch_size_snapshot();
+/// One coherent sample across every shard: sums and merged histograms
+/// for the aggregate STATS/OBS blocks, per-shard gauges for the SHARD
+/// block (the first [`proto::MAX_WIRE_SHARDS`] shards go on the wire).
+fn sample_stats(batchers: &[Arc<Batcher>], stats: &ServeStats) -> proto::InfoStats {
+    let mut depth = 0usize;
+    let mut cap = 0usize;
+    let mut shed = 0u64;
+    let mut batch_max = 0u64;
+    let mut queue_wait: Option<crate::obs::metrics::HistSnapshot> = None;
+    let mut e2e: Option<crate::obs::metrics::HistSnapshot> = None;
+    let mut batch: Option<crate::obs::metrics::HistSnapshot> = None;
+    let mut shards = [proto::ShardStat::default(); proto::MAX_WIRE_SHARDS];
+    let mut merge = |acc: &mut Option<crate::obs::metrics::HistSnapshot>,
+                     snap: crate::obs::metrics::HistSnapshot| {
+        match acc {
+            Some(a) => a.merge(&snap),
+            None => *acc = Some(snap),
+        }
+    };
+    for (i, b) in batchers.iter().enumerate() {
+        let d = b.depth();
+        let s = b.shed();
+        depth += d;
+        cap += b.queue_cap();
+        shed += s;
+        batch_max = batch_max.max(b.batch_max());
+        merge(&mut queue_wait, b.queue_wait_snapshot());
+        merge(&mut e2e, b.e2e_snapshot());
+        merge(&mut batch, b.batch_size_snapshot());
+        if i < proto::MAX_WIRE_SHARDS {
+            shards[i] = proto::ShardStat {
+                queue_depth: d.min(u32::MAX as usize) as u32,
+                shed: s,
+            };
+        }
+    }
+    let batch = batch.unwrap_or_default();
     proto::InfoStats {
-        queue_depth: batcher.depth().min(u32::MAX as usize) as u32,
-        queue_cap: batcher.queue_cap().min(u32::MAX as usize) as u32,
-        shed: batcher.shed(),
+        queue_depth: depth.min(u32::MAX as usize) as u32,
+        queue_cap: cap.min(u32::MAX as usize) as u32,
+        shed,
         reload_failures: stats.reload_failures.load(Ordering::Relaxed),
         active_conns: stats.active_conns.load(Ordering::SeqCst).min(u32::MAX as usize) as u32,
         draining: stats.draining.load(Ordering::SeqCst),
-        queue_wait_us: hist_summary(&batcher.queue_wait_snapshot()),
-        e2e_us: hist_summary(&batcher.e2e_snapshot()),
+        queue_wait_us: hist_summary(&queue_wait.unwrap_or_default()),
+        e2e_us: hist_summary(&e2e.unwrap_or_default()),
         batch_p50: batch.percentile(0.50).min(u32::MAX as u64) as u32,
         batch_p90: batch.percentile(0.90).min(u32::MAX as u64) as u32,
-        batch_max: batcher.batch_max().min(u32::MAX as u64) as u32,
+        batch_max: batch_max.min(u32::MAX as u64) as u32,
+        shard_count: batchers.len().min(u32::MAX as usize) as u32,
+        shards,
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn accept_loop(
-    listener: TcpListener,
-    stop: Arc<AtomicBool>,
-    served: Arc<AtomicUsize>,
-    handle: ModelHandle,
-    batcher: Arc<Batcher>,
-    stats: Arc<ServeStats>,
-    cfg: ServeConfig,
-) {
-    // Non-blocking accept + exponential backoff: ~1 ms reaction while
-    // traffic flows, decaying to 25 ms wakeups when idle, so a
-    // long-running idle server doesn't burn 1000 wakeups/s while the
-    // stop flag still gets checked every ≤ 25 ms.
-    let (idle_min, idle_max) = (Duration::from_millis(1), Duration::from_millis(25));
-    let mut idle = idle_min;
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            return;
-        }
-        match listener.accept() {
-            Ok((stream, _peer)) => {
-                idle = idle_min;
-                let _ = stream.set_nodelay(true);
-                // Admission gate: over capacity, the peer gets one
-                // typed BUSY frame (best effort, bounded write) and is
-                // closed — never a thread, never a queue slot.
-                let admitted =
-                    stats.active_conns.fetch_add(1, Ordering::SeqCst) < cfg.max_conns.max(1);
-                let guard = ConnGuard(stats.clone());
-                if !admitted {
-                    batcher.count_external_shed();
-                    refuse_busy(stream, cfg.max_conns);
-                    drop(guard);
-                    continue;
-                }
-                let (stop, served, handle, batcher, stats) = (
-                    stop.clone(),
-                    served.clone(),
-                    handle.clone(),
-                    batcher.clone(),
-                    stats.clone(),
-                );
-                let (max_requests, idle_ms) = (cfg.max_requests, cfg.idle_timeout_ms);
-                let spawned = std::thread::Builder::new().name("serve-conn".into()).spawn(
-                    move || {
-                        let _guard = guard;
-                        if let Err(e) = handle_conn(
-                            stream,
-                            &handle,
-                            &batcher,
-                            &stats,
-                            &served,
-                            &stop,
-                            max_requests,
-                            idle_ms,
-                        ) {
-                            eprintln!("serve: connection error: {e:#}");
-                        }
-                    },
-                );
-                if let Err(e) = spawned {
-                    eprintln!("serve: could not spawn connection thread: {e}");
-                }
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(idle);
-                idle = (idle * 2).min(idle_max);
-            }
-            Err(e) => {
-                eprintln!("serve: accept error: {e}");
-                std::thread::sleep(Duration::from_millis(10));
-            }
-        }
-    }
-}
-
-/// Best-effort one-frame BUSY refusal at the admission gate. The write
-/// is bounded so a peer that never reads cannot stall the accept loop.
+/// Best-effort one-frame BUSY refusal at the admission gate. The
+/// refused socket is still in blocking mode (it is never registered
+/// with the poller), so a bounded write timeout keeps a peer that
+/// never reads from stalling the shard.
 fn refuse_busy(mut stream: TcpStream, max_conns: usize) {
     let _ = stream.set_write_timeout(Some(Duration::from_millis(100)));
     let mut body = Vec::with_capacity(64);
@@ -501,196 +586,606 @@ fn refuse_busy(mut stream: TcpStream, max_conns: usize) {
     let _ = stream.flush();
 }
 
-/// What one bounded frame read produced.
-enum FrameRead {
-    /// A whole frame body is in `buf`.
-    Frame,
-    /// Clean EOF at a frame boundary — the peer hung up.
+const TOKEN_LISTEN: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+/// Connection tokens count up from here and are never reused, so a
+/// stale readiness report can never be misdelivered to a newer
+/// connection that recycled the slot.
+const FIRST_CONN_TOKEN: u64 = 2;
+/// Accepted sockets per readiness report, so one accept flood can't
+/// starve a shard's in-flight connections.
+const ACCEPT_BURST: usize = 64;
+/// Read chunks consumed per readiness report per connection
+/// (level-triggered polling re-reports leftovers immediately).
+const READ_BURST: usize = 4;
+/// While stopping, re-check the stop/kill/drain flags at least this
+/// often even if no connection deadline is armed.
+const SHUTDOWN_TICK: Duration = Duration::from_millis(25);
+
+/// Per-connection state in a shard's event loop.
+struct Conn {
+    stream: TcpStream,
+    /// Accumulated bytes not yet parsed into a frame.
+    inbuf: Vec<u8>,
+    /// The pending reply (length prefix + body); at most one reply is
+    /// queued at a time — requests on a connection are strictly
+    /// ordered.
+    outbuf: Vec<u8>,
+    out_pos: usize,
+    interest: poll::Interest,
+    /// The poll-sweep deadline: idle window, frame-arrival budget, or
+    /// reply-write budget, depending on state. `None` while a request
+    /// is in flight (the batcher owns timing then) or when timeouts
+    /// are disabled.
+    deadline: Option<Instant>,
+    /// A frame has started arriving but is not complete — a deadline
+    /// trip now is a slowloris disconnect, not a clean idle close.
+    frame_started: bool,
+    /// A request from this connection is in the batcher; reading is
+    /// parked until its completion is delivered.
+    in_flight: bool,
+    /// The in-flight (or just-answered) request was multi-row — picks
+    /// the OK encoding.
+    multi: bool,
+    /// The pending reply answers an INFER/INFERM frame: count it
+    /// toward `max_requests` once the reply is flushed.
+    infer_frame: bool,
+    /// Submit time of the in-flight request (e2e latency sample).
+    t0: Instant,
+    _guard: ConnGuard,
+}
+
+impl Conn {
+    fn has_pending_out(&self) -> bool {
+        self.out_pos < self.outbuf.len()
+    }
+}
+
+enum ReadOutcome {
+    /// Socket drained (or burst budget spent) without error.
+    Blocked,
     Eof,
-    /// No byte arrived within the idle window — close cleanly.
-    Idle,
+    Fail(std::io::Error),
 }
 
-fn timeout_kind(e: &std::io::Error) -> bool {
-    matches!(
-        e.kind(),
-        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-    )
+/// Nonblocking read burst into the connection's input buffer.
+fn read_burst(conn: &mut Conn) -> ReadOutcome {
+    for _ in 0..READ_BURST {
+        let start = conn.inbuf.len();
+        conn.inbuf.resize(start + proto::READ_CHUNK, 0);
+        match (&conn.stream).read(&mut conn.inbuf[start..]) {
+            Ok(0) => {
+                conn.inbuf.truncate(start);
+                return ReadOutcome::Eof;
+            }
+            Ok(n) => {
+                conn.inbuf.truncate(start + n);
+                if n < proto::READ_CHUNK {
+                    return ReadOutcome::Blocked;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                conn.inbuf.truncate(start);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                conn.inbuf.truncate(start);
+                return ReadOutcome::Blocked;
+            }
+            Err(e) => {
+                conn.inbuf.truncate(start);
+                return ReadOutcome::Fail(e);
+            }
+        }
+    }
+    ReadOutcome::Blocked
 }
 
-/// Read one frame with the two-deadline discipline: up to `idle` for
-/// the FIRST byte (an idle peer is not an error), then the rest of the
-/// header and the whole body must land within `idle` of that first
-/// byte. `SO_RCVTIMEO` alone cannot bound the frame — a slowloris peer
-/// trickling one byte per timeout window would hold the thread forever
-/// — so the remaining budget is re-applied before every socket read.
-/// `timeout == None` preserves the untimed pre-robustness behavior.
-fn read_frame_bounded(
-    stream: &TcpStream,
-    reader: &mut BufReader<TcpStream>,
-    buf: &mut Vec<u8>,
-    timeout: Option<Duration>,
-) -> Result<FrameRead> {
-    let Some(idle) = timeout else {
-        return Ok(match proto::read_frame(reader, buf)? {
-            true => FrameRead::Frame,
-            false => FrameRead::Eof,
-        });
-    };
-    stream.set_read_timeout(Some(idle)).context("arming the idle timeout")?;
-    let mut head = [0u8; 4];
-    let mut got = 0;
-    // First byte: a timeout here is the idle path, not a fault.
-    loop {
-        match reader.read(&mut head[..1]) {
-            Ok(0) => return Ok(FrameRead::Eof),
-            Ok(_) => {
-                got = 1;
+/// Nonblocking flush of the pending reply. `Ok(true)` = fully flushed
+/// (buffer reset), `Ok(false)` = write-stalled (poll for writable).
+fn flush_out(conn: &mut Conn) -> std::io::Result<bool> {
+    while conn.out_pos < conn.outbuf.len() {
+        match (&conn.stream).write(&conn.outbuf[conn.out_pos..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "peer stopped reading",
+                ))
+            }
+            Ok(n) => conn.out_pos += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+            Err(e) => return Err(e),
+        }
+    }
+    conn.outbuf.clear();
+    conn.out_pos = 0;
+    Ok(true)
+}
+
+fn queue_reply(conn: &mut Conn, body: &[u8]) {
+    debug_assert!(!conn.has_pending_out(), "one reply at a time per connection");
+    conn.outbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    conn.outbuf.extend_from_slice(body);
+}
+
+/// One accept shard: a poll loop over its listener clone, its wake
+/// stream, and every connection it has accepted, plus the private
+/// micro-batcher those connections feed.
+struct Shard {
+    id: usize,
+    poller: poll::Poller,
+    listener: TcpListener,
+    wake_rx: TcpStream,
+    done: Arc<Completions>,
+    batcher: Arc<Batcher>,
+    /// All shards' batchers, for the aggregated INFO sample.
+    batchers: Arc<Vec<Arc<Batcher>>>,
+    handle: ModelHandle,
+    stats: Arc<ServeStats>,
+    served: Arc<AtomicUsize>,
+    stop: Arc<StopCell>,
+    kill: Arc<AtomicBool>,
+    wakers: Arc<Vec<poll::Waker>>,
+    cfg: ServeConfig,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    scratch: Vec<u8>,
+}
+
+impl Shard {
+    fn run(mut self) {
+        if let Err(e) = self
+            .poller
+            .add(poll::fd_of(&self.listener), TOKEN_LISTEN, poll::Interest::READ)
+            .and_then(|()| {
+                self.poller
+                    .add(poll::fd_of(&self.wake_rx), TOKEN_WAKE, poll::Interest::READ)
+            })
+        {
+            eprintln!("serve: shard {} failed to start: {e}", self.id);
+            return;
+        }
+        let idle = (self.cfg.idle_timeout_ms > 0)
+            .then(|| Duration::from_millis(self.cfg.idle_timeout_ms));
+        let mut events: Vec<poll::PollEvent> = Vec::new();
+        let mut completions: Vec<(u64, MultiResult)> = Vec::new();
+        let mut listening = true;
+        loop {
+            let kill = self.kill.load(Ordering::SeqCst);
+            let stopping = kill || self.stop.is_set();
+            let draining = self.stats.draining.load(Ordering::SeqCst);
+            if (stopping || draining) && listening {
+                let _ = self
+                    .poller
+                    .remove(poll::fd_of(&self.listener), TOKEN_LISTEN);
+                listening = false;
+            }
+            if kill {
+                let toks: Vec<u64> = self.conns.keys().copied().collect();
+                for t in toks {
+                    self.close(t);
+                }
+            } else if draining {
+                // Idle connections (nothing in flight, nothing to
+                // flush) close immediately; in-flight ones close right
+                // after their reply flushes.
+                let idlers: Vec<u64> = self
+                    .conns
+                    .iter()
+                    .filter(|(_, c)| !c.in_flight && !c.has_pending_out())
+                    .map(|(t, _)| *t)
+                    .collect();
+                for t in idlers {
+                    self.close(t);
+                }
+            }
+            if stopping && self.conns.is_empty() {
+                return;
+            }
+
+            // The poll timeout is the nearest armed connection
+            // deadline; no deadline and no shutdown in progress means
+            // a pure event wait (the waker covers cross-thread stops).
+            let now = Instant::now();
+            let mut timeout: Option<Duration> = None;
+            for c in self.conns.values() {
+                if let Some(d) = c.deadline {
+                    let left = d.saturating_duration_since(now);
+                    timeout = Some(timeout.map_or(left, |t| t.min(left)));
+                }
+            }
+            if stopping || draining {
+                timeout = Some(timeout.map_or(SHUTDOWN_TICK, |t| t.min(SHUTDOWN_TICK)));
+            }
+
+            if let Err(e) = self.poller.wait(timeout, &mut events) {
+                eprintln!("serve: shard {}: poll error: {e}", self.id);
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            for i in 0..events.len() {
+                let ev = events[i];
+                match ev.token {
+                    TOKEN_WAKE => poll::drain_wake(&self.wake_rx),
+                    TOKEN_LISTEN => self.accept_burst(idle),
+                    tok => self.conn_event(tok, ev, idle),
+                }
+            }
+
+            // Deliver finished batches to their connections.
+            self.done.drain(&mut completions);
+            for (tok, res) in completions.drain(..) {
+                self.complete(tok, res, idle);
+            }
+
+            // Deadline sweep: idle peers close cleanly, mid-frame or
+            // write-stalled peers are the slowloris case.
+            let now = Instant::now();
+            let expired: Vec<(u64, bool)> = self
+                .conns
+                .iter()
+                .filter(|(_, c)| c.deadline.is_some_and(|d| d <= now))
+                .map(|(t, c)| (*t, c.frame_started || c.has_pending_out()))
+                .collect();
+            for (t, mid_frame) in expired {
+                if mid_frame {
+                    eprintln!(
+                        "serve: connection error: frame deadline exceeded (slowloris peer?)"
+                    );
+                }
+                self.close(t);
+            }
+        }
+    }
+
+    /// Deregister and drop a map-resident connection (the `ConnGuard`
+    /// releases its admission slot).
+    fn close(&mut self, tok: u64) {
+        if let Some(conn) = self.conns.remove(&tok) {
+            let _ = self.poller.remove(poll::fd_of(&conn.stream), tok);
+        }
+    }
+
+    fn accept_burst(&mut self, idle: Option<Duration>) {
+        for _ in 0..ACCEPT_BURST {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if self.kill.load(Ordering::SeqCst)
+                        || self.stop.is_set()
+                        || self.stats.draining.load(Ordering::SeqCst)
+                    {
+                        return; // shutting down: drop the socket
+                    }
+                    let _ = stream.set_nodelay(true);
+                    // Admission gate (shared across shards): over
+                    // capacity, the peer gets one typed BUSY frame
+                    // (best effort, bounded write) and is closed —
+                    // never a poller slot, never a queue slot.
+                    let admitted = self.stats.active_conns.fetch_add(1, Ordering::SeqCst)
+                        < self.cfg.max_conns.max(1);
+                    let guard = ConnGuard(self.stats.clone());
+                    if !admitted {
+                        self.batcher.count_external_shed();
+                        refuse_busy(stream, self.cfg.max_conns);
+                        drop(guard);
+                        continue;
+                    }
+                    if let Err(e) = stream.set_nonblocking(true) {
+                        eprintln!("serve: connection error: {e}");
+                        drop(guard);
+                        continue;
+                    }
+                    let tok = self.next_token;
+                    self.next_token += 1;
+                    if let Err(e) =
+                        self.poller.add(poll::fd_of(&stream), tok, poll::Interest::READ)
+                    {
+                        eprintln!("serve: connection error: registering socket: {e}");
+                        drop(guard);
+                        continue;
+                    }
+                    self.conns.insert(
+                        tok,
+                        Conn {
+                            stream,
+                            inbuf: Vec::new(),
+                            outbuf: Vec::new(),
+                            out_pos: 0,
+                            interest: poll::Interest::READ,
+                            deadline: idle.map(|t| Instant::now() + t),
+                            frame_started: false,
+                            in_flight: false,
+                            multi: false,
+                            infer_frame: false,
+                            t0: Instant::now(),
+                            _guard: guard,
+                        },
+                    );
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    eprintln!("serve: accept error: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn conn_event(&mut self, tok: u64, ev: poll::PollEvent, idle: Option<Duration>) {
+        if ev.hangup && !ev.readable && !ev.writable {
+            // Pure error/hangup with nothing buffered to read: the
+            // peer is gone (possibly mid-request; any later completion
+            // for this token is dropped on delivery).
+            self.close(tok);
+            return;
+        }
+        self.advance(tok, ev.readable, idle);
+    }
+
+    /// A completion from the batcher: build the reply, queue it, and
+    /// drive the connection forward. Arrivals for closed connections
+    /// are dropped.
+    fn complete(&mut self, tok: u64, res: MultiResult, idle: Option<Duration>) {
+        let Some(mut conn) = self.conns.remove(&tok) else {
+            return;
+        };
+        conn.in_flight = false;
+        // End-to-end as the server sees it: enqueue through
+        // reply-ready (sheds and errors included — their latency is
+        // part of what the operator is reading).
+        self.batcher
+            .record_e2e_us(conn.t0.elapsed().as_micros() as u64);
+        self.scratch.clear();
+        match res {
+            Ok(rows) => {
+                if conn.multi {
+                    proto::encode_multi_topk_response(&rows, &mut self.scratch);
+                } else {
+                    proto::encode_topk_response(&rows[0], &mut self.scratch);
+                }
+            }
+            Err(rej) if rej.kind == RejectKind::Busy => {
+                proto::encode_busy_response(&rej.msg, &mut self.scratch);
+            }
+            Err(rej) => proto::encode_error_response(&rej.msg, &mut self.scratch),
+        }
+        if faults::hit(Site::SockWrite) {
+            eprintln!("serve: connection error: fault-inject: socket write");
+            let _ = self.poller.remove(poll::fd_of(&conn.stream), tok);
+            return;
+        }
+        queue_reply(&mut conn, &self.scratch);
+        self.conns.insert(tok, conn);
+        self.advance(tok, false, idle);
+    }
+
+    /// Drive one connection as far as nonblocking I/O allows: read (if
+    /// the event said to), flush any pending reply, parse and dispatch
+    /// complete frames, then settle poll interest. Removing the conn
+    /// from the map for the duration keeps borrows simple; it is
+    /// reinserted unless it closed.
+    fn advance(&mut self, tok: u64, do_read: bool, idle: Option<Duration>) {
+        let Some(mut conn) = self.conns.remove(&tok) else {
+            return;
+        };
+        if do_read && !conn.in_flight {
+            match read_burst(&mut conn) {
+                ReadOutcome::Blocked => {}
+                ReadOutcome::Eof => {
+                    if conn.frame_started || conn.has_pending_out() {
+                        eprintln!("serve: connection error: connection closed mid-frame");
+                    }
+                    let _ = self.poller.remove(poll::fd_of(&conn.stream), tok);
+                    return;
+                }
+                ReadOutcome::Fail(e) => {
+                    eprintln!("serve: connection error: {e}");
+                    let _ = self.poller.remove(poll::fd_of(&conn.stream), tok);
+                    return;
+                }
+            }
+            // The frame-arrival budget is armed ONCE, at the first
+            // byte — later trickled bytes must not refresh it, or a
+            // slowloris peer would never trip the sweep.
+            if !conn.frame_started && !conn.inbuf.is_empty() {
+                conn.frame_started = true;
+                conn.deadline = idle.map(|t| Instant::now() + t);
+            }
+        }
+        loop {
+            if conn.has_pending_out() {
+                match flush_out(&mut conn) {
+                    Ok(true) => {
+                        if conn.infer_frame {
+                            conn.infer_frame = false;
+                            self.count_served();
+                        }
+                        // The reply is out: next idle window begins.
+                        conn.deadline = idle.map(|t| Instant::now() + t);
+                        if self.stats.draining.load(Ordering::SeqCst) {
+                            // Draining: this connection's current
+                            // request is complete; close instead of
+                            // waiting for another.
+                            let _ = self.poller.remove(poll::fd_of(&conn.stream), tok);
+                            return;
+                        }
+                    }
+                    Ok(false) => {
+                        // Write-stalled: poll for writable, bounded by
+                        // the reply-write budget.
+                        if conn.deadline.is_none() {
+                            conn.deadline = idle.map(|t| Instant::now() + t);
+                        }
+                        break;
+                    }
+                    Err(e) => {
+                        eprintln!("serve: connection error: {e}");
+                        let _ = self.poller.remove(poll::fd_of(&conn.stream), tok);
+                        return;
+                    }
+                }
+            }
+            if conn.in_flight {
                 break;
             }
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(e) if timeout_kind(&e) => return Ok(FrameRead::Idle),
-            Err(e) => return Err(e.into()),
+            // Parse one complete frame, if buffered.
+            if conn.inbuf.len() < 4 {
+                break;
+            }
+            let len =
+                u32::from_le_bytes([conn.inbuf[0], conn.inbuf[1], conn.inbuf[2], conn.inbuf[3]])
+                    as usize;
+            if len > proto::MAX_FRAME {
+                eprintln!(
+                    "serve: connection error: frame of {len} bytes exceeds the {} cap",
+                    proto::MAX_FRAME
+                );
+                let _ = self.poller.remove(poll::fd_of(&conn.stream), tok);
+                return;
+            }
+            if conn.inbuf.len() < 4 + len {
+                break;
+            }
+            let body: Vec<u8> = conn.inbuf[4..4 + len].to_vec();
+            conn.inbuf.drain(..4 + len);
+            conn.frame_started = false;
+            if !self.process_frame(&mut conn, tok, &body) {
+                let _ = self.poller.remove(poll::fd_of(&conn.stream), tok);
+                return;
+            }
+            if conn.in_flight {
+                conn.deadline = None;
+            } else if !conn.inbuf.is_empty() {
+                // A pipelined next frame is already arriving; its
+                // budget starts at the idle window armed post-flush.
+                conn.frame_started = true;
+            }
         }
-    }
-    // The frame has begun: everything else rides one deadline.
-    let deadline = Instant::now() + idle;
-    read_exact_deadline(stream, reader, &mut head[got..], deadline)?;
-    let len = u32::from_le_bytes(head) as usize;
-    anyhow::ensure!(
-        len <= proto::MAX_FRAME,
-        "frame of {len} bytes exceeds the {} cap",
-        proto::MAX_FRAME
-    );
-    buf.clear();
-    while buf.len() < len {
-        let start = buf.len();
-        let take = (len - start).min(proto::READ_CHUNK);
-        buf.resize(start + take, 0);
-        if let Err(e) = read_exact_deadline(stream, reader, &mut buf[start..], deadline) {
-            buf.truncate(start);
-            return Err(e);
+        // A partial next frame left buffered (e.g. pipelined behind a
+        // request that just completed) counts as started: its arrival
+        // budget is whatever deadline is currently armed.
+        if !conn.in_flight && !conn.inbuf.is_empty() {
+            conn.frame_started = true;
         }
+        // Settle poll interest to the connection's state: parked while
+        // in flight, writable while a reply is stalled, readable
+        // otherwise.
+        let want = if conn.in_flight {
+            poll::Interest::NONE
+        } else if conn.has_pending_out() {
+            poll::Interest::WRITE
+        } else {
+            poll::Interest::READ
+        };
+        if want != conn.interest {
+            if let Err(e) = self.poller.modify(poll::fd_of(&conn.stream), tok, want) {
+                eprintln!("serve: connection error: adjusting poll interest: {e}");
+                let _ = self.poller.remove(poll::fd_of(&conn.stream), tok);
+                return;
+            }
+            conn.interest = want;
+        }
+        self.conns.insert(tok, conn);
     }
-    Ok(FrameRead::Frame)
-}
 
-/// `read_exact` that re-arms `SO_RCVTIMEO` with the remaining budget
-/// before every read, so total wall time — not per-read stall — is
-/// what's bounded.
-fn read_exact_deadline(
-    stream: &TcpStream,
-    reader: &mut BufReader<TcpStream>,
-    mut dst: &mut [u8],
-    deadline: Instant,
-) -> Result<()> {
-    while !dst.is_empty() {
-        let left = deadline.saturating_duration_since(Instant::now());
-        if left.is_zero() {
-            bail!("frame deadline exceeded (slowloris peer?)");
-        }
-        // set_read_timeout(Some(0)) is an error; clamp up to 1 ms.
-        stream
-            .set_read_timeout(Some(left.max(Duration::from_millis(1))))
-            .context("arming the frame deadline")?;
-        match reader.read(dst) {
-            Ok(0) => bail!("connection closed mid-frame"),
-            Ok(n) => dst = &mut dst[n..],
-            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(e) if timeout_kind(&e) => bail!("frame deadline exceeded (slowloris peer?)"),
-            Err(e) => return Err(e.into()),
-        }
-    }
-    Ok(())
-}
-
-/// Serve one connection until the peer hangs up, a deadline trips, the
-/// server drains, or the request budget trips. Framing errors close
-/// the connection; protocol-level errors (bad opcode, wrong input
-/// size) are answered and the connection stays open; overload is
-/// answered with a typed BUSY frame.
-#[allow(clippy::too_many_arguments)]
-fn handle_conn(
-    stream: TcpStream,
-    handle: &ModelHandle,
-    batcher: &Batcher,
-    stats: &ServeStats,
-    served: &AtomicUsize,
-    stop: &AtomicBool,
-    max_requests: usize,
-    idle_timeout_ms: u64,
-) -> Result<()> {
-    let timeout = (idle_timeout_ms > 0).then(|| Duration::from_millis(idle_timeout_ms));
-    if let Some(t) = timeout {
-        // Writes share the same budget: a peer that stops reading its
-        // replies is disconnected by the kernel send buffer timeout.
-        stream.set_write_timeout(Some(t)).context("arming the write timeout")?;
-    }
-    let rstream = stream.try_clone().context("cloning the stream")?;
-    let mut reader = BufReader::new(rstream);
-    let mut writer = BufWriter::new(stream);
-    let mut inbuf = Vec::new();
-    let mut outbuf = Vec::new();
-    loop {
-        match read_frame_bounded(writer.get_ref(), &mut reader, &mut inbuf, timeout)? {
-            FrameRead::Frame => {}
-            FrameRead::Eof => return Ok(()),
-            FrameRead::Idle => return Ok(()), // close an idle peer cleanly
-        }
+    /// Decode and dispatch one frame body. Returns `false` if the
+    /// connection must close (injected socket faults). Protocol-level
+    /// errors (bad opcode, wrong input size) are answered and the
+    /// connection stays open; overload is answered with a typed BUSY
+    /// frame.
+    fn process_frame(&mut self, conn: &mut Conn, tok: u64, body: &[u8]) -> bool {
         if faults::hit(Site::SockRead) {
-            bail!("fault-inject: socket read");
+            eprintln!("serve: connection error: fault-inject: socket read");
+            return false;
         }
-        let mut infer_done = false;
-        match proto::decode_request(&inbuf) {
+        self.scratch.clear();
+        match proto::decode_request(body) {
             Ok(proto::Request::Info) => {
-                let m = handle.get();
+                let m = self.handle.get();
                 proto::encode_info_response(
                     m.in_dim(),
                     m.classes(),
                     m.layers.len(),
                     m.nnz() as u64,
-                    &sample_stats(batcher, stats),
-                    &mut outbuf,
+                    &sample_stats(&self.batchers, &self.stats),
+                    &mut self.scratch,
                 );
             }
             Ok(proto::Request::Infer { k, deadline_ms, input }) => {
-                let deadline =
-                    (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));
-                // End-to-end as the server sees it: enqueue through
-                // reply-ready (sheds and errors included — their
-                // latency is part of what the operator is reading).
-                let t0 = Instant::now();
-                match batcher.submit_with(input, k, deadline).recv() {
-                    Ok(Ok(pairs)) => proto::encode_topk_response(&pairs, &mut outbuf),
-                    Ok(Err(rej)) if rej.kind == RejectKind::Busy => {
-                        proto::encode_busy_response(&rej.msg, &mut outbuf)
-                    }
-                    Ok(Err(rej)) => proto::encode_error_response(&rej.msg, &mut outbuf),
-                    Err(_) => proto::encode_error_response("batcher shut down", &mut outbuf),
-                }
-                batcher.record_e2e_us(t0.elapsed().as_micros() as u64);
-                infer_done = true;
+                return self.submit(conn, tok, input, 1, k, deadline_ms, false);
             }
-            Err(e) => proto::encode_error_response(&format!("{e:#}"), &mut outbuf),
+            Ok(proto::Request::InferMulti { k, deadline_ms, rows, input }) => {
+                return self.submit(conn, tok, input, rows, k, deadline_ms, true);
+            }
+            Err(e) => proto::encode_error_response(&format!("{e:#}"), &mut self.scratch),
         }
         if faults::hit(Site::SockWrite) {
-            bail!("fault-inject: socket write");
+            eprintln!("serve: connection error: fault-inject: socket write");
+            return false;
         }
-        proto::write_frame(&mut writer, &outbuf)?;
-        writer.flush()?;
-        if infer_done && max_requests > 0 {
-            // Count AFTER the reply is flushed, so the budget-tripping
-            // client always receives its answer before shutdown.
-            let n = served.fetch_add(1, Ordering::SeqCst) + 1;
-            if n >= max_requests {
-                stop.store(true, Ordering::SeqCst);
-                return Ok(());
+        queue_reply(conn, &self.scratch);
+        true
+    }
+
+    /// Hand an INFER/INFERM frame to this shard's batcher. On
+    /// admission the connection parks until the completion arrives; a
+    /// synchronous shed is answered inline with the same typed frames
+    /// and shed accounting as the admitted path.
+    #[allow(clippy::too_many_arguments)]
+    fn submit(
+        &mut self,
+        conn: &mut Conn,
+        tok: u64,
+        input: Vec<f32>,
+        rows: usize,
+        k: usize,
+        deadline_ms: u32,
+        multi: bool,
+    ) -> bool {
+        let deadline =
+            (deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(deadline_ms as u64));
+        let t0 = Instant::now();
+        conn.multi = multi;
+        conn.infer_frame = true;
+        match self
+            .batcher
+            .submit_event(input, rows, k, deadline, tok, &self.done)
+        {
+            Ok(()) => {
+                conn.in_flight = true;
+                conn.t0 = t0;
+            }
+            Err(rej) => {
+                self.batcher.record_e2e_us(t0.elapsed().as_micros() as u64);
+                self.scratch.clear();
+                if rej.kind == RejectKind::Busy {
+                    proto::encode_busy_response(&rej.msg, &mut self.scratch);
+                } else {
+                    proto::encode_error_response(&rej.msg, &mut self.scratch);
+                }
+                if faults::hit(Site::SockWrite) {
+                    eprintln!("serve: connection error: fault-inject: socket write");
+                    return false;
+                }
+                queue_reply(conn, &self.scratch);
             }
         }
-        // Draining: the reply above completed this connection's
-        // current request; close instead of waiting for another.
-        if stats.draining.load(Ordering::SeqCst) {
-            return Ok(());
+        true
+    }
+
+    /// Count one flushed INFER reply toward `max_requests`; tripping
+    /// the budget stops every shard (the last reply was already
+    /// flushed, so the budget-tripping client has its answer).
+    fn count_served(&self) {
+        if self.cfg.max_requests == 0 {
+            return;
+        }
+        let n = self.served.fetch_add(1, Ordering::SeqCst) + 1;
+        if n >= self.cfg.max_requests {
+            self.stop.set();
+            for w in self.wakers.iter() {
+                w.wake();
+            }
         }
     }
 }
@@ -715,14 +1210,14 @@ fn watch_loop(
     path: PathBuf,
     baseline: FileStamp,
     poll: Duration,
-    stop: Arc<AtomicBool>,
+    stop: Arc<StopCell>,
     handle: ModelHandle,
     stats: Arc<ServeStats>,
 ) {
     let poll_max = (poll * 16).min(Duration::from_secs(5)).max(poll);
     let mut cur_poll = poll;
     let mut last = baseline;
-    while !stop.load(Ordering::SeqCst) {
+    while !stop.is_set() {
         std::thread::sleep(cur_poll);
         let now = file_stamp(&path);
         if now.is_none() {
@@ -801,5 +1296,34 @@ mod tests {
         let t0 = Instant::now();
         assert!(srv.drain());
         assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    /// A sharded server reports its topology in INFO: shard_count, one
+    /// SHARD entry per shard, and an aggregate queue_cap that sums the
+    /// per-shard queues.
+    #[test]
+    fn sharded_server_reports_shard_topology() {
+        let def = mlp_def("t", 4, &[3], 2, 1);
+        let m = SparseModel::init_random(&def, 0.5, &Distribution::Uniform, 5).unwrap();
+        let one = Server::start(m.clone(), None, ServeConfig::default()).unwrap();
+        let cap1 = one.info_stats().queue_cap;
+        one.shutdown();
+        let srv = Server::start(
+            m,
+            None,
+            ServeConfig {
+                shards: 3,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let stats = srv.info_stats();
+        assert_eq!(stats.shard_count, 3);
+        assert_eq!(stats.queue_cap, 3 * cap1);
+        for sh in &stats.shards[..3] {
+            assert_eq!(sh.queue_depth, 0);
+            assert_eq!(sh.shed, 0);
+        }
+        srv.shutdown();
     }
 }

@@ -9,6 +9,11 @@
 //! reply — even one that crossed a chaotic network — is bit-identical
 //! to the direct `InferEngine` call (the PR 4/5 determinism contract).
 //!
+//! The sharded event-loop front end re-runs the matrix: the same
+//! contract holds at shards ≥ 2 (soak with multi-row frames mixed in,
+//! slowloris caught by the poll deadline sweep, per-shard overload
+//! sheds itemized in the INFO SHARD block).
+//!
 //! Everything is hermetic (in-code models, ephemeral loopback ports)
 //! and runs identically with and without the `pjrt` feature. The
 //! fault-injection soak additionally requires `--features fault-inject`
@@ -507,6 +512,235 @@ fn chaos_proxy_soak_keeps_every_reply_exact_or_typed() {
         drop(direct);
         assert!(server.drain(), "drain failed after chaos soak seed={seed:#x}");
     }
+}
+
+/// The chaos soak re-run against the SHARDED event-loop front end,
+/// with multi-row INFERM frames mixed into the traffic: at shards=4
+/// every outcome is still a bit-identical OK reply (single- or
+/// multi-row), a typed BUSY, or a transport error, and drain walks all
+/// shards. A multi-row frame retries as one idempotent unit.
+#[test]
+fn sharded_chaos_soak_keeps_every_reply_exact_or_typed() {
+    for seed in [0x5C1u64, 0x5C2] {
+        let model = tiny(26, 0.5);
+        let server = Server::start(
+            model.clone(),
+            None,
+            ServeConfig {
+                shards: 4,
+                workers: 2,
+                max_batch: 8,
+                idle_timeout_ms: 2_000,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let proxy = ChaosProxy::start(
+            server.addr(),
+            ChaosConfig {
+                seed,
+                delay_prob: 0.15,
+                max_delay_ms: 15,
+                fragment_prob: 0.15,
+                drop_prob: 0.03,
+            },
+        )
+        .unwrap();
+        let paddr = proxy.addr();
+        let model_ref = &model;
+        let ok_n = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..3)
+                .map(|t| {
+                    scope.spawn(move || {
+                        let mut client = Client::connect(paddr).unwrap();
+                        client.set_timeout(Some(Duration::from_secs(5))).unwrap();
+                        let policy = RetryPolicy {
+                            attempts: 5,
+                            base: Duration::from_millis(2),
+                            max: Duration::from_millis(50),
+                            seed: seed ^ ((t as u64) << 8),
+                        };
+                        let mut rng = Rng::new(seed ^ 0x5A4D ^ t as u64);
+                        let mut ok = 0usize;
+                        for r in 0..20 {
+                            // Every third request is a 2-row frame.
+                            let rows = if r % 3 == 0 { 2usize } else { 1 };
+                            let x: Vec<f32> =
+                                (0..rows * IN_DIM).map(|_| rng.next_f32() - 0.5).collect();
+                            let ctx = format!("sharded chaos seed={seed:#x} t={t} r={r}");
+                            let reply = if rows > 1 {
+                                client.infer_batch_retry(&x, rows, CLASSES, 2_000, &policy)
+                            } else {
+                                client
+                                    .infer_retry(&x, CLASSES, 2_000, &policy)
+                                    .map(|one| vec![one])
+                            };
+                            match reply {
+                                Ok(per_row) => {
+                                    assert_eq!(per_row.len(), rows, "{ctx}");
+                                    for (i, got) in per_row.iter().enumerate() {
+                                        let row = &x[i * IN_DIM..(i + 1) * IN_DIM];
+                                        assert_bit_identical(
+                                            got,
+                                            &reference(model_ref, row, CLASSES),
+                                            &ctx,
+                                        );
+                                    }
+                                    ok += 1;
+                                }
+                                Err(e) if e.downcast_ref::<BusyError>().is_some() => {}
+                                Err(e)
+                                    if e.downcast_ref::<TransportError>().is_some() =>
+                                {
+                                    let _ = client.reconnect();
+                                }
+                                Err(e) => panic!("{ctx}: untyped failure: {e:#}"),
+                            }
+                        }
+                        ok
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+        });
+        assert!(ok_n > 0, "sharded chaos seed={seed:#x}: no request ever succeeded");
+        proxy.shutdown();
+        let mut direct = Client::connect(server.addr()).unwrap();
+        let info = direct.info().unwrap();
+        assert_eq!(info.stats.shard_count, 4, "SHARD block lost under chaos");
+        drop(direct);
+        assert!(server.drain(), "sharded drain failed after chaos seed={seed:#x}");
+    }
+}
+
+/// Slowloris against the sharded server: the poll-driven frame budget
+/// (armed once at the first byte, never refreshed by trickled bytes)
+/// disconnects the dribbler on whichever shard admitted it, while
+/// healthy connections on other shards keep exact replies flowing.
+#[test]
+fn sharded_slowloris_caught_by_poll_deadline() {
+    let model = tiny(27, 0.5);
+    let server = Server::start(
+        model.clone(),
+        None,
+        ServeConfig {
+            shards: 4,
+            idle_timeout_ms: 300,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    let slow = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let t0 = Instant::now();
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&64u32.to_le_bytes());
+        wire.extend_from_slice(&[0u8; 64]);
+        let mut cut = None;
+        for b in &wire {
+            if s.write_all(std::slice::from_ref(b)).is_err() {
+                cut = Some(t0.elapsed());
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+            let mut probe = [0u8; 1];
+            s.set_read_timeout(Some(Duration::from_millis(1))).ok();
+            if let Ok(0) = s.read(&mut probe) {
+                cut = Some(t0.elapsed());
+                break;
+            }
+        }
+        cut
+    });
+    let mut client = Client::connect(addr).unwrap();
+    let mut rng = Rng::new(28);
+    for _ in 0..10 {
+        let x: Vec<f32> = (0..IN_DIM).map(|_| rng.next_f32()).collect();
+        let got = client.infer(&x, CLASSES).unwrap();
+        assert_bit_identical(&got, &reference(&model, &x, CLASSES), "during sharded slowloris");
+        std::thread::sleep(Duration::from_millis(30));
+    }
+    let cut = slow.join().unwrap().expect("sharded slowloris peer was never disconnected");
+    assert!(cut < Duration::from_secs(10), "slowloris lingered {cut:?}");
+    server.shutdown();
+}
+
+/// Queue overload at shards=2: per-shard 1-deep queues force typed BUSY
+/// sheds under a barrier-released burst, accepted requests stay exact,
+/// and the per-shard SHARD block is visible and consistent with the
+/// aggregate over the wire.
+#[test]
+fn sharded_overload_sheds_and_shard_block_is_consistent() {
+    const CONNS: usize = 32;
+    const ROUNDS: usize = 4;
+    let model = tiny(29, 0.5);
+    let server = Server::start(
+        model.clone(),
+        None,
+        ServeConfig {
+            shards: 2,
+            workers: 1,
+            max_batch: 4,
+            max_wait_us: 0,
+            queue_depth: 1, // per shard
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    let model = &model;
+    let barrier = std::sync::Barrier::new(CONNS);
+    let barrier = &barrier;
+    let (ok_n, busy_n) = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CONNS)
+            .map(|t| {
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    client.set_timeout(Some(Duration::from_secs(30))).unwrap();
+                    let mut rng = Rng::new(0x5F1D ^ t as u64);
+                    let (mut ok, mut busy) = (0usize, 0usize);
+                    for _ in 0..ROUNDS {
+                        let x: Vec<f32> = (0..IN_DIM).map(|_| rng.next_f32()).collect();
+                        barrier.wait();
+                        match client.infer(&x, CLASSES) {
+                            Ok(got) => {
+                                assert_bit_identical(
+                                    &got,
+                                    &reference(model, &x, CLASSES),
+                                    "sharded overload reply",
+                                );
+                                ok += 1;
+                            }
+                            Err(e) if e.downcast_ref::<BusyError>().is_some() => busy += 1,
+                            Err(e) => panic!("unexpected failure under sharded overload: {e:#}"),
+                        }
+                    }
+                    (ok, busy)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .fold((0, 0), |(a, b), (o, s)| (a + o, b + s))
+    });
+    assert!(ok_n > 0, "sharded overload shed every single request");
+    assert!(busy_n > 0, "32-way bursts into per-shard 1-deep queues never shed");
+    let mut probe = Client::connect(addr).unwrap();
+    let info = probe.info().unwrap();
+    // queue_cap aggregates per-shard caps; the SHARD block itemizes.
+    assert_eq!(info.stats.queue_cap, 2);
+    assert_eq!(info.stats.shard_count, 2);
+    let shard_shed: u64 = info.stats.shards[..2].iter().map(|s| s.shed).sum();
+    assert!(
+        shard_shed <= info.stats.shed,
+        "per-shard sheds {shard_shed} exceed the aggregate {}",
+        info.stats.shed
+    );
+    assert!(info.stats.shed >= busy_n as u64);
+    server.shutdown();
 }
 
 /// With `fault-inject` armed, in-process failure points fire inside

@@ -429,6 +429,184 @@ fn hot_reload_swaps_model_without_restart() {
     std::fs::remove_file(&path).ok();
 }
 
+/// The tentpole determinism contract of the sharded front end: at ANY
+/// shards × workers × threads the server's replies are bit-identical to
+/// a direct engine call — sharding only changes who runs the forward,
+/// never what it computes.
+#[test]
+fn sharded_replies_bit_identical_across_shards_workers_threads() {
+    let model = lenet(20, 0.95);
+    let classes = model.classes();
+    let mut eng = InferEngine::new(&model, 1);
+    let mut scratch = TopKScratch::default();
+    let mut want = Vec::new();
+    for &(shards, workers, threads) in &[(1usize, 1usize, 1usize), (1, 2, 2), (4, 1, 1), (4, 2, 2)] {
+        let server = Server::start(
+            model.clone(),
+            None,
+            ServeConfig {
+                shards,
+                workers,
+                threads,
+                max_batch: 8,
+                max_wait_us: 100,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let addr = server.addr();
+        // Several connections so shards ≥ 2 actually spread the load.
+        std::thread::scope(|scope| {
+            for c in 0..4usize {
+                let model = &model;
+                scope.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let mut eng = InferEngine::new(model, 1);
+                    let mut scratch = TopKScratch::default();
+                    let mut want = Vec::new();
+                    let mut rng = Rng::new(0x54A2D ^ c as u64);
+                    for _ in 0..6 {
+                        let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+                        let got = client.infer(&x, classes).unwrap();
+                        top_k(eng.forward(model, &x, 1), classes, &mut scratch, &mut want);
+                        for ((gc, gl), (wc, wl)) in got.iter().zip(&want) {
+                            assert_eq!(gc, wc, "shards={shards} w={workers} t={threads}");
+                            assert_eq!(gl.to_bits(), wl.to_bits());
+                        }
+                    }
+                });
+            }
+        });
+        // The INFO SHARD block reflects the topology.
+        let mut client = Client::connect(addr).unwrap();
+        let info = client.info().unwrap();
+        assert_eq!(info.stats.shard_count as usize, shards, "shards={shards}");
+        let mut rng = Rng::new(0x1D);
+        let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+        let got = client.infer(&x, classes).unwrap();
+        top_k(eng.forward(&model, &x, 1), classes, &mut scratch, &mut want);
+        for ((gc, gl), (wc, wl)) in got.iter().zip(&want) {
+            assert_eq!(gc, wc);
+            assert_eq!(gl.to_bits(), wl.to_bits());
+        }
+        server.shutdown();
+    }
+}
+
+/// Multi-row INFERM frames: R rows in one frame come back bit-identical
+/// to R single-row INFER calls (and to the direct engine), in frame
+/// order, through a sharded server — client-side batching never changes
+/// numerics.
+#[test]
+fn multi_row_frames_bit_identical_to_single_row_calls() {
+    let model = lenet(21, 0.9);
+    let classes = model.classes();
+    let server = Server::start(
+        model.clone(),
+        None,
+        ServeConfig {
+            shards: 2,
+            workers: 2,
+            max_batch: 8,
+            max_wait_us: 100,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let mut eng = InferEngine::new(&model, 1);
+    let mut scratch = TopKScratch::default();
+    let mut want = Vec::new();
+    let mut rng = Rng::new(22);
+    for &rows in &[1usize, 3, 8] {
+        let x: Vec<f32> = (0..rows * 784).map(|_| rng.next_f32()).collect();
+        let per_row = client.infer_batch(&x, rows, classes, 0).unwrap();
+        assert_eq!(per_row.len(), rows);
+        for (r, got) in per_row.iter().enumerate() {
+            let row = &x[r * 784..(r + 1) * 784];
+            // vs a single-row INFER on the same connection…
+            let single = client.infer(row, classes).unwrap();
+            assert_eq!(got, &single, "rows={rows} r={r}");
+            // …and vs the direct engine call.
+            top_k(eng.forward(&model, row, 1), classes, &mut scratch, &mut want);
+            for ((gc, gl), (wc, wl)) in got.iter().zip(&want) {
+                assert_eq!(gc, wc);
+                assert_eq!(gl.to_bits(), wl.to_bits());
+            }
+        }
+    }
+    // A malformed multi-row frame gets ONE typed error for the whole
+    // frame and the connection stays usable.
+    let err = client.infer_batch(&vec![0.5f32; 784 * 2], 2, 1, 0);
+    assert!(err.is_ok(), "well-formed 2-row frame must succeed");
+    let bad = client
+        .infer_batch(&vec![0.5f32; 10], 2, 1, 0)
+        .unwrap_err()
+        .to_string();
+    assert!(bad.contains("2 rows"), "{bad}");
+    let x: Vec<f32> = (0..784).map(|_| rng.next_f32()).collect();
+    assert_eq!(client.infer(&x, 1).unwrap().len(), 1);
+    server.shutdown();
+}
+
+/// Hot reload and graceful drain, end to end against the sharded
+/// server: one atomic swap serves every shard's replicas, and drain
+/// finishes in-flight work across all shards.
+#[test]
+fn sharded_hot_reload_and_drain_e2e() {
+    let a = lenet(23, 0.9);
+    let b = lenet(24, 0.5);
+    assert_ne!(a.nnz(), b.nnz());
+    let path = temp("reload_sharded.srvd");
+    a.save(&path).unwrap();
+    let server = Server::start_watching(
+        path.clone(),
+        ServeConfig {
+            shards: 3,
+            reload_poll_ms: 25,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let mut client = Client::connect(server.addr()).unwrap();
+    assert_eq!(client.info().unwrap().nnz as usize, a.nnz());
+    b.save(&path).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        if client.info().unwrap().nnz as usize == b.nnz() {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "reload not observed within 10s");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // EVERY shard answers from the new model (fresh connections land on
+    // whichever shard wins the accept race; multi-row exercises the
+    // event path).
+    let mut eng = InferEngine::new(&b, 1);
+    let mut scratch = TopKScratch::default();
+    let mut want = Vec::new();
+    let mut rng = Rng::new(25);
+    for _ in 0..6 {
+        let mut c = Client::connect(server.addr()).unwrap();
+        let x: Vec<f32> = (0..784 * 2).map(|_| rng.next_f32()).collect();
+        let rows = c.infer_batch(&x, 2, 10, 0).unwrap();
+        for (r, got) in rows.iter().enumerate() {
+            top_k(eng.forward(&b, &x[r * 784..(r + 1) * 784], 1), 10, &mut scratch, &mut want);
+            for ((gc, gl), (wc, wl)) in got.iter().zip(&want) {
+                assert_eq!(gc, wc);
+                assert_eq!(gl.to_bits(), wl.to_bits());
+            }
+        }
+    }
+    // 6 multi-row frames = 6 batcher jobs (a frame is one unit).
+    let (reqs, _) = server.stats();
+    assert!(reqs >= 6, "expected ≥6 served frames, got {reqs}");
+    // Drain with an idle client still connected: idle conns close
+    // immediately, so the drain completes inside its budget.
+    assert!(server.drain(), "sharded drain did not complete in bound");
+    std::fs::remove_file(&path).ok();
+}
+
 /// `max_requests` makes the server self-terminating — the CI smoke
 /// test's clean-shutdown mechanism — and the load generator sees every
 /// reply first.
